@@ -1,0 +1,41 @@
+"""Shared campaign fixtures for the paper-table benchmarks.
+
+One "paper-scale" campaign (68 pools, 24 h, 3-min cadence, 10-node pools —
+the §III-B setup) is generated once per process and reused by every
+benchmark module; a second provider split mimics the AWS/Azure halves.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import SimulatedProvider, default_fleet, run_campaign
+
+
+@functools.lru_cache(maxsize=None)
+def paper_campaign(seed: int = 0, n_pools: int = 68, hours: float = 24.0):
+    fleet = default_fleet(n_pools, seed=seed)
+    provider = SimulatedProvider(fleet, seed=seed + 1)
+    return run_campaign(provider, duration=hours * 3600.0)
+
+
+@functools.lru_cache(maxsize=None)
+def provider_split_campaigns(seed: int = 0):
+    """(aws-like, azure-like) campaigns — Table I is reported per provider."""
+    aws = default_fleet(47, seed=seed, providers=("aws",))
+    azure = default_fleet(21, seed=seed + 10, providers=("azure",))
+    c_aws = run_campaign(SimulatedProvider(aws, seed=seed + 1), duration=24 * 3600.0)
+    c_az = run_campaign(SimulatedProvider(azure, seed=seed + 2), duration=24 * 3600.0)
+    return c_aws, c_az
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us

@@ -1,0 +1,30 @@
+"""Fig. 3: cumulative distribution of co-interrupt proximity."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import proximities, proximity_cdf
+
+from .common import paper_campaign
+
+PAPER = {"within_1min": 0.85, "within_3min": 0.929}  # ">85%", "92.9%"
+
+
+def run():
+    c = paper_campaign()
+    grid = [15.0, 30.0, 60.0, 120.0, 180.0, 300.0, 600.0, 1800.0]
+    xs, cdf = proximity_cdf(c.interruptions, grid)
+    gaps = proximities(c.interruptions)
+    return {
+        "n_events": int(len(c.interruptions)),
+        "n_proximities": int(gaps.size),
+        "cdf": {f"{int(x)}s": round(float(v), 3) for x, v in zip(xs, cdf)},
+        "within_1min": round(float((gaps <= 60).mean()), 3),
+        "within_3min": round(float((gaps <= 180).mean()), 3),
+        "paper": PAPER,
+    }
+
+
+if __name__ == "__main__":
+    print(run())

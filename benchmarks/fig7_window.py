@@ -1,0 +1,34 @@
+"""Fig. 7: current-availability F1-macro vs feature window size."""
+
+from __future__ import annotations
+
+from repro.core import build_dataset, evaluate, fit_predictor
+
+from .common import paper_campaign
+
+# paper: RF/XGB/Transformer improve then stabilise ~480 min; LSTM peaks at
+# 120 min; LR/SVM flat.
+WINDOWS_MIN = (60, 120, 240, 480, 720)
+MODELS = ("lr", "xgb", "rf")               # fast set; sequence models in fig8
+SEQ_MODELS = ()
+
+
+def run(windows=WINDOWS_MIN, models=MODELS):
+    c = paper_campaign()
+    out = {}
+    for w in windows:
+        ds = build_dataset(c, window_minutes=w, horizon_minutes=0, seed=0)
+        row = {}
+        for m in models:
+            model = fit_predictor(m, ds)
+            row[m] = round(evaluate(model, ds)["f1_macro"], 3)
+        out[f"{w}min"] = row
+    best = {
+        m: max(out[f"{w}min"][m] for w in windows) for m in models
+    }
+    return {"f1_by_window": out, "best_per_model": best,
+            "paper": "best ~0.90 (RF/XGB), stabilising beyond ~480 min"}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,76 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads results/dryrun/*.json (produced by ``repro.launch.dryrun --all``)
+and renders the per-(arch × shape × mesh) table: three roofline terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, memory fit.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def render_table(cells, mesh: str = "single") -> str:
+    rows = []
+    header = (
+        f"{'arch':<22} {'shape':<12} {'t_comp':>8} {'t_mem':>8} {'t_coll':>8} "
+        f"{'bound':<10} {'useful':>7} {'roofl%':>7} {'GiB/dev':>8} {'status'}"
+    )
+    rows.append(header)
+    rows.append("-" * len(header))
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append(
+                f"{c['arch']:<22} {c['shape']:<12} {'—':>8} {'—':>8} {'—':>8} "
+                f"{'—':<10} {'—':>7} {'—':>7} {'—':>8} skipped"
+            )
+            continue
+        if c["status"] != "ok":
+            rows.append(
+                f"{c['arch']:<22} {c['shape']:<12} {'—':>8} {'—':>8} {'—':>8} "
+                f"{'—':<10} {'—':>7} {'—':>7} {'—':>8} ERROR"
+            )
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {}).get("peak_gib", float("nan"))
+        rows.append(
+            f"{c['arch']:<22} {c['shape']:<12} "
+            f"{r['t_compute_s']:>8.3f} {r['t_memory_s']:>8.3f} "
+            f"{r['t_collective_s']:>8.3f} {r['bottleneck']:<10} "
+            f"{r['model_flops_ratio']:>7.3f} "
+            f"{100*r['roofline_fraction']:>6.2f}% {mem:>8.2f} ok"
+        )
+    return "\n".join(rows)
+
+
+def run():
+    cells = load_cells()
+    ok = sum(1 for c in cells if c["status"] == "ok")
+    skipped = sum(1 for c in cells if c["status"] == "skipped")
+    err = sum(1 for c in cells if c["status"] not in ("ok", "skipped"))
+    return {
+        "cells_total": len(cells), "ok": ok, "skipped": skipped, "errors": err,
+        "table_single_pod": render_table(cells, "single"),
+        "table_multi_pod": render_table(cells, "multi"),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"cells={out['cells_total']} ok={out['ok']} "
+          f"skipped={out['skipped']} errors={out['errors']}")
+    print(out["table_single_pod"])

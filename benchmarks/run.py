@@ -1,0 +1,86 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only NAME]``
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the headline
+number(s) each benchmark reproduces) followed by a JSON dump per table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from . import (
+    fig3_cointerrupt,
+    fig5_cost,
+    fig6_fidelity,
+    fig7_window,
+    fig8_horizon,
+    fig9_simulation,
+    roofline_report,
+    table1_agreement,
+)
+
+BENCHES = [
+    ("table1_agreement", table1_agreement.run,
+     lambda r: f"equal%={r['table'][0]['equal_pct']}/{r['table'][1]['equal_pct']}"),
+    ("fig3_cointerrupt", fig3_cointerrupt.run,
+     lambda r: f"<1min={r['within_1min']} <3min={r['within_3min']}"),
+    ("fig5_cost", fig5_cost.run,
+     lambda r: f"cont/sns={r['continuous_over_sns']}x periodic/sns={r['periodic_over_sns']}x"),
+    ("fig6_fidelity", fig6_fidelity.run,
+     lambda r: f"median_r UR={r['UR']['median_r']} SR={r['SR']['median_r']} CUT={r['CUT']['median_r']}"),
+    ("fig7_window", fig7_window.run,
+     lambda r: f"best={r['best_per_model']}"),
+    ("fig8_horizon", fig8_horizon.run,
+     lambda r: f"xgb@3min={r['headline']['xgb_full_3min']} xgb@60min={r['headline']['xgb_full_60min']}"),
+    ("fig9_simulation", fig9_simulation.run,
+     lambda r: f"reduction@3min={r['h=3min']['predict_ar_reduction']} @15min={r['h=15min']['predict_ar_reduction']}"),
+    ("roofline_report", roofline_report.run,
+     lambda r: f"cells ok={r['ok']} skipped={r['skipped']} errors={r['errors']}"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep in fig8 (skips sequence models)")
+    args = ap.parse_args()
+
+    results = {}
+    print("name,us_per_call,derived")
+    for name, fn, derive in BENCHES:
+        if args.only and args.only != name:
+            continue
+        kwargs = {}
+        if args.quick and name == "fig8_horizon":
+            kwargs = {"seq_models": (), "horizons": (3, 60)}
+        t0 = time.perf_counter()
+        try:
+            r = fn(**kwargs)
+            us = (time.perf_counter() - t0) * 1e6
+            results[name] = r
+            print(f"{name},{us:.0f},{derive(r)}", flush=True)
+        except Exception as e:  # keep the sweep alive; report at the end
+            us = (time.perf_counter() - t0) * 1e6
+            results[name] = {"error": str(e)}
+            print(f"{name},{us:.0f},ERROR: {e}", flush=True)
+
+    print("\n=== detail ===")
+    for name, r in results.items():
+        if name == "roofline_report" and "table_single_pod" in r:
+            print(f"\n--- {name} (single-pod) ---")
+            print(r["table_single_pod"])
+            print(f"\n--- {name} (multi-pod) ---")
+            print(r["table_multi_pod"])
+        else:
+            print(f"\n--- {name} ---")
+            print(json.dumps(r, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

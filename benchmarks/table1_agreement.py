@@ -1,0 +1,36 @@
+"""Table I: per-time-point SnS success count vs running instance count."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import provider_split_campaigns
+
+PAPER = {
+    "AWS": {"actual_gt_sns": 22.31, "equal": 77.12, "actual_lt_sns": 0.56},
+    "Azure": {"actual_gt_sns": 11.03, "equal": 88.68, "actual_lt_sns": 0.30},
+}
+
+
+def run():
+    c_aws, c_az = provider_split_campaigns()
+    rows = []
+    for name, c in (("AWS", c_aws), ("Azure", c_az)):
+        gt = float((c.running > c.s).mean() * 100)
+        eq = float((c.running == c.s).mean() * 100)
+        lt = float((c.running < c.s).mean() * 100)
+        rows.append({
+            "provider": name,
+            "actual_gt_sns_pct": round(gt, 2),
+            "equal_pct": round(eq, 2),
+            "actual_lt_sns_pct": round(lt, 2),
+            "paper_equal_pct": PAPER[name]["equal"],
+            "paper_gt_pct": PAPER[name]["actual_gt_sns"],
+            "paper_lt_pct": PAPER[name]["actual_lt_sns"],
+            "requests": int(np.prod(c.s.shape)) * c.n,
+        })
+    return {"table": rows}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,190 @@
+"""End-to-end driver: train an LM on preemptible capacity with SnS guidance.
+
+The complete loop the paper's signals enable, run for real (small model,
+CPU-sized, a few hundred steps by default):
+
+* a simulated spot fleet hosts the training pod; the pool's availability
+  trace drives preemptions;
+* SnS probes the pool every cycle; the hazard-adaptive policy
+  (Young–Daly with predictor-estimated hazard) decides when to checkpoint;
+* on preemption, training restarts from the latest checkpoint (the
+  elastic manager re-meshes; on a 1-device host this is a same-mesh
+  restore) and lost steps are accounted;
+* the same trace replayed with a sparse fixed-interval baseline shows the
+  SnS advantage (the paper's Fig. 9 logic, applied to training).
+
+Run:  PYTHONPATH=src python examples/elastic_training.py [--steps 300] [--d-model 256]
+(--d-model 768 --layers 12 approximates a 100M-class model if you have
+the minutes to spare.)
+"""
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (
+    SimulatedProvider,
+    build_dataset,
+    default_fleet,
+    fit_predictor,
+    run_campaign,
+)
+from repro.fleet import FixedInterval, SnSHazard, traces_from_campaign
+from repro.models import api
+from repro.train import (
+    OptConfig,
+    init_opt_state,
+    latest_step,
+    load_checkpoint,
+    make_train_step,
+    save_checkpoint,
+    synthetic_batch,
+)
+
+
+def train_through_trace(cfg, trace, policy, predictor, *, steps_budget,
+                        step_fn, params0, opt0, ckpt_dir, batch_fn,
+                        sim_step_time=20.0, sim_ckpt_cost=40.0,
+                        start_cycle=0):
+    """Drive REAL training steps through a pod availability trace.
+
+    Simulation clock: each completed step advances `sim_step_time` seconds
+    of trace time; checkpoints cost `sim_ckpt_cost` trace-seconds."""
+    params, opt_state = params0, opt0
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    done = lost = ckpts = since_ckpt = 0
+    cycle = start_cycle
+    t_last_ckpt = now = cycle * trace.dt
+    cyc_len = trace.dt
+    losses = []
+    while done < steps_budget and cycle < len(trace.available):
+        if not trace.available[cycle]:
+            # preemption: roll back to the last checkpoint
+            if since_ckpt:
+                lost += since_ckpt
+                if latest_step(ckpt_dir) is not None:
+                    params, opt_state, _ = load_checkpoint(
+                        ckpt_dir, params, opt_state
+                    )
+                else:
+                    params, opt_state = params0, opt0
+                done -= since_ckpt
+                since_ckpt = 0
+            cycle += 1
+            now = cycle * cyc_len
+            continue
+
+        p_survive = predictor(trace.features[cycle]) if predictor else None
+        budget = cyc_len
+        while budget >= sim_step_time and done < steps_budget:
+            if policy.should_checkpoint(now + (cyc_len - budget), t_last_ckpt,
+                                        p_survive) and since_ckpt:
+                save_checkpoint(ckpt_dir, done, params, opt_state)
+                ckpts += 1
+                since_ckpt = 0
+                t_last_ckpt = now + (cyc_len - budget)
+                budget -= sim_ckpt_cost
+                continue
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch_fn(done)
+            )
+            losses.append(float(metrics["loss"]))
+            done += 1
+            since_ckpt += 1
+            budget -= sim_step_time
+        cycle += 1
+        now = cycle * cyc_len
+    return {
+        "steps_done": done, "steps_lost": lost, "checkpoints": ckpts,
+        "final_loss": losses[-1] if losses else float("nan"),
+        "loss_start": losses[0] if losses else float("nan"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # -- SnS control plane: campaign + predictor --------------------------
+    fleet = default_fleet(12, seed=3)
+    provider = SimulatedProvider(fleet, seed=4)
+    campaign = run_campaign(provider, duration=24 * 3600.0)
+    ds = build_dataset(campaign, window_minutes=240, horizon_minutes=15,
+                       split="pool", seed=0)
+    predictor_model = fit_predictor("xgb", ds)
+    std = ds.standardizer
+
+    def p_survive(features):
+        x = std(features[None, :]) if std else features[None, :]
+        return float(predictor_model.predict_proba(x)[0])
+
+    traces = traces_from_campaign(campaign, window_minutes=240)
+    # train on the bumpiest pod, starting shortly before its first outage
+    trace = min(traces, key=lambda t: t.available.mean())
+    down = np.flatnonzero(~trace.available.astype(bool))
+    start_cycle = int(max(0, (down[0] if down.size else 0) - 15))
+    print(f"pod pool {trace.pool_id}: availability "
+          f"{trace.available.mean():.1%} over 24h "
+          f"(starting at cycle {start_cycle})")
+
+    # -- data plane: a real LM + production train step --------------------
+    cfg = get_config("gemma3-1b").scaled_down(
+        d_model=args.d_model, n_layers=args.layers,
+        d_ff=args.d_model * 4, vocab_size=2048,
+        head_dim=max(16, args.d_model // 8),
+    )
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+    params0 = api.init_params(cfg, seed=0)
+    opt0 = init_opt_state(params0)
+    step_fn = jax.jit(make_train_step(cfg, OptConfig(lr=3e-4, warmup_steps=20,
+                                                     total_steps=args.steps)))
+
+    def batch_fn(step):  # deterministic per-step data (elastic-safe)
+        return synthetic_batch(cfg, args.batch, args.seq, seed=step)
+
+    ckpt_root = tempfile.mkdtemp(prefix="elastic_")
+    results = {}
+    for name, policy, pred in [
+        ("fixed_30min", FixedInterval(1800.0), None),
+        ("sns_hazard", SnSHazard(ckpt_cost=20.0, horizon=900.0,
+                                 panic_threshold=0.4), p_survive),
+    ]:
+        t0 = time.time()
+        r = train_through_trace(
+            cfg, trace, policy, pred,
+            steps_budget=args.steps, step_fn=step_fn,
+            params0=params0, opt0=opt0,
+            ckpt_dir=os.path.join(ckpt_root, name), batch_fn=batch_fn,
+            start_cycle=start_cycle,
+        )
+        r["wall_s"] = round(time.time() - t0, 1)
+        results[name] = r
+        print(f"{name:12s}: {r['steps_done']} steps done, "
+              f"{r['steps_lost']} lost, {r['checkpoints']} ckpts, "
+              f"loss {r['loss_start']:.3f} -> {r['final_loss']:.3f} "
+              f"[{r['wall_s']}s]")
+
+    f, s = results["fixed_30min"], results["sns_hazard"]
+    if f["steps_lost"] > 0:
+        print(f"\nSnS-guided checkpointing cut lost steps by "
+              f"{1 - s['steps_lost']/max(1, f['steps_lost']):.0%} "
+              f"vs the fixed-interval baseline")
+    shutil.rmtree(ckpt_root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper-scale probing campaign: 68 instance types, 15 regions, 24 hours.
+
+Reproduces the §III-B measurement study end to end and prints the
+Table-I agreement statistics, the Fig.-3 co-interruption CDF and the
+Fig.-5 cost comparison.  (~330k spot requests, a few seconds simulated.)
+
+Run:  PYTHONPATH=src python examples/probe_campaign.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    SimulatedProvider,
+    cost_report,
+    default_fleet,
+    fraction_within,
+    proximity_cdf,
+    run_campaign,
+)
+
+
+def main():
+    fleet = default_fleet(68, seed=0)
+    regions = sorted({c.region for c in fleet})
+    provider = SimulatedProvider(fleet, seed=1)
+    campaign = run_campaign(provider, duration=24 * 3600.0)
+
+    print(f"fleet: {len(fleet)} instance types x {len(regions)} regions")
+    print(f"requests submitted: {campaign.api_calls}")
+    print(f"probe compute cost: ${campaign.probe_compute_cost:.2f}")
+
+    print("\n== Table I: SnS vs running-instance agreement ==")
+    eq = (campaign.s == campaign.running).mean() * 100
+    gt = (campaign.running > campaign.s).mean() * 100
+    lt = (campaign.running < campaign.s).mean() * 100
+    print(f"Actual > SnS: {gt:5.2f}%   Actual = SnS: {eq:5.2f}%   "
+          f"Actual < SnS: {lt:4.2f}%")
+    print("paper (AWS):  22.31%              77.12%              0.56%")
+
+    print("\n== Fig 3: co-interrupt proximity ==")
+    grid, cdf = proximity_cdf(campaign.interruptions, [30, 60, 180, 600])
+    for g, v in zip(grid, cdf):
+        print(f"  within {int(g):4d}s: {v:.1%}")
+    print(f"  (paper: >85% within 1 min, 92.9% within 3 min; "
+          f"{len(campaign.interruptions)} events here)")
+
+    print("\n== Fig 5: 24-hour monitoring cost ==")
+    rep = cost_report(campaign)
+    print(f"  continuous: ${rep.continuous:9.2f}   "
+          f"({rep.continuous_over_sns:.1f}x SnS)")
+    print(f"  periodic:   ${rep.periodic:9.2f}   "
+          f"({rep.periodic_over_sns:.2f}x SnS)")
+    print(f"  SnS:        ${rep.sns_total:9.2f}   "
+          f"(compute ${rep.sns_compute:.2f} + serverless "
+          f"${rep.sns_serverless:.2f})")
+    print(f"  paper: 249.5x / 2.5x at 3.33x finer resolution")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+One module per assigned architecture; exact hyper-parameters from the
+assignment table (sources quoted per config).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+from .base import SHAPES, InputShape, shape_applicability
+from .whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
+from .qwen1_5_4b import CONFIG as QWEN1_5_4B
+from .starcoder2_15b import CONFIG as STARCODER2_15B
+from .gemma3_1b import CONFIG as GEMMA3_1B
+from .qwen3_8b import CONFIG as QWEN3_8B
+from .arctic_480b import CONFIG as ARCTIC_480B
+from .phi3_5_moe import CONFIG as PHI3_5_MOE
+from .jamba_v0_1 import CONFIG as JAMBA_V0_1
+from .chameleon_34b import CONFIG as CHAMELEON_34B
+from .falcon_mamba_7b import CONFIG as FALCON_MAMBA_7B
+
+REGISTRY: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        WHISPER_LARGE_V3,
+        QWEN1_5_4B,
+        STARCODER2_15B,
+        GEMMA3_1B,
+        QWEN3_8B,
+        ARCTIC_480B,
+        PHI3_5_MOE,
+        JAMBA_V0_1,
+        CHAMELEON_34B,
+        FALCON_MAMBA_7B,
+    ]
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; choose from {sorted(REGISTRY)}")
+
+
+def arch_names() -> List[str]:
+    return sorted(REGISTRY)
+
+
+__all__ = [
+    "REGISTRY", "get_config", "arch_names",
+    "SHAPES", "InputShape", "shape_applicability",
+]

@@ -1,0 +1,30 @@
+"""arctic-480b — 128-expert MoE with a dense residual path.
+
+[hf:Snowflake/snowflake-arctic-base; hf] — 35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128e top-2 on every layer PLUS a dense residual
+MLP in parallel (arctic's dense-MoE hybrid).  56 heads do not divide the
+16-way model axis — attention falls back to replicated heads (see
+sharding.py and EXPERIMENTS.md §Perf for the sequence-parallel fix).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    n_experts=128,
+    top_k=2,
+    moe_every=1,
+    dense_residual=True,
+    residual_d_ff=4864,
+    use_rope=True,
+    norm="rmsnorm",
+    gated_mlp=True,
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+)

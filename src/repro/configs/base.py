@@ -1,0 +1,53 @@
+"""Shape grid + config registry scaffolding.
+
+Every architecture is exercised against its own four input shapes
+(assignment grid).  ``train_*`` lowers ``train_step``; ``prefill_*``
+lowers the prefill step; ``decode_*`` / ``long_*`` lower ``serve_step``
+(one new token against a ``seq_len`` cache).  ``long_500k`` requires
+sub-quadratic attention and only applies to SSM / hybrid / local-attention
+archs (skips are explicit and documented, never silent).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.models.common import ModelConfig
+
+__all__ = ["InputShape", "SHAPES", "shape_applicability"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicability(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """(runnable, reason).  The only assignment-sanctioned skip is
+    ``long_500k`` for pure full-attention archs."""
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid")
+            or (cfg.sliding_window is not None)
+        )
+        if not sub_quadratic:
+            return False, (
+                "long_500k skipped: pure full-attention arch (no sub-"
+                "quadratic path); per assignment rule, run only for "
+                "SSM/hybrid/local-attention"
+            )
+    if cfg.family == "encdec" and shape.name == "long_500k":
+        return False, "long_500k skipped: enc-dec with full attention"
+    return True, ""

@@ -1,0 +1,26 @@
+"""chameleon-34b — early-fusion VLM decoder.
+
+[arXiv:2405.09818; unverified] — 48L d_model=8192 64H (GQA kv=8)
+d_ff=22016 vocab=65536.  Early fusion: VQ image tokens share the 65536
+vocab with text, so the modality frontend is a STUB — input_specs()
+provides interleaved token ids.  qk-norm (chameleon's training stabiliser),
+RoPE, SwiGLU.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,
+    use_rope=True,
+    norm="rmsnorm",
+    gated_mlp=True,
+    source="arXiv:2405.09818; unverified",
+)

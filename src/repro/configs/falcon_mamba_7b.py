@@ -1,0 +1,27 @@
+"""falcon-mamba-7b — pure Mamba-1, attention-free.
+
+[arXiv:2410.05355; unverified] — 64L d_model=4096 (attn-free) d_ff=0
+vocab=65024, ssm_state=16.  Mixer-only layers (no FFN — the SSM block's
+in/out projections carry the channel mixing); O(1) decode state makes this
+the canonical `long_500k` arch.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=1,              # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_state=16,
+    d_conv=4,
+    expand=2,
+    use_rope=False,
+    norm="rmsnorm",
+    gated_mlp=True,
+    source="arXiv:2410.05355; unverified",
+)

@@ -1,0 +1,31 @@
+"""gemma3-1b — dense decoder with 5:1 local:global attention.
+
+[hf:google/gemma-3-1b-pt; unverified] — 26L d_model=1152 4H (GQA kv=1)
+d_ff=6912 vocab=262144.  Sliding window 512 on local layers, every 6th
+layer global (the per-layer window rides the layer scan as a scalar);
+head_dim 256, qk-norm, tied embeddings, 128k-class context via the local
+patterns — the one dense arch that runs `long_500k`.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    qk_norm=True,
+    use_rope=True,
+    rope_theta=1e6,
+    sliding_window=512,
+    global_every=6,
+    norm="rmsnorm",
+    gated_mlp=True,
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+)

@@ -1,0 +1,34 @@
+"""jamba-v0.1-52b — hybrid Mamba + attention with MoE.
+
+[arXiv:2403.19887; hf] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2.  Mamba:attention 7:1 interleave (one attention
+layer per 8, offset 4) and MoE on every other layer (offset 1); no
+positional embeddings (attention is NoPE).  The layer stack runs as a scan
+over 4 super-blocks of 8 structurally distinct positions.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    n_experts=16,
+    top_k=2,
+    moe_every=2,
+    moe_offset=1,
+    attn_every=8,
+    attn_offset=4,
+    ssm_state=16,
+    d_conv=4,
+    expand=2,
+    use_rope=False,         # jamba uses no positional encoding
+    norm="rmsnorm",
+    gated_mlp=True,
+    source="arXiv:2403.19887; hf",
+)

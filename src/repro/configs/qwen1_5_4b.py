@@ -1,0 +1,24 @@
+"""qwen1.5-4b — dense decoder with QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B; hf] — 40L d_model=2560 20H (kv=20) d_ff=6912
+vocab=151936.  MHA (kv == heads), RoPE, RMSNorm, SwiGLU, bias on QKV.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    use_rope=True,
+    rope_theta=1e6,
+    norm="rmsnorm",
+    gated_mlp=True,
+    source="hf:Qwen/Qwen1.5-0.5B; hf",
+)

@@ -1,0 +1,25 @@
+"""qwen3-8b — dense GQA decoder with qk-norm.
+
+[hf:Qwen/Qwen3-8B; hf] — 36L d_model=4096 32H (GQA kv=8) d_ff=12288
+vocab=151936.  head_dim 128, qk-norm, RoPE, RMSNorm, SwiGLU, no biases.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151936,
+    qk_norm=True,
+    use_rope=True,
+    rope_theta=1e6,
+    norm="rmsnorm",
+    gated_mlp=True,
+    source="hf:Qwen/Qwen3-8B; hf",
+)

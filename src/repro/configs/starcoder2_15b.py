@@ -1,0 +1,24 @@
+"""starcoder2-15b — dense GQA code model.
+
+[arXiv:2402.19173; hf] — 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152.  GQA, RoPE, LayerNorm + plain GELU MLP with biases.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    qkv_bias=True,
+    use_rope=True,
+    rope_theta=1e5,
+    norm="layernorm",
+    gated_mlp=False,
+    source="arXiv:2402.19173; hf",
+)

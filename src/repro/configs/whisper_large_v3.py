@@ -1,0 +1,30 @@
+"""whisper-large-v3 — enc-dec audio transformer backbone.
+
+[arXiv:2212.04356; unverified] — 32L d_model=1280 20H (kv=20) d_ff=5120
+vocab=51866.  Conv audio frontend is a STUB: input_specs() provides
+precomputed frame embeddings (B, T_enc, 1280).  Whisper uses LayerNorm,
+GELU MLPs, biased projections, learned absolute positions (stubbed with
+sinusoids) and no RoPE; embeddings tie to the LM head.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,            # decoder layers
+    encoder_layers=32,
+    encoder_seq=1500,       # 30 s of audio at 50 Hz after the conv stub
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    qkv_bias=True,
+    use_rope=False,
+    norm="layernorm",
+    gated_mlp=False,
+    tie_embeddings=True,
+    causal=True,
+    source="arXiv:2212.04356; unverified",
+)

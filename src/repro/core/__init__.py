@@ -1,0 +1,46 @@
+# The paper's primary contribution — the SnS control plane:
+# probing lifecycle, simulated provider, collector, O(1) feature pipeline,
+# availability labels/datasets, predictor zoo, and the trace-driven
+# workload simulator.  Sibling subpackages (models/, train/, serve/,
+# fleet/) are the data-plane substrates that consume these signals.
+
+from .collector import CampaignResult, DataLake, SnSCollector, run_campaign
+from .cointerrupt import fraction_within, proximities, proximity_cdf
+from .cost import CostReport, ServerlessPricing, cost_report
+from .dataset import Dataset, build_dataset
+from .features import FEATURE_NAMES, compute_features, init_state, update
+from .labels import binary_availability, horizon_labels
+from .lifecycle import RequestState, SpotRequest
+from .pipeline import DataArchive, FeatureProcessor, WindowTable
+from .predictor import (
+    MODEL_REGISTRY,
+    SEQUENCE_MODELS,
+    evaluate,
+    fit_predictor,
+    make_model,
+)
+from .provider import (
+    InterruptionEvent,
+    PoolConfig,
+    RateLimitError,
+    SimulatedProvider,
+    default_fleet,
+)
+from .simulate import SimResult, replay, run_strategies
+from .workloads import tpcds_profile
+
+__all__ = [
+    "CampaignResult", "DataLake", "SnSCollector", "run_campaign",
+    "fraction_within", "proximities", "proximity_cdf",
+    "CostReport", "ServerlessPricing", "cost_report",
+    "Dataset", "build_dataset",
+    "FEATURE_NAMES", "compute_features", "init_state", "update",
+    "binary_availability", "horizon_labels",
+    "RequestState", "SpotRequest",
+    "DataArchive", "FeatureProcessor", "WindowTable",
+    "MODEL_REGISTRY", "SEQUENCE_MODELS", "evaluate", "fit_predictor", "make_model",
+    "InterruptionEvent", "PoolConfig", "RateLimitError",
+    "SimulatedProvider", "default_fleet",
+    "SimResult", "replay", "run_strategies",
+    "tpcds_profile",
+]

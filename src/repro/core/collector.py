@@ -1,0 +1,222 @@
+"""SnS Collector — paper §V, Fig. 4 (left module).
+
+Three components, mirrored from the paper's serverless deployment as an
+in-process event-driven system with identical responsibilities:
+
+* **RequestInvoker** — owns the target-pool list and the collection
+  schedule (EventBridge analogue): triggers one collection cycle every
+  ``interval`` seconds.
+* **ParallelSpotRequester** — submits ``N`` concurrent spot requests per
+  pool per cycle and appends one :class:`ProbeRecord` per request to the
+  :class:`DataLake`.
+* **RequestTerminator** — subscribes to provisioning lifecycle events and
+  cancels accepted requests *immediately and independently of the
+  requester* (the event-driven design in §V that keeps the provisioning
+  window, and therefore cost, minimal).  A configurable ``terminator_delay``
+  models a slow/polling terminator; with delay ≥ the provider's
+  provisioning duration, probes leak into RUNNING and start billing — the
+  failure mode the paper's design eliminates (covered by tests).
+
+:func:`run_campaign` drives a full measurement campaign: ground-truth node
+pools (``set_node_pool``) plus probing, producing time-aligned ``S_t`` /
+``running_t`` matrices, the interruption event log, and cost accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .lifecycle import RequestState, SpotRequest
+from .provider import RateLimitError, SimulatedProvider
+
+__all__ = ["ProbeRecord", "DataLake", "SnSCollector", "CampaignResult", "run_campaign"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeRecord:
+    """Outcome of one SnS probe, as stored in the Data Lake (§V)."""
+
+    time: float
+    pool_id: str
+    accepted: bool
+    cycle: int
+
+
+class DataLake:
+    """Append-only store of probe outcomes with per-pool aggregation."""
+
+    def __init__(self):
+        self.records: List[ProbeRecord] = []
+
+    def append(self, rec: ProbeRecord) -> None:
+        self.records.append(rec)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def success_counts(self, pool_ids: Sequence[str], n_cycles: int) -> np.ndarray:
+        """Aggregate to ``S[pool, cycle]`` success-count matrix."""
+        index = {p: i for i, p in enumerate(pool_ids)}
+        s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
+        for rec in self.records:
+            if rec.accepted and rec.cycle < n_cycles and rec.pool_id in index:
+                s[index[rec.pool_id], rec.cycle] += 1
+        return s
+
+
+class SnSCollector:
+    """Invoker + parallel requester + event-driven terminator."""
+
+    def __init__(
+        self,
+        provider: SimulatedProvider,
+        pool_ids: Sequence[str],
+        *,
+        n_requests: int = 10,
+        interval: float = 180.0,
+        terminator_delay: float = 0.0,
+    ):
+        self.provider = provider
+        self.pool_ids = list(pool_ids)
+        self.n = int(n_requests)
+        self.interval = float(interval)
+        self.terminator_delay = float(terminator_delay)
+        self.lake = DataLake()
+        self.probe_requests: List[SpotRequest] = []
+        self._pending_cancel: List[SpotRequest] = []
+        self._probing = False  # True only while the requester is submitting
+        # Event-driven terminator: reacts to the provisioning lifecycle
+        # event itself, independent of the requester control flow (§V).
+        provider.on_provisioning(self._on_provisioning_event)
+
+    # -- RequestTerminator -------------------------------------------------
+
+    def _on_provisioning_event(self, req: SpotRequest) -> None:
+        if not self._probing:
+            return  # node-pool replenishment etc. — not ours to cancel
+        if self.terminator_delay <= 0.0:
+            self.provider.cancel(req)  # scoot immediately
+        else:
+            self._pending_cancel.append(req)  # slow-terminator model
+
+    def _flush_delayed_cancels(self) -> None:
+        for req in self._pending_cancel:
+            self.provider.cancel(req)  # no-op if it already reached RUNNING
+        self._pending_cancel.clear()
+
+    # -- ParallelSpotRequester ----------------------------------------------
+
+    def probe_pool(self, pool_id: str, cycle: int) -> int:
+        """Submit N concurrent requests to one pool; return S_t."""
+        successes = 0
+        self._probing = True
+        try:
+            reqs = self.provider.submit_spot_request(pool_id, n=self.n)
+        except RateLimitError:
+            reqs = []  # rate-limited cycle records total failure
+        finally:
+            self._probing = False
+        for req in reqs:
+            accepted = req.state is not RequestState.REJECTED
+            if accepted:
+                successes += 1
+            self.lake.append(ProbeRecord(self.provider.now, pool_id, accepted, cycle))
+            self.probe_requests.append(req)
+        return successes
+
+    # -- RequestInvoker -----------------------------------------------------
+
+    def run_cycle(self, cycle: int) -> np.ndarray:
+        """One collection cycle across all pools; returns S_t per pool."""
+        s = np.zeros(len(self.pool_ids), dtype=np.int64)
+        for i, pool_id in enumerate(self.pool_ids):
+            s[i] = self.probe_pool(pool_id, cycle)
+        if self.terminator_delay > 0.0:
+            # slow terminator: cancels land only after the delay has passed
+            self.provider.advance(self.provider.now + self.terminator_delay)
+            self._flush_delayed_cancels()
+        return s
+
+    # -- accounting ----------------------------------------------------------
+
+    def probe_compute_cost(self) -> float:
+        """Total compute dollars billed to probe requests (≈ 0 by design)."""
+        total = 0.0
+        for req in self.probe_requests:
+            if req.run_started is not None:
+                price = self.provider.pool_config(req.pool_id).price_per_hour
+                total += req.billed_seconds(self.provider.now) * price / 3600.0
+        return total
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    pool_ids: List[str]
+    times: np.ndarray          # (T,) cycle timestamps (seconds)
+    s: np.ndarray              # (pools, T) SnS success counts
+    running: np.ndarray        # (pools, T) actual running node counts
+    n: int                     # requests per measurement point
+    interval: float            # collection interval (seconds)
+    interruptions: list        # InterruptionEvent list
+    probe_compute_cost: float  # $ billed to probes (≈ 0 by design)
+    node_pool_cost: float      # $ billed to ground-truth running nodes
+    api_calls: int
+
+
+def run_campaign(
+    provider: SimulatedProvider,
+    *,
+    pool_ids: Optional[Sequence[str]] = None,
+    duration: float = 24 * 3600.0,
+    interval: float = 180.0,
+    n_requests: int = 10,
+    node_pool_size: int = 10,
+    terminator_delay: float = 0.0,
+) -> CampaignResult:
+    """Run a §III-B style campaign: node pools + SnS probing side by side."""
+    pool_ids = list(pool_ids) if pool_ids is not None else provider.pool_ids
+    collector = SnSCollector(
+        provider,
+        pool_ids,
+        n_requests=n_requests,
+        interval=interval,
+        terminator_delay=terminator_delay,
+    )
+    for pid in pool_ids:
+        provider.set_node_pool(pid, node_pool_size)
+    # Let pools acquire their initial nodes before the first measurement.
+    provider.advance(provider.now + 3 * provider.tick)
+
+    n_cycles = int(duration // interval)
+    times = np.zeros(n_cycles)
+    s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
+    running = np.zeros_like(s)
+    t0 = provider.now
+    for c in range(n_cycles):
+        provider.advance(t0 + c * interval)
+        times[c] = provider.now
+        s[:, c] = collector.run_cycle(c)
+        for i, pid in enumerate(pool_ids):
+            running[i, c] = provider.running_count(pid)
+
+    # node-pool compute cost: integrate running counts over the campaign
+    node_cost = 0.0
+    for i, pid in enumerate(pool_ids):
+        price = provider.pool_config(pid).price_per_hour
+        node_cost += float(running[i].sum()) * interval / 3600.0 * price
+
+    return CampaignResult(
+        pool_ids=pool_ids,
+        times=times,
+        s=s,
+        running=running,
+        n=n_requests,
+        interval=interval,
+        interruptions=list(provider.interruptions),
+        probe_compute_cost=collector.probe_compute_cost(),
+        node_pool_cost=node_cost,
+        api_calls=provider.api_calls,
+    )

@@ -1,0 +1,152 @@
+"""Dataset construction: SnS traces → (features, labels) — paper §VI-A.
+
+Features are computed from the SnS probe trace (:mod:`.features`), labels
+from the simultaneously collected running-instance trace (:mod:`.labels`).
+Two split protocols, both from the paper:
+
+* ``split="random"`` — 75/25 random point split with a fixed seed (§VI-A,
+  used for the prediction experiments of Figs. 7-8).
+* ``split="pool"`` — 75/25 split at the *instance-type level* so no
+  evaluation pool's trace is seen in training (§VI-E, used for the
+  trace-driven simulation).
+
+Point-wise models receive ``X[t] = (SR_t, UR_t, CUT_t)`` (or a feature
+subset, Fig. 8); sequence models receive the trailing ``L`` cycles of the
+same features, ``X[t] = F[t-L+1 : t+1]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .collector import CampaignResult
+from .features import FEATURE_NAMES, compute_features
+from .labels import binary_availability, horizon_labels
+
+__all__ = ["Dataset", "Standardizer", "build_dataset"]
+
+
+@dataclasses.dataclass
+class Standardizer:
+    mean: np.ndarray
+    std: np.ndarray
+
+    @classmethod
+    def fit(cls, x: np.ndarray) -> "Standardizer":
+        flat = x.reshape(-1, x.shape[-1])
+        std = flat.std(axis=0)
+        std = np.where(std < 1e-8, 1.0, std)
+        return cls(mean=flat.mean(axis=0), std=std)
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        return (x - self.mean) / self.std
+
+
+@dataclasses.dataclass
+class Dataset:
+    """Train/test split of SnS features and availability labels."""
+
+    x_train: np.ndarray     # (n, F) or (n, L, F) for sequence models
+    y_train: np.ndarray     # (n,)
+    x_test: np.ndarray
+    y_test: np.ndarray
+    feature_names: Tuple[str, ...]
+    horizon_cycles: int
+    # bookkeeping for the trace-driven simulator (§VI-E)
+    train_pools: Optional[np.ndarray] = None
+    test_pools: Optional[np.ndarray] = None
+    standardizer: Optional[Standardizer] = None
+
+
+def _select_features(feats: np.ndarray, names: Sequence[str]) -> np.ndarray:
+    idx = [FEATURE_NAMES.index(n) for n in names]
+    return feats[..., idx]
+
+
+def build_dataset(
+    result: CampaignResult,
+    *,
+    window_minutes: float = 480.0,
+    horizon_minutes: float = 0.0,
+    feature_set: Sequence[str] = FEATURE_NAMES,
+    sequence_length: Optional[int] = None,
+    split: str = "random",
+    train_fraction: float = 0.75,
+    seed: int = 0,
+    standardize: bool = True,
+) -> Dataset:
+    """Build a supervised dataset from a measurement campaign."""
+    dt_minutes = result.interval / 60.0
+    h = int(round(horizon_minutes / dt_minutes))
+
+    feats = compute_features(result.s, result.n, window_minutes, dt_minutes)
+    feats = _select_features(feats, feature_set)          # (pools, T, F)
+    avail = binary_availability(result.running, result.n)  # (pools, T)
+    y = horizon_labels(avail, h)                           # (pools, T - h)
+
+    pools, t_total, n_feat = feats.shape
+    t_lab = y.shape[-1]
+
+    if sequence_length is None:
+        # one point per (pool, cycle)
+        x = feats[:, :t_lab, :]                            # (pools, T-h, F)
+        start = 0
+    else:
+        # trailing L-cycle windows; first valid cycle index is L-1
+        lseq = int(sequence_length)
+        if lseq > t_lab:
+            raise ValueError(f"sequence_length {lseq} > usable length {t_lab}")
+        windows = np.stack(
+            [feats[:, k : t_lab - lseq + 1 + k, :] for k in range(lseq)], axis=2
+        )                                                   # (pools, T', L, F)
+        x = windows
+        start = lseq - 1
+        y = y[:, start:]
+
+    pool_idx = np.broadcast_to(
+        np.arange(pools)[:, None], y.shape
+    )
+
+    if split == "random":
+        rng = np.random.default_rng(seed)
+        flat_x = x.reshape((-1,) + x.shape[2:])
+        flat_y = y.reshape(-1)
+        flat_p = pool_idx.reshape(-1)
+        perm = rng.permutation(flat_y.shape[0])
+        cut = int(train_fraction * len(perm))
+        tr, te = perm[:cut], perm[cut:]
+        xtr, ytr, xte, yte = flat_x[tr], flat_y[tr], flat_x[te], flat_y[te]
+        ptr, pte = flat_p[tr], flat_p[te]
+    elif split == "pool":
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(pools)
+        cut = max(1, int(train_fraction * pools))
+        train_pools, test_pools = order[:cut], order[cut:]
+        xtr = x[train_pools].reshape((-1,) + x.shape[2:])
+        ytr = y[train_pools].reshape(-1)
+        xte = x[test_pools].reshape((-1,) + x.shape[2:])
+        yte = y[test_pools].reshape(-1)
+        ptr = np.repeat(train_pools, y.shape[1])
+        pte = np.repeat(test_pools, y.shape[1])
+    else:
+        raise ValueError(f"unknown split {split!r}")
+
+    std = None
+    if standardize:
+        std = Standardizer.fit(xtr)
+        xtr, xte = std(xtr), std(xte)
+
+    return Dataset(
+        x_train=xtr.astype(np.float32),
+        y_train=ytr.astype(np.int32),
+        x_test=xte.astype(np.float32),
+        y_test=yte.astype(np.int32),
+        feature_names=tuple(feature_set),
+        horizon_cycles=h,
+        train_pools=ptr,
+        test_pools=pte,
+        standardizer=std,
+    )

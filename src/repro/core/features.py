@@ -1,0 +1,171 @@
+"""SnS availability features — paper §IV-B, Algorithm 1.
+
+Three complementary features derived from the per-cycle SnS success count
+``S_t`` (number of accepted probes out of ``N`` concurrent requests):
+
+* ``SR(t)   = S_t / N``                       — instantaneous success rate.
+* ``UR(t,w) = (P[t] - P[t-w]) / (w * N)``     — windowed unfulfilled ratio,
+  where ``P`` is the running cumulative sum of unfulfilled counts
+  ``P[t] = P[t-1] + (N - S_t)``, ``P[0] = 0``.  For ``t < w`` the paper
+  uses the partial window ``(P[t] - P[0]) / (t * N)``.
+* ``CUT(t)``                                  — contiguous unfulfilled time:
+  resets to 0 whenever ``S_t == N`` (or at t==1), otherwise grows by the
+  collection interval ``dt``.
+
+Every update is O(1) (Algorithm 1).  Two implementations are provided:
+
+* :class:`FeatureState` / :func:`update` — the incremental streaming form
+  used by the online Data Pipeline (pure Python scalars, exact).
+* :func:`compute_features` — a vectorised batch "replay" over whole traces
+  (numpy), used for dataset construction and as the oracle shape for the
+  ``kernels/sns_features`` Pallas kernel.
+
+Cycle indexing follows the paper: cycles are 1-based (``t = 1, 2, ...``)
+and the window length in cycles is ``w = W / dt`` with ``W`` in the same
+time unit as ``dt``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "FeatureState",
+    "init_state",
+    "update",
+    "compute_features",
+    "FEATURE_NAMES",
+]
+
+FEATURE_NAMES = ("SR", "UR", "CUT")
+
+
+@dataclasses.dataclass
+class FeatureState:
+    """O(1) streaming state for Algorithm 1.
+
+    ``p_window`` is a ring buffer holding the last ``w + 1`` values of the
+    cumulative array ``P`` so that ``P[t - w]`` is available without
+    storing the full history (the paper stores the full array; the ring
+    buffer is the constant-memory equivalent — identical outputs).
+    """
+
+    n: int                       # concurrent requests per measurement point
+    w: int                       # window length in collection cycles
+    dt: float                    # collection interval (minutes)
+    t: int = 0                   # last completed cycle (0 = none yet)
+    p_t: int = 0                 # P[t]
+    cut: float = 0.0             # CUT_t
+    p_window: np.ndarray = None  # ring buffer of P values, len w + 1
+    head: int = 0                # ring index of P[t]
+
+    def __post_init__(self):
+        if self.p_window is None:
+            self.p_window = np.zeros(self.w + 1, dtype=np.int64)
+
+
+def init_state(n: int, window_minutes: float, dt_minutes: float) -> FeatureState:
+    """Create streaming state for ``N`` requests and a ``W``-minute window."""
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    if window_minutes <= 0 or dt_minutes <= 0:
+        raise ValueError("window and dt must be positive")
+    w = int(round(window_minutes / dt_minutes))
+    if w < 1:
+        raise ValueError(
+            f"window {window_minutes} shorter than collection interval {dt_minutes}"
+        )
+    return FeatureState(n=n, w=w, dt=dt_minutes)
+
+
+def update(state: FeatureState, s_t: int) -> Tuple[FeatureState, Tuple[float, float, float]]:
+    """Algorithm 1: one O(1) incremental update.
+
+    Mutates and returns ``state`` along with ``(SR_t, UR_t, CUT_t)``.
+    """
+    n, w, dt = state.n, state.w, state.dt
+    if not 0 <= s_t <= n:
+        raise ValueError(f"S_t={s_t} out of range [0, {n}]")
+
+    state.t += 1
+    t = state.t
+
+    # line 3: SR_t <- S_t / N
+    sr = s_t / n
+
+    # line 4: P[t] <- P[t-1] + (N - S_t)
+    state.p_t += n - s_t
+    state.head = (state.head + 1) % (w + 1)
+    state.p_window[state.head] = state.p_t
+
+    # lines 5-9: windowed / partial-window UR
+    if t >= w:
+        # P[t - w] sits w slots behind the head in the ring buffer.
+        p_t_minus_w = int(state.p_window[(state.head - w) % (w + 1)])
+        ur = (state.p_t - p_t_minus_w) / (w * n)
+    else:
+        ur = state.p_t / (t * n)  # P[0] == 0
+
+    # lines 10-14: CUT reset / accumulate
+    if t == 1 or s_t == n:
+        state.cut = 0.0
+    else:
+        state.cut += dt
+
+    return state, (sr, ur, float(state.cut))
+
+
+def compute_features(
+    s: np.ndarray,
+    n: int,
+    window_minutes: float,
+    dt_minutes: float,
+) -> np.ndarray:
+    """Vectorised replay of Algorithm 1 over whole traces.
+
+    Args:
+      s: success counts, shape ``(T,)`` or ``(pools, T)``, integer in [0, N].
+      n: concurrent requests per measurement point.
+      window_minutes / dt_minutes: as in :func:`init_state`.
+
+    Returns:
+      features with shape ``s.shape + (3,)`` ordered ``(SR, UR, CUT)``,
+      bit-identical to streaming :func:`update` applied cycle by cycle.
+    """
+    s = np.asarray(s)
+    squeeze = s.ndim == 1
+    if squeeze:
+        s = s[None, :]
+    if s.ndim != 2:
+        raise ValueError(f"s must be 1- or 2-D, got shape {s.shape}")
+    pools, t_max = s.shape
+    w = int(round(window_minutes / dt_minutes))
+
+    sr = s / n
+
+    # Cumulative unfulfilled counts, P[0] = 0 prepended.
+    unfulfilled = n - s
+    p = np.concatenate(
+        [np.zeros((pools, 1), dtype=np.int64), np.cumsum(unfulfilled, axis=1)], axis=1
+    )  # p[:, t] == P[t] for t in [0, T]
+
+    t_idx = np.arange(1, t_max + 1)
+    lag = np.maximum(t_idx - w, 0)
+    window_len = np.where(t_idx >= w, w, t_idx)
+    ur = (p[:, t_idx] - p[:, lag]) / (window_len * n)
+
+    # CUT: distance (in cycles) since the last fully-fulfilled cycle, scaled
+    # by dt.  Cycle 1 is forced to 0 per Algorithm 1 line 10.
+    full = s == n
+    cut = np.empty_like(sr)
+    run = np.zeros(pools, dtype=np.int64)
+    for t in range(t_max):
+        run = np.where(full[:, t] | (t == 0), 0, run + 1)
+        cut[:, t] = run * dt_minutes
+    # Note: the t==0 forcing matches the streaming code (CUT_1 = 0 always).
+
+    out = np.stack([sr, ur, cut], axis=-1)
+    return out[0] if squeeze else out

@@ -1,0 +1,59 @@
+"""Binary availability labels — paper §IV-A.
+
+The co-interruption analysis (Fig. 3) shows that once one node of a pool is
+interrupted, the rest follow within minutes; predicting the exact surviving
+count has limited value.  The paper therefore adopts a *binary* notion:
+at each measurement point, is the full set of ``N`` requested instances
+fulfilled or not?
+
+Labels come from the *actual running instance* trace; features come from
+the SnS probe trace.  For a prediction horizon ``h`` cycles, the target at
+cycle ``t`` is whether the pool maintains its current scale over the whole
+of ``(t, t + h]`` (§V Interrupt Predictor: "whether the target instance
+node pool will maintain its current scale over a specified future
+horizon").  ``h = 0`` degenerates to current-availability modeling (§VI-D
+Fig. 7).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["binary_availability", "horizon_labels"]
+
+
+def binary_availability(running: np.ndarray, n: int) -> np.ndarray:
+    """1 where all ``n`` requested instances are running, else 0.
+
+    Args:
+      running: running-instance counts, shape ``(T,)`` or ``(pools, T)``.
+      n: requested pool size.
+    """
+    running = np.asarray(running)
+    return (running >= n).astype(np.int32)
+
+
+def horizon_labels(avail: np.ndarray, horizon_cycles: int) -> np.ndarray:
+    """Availability sustained over the next ``horizon_cycles`` cycles.
+
+    Args:
+      avail: binary availability, shape ``(..., T)``.
+      horizon_cycles: ``h >= 0``.  ``h == 0`` returns ``avail`` unchanged.
+
+    Returns:
+      labels of shape ``(..., T - h)``: ``y[..., t] = min(avail[..., t+1 :
+      t+h+1])`` for ``h > 0`` — 1 iff the pool stays fully available
+      through the horizon.
+    """
+    avail = np.asarray(avail)
+    h = int(horizon_cycles)
+    if h < 0:
+        raise ValueError("horizon must be >= 0")
+    if h == 0:
+        return avail.copy()
+    t_total = avail.shape[-1]
+    if h >= t_total:
+        raise ValueError(f"horizon {h} >= trace length {t_total}")
+    # sliding min over the future window (t+1 .. t+h]
+    stacked = np.stack([avail[..., 1 + k : t_total - h + 1 + k] for k in range(h)], 0)
+    return stacked.min(axis=0)

@@ -1,0 +1,108 @@
+"""Spot request lifecycle state machine — paper Fig. 1.
+
+The structural property SnS exploits: a spot request's outcome is decided
+*before* the instance reaches ``RUNNING`` (the only state that bills
+compute).  The lifecycle here is shared by both ground-truth node-pool
+instances (which proceed to ``RUNNING`` and may be ``INTERRUPTED``) and SnS
+probes (which are ``CANCELLED`` during ``PROVISIONING`` by the event-driven
+Request Terminator).
+
+States and legal transitions::
+
+    PENDING ──► REJECTED                      (capacity check failed)
+    PENDING ──► PROVISIONING                  (capacity check passed)
+    PROVISIONING ──► CANCELLED                (SnS terminator scoots)
+    PROVISIONING ──► RUNNING                  (allocation completed)
+    RUNNING ──► INTERRUPTED                   (provider reclaims capacity)
+    RUNNING ──► TERMINATED                    (user-initiated stop)
+
+Billing accrues only in ``RUNNING``; this is asserted throughout the test
+suite and is what makes SnS "near-zero instance cost".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional, Tuple
+
+
+class RequestState(enum.Enum):
+    PENDING = "pending"
+    REJECTED = "rejected"
+    PROVISIONING = "provisioning"
+    CANCELLED = "cancelled"
+    RUNNING = "running"
+    INTERRUPTED = "interrupted"
+    TERMINATED = "terminated"
+
+
+#: state -> states reachable from it
+_TRANSITIONS = {
+    RequestState.PENDING: {RequestState.REJECTED, RequestState.PROVISIONING},
+    RequestState.REJECTED: set(),
+    RequestState.PROVISIONING: {RequestState.CANCELLED, RequestState.RUNNING},
+    RequestState.CANCELLED: set(),
+    RequestState.RUNNING: {RequestState.INTERRUPTED, RequestState.TERMINATED},
+    RequestState.INTERRUPTED: set(),
+    RequestState.TERMINATED: set(),
+}
+
+TERMINAL_STATES = frozenset(s for s, nxt in _TRANSITIONS.items() if not nxt)
+
+_request_counter = itertools.count()
+
+
+class IllegalTransition(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SpotRequest:
+    """One spot instance request and its lifecycle history."""
+
+    pool_id: str
+    submit_time: float
+    request_id: int = dataclasses.field(default_factory=lambda: next(_request_counter))
+    state: RequestState = RequestState.PENDING
+    history: List[Tuple[float, RequestState]] = dataclasses.field(default_factory=list)
+    run_started: Optional[float] = None
+    run_ended: Optional[float] = None
+
+    def __post_init__(self):
+        self.history.append((self.submit_time, RequestState.PENDING))
+
+    def transition(self, new_state: RequestState, time: float) -> None:
+        if new_state not in _TRANSITIONS[self.state]:
+            raise IllegalTransition(
+                f"request {self.request_id}: {self.state.value} -> {new_state.value}"
+            )
+        self.state = new_state
+        self.history.append((time, new_state))
+        if new_state is RequestState.RUNNING:
+            self.run_started = time
+        elif new_state in (RequestState.INTERRUPTED, RequestState.TERMINATED):
+            self.run_ended = time
+
+    # -- billing ---------------------------------------------------------
+    def billed_seconds(self, now: Optional[float] = None) -> float:
+        """Compute-billed time: only the RUNNING interval counts."""
+        if self.run_started is None:
+            return 0.0
+        end = self.run_ended if self.run_ended is not None else now
+        if end is None:
+            raise ValueError("request still running; pass `now`")
+        return max(0.0, end - self.run_started)
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    def time_in_state(self, state: RequestState) -> float:
+        """Total time spent in `state` (for terminal analysis/debugging)."""
+        total = 0.0
+        for (t0, s0), (t1, _) in zip(self.history, self.history[1:]):
+            if s0 is state:
+                total += t1 - t0
+        return total

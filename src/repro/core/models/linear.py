@@ -1,0 +1,96 @@
+"""Point-wise linear predictors: Logistic Regression and linear SVM.
+
+Both operate on a single feature vector per prediction (§VI-A's
+"single data point" model group), trained with weighted full-gradient
+mini-batch Adam (see ``_train.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ._train import fit_adam
+
+__all__ = ["LogisticRegression", "LinearSVM"]
+
+
+def _init_linear(n_features: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "w": jnp.zeros((n_features,), jnp.float32),
+        "b": jnp.zeros((), jnp.float32),
+    }
+
+
+def _margin(params, x):
+    return x @ params["w"] + params["b"]
+
+
+@dataclasses.dataclass
+class LogisticRegression:
+    l2: float = 1e-4
+    steps: int = 600
+    lr: float = 5e-2
+    seed: int = 0
+    params: Dict = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "LogisticRegression":
+        l2 = self.l2
+
+        def loss(params, xb, yb, wb):
+            logits = _margin(params, xb)
+            ll = wb * (
+                jax.nn.softplus(logits) - yb * logits
+            )  # weighted binary cross-entropy
+            return ll.mean() + l2 * jnp.sum(params["w"] ** 2)
+
+        self.params = fit_adam(
+            _init_linear(x.shape[-1]), loss, x, y,
+            steps=self.steps, lr=self.lr, seed=self.seed,
+        )
+        return self
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jax.nn.sigmoid(_margin(self.params, jnp.asarray(x))))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return (self.predict_proba(x) >= 0.5).astype(np.int32)
+
+
+@dataclasses.dataclass
+class LinearSVM:
+    """L2-regularised hinge loss; decision threshold at margin 0."""
+
+    c: float = 1.0
+    steps: int = 600
+    lr: float = 5e-2
+    seed: int = 0
+    params: Dict = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "LinearSVM":
+        c = self.c
+
+        def loss(params, xb, yb, wb):
+            sign = 2.0 * yb - 1.0
+            hinge = jnp.maximum(0.0, 1.0 - sign * _margin(params, xb))
+            return c * (wb * hinge).mean() + 0.5 * jnp.sum(params["w"] ** 2)
+
+        self.params = fit_adam(
+            _init_linear(x.shape[-1]), loss, x, y,
+            steps=self.steps, lr=self.lr, seed=self.seed,
+        )
+        return self
+
+    def decision_function(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(_margin(self.params, jnp.asarray(x)))
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        # Platt-free squashing of the margin — monotone, fine for ranking.
+        return np.asarray(jax.nn.sigmoid(2.0 * self.decision_function(x)))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return (self.decision_function(x) >= 0.0).astype(np.int32)

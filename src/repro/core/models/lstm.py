@@ -1,0 +1,79 @@
+"""LSTM sequence predictor — paper §VI-A sequence model group.
+
+Operates on the trailing ``L`` collection cycles of features (the paper
+sets the input sequence length equal to the selected feature window).
+Single LSTM layer via ``lax.scan`` + linear head on the final hidden state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ._train import fit_adam
+
+__all__ = ["LSTM"]
+
+
+def _init_lstm(key, n_in: int, hidden: int) -> Dict[str, jnp.ndarray]:
+    k1, k2 = jax.random.split(key)
+    scale = (1.0 / (n_in + hidden)) ** 0.5
+    return {
+        "wx": jax.random.normal(k1, (n_in + hidden, 4 * hidden)) * scale,
+        "b": jnp.zeros((4 * hidden,)),
+        "head_w": jax.random.normal(k2, (hidden, 1)) * (1.0 / hidden) ** 0.5,
+        "head_b": jnp.zeros((1,)),
+    }
+
+
+def _forward(params, x):
+    """x: (B, L, F) -> logits (B,)."""
+    b, l, f = x.shape
+    hidden = params["head_w"].shape[0]
+    h0 = jnp.zeros((b, hidden))
+    c0 = jnp.zeros((b, hidden))
+
+    def cell(carry, xt):
+        h, c = carry
+        z = jnp.concatenate([xt, h], axis=-1) @ params["wx"] + params["b"]
+        i, f_, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f_ + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(cell, (h0, c0), jnp.swapaxes(x, 0, 1))
+    return (h @ params["head_w"] + params["head_b"])[..., 0]
+
+
+@dataclasses.dataclass
+class LSTM:
+    hidden: int = 32
+    steps: int = 500
+    batch: int = 512
+    lr: float = 3e-3
+    seed: int = 0
+    params: Dict = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "LSTM":
+        assert x.ndim == 3, "LSTM expects (N, L, F) sequences"
+
+        def loss(params, xb, yb, wb):
+            logits = _forward(params, xb)
+            return (wb * (jax.nn.softplus(logits) - yb * logits)).mean()
+
+        init = _init_lstm(jax.random.PRNGKey(self.seed), x.shape[-1], self.hidden)
+        self.params = fit_adam(
+            init, loss, x, y,
+            steps=self.steps, batch=self.batch, lr=self.lr, seed=self.seed,
+        )
+        return self
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jax.nn.sigmoid(_forward(self.params, jnp.asarray(x))))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return (self.predict_proba(x) >= 0.5).astype(np.int32)

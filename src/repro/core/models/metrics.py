@@ -1,0 +1,47 @@
+"""Classification metrics — the paper evaluates with F1-macro (§VI-A),
+weighting the fulfilled and unfulfilled classes equally."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+__all__ = ["confusion", "f1_macro", "classification_report"]
+
+
+def confusion(y_true: np.ndarray, y_pred: np.ndarray) -> np.ndarray:
+    """2x2 confusion matrix, rows = true class, cols = predicted class."""
+    y_true = np.asarray(y_true).astype(int).ravel()
+    y_pred = np.asarray(y_pred).astype(int).ravel()
+    cm = np.zeros((2, 2), dtype=np.int64)
+    for t in (0, 1):
+        for p in (0, 1):
+            cm[t, p] = int(np.sum((y_true == t) & (y_pred == p)))
+    return cm
+
+
+def _f1(tp: int, fp: int, fn: int) -> float:
+    denom = 2 * tp + fp + fn
+    return 2 * tp / denom if denom else 0.0
+
+
+def f1_macro(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    """Unweighted mean of per-class F1 scores."""
+    cm = confusion(y_true, y_pred)
+    f1_pos = _f1(cm[1, 1], cm[0, 1], cm[1, 0])
+    f1_neg = _f1(cm[0, 0], cm[1, 0], cm[0, 1])
+    return 0.5 * (f1_pos + f1_neg)
+
+
+def classification_report(y_true: np.ndarray, y_pred: np.ndarray) -> Dict[str, float]:
+    cm = confusion(y_true, y_pred)
+    tp, fp, fn, tn = cm[1, 1], cm[0, 1], cm[1, 0], cm[0, 0]
+    return {
+        "f1_macro": f1_macro(y_true, y_pred),
+        "f1_available": _f1(tp, fp, fn),
+        "f1_unavailable": _f1(tn, fn, fp),
+        "accuracy": float((tp + tn) / max(1, cm.sum())),
+        "support_available": float(tp + fn),
+        "support_unavailable": float(tn + fp),
+    }

@@ -1,0 +1,62 @@
+"""Small MLP predictor (point-wise model group)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ._train import fit_adam
+
+__all__ = ["MLP"]
+
+
+def _init_mlp(key, n_in: int, hidden: int) -> Dict[str, jnp.ndarray]:
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / n_in) ** 0.5
+    s2 = (2.0 / hidden) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (n_in, hidden)) * s1,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, 1)) * s2,
+        "b2": jnp.zeros((1,)),
+    }
+
+
+def _forward(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[..., 0]
+
+
+@dataclasses.dataclass
+class MLP:
+    hidden: int = 32
+    l2: float = 1e-5
+    steps: int = 800
+    lr: float = 3e-3
+    seed: int = 0
+    params: Dict = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "MLP":
+        l2 = self.l2
+
+        def loss(params, xb, yb, wb):
+            logits = _forward(params, xb)
+            ll = wb * (jax.nn.softplus(logits) - yb * logits)
+            reg = sum(jnp.sum(p**2) for k, p in params.items() if k.startswith("w"))
+            return ll.mean() + l2 * reg
+
+        init = _init_mlp(jax.random.PRNGKey(self.seed), x.shape[-1], self.hidden)
+        self.params = fit_adam(
+            init, loss, x, y, steps=self.steps, lr=self.lr, seed=self.seed
+        )
+        return self
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jax.nn.sigmoid(_forward(self.params, jnp.asarray(x))))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return (self.predict_proba(x) >= 0.5).astype(np.int32)

@@ -1,0 +1,119 @@
+"""Tiny Transformer sequence predictor — paper §VI-A sequence model group.
+
+Two pre-norm encoder blocks over the trailing feature window, sinusoidal
+positions, mean pooling, linear head.  Deliberately small: the paper's
+finding is that feature design dominates model complexity for this task.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ._train import fit_adam
+
+__all__ = ["TransformerClassifier"]
+
+
+def _sincos(l: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(l)[:, None]
+    i = jnp.arange(d // 2)[None, :]
+    angle = pos / (10000 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _init(key, n_in: int, d: int, n_layers: int) -> Dict:
+    keys = jax.random.split(key, 1 + 4 * n_layers)
+    params: Dict = {
+        "embed": jax.random.normal(keys[0], (n_in, d)) * (1.0 / n_in) ** 0.5,
+        "head_w": jnp.zeros((d, 1)),
+        "head_b": jnp.zeros((1,)),
+        "blocks": [],
+    }
+    s = (1.0 / d) ** 0.5
+    for li in range(n_layers):
+        k = keys[1 + 4 * li : 5 + 4 * li]
+        params["blocks"].append(
+            {
+                "wqkv": jax.random.normal(k[0], (d, 3 * d)) * s,
+                "wo": jax.random.normal(k[1], (d, d)) * s,
+                "w1": jax.random.normal(k[2], (d, 4 * d)) * s,
+                "w2": jax.random.normal(k[3], (4 * d, d)) * (1.0 / (4 * d)) ** 0.5,
+                "ln1": jnp.ones((d,)),
+                "ln2": jnp.ones((d,)),
+            }
+        )
+    return params
+
+
+def _ln(x, g):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+
+def _forward(params, x, *, n_heads: int = 2):
+    b, l, _ = x.shape
+    h = x @ params["embed"]
+    d = h.shape[-1]
+    h = h + _sincos(l, d)[None]
+    hd = d // n_heads
+    for blk in params["blocks"]:
+        y = _ln(h, blk["ln1"])
+        qkv = y @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, l, n_heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, l, n_heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, l, n_heads, hd).transpose(0, 2, 1, 3)
+        att = jax.nn.softmax(q @ jnp.swapaxes(k, -1, -2) / hd**0.5, axis=-1)
+        y = (att @ v).transpose(0, 2, 1, 3).reshape(b, l, d) @ blk["wo"]
+        h = h + y
+        y = _ln(h, blk["ln2"])
+        h = h + jax.nn.gelu(y @ blk["w1"]) @ blk["w2"]
+    pooled = h.mean(axis=1)
+    return (pooled @ params["head_w"] + params["head_b"])[..., 0]
+
+
+@dataclasses.dataclass
+class TransformerClassifier:
+    d_model: int = 32
+    n_layers: int = 2
+    n_heads: int = 2
+    steps: int = 500
+    batch: int = 256
+    lr: float = 1e-3
+    seed: int = 0
+    params: Dict = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "TransformerClassifier":
+        assert x.ndim == 3, "Transformer expects (N, L, F) sequences"
+        n_heads = self.n_heads
+
+        def loss(params, xb, yb, wb):
+            logits = _forward(params, xb, n_heads=n_heads)
+            return (wb * (jax.nn.softplus(logits) - yb * logits)).mean()
+
+        init = _init(
+            jax.random.PRNGKey(self.seed), x.shape[-1], self.d_model, self.n_layers
+        )
+        self.params = fit_adam(
+            init, loss, x, y,
+            steps=self.steps, batch=self.batch, lr=self.lr, seed=self.seed,
+        )
+        return self
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        probs = []
+        for i in range(0, len(x), 4096):  # bounded memory at predict time
+            logits = _forward(
+                self.params, jnp.asarray(x[i : i + 4096]), n_heads=self.n_heads
+            )
+            probs.append(np.asarray(jax.nn.sigmoid(logits)))
+        return np.concatenate(probs)
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return (self.predict_proba(x) >= 0.5).astype(np.int32)

@@ -1,0 +1,282 @@
+"""Histogram gradient-boosted trees and random forests in pure JAX.
+
+The paper's best availability predictors are XGBoost and Random Forest
+(§VI-D).  Neither library is available offline, and the project rule is to
+build every substrate natively — so this module implements both on a shared
+vectorised histogram-tree grower:
+
+* features are quantile-binned to ``n_bins`` integer codes;
+* trees grow level-wise to a fixed depth: per level, a (node × feature ×
+  bin) gradient/hessian histogram is built with one ``segment_sum``, split
+  gain is the standard second-order formula ``GL²/(HL+λ) + GR²/(HR+λ) −
+  G²/(H+λ)``, and sample→node assignment advances with one gather;
+* **GBDT mode** (``GradientBoostedTrees``): Newton boosting on the logistic
+  loss, exactly XGBoost's formulation (g = p − y, h = p(1−p), shrinkage,
+  row subsampling, per-tree feature subsampling);
+* **RF mode** (``RandomForest``): each tree fits the labels directly with
+  squared loss on a Poisson(1) bootstrap, predictions averaged.
+
+Everything after binning is jit-compiled; per-round work is O(N·F) with no
+data-dependent shapes, so the whole ensemble trains as one ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GradientBoostedTrees", "RandomForest"]
+
+
+# --------------------------------------------------------------------------
+# Binning
+# --------------------------------------------------------------------------
+
+def quantile_edges(x: np.ndarray, n_bins: int) -> np.ndarray:
+    """Per-feature quantile bin edges, shape (F, n_bins - 1)."""
+    qs = np.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+    edges = np.quantile(x, qs, axis=0).T  # (F, n_bins - 1)
+    # strictly increasing edges keep searchsorted well-defined
+    edges += np.arange(edges.shape[1])[None, :] * 1e-9
+    return edges.astype(np.float32)
+
+
+def bin_data(x: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """Digitise features to integer codes in [0, n_bins-1]; (N, F) int32."""
+    def one(col, e):
+        return jnp.searchsorted(e, col, side="right")
+    return jax.vmap(one, in_axes=(1, 0), out_axes=1)(x, edges).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Tree growing (shared by GBDT / RF)
+# --------------------------------------------------------------------------
+
+def _grow_tree(
+    xb: jnp.ndarray,        # (N, F) int32 binned features
+    g: jnp.ndarray,         # (N,) gradients
+    h: jnp.ndarray,         # (N,) hessians
+    feat_mask: jnp.ndarray, # (F,) float 0/1 feature subsample mask
+    *,
+    depth: int,
+    n_bins: int,
+    lam: float,
+    min_child_weight: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Level-wise growth to fixed `depth`.
+
+    Returns (split_feat, split_bin) of shape (depth, 2**(depth-1)) —
+    padded per level — and leaf values of shape (2**depth,).
+    """
+    n, f = xb.shape
+    max_nodes = 2 ** (depth - 1)
+    node = jnp.zeros((n,), jnp.int32)
+    split_feat = jnp.zeros((depth, max_nodes), jnp.int32)
+    split_bin = jnp.zeros((depth, max_nodes), jnp.int32)
+
+    feat_ids = jnp.arange(f, dtype=jnp.int32)[None, :]  # (1, F)
+
+    for level in range(depth):
+        n_nodes = 2**level
+        # -- histograms: one segment_sum over N*F flattened (node,f,bin) ids
+        ids = (node[:, None] * f + feat_ids) * n_bins + xb  # (N, F)
+        seg = n_nodes * f * n_bins
+        hist_g = jax.ops.segment_sum(
+            jnp.broadcast_to(g[:, None], (n, f)).ravel(), ids.ravel(), seg
+        ).reshape(n_nodes, f, n_bins)
+        hist_h = jax.ops.segment_sum(
+            jnp.broadcast_to(h[:, None], (n, f)).ravel(), ids.ravel(), seg
+        ).reshape(n_nodes, f, n_bins)
+
+        gl = jnp.cumsum(hist_g, axis=-1)[..., :-1]        # split "bin <= b"
+        hl = jnp.cumsum(hist_h, axis=-1)[..., :-1]
+        gt = hist_g.sum(-1, keepdims=True)
+        ht = hist_h.sum(-1, keepdims=True)
+        gr, hr = gt - gl, ht - hl
+
+        gain = gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+        ok = (hl >= min_child_weight) & (hr >= min_child_weight)
+        gain = jnp.where(ok, gain, -jnp.inf)
+        gain = jnp.where(feat_mask[None, :, None] > 0, gain, -jnp.inf)
+
+        flat = gain.reshape(n_nodes, -1)                   # (nodes, F*(B-1))
+        best = jnp.argmax(flat, axis=-1)
+        best_f = (best // (n_bins - 1)).astype(jnp.int32)
+        best_b = (best % (n_bins - 1)).astype(jnp.int32)
+        # nodes with no valid split: degenerate split keeps samples together
+        no_split = ~jnp.isfinite(jnp.max(flat, axis=-1))
+        best_f = jnp.where(no_split, 0, best_f)
+        # bin codes are <= n_bins - 1, so "fv > n_bins - 1" routes all left
+        best_b = jnp.where(no_split, n_bins - 1, best_b)
+
+        split_feat = split_feat.at[level, :n_nodes].set(best_f)
+        split_bin = split_bin.at[level, :n_nodes].set(best_b)
+
+        fv = jnp.take_along_axis(xb, best_f[node][:, None], axis=1)[:, 0]
+        node = node * 2 + (fv > best_b[node]).astype(jnp.int32)
+
+    leaf_g = jax.ops.segment_sum(g, node, 2**depth)
+    leaf_h = jax.ops.segment_sum(h, node, 2**depth)
+    leaf = -leaf_g / (leaf_h + lam)
+    return split_feat, split_bin, leaf
+
+
+def _tree_predict(
+    xb: jnp.ndarray, split_feat: jnp.ndarray, split_bin: jnp.ndarray, leaf: jnp.ndarray
+) -> jnp.ndarray:
+    """Route (N, F) binned samples through one tree; returns (N,) values."""
+    n = xb.shape[0]
+    node = jnp.zeros((n,), jnp.int32)
+    depth = split_feat.shape[0]
+    for level in range(depth):
+        f = split_feat[level][node]
+        b = split_bin[level][node]
+        fv = jnp.take_along_axis(xb, f[:, None], axis=1)[:, 0]
+        node = node * 2 + (fv > b).astype(jnp.int32)
+    return leaf[node]
+
+
+# --------------------------------------------------------------------------
+# Boosted ensemble
+# --------------------------------------------------------------------------
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n_rounds", "depth", "n_bins", "lam", "min_child_weight",
+        "learning_rate", "subsample", "colsample", "mode",
+    ),
+)
+def _fit_ensemble(
+    xb, y, w, key, *, n_rounds, depth, n_bins, lam, min_child_weight,
+    learning_rate, subsample, colsample, mode,
+):
+    n, f = xb.shape
+    y = y.astype(jnp.float32)
+
+    pos = jnp.clip((w * y).sum() / w.sum(), 1e-6, 1 - 1e-6)
+    f0 = jnp.log(pos / (1 - pos)) if mode == "gbdt" else 0.0
+    margin0 = jnp.full((n,), f0, jnp.float32)
+
+    def round_fn(carry, key_r):
+        margin = carry
+        k1, k2 = jax.random.split(key_r)
+        if mode == "gbdt":
+            p = jax.nn.sigmoid(margin)
+            g = (p - y) * w
+            h = jnp.maximum(p * (1 - p), 1e-6) * w
+            row_w = (
+                jax.random.bernoulli(k1, subsample, (n,)).astype(jnp.float32)
+                if subsample < 1.0 else jnp.ones((n,))
+            )
+        else:  # rf: squared loss around 0 -> leaf = weighted mean of y
+            g = -(y * w)
+            h = w
+            row_w = jax.random.poisson(k1, 1.0, (n,)).astype(jnp.float32)
+        g, h = g * row_w, h * row_w
+        feat_mask = (
+            jax.random.bernoulli(k2, colsample, (f,)).astype(jnp.float32)
+            if colsample < 1.0 else jnp.ones((f,))
+        )
+        # guarantee at least one active feature
+        feat_mask = jnp.where(feat_mask.sum() == 0, jnp.ones((f,)), feat_mask)
+        sf, sb, leaf = _grow_tree(
+            xb, g, h, feat_mask,
+            depth=depth, n_bins=n_bins, lam=lam,
+            min_child_weight=min_child_weight,
+        )
+        pred = _tree_predict(xb, sf, sb, leaf)
+        margin = margin + (learning_rate * pred if mode == "gbdt" else 0.0)
+        return margin, (sf, sb, leaf)
+
+    keys = jax.random.split(key, n_rounds)
+    _, trees = jax.lax.scan(round_fn, margin0, keys)
+    return f0, trees
+
+
+@partial(jax.jit, static_argnames=("mode", "learning_rate"))
+def _predict_ensemble(xb, f0, trees, *, mode, learning_rate):
+    sf, sb, leaf = trees
+
+    def one(carry, tree):
+        sfi, sbi, leafi = tree
+        return carry + _tree_predict(xb, sfi, sbi, leafi), None
+
+    total, _ = jax.lax.scan(one, jnp.zeros((xb.shape[0],)), (sf, sb, leaf))
+    if mode == "gbdt":
+        return jax.nn.sigmoid(f0 + learning_rate * total)
+    return total / sf.shape[0]  # rf: mean leaf value == P(y=1)
+
+
+@dataclasses.dataclass
+class _TreeEnsemble:
+    mode: str = "gbdt"
+    n_rounds: int = 60
+    depth: int = 4
+    n_bins: int = 64
+    lam: float = 1.0
+    min_child_weight: float = 1.0
+    learning_rate: float = 0.2
+    subsample: float = 1.0
+    colsample: float = 1.0
+    seed: int = 0
+    class_weight: bool = True
+    # fitted state
+    edges: np.ndarray = None
+    f0: float = None
+    trees: Tuple = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "_TreeEnsemble":
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y)
+        self.edges = quantile_edges(x, self.n_bins)
+        xb = bin_data(jnp.asarray(x), jnp.asarray(self.edges))
+        if self.class_weight:
+            from ._train import class_weights
+            w = jnp.asarray(class_weights(y))
+        else:
+            w = jnp.ones((len(y),), jnp.float32)
+        self.f0, self.trees = _fit_ensemble(
+            xb, jnp.asarray(y), w, jax.random.PRNGKey(self.seed),
+            n_rounds=self.n_rounds, depth=self.depth, n_bins=self.n_bins,
+            lam=self.lam, min_child_weight=self.min_child_weight,
+            learning_rate=self.learning_rate, subsample=self.subsample,
+            colsample=self.colsample, mode=self.mode,
+        )
+        return self
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        xb = bin_data(jnp.asarray(np.asarray(x, np.float32)), jnp.asarray(self.edges))
+        return np.asarray(
+            _predict_ensemble(
+                xb, self.f0, self.trees,
+                mode=self.mode, learning_rate=self.learning_rate,
+            )
+        )
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return (self.predict_proba(x) >= 0.5).astype(np.int32)
+
+
+@dataclasses.dataclass
+class GradientBoostedTrees(_TreeEnsemble):
+    """XGBoost-style second-order boosting (the paper's primary model)."""
+
+    mode: str = "gbdt"
+    subsample: float = 0.8
+
+
+@dataclasses.dataclass
+class RandomForest(_TreeEnsemble):
+    """Bootstrap-aggregated histogram trees."""
+
+    mode: str = "rf"
+    n_rounds: int = 50
+    depth: int = 5
+    colsample: float = 0.8
+    learning_rate: float = 1.0

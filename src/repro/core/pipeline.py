@@ -1,0 +1,119 @@
+"""Data Pipeline — paper §V, Fig. 4 (middle module).
+
+Connects the Data Lake to the Interrupt Predictor:
+
+* **WindowTable** — per-pool streaming feature state (the ring buffer of
+  cumulative counts) plus the most recent feature rows and attached
+  predictions.
+* **FeatureProcessor** — consumes new per-cycle success counts and updates
+  features *incrementally in O(1)* per pool (Algorithm 1); records that
+  fall out of the window are moved to the **DataArchive**.
+* Predictions from the attached predictor are written back onto the window
+  rows (§V: "attaches the prediction result to the corresponding input
+  record and stores it in the Window Table").
+
+The O(1) claim is tested by counting state-update work per cycle
+(``tests/test_pipeline.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .features import FeatureState, init_state, update
+
+__all__ = ["WindowRow", "WindowTable", "DataArchive", "FeatureProcessor"]
+
+PredictFn = Callable[[np.ndarray], float]
+
+
+@dataclasses.dataclass
+class WindowRow:
+    cycle: int
+    time: float
+    s_t: int
+    features: Tuple[float, float, float]
+    prediction: Optional[float] = None
+
+
+class DataArchive:
+    """Cold storage for rows evicted from the window table."""
+
+    def __init__(self):
+        self._rows: Dict[str, List[WindowRow]] = {}
+
+    def archive(self, pool_id: str, row: WindowRow) -> None:
+        self._rows.setdefault(pool_id, []).append(row)
+
+    def rows(self, pool_id: str) -> List[WindowRow]:
+        return self._rows.get(pool_id, [])
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._rows.values())
+
+
+class WindowTable:
+    """Recent rows + feature state per pool; bounded by the window length."""
+
+    def __init__(self, archive: Optional[DataArchive] = None):
+        self.rows: Dict[str, Deque[WindowRow]] = {}
+        self.state: Dict[str, FeatureState] = {}
+        self.archive = archive or DataArchive()
+
+    def append(self, pool_id: str, row: WindowRow, max_rows: int) -> None:
+        dq = self.rows.setdefault(pool_id, deque())
+        dq.append(row)
+        while len(dq) > max_rows:
+            self.archive.archive(pool_id, dq.popleft())
+
+    def latest(self, pool_id: str) -> Optional[WindowRow]:
+        dq = self.rows.get(pool_id)
+        return dq[-1] if dq else None
+
+
+class FeatureProcessor:
+    """Incremental feature computation + prediction fan-out (§V)."""
+
+    def __init__(
+        self,
+        pool_ids: Sequence[str],
+        *,
+        n_requests: int = 10,
+        window_minutes: float = 480.0,
+        dt_minutes: float = 3.0,
+        predict_fn: Optional[PredictFn] = None,
+    ):
+        self.pool_ids = list(pool_ids)
+        self.n = n_requests
+        self.dt_minutes = dt_minutes
+        self.window_cycles = int(round(window_minutes / dt_minutes))
+        self.table = WindowTable()
+        self.predict_fn = predict_fn
+        for pid in self.pool_ids:
+            self.table.state[pid] = init_state(n_requests, window_minutes, dt_minutes)
+        # instrumentation for the O(1)-per-update test
+        self.update_ops = 0
+
+    def on_cycle(self, cycle: int, time: float, s: Sequence[int]) -> Dict[str, WindowRow]:
+        """Ingest one collection cycle's success counts for all pools."""
+        if len(s) != len(self.pool_ids):
+            raise ValueError("per-pool success counts length mismatch")
+        out: Dict[str, WindowRow] = {}
+        for pid, s_t in zip(self.pool_ids, s):
+            state = self.table.state[pid]
+            state, feats = update(state, int(s_t))
+            self.update_ops += 1  # one O(1) state update per pool per cycle
+            row = WindowRow(cycle=cycle, time=time, s_t=int(s_t), features=feats)
+            if self.predict_fn is not None:
+                row.prediction = float(self.predict_fn(np.asarray(feats)))
+            self.table.append(pid, row, max_rows=self.window_cycles)
+            out[pid] = row
+        return out
+
+    def feature_matrix(self, pool_id: str) -> np.ndarray:
+        """(rows, 3) matrix of in-window features for one pool."""
+        return np.asarray([r.features for r in self.table.rows.get(pool_id, [])])

@@ -1,0 +1,82 @@
+"""Unified Interrupt Predictor API — paper §V (right module) + §VI-A zoo.
+
+Six model families, matching the paper's comparison set:
+
+==============  ==========================  ====================
+name            class                        input
+==============  ==========================  ====================
+``lr``          LogisticRegression           single data point
+``svm``         LinearSVM                    single data point
+``rf``          RandomForest                 single data point
+``xgb``         GradientBoostedTrees         single data point
+``lstm``        LSTM                         trailing sequence
+``transformer`` TransformerClassifier        trailing sequence
+``mlp``         MLP (extra, not in paper)    single data point
+==============  ==========================  ====================
+
+``fit_predictor`` trains on a :class:`~repro.core.dataset.Dataset`;
+``evaluate`` reports F1-macro and per-class scores.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .dataset import Dataset
+from .models.linear import LinearSVM, LogisticRegression
+from .models.lstm import LSTM
+from .models.metrics import classification_report, f1_macro
+from .models.mlp import MLP
+from .models.transformer import TransformerClassifier
+from .models.trees import GradientBoostedTrees, RandomForest
+
+__all__ = [
+    "MODEL_REGISTRY",
+    "SEQUENCE_MODELS",
+    "make_model",
+    "fit_predictor",
+    "evaluate",
+]
+
+MODEL_REGISTRY = {
+    "lr": LogisticRegression,
+    "svm": LinearSVM,
+    "rf": RandomForest,
+    "xgb": GradientBoostedTrees,
+    "mlp": MLP,
+    "lstm": LSTM,
+    "transformer": TransformerClassifier,
+}
+
+#: models that consume (N, L, F) sequences instead of (N, F) points
+SEQUENCE_MODELS = frozenset({"lstm", "transformer"})
+
+
+def make_model(name: str, **hparams):
+    try:
+        cls = MODEL_REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown model {name!r}; choose from {sorted(MODEL_REGISTRY)}")
+    return cls(**hparams)
+
+
+def fit_predictor(name: str, dataset: Dataset, **hparams):
+    """Train one predictor on the dataset's train split."""
+    model = make_model(name, **hparams)
+    wants_seq = name in SEQUENCE_MODELS
+    has_seq = dataset.x_train.ndim == 3
+    if wants_seq and not has_seq:
+        raise ValueError(f"{name} needs sequence_length in build_dataset")
+    x = dataset.x_train if wants_seq or not has_seq else dataset.x_train[:, -1, :]
+    return model.fit(x, dataset.y_train)
+
+
+def evaluate(model, dataset: Dataset) -> Dict[str, float]:
+    """F1-macro & friends on the dataset's test split."""
+    wants_seq = isinstance(model, (LSTM, TransformerClassifier))
+    has_seq = dataset.x_test.ndim == 3
+    x = dataset.x_test if wants_seq or not has_seq else dataset.x_test[:, -1, :]
+    y_pred = model.predict(x)
+    return classification_report(dataset.y_test, y_pred)

@@ -1,0 +1,439 @@
+"""Simulated cloud provider with spot capacity pools.
+
+This is the offline stand-in for the AWS/Azure control planes probed in the
+paper (no cloud credentials in this environment).  It reproduces the
+*structural* properties the paper measures, with dynamics calibrated to the
+paper's published statistics:
+
+* **Shared capacity pool per (instance type, AZ)** — all instances of a type
+  in an AZ draw from one hidden capacity process ``C_t`` (§IV-A).
+* **Regime-switching dynamics** — STABLE / TIGHT / CRUNCH Markov regimes.
+  TIGHT tends to precede CRUNCH, so probe-visible degradation *leads*
+  interruptions (the paper's §III-B observation that SnS "reflects capacity
+  changes that have not yet manifested as actual interruptions").
+* **Admission conservatism** — new spot requests are admitted against
+  ``C_t`` minus a non-negative *admission margin* that spikes when the
+  regime degrades and decays slowly afterwards.  Running instances are only
+  reclaimed when ``C_t`` drops below the running count.  This yields the
+  Table-I asymmetry: SnS under-counts actual availability far more often
+  than it over-counts.
+* **Clustered reclamation** — when capacity crunches, reclaimed nodes are
+  interrupted within seconds-to-minutes of each other, calibrated to the
+  Fig.-3 co-interrupt proximity CDF (>85 % < 1 min, ~93 % < 3 min).
+* **Rate limits** — per-region request budgets per minute; the 3-minute
+  probe cadence in the paper is the fastest cadence that stays within them.
+
+The provider is deliberately *interface-first* (`submit_spot_request` /
+`cancel` / node-pool maintenance) so the SnS collector code is portable to
+a real cloud backend (§VII provider-agnostic claim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .lifecycle import RequestState, SpotRequest
+
+__all__ = [
+    "PoolConfig",
+    "InterruptionEvent",
+    "RateLimitError",
+    "SimulatedProvider",
+    "default_fleet",
+]
+
+
+class RateLimitError(RuntimeError):
+    """Raised when a region's API request budget is exhausted."""
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+STABLE, TIGHT, CRUNCH = 0, 1, 2
+_REGIME_NAMES = ("stable", "tight", "crunch")
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static description of one (instance type, AZ) capacity pool."""
+
+    instance_type: str
+    region: str
+    az: str = "a"
+    price_per_hour: float = 1.0          # on-demand-discounted spot price
+    base_capacity: float = 30.0          # STABLE-regime mean capacity
+    volatility: float = 2.0              # capacity noise std per tick
+    # Regime dwell means (seconds).  STABLE >> TIGHT >> CRUNCH.
+    dwell_stable: float = 8 * 3600.0
+    dwell_tight: float = 50 * 60.0
+    dwell_crunch: float = 10 * 60.0
+    # Probability that a degradation passes through TIGHT before CRUNCH
+    # (gives probes predictive lead time).
+    p_tight_first: float = 0.85
+
+    @property
+    def pool_id(self) -> str:
+        return f"{self.instance_type}/{self.region}/{self.az}"
+
+
+@dataclasses.dataclass(frozen=True)
+class InterruptionEvent:
+    pool_id: str
+    instance_id: int
+    time: float                           # continuous timestamp (seconds)
+
+
+@dataclasses.dataclass
+class _PoolState:
+    cfg: PoolConfig
+    capacity: float                       # hidden C_t
+    regime: int = STABLE
+    regime_until: float = 0.0             # next regime re-draw time
+    admission_margin: float = 0.0         # conservatism margin (decaying)
+    running: Dict[int, SpotRequest] = dataclasses.field(default_factory=dict)
+    provisioning: Dict[int, SpotRequest] = dataclasses.field(default_factory=dict)
+    # node-pool ground truth bookkeeping
+    target_nodes: int = 0
+    replenish_at: float = math.inf
+
+
+# --------------------------------------------------------------------------
+# Provider
+# --------------------------------------------------------------------------
+
+
+class SimulatedProvider:
+    """Discrete-event simulated spot control plane.
+
+    Time is continuous (seconds); dynamics advance on a fixed tick
+    (default 60 s).  Clients call :meth:`advance` to move the clock, then
+    interact via the request API.
+    """
+
+    def __init__(
+        self,
+        pools: Sequence[PoolConfig],
+        *,
+        seed: int = 0,
+        tick: float = 60.0,
+        provisioning_duration: float = 8.0,
+        requests_per_minute_per_region: int = 300,
+        replenish_delay: float = 300.0,
+        margin_decay_tau: float = 30 * 60.0,
+    ):
+        self.tick = float(tick)
+        self.provisioning_duration = float(provisioning_duration)
+        self.rate_limit = int(requests_per_minute_per_region)
+        self.replenish_delay = float(replenish_delay)
+        self.margin_decay_tau = float(margin_decay_tau)
+        self._rng = np.random.default_rng(seed)
+        self.now = 0.0
+        self._pools: Dict[str, _PoolState] = {}
+        for cfg in pools:
+            st = _PoolState(cfg=cfg, capacity=cfg.base_capacity)
+            st.regime_until = self._draw_dwell(cfg, STABLE)
+            self._pools[cfg.pool_id] = st
+        self.interruptions: List[InterruptionEvent] = []
+        self._provision_listeners: List[Callable[[SpotRequest], None]] = []
+        self._rate_window: Dict[str, List[float]] = {}
+        self.api_calls = 0
+
+    # -- public API -------------------------------------------------------
+
+    @property
+    def pool_ids(self) -> List[str]:
+        return list(self._pools)
+
+    def pool_config(self, pool_id: str) -> PoolConfig:
+        return self._pools[pool_id].cfg
+
+    def on_provisioning(self, callback: Callable[[SpotRequest], None]) -> None:
+        """Subscribe to provisioning-started lifecycle events (the hook the
+        SnS Request Terminator uses)."""
+        self._provision_listeners.append(callback)
+
+    def submit_spot_request(self, pool_id: str, *, n: int = 1) -> List[SpotRequest]:
+        """Submit ``n`` *concurrent* spot requests.
+
+        Two-phase, modelling true concurrency: (1) all ``n`` requests pass
+        the capacity check together, each accepted request consuming one
+        unit of headroom; (2) provisioning lifecycle events fire afterwards
+        (so an event-driven canceller cannot free capacity mid-batch).
+        This is what makes the accepted/submitted ratio a *graded* estimate
+        of available capacity (§III-A).
+        """
+        st = self._pools[pool_id]
+        self._charge_rate_limit(st.cfg.region, n)
+        out, accepted = [], []
+        headroom = (
+            st.capacity - len(st.running) - len(st.provisioning) - st.admission_margin
+        )
+        for _ in range(n):
+            req = SpotRequest(pool_id=pool_id, submit_time=self.now)
+            if headroom > 0.0 and self._rng.random() >= 0.012:
+                headroom -= 1.0
+                req.transition(RequestState.PROVISIONING, self.now)
+                st.provisioning[req.request_id] = req
+                accepted.append(req)
+            else:
+                req.transition(RequestState.REJECTED, self.now)
+            out.append(req)
+        for req in accepted:
+            for cb in self._provision_listeners:
+                cb(req)
+        return out
+
+    def cancel(self, request: SpotRequest) -> None:
+        """Cancel a PROVISIONING request (the scoot)."""
+        st = self._pools[request.pool_id]
+        if request.state is RequestState.PROVISIONING:
+            request.transition(RequestState.CANCELLED, self.now)
+            st.provisioning.pop(request.request_id, None)
+        # cancelling REJECTED/terminal requests is a no-op, like real APIs
+
+    def terminate(self, request: SpotRequest) -> None:
+        st = self._pools[request.pool_id]
+        if request.state is RequestState.RUNNING:
+            request.transition(RequestState.TERMINATED, self.now)
+            st.running.pop(request.request_id, None)
+
+    def set_node_pool(self, pool_id: str, n_nodes: int) -> None:
+        """Declare a ground-truth node pool that tries to keep ``n_nodes``
+        running (an autoscaling-group analogue; §III-B's 10-node pools)."""
+        self._pools[pool_id].target_nodes = int(n_nodes)
+        self._pools[pool_id].replenish_at = self.now  # acquire ASAP
+
+    def running_count(self, pool_id: str) -> int:
+        return len(self._pools[pool_id].running)
+
+    def running_cost(self, pool_id: str, now: Optional[float] = None) -> float:
+        """Total compute cost billed so far for RUNNING time in this pool."""
+        now = self.now if now is None else now
+        st = self._pools[pool_id]
+        price = st.cfg.price_per_hour / 3600.0
+        total = 0.0
+        for req in st.running.values():
+            total += req.billed_seconds(now) * price
+        return total
+
+    def advance(self, to_time: float) -> None:
+        """Advance simulation clock, stepping pool dynamics each tick."""
+        if to_time < self.now:
+            raise ValueError("time moves forward only")
+        while self.now + self.tick <= to_time:
+            self.now += self.tick
+            for st in self._pools.values():
+                self._step_pool(st)
+        # fractional remainder advances the clock without a dynamics step
+        if to_time > self.now:
+            self.now = to_time
+            self._settle_provisioning()
+
+    # -- internals ---------------------------------------------------------
+
+    def _draw_dwell(self, cfg: PoolConfig, regime: int) -> float:
+        mean = (cfg.dwell_stable, cfg.dwell_tight, cfg.dwell_crunch)[regime]
+        if regime == STABLE:
+            return self.now + float(self._rng.exponential(mean))
+        # Degraded regimes have concentrated dwell times: elapsed time in
+        # degradation is informative about time-to-interruption, which is
+        # what gives CUT its predictive value at long horizons (§IV-B).
+        return self.now + float(self._rng.uniform(0.7 * mean, 1.3 * mean))
+
+    def _admit(self, st: _PoolState) -> bool:
+        """Capacity check for a single new request (Fig. 1, first decision)."""
+        headroom = (
+            st.capacity - len(st.running) - len(st.provisioning) - st.admission_margin
+        )
+        if headroom <= 0.0:
+            return False
+        # Transient API flakiness: rare spurious rejections even with room.
+        if self._rng.random() < 0.012:
+            return False
+        return True
+
+    def _step_pool(self, st: _PoolState) -> None:
+        cfg = st.cfg
+        # -- regime transitions ------------------------------------------
+        if self.now >= st.regime_until:
+            st.regime = self._next_regime(st)
+            st.regime_until = self._draw_dwell(cfg, st.regime)
+            if st.regime in (TIGHT, CRUNCH):
+                # Degradation raises the admission margin — new requests
+                # start failing *partially* before running instances are
+                # reclaimed (paper Fig. 2 lead-time behaviour; Table I's
+                # Actual > SnS cases are mostly graded, not blackouts).
+                bump = self._rng.uniform(0.15, 0.7) * max(st.target_nodes, 4)
+                st.admission_margin = max(st.admission_margin, bump)
+        # -- capacity mean-reversion to regime target ----------------------
+        target = self._regime_target(st)
+        st.capacity += 0.35 * (target - st.capacity) + float(
+            self._rng.normal(0.0, cfg.volatility)
+        )
+        st.capacity = max(0.0, st.capacity)
+        # -- admission margin decays slowly (conservative recovery) --------
+        st.admission_margin *= math.exp(-self.tick / self.margin_decay_tau)
+        if st.admission_margin < 0.05:
+            st.admission_margin = 0.0
+        # -- reclaim running instances if capacity fell below them ---------
+        # Hysteresis: providers reclaim in sweeps, not single-node dribbles;
+        # a 1-2 node transient dip outside CRUNCH does not trigger a sweep.
+        overflow = len(st.running) - int(st.capacity)
+        if overflow > 0 and (st.regime == CRUNCH or overflow >= 3):
+            self._reclaim(st, overflow)
+        # -- node-pool replenishment ---------------------------------------
+        self._replenish(st)
+        self._settle_provisioning()
+
+    def _next_regime(self, st: _PoolState) -> int:
+        r = st.regime
+        u = self._rng.random()
+        if r == STABLE:
+            # degrade; usually via TIGHT (prediction lead time), rarely
+            # straight to CRUNCH (the hard, unpredictable case)
+            return TIGHT if u < st.cfg.p_tight_first else CRUNCH
+        if r == TIGHT:
+            return CRUNCH if u < 0.75 else STABLE
+        # CRUNCH: mostly recover through TIGHT
+        return TIGHT if u < 0.6 else STABLE
+
+    def _regime_target(self, st: _PoolState) -> float:
+        cfg, n = st.cfg, max(st.target_nodes, 1)
+        if st.regime == STABLE:
+            return cfg.base_capacity
+        if st.regime == TIGHT:
+            # just around the running demand: probes contend with demand
+            return n + float(self._rng.uniform(0.15 * n, 0.6 * n))
+        # CRUNCH: below running demand -> forces reclamation
+        return float(self._rng.uniform(0.0, 0.8 * n))
+
+    def _reclaim(self, st: _PoolState, k: int) -> None:
+        """Interrupt ``k`` running instances with clustered timestamps.
+
+        Co-interrupt proximity calibration (paper Fig. 3): delays are a
+        mixture of a fast exponential (same reclamation sweep, ~88 %) and a
+        slower uniform tail (independent follow-up sweeps).  Calibrated to
+        >85 % of proximities < 1 min and ≈93 % < 3 min.
+        """
+        victims = list(st.running.values())[:k]
+        base = self.now
+        for i, req in enumerate(victims):
+            if i == 0 or self._rng.random() < 0.86:
+                delay = float(self._rng.exponential(16.0))
+            else:
+                delay = float(self._rng.uniform(60.0, 600.0))
+            t = base + delay
+            req.transition(RequestState.INTERRUPTED, t)
+            st.running.pop(req.request_id, None)
+            self.interruptions.append(
+                InterruptionEvent(st.cfg.pool_id, req.request_id, t)
+            )
+        # A sweep that actually reclaimed nodes means the pool has zero
+        # spare capacity: new admissions black out until the margin decays
+        # (this is what keeps post-interruption unavailability episodes
+        # alive for tens of minutes, as in the paper's Fig. 2 traces).
+        st.admission_margin += k + self._rng.uniform(0.4, 1.0) * max(
+            st.target_nodes, 4
+        )
+        st.replenish_at = max(st.replenish_at, self.now + self.replenish_delay)
+
+    def _replenish(self, st: _PoolState) -> None:
+        """Node pool tries to restore target_nodes (ASG behaviour): retries
+        every tick once the post-interruption cooldown has passed."""
+        if st.target_nodes <= 0 or self.now < st.replenish_at:
+            return
+        deficit = st.target_nodes - len(st.running) - len(st.provisioning)
+        for _ in range(max(0, deficit)):
+            if not self._admit(st):
+                break  # retry next tick
+            req = SpotRequest(pool_id=st.cfg.pool_id, submit_time=self.now)
+            req.transition(RequestState.PROVISIONING, self.now)
+            st.provisioning[req.request_id] = req
+
+    def _settle_provisioning(self) -> None:
+        """Provisioning completes after `provisioning_duration`: requests
+        not cancelled by then transition to RUNNING (and start billing)."""
+        for st in self._pools.values():
+            done = [
+                r
+                for r in st.provisioning.values()
+                if self.now - r.history[-1][0] >= self.provisioning_duration
+            ]
+            for req in done:
+                req.transition(RequestState.RUNNING, self.now)
+                st.provisioning.pop(req.request_id)
+                st.running[req.request_id] = req
+
+    def _charge_rate_limit(self, region: str, n: int) -> None:
+        window = self._rate_window.setdefault(region, [])
+        cutoff = self.now - 60.0
+        window[:] = [t for t in window if t > cutoff]
+        if len(window) + n > self.rate_limit:
+            raise RateLimitError(
+                f"region {region}: {len(window) + n} requests in 60 s "
+                f"exceeds limit {self.rate_limit}"
+            )
+        window.extend([self.now] * n)
+        self.api_calls += n
+
+
+# --------------------------------------------------------------------------
+# Fleet construction helpers
+# --------------------------------------------------------------------------
+
+_AWS_REGIONS = [
+    "us-east-1", "us-west-2", "eu-west-1", "ap-northeast-1", "us-east-2",
+    "eu-central-1", "ap-southeast-1", "sa-east-1", "ca-central-1",
+    "ap-south-1", "eu-north-1",
+]
+_AZURE_REGIONS = ["eastus", "westus2", "westeurope", "japaneast"]
+
+_INSTANCE_FAMILIES = [
+    ("m5.large", 0.096), ("m5.xlarge", 0.192), ("c5.large", 0.085),
+    ("c5.2xlarge", 0.34), ("r5.large", 0.126), ("r5.2xlarge", 0.504),
+    ("g4dn.xlarge", 0.526), ("p3.2xlarge", 3.06), ("t3.medium", 0.0416),
+    ("i3.large", 0.156), ("m6i.large", 0.096), ("c6i.xlarge", 0.17),
+]
+
+
+def default_fleet(
+    n_pools: int = 68,
+    *,
+    seed: int = 0,
+    providers: Tuple[str, ...] = ("aws", "azure"),
+) -> List[PoolConfig]:
+    """Build a fleet of pool configs shaped like the paper's campaign:
+    68 instance types across 15 regions (47 AWS + 21 Azure)."""
+    rng = np.random.default_rng(seed)
+    n_aws = round(n_pools * 47 / 68) if "azure" in providers else n_pools
+    configs: List[PoolConfig] = []
+    for i in range(n_pools):
+        if "aws" in providers and (i < n_aws or "azure" not in providers):
+            region = _AWS_REGIONS[i % len(_AWS_REGIONS)]
+            cloud = "aws"
+        else:
+            region = _AZURE_REGIONS[i % len(_AZURE_REGIONS)]
+            cloud = "azure"
+        itype, price = _INSTANCE_FAMILIES[i % len(_INSTANCE_FAMILIES)]
+        # Azure pools are calmer in Table I (88.7 % vs 77.1 % match):
+        stability = 3.0 if cloud == "azure" else 1.0
+        configs.append(
+            PoolConfig(
+                instance_type=f"{cloud}:{itype}:{i}",
+                region=region,
+                az=chr(ord("a") + int(rng.integers(0, 3))),
+                price_per_hour=price * float(rng.uniform(0.8, 1.25)),
+                base_capacity=float(rng.uniform(25.0, 45.0)),
+                volatility=float(rng.uniform(1.0, 2.5)),
+                dwell_stable=float(rng.uniform(4.0, 12.0)) * 3600.0 * stability,
+                dwell_tight=float(rng.uniform(30.0, 80.0)) * 60.0,
+                dwell_crunch=float(rng.uniform(5.0, 18.0)) * 60.0,
+            )
+        )
+    return configs

@@ -1,0 +1,169 @@
+"""Trace-driven workload simulation — paper §VI-E, Fig. 9.
+
+Replays a 24-hour availability trace (3-minute cycles) against a batch
+query workload and compares scheduling strategies:
+
+* **Always Run** — launch the next queued query immediately whenever the
+  pool is available and idle (unguided baseline).
+* **Shortest Job First** — same, with the queue sorted by ascending
+  duration (reduces expected loss per interruption without prediction).
+* **Predict-AR** — consults the SnS-trained predictor every collection
+  cycle; when it forecasts upcoming unavailability, *defers launching new
+  queries* for the prediction-horizon duration while leaving any running
+  query undisturbed (the paper's strategy).
+
+Semantics follow the paper: queries proceed only while the pool is fully
+available; the running query's progress is lost the moment the pool
+becomes unavailable (binary formulation — §IV-A), and the query is retried
+later.  Metrics: total lost computation, idle-while-available time, and
+makespan.  The experiment repeats each run over random permutations of the
+query queue and averages (§VI-E).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["SimResult", "replay", "run_strategies"]
+
+# prediction callback: cycle index -> 1 if pool forecast to stay available
+PredictorFn = Callable[[int], int]
+
+
+@dataclasses.dataclass
+class SimResult:
+    strategy: str
+    lost_seconds: float
+    idle_seconds: float          # pool available but deliberately idle
+    completed: int
+    total_queries: int
+    makespan_seconds: float
+
+    def __add__(self, other: "SimResult") -> "SimResult":
+        assert self.strategy == other.strategy
+        return SimResult(
+            self.strategy,
+            self.lost_seconds + other.lost_seconds,
+            self.idle_seconds + other.idle_seconds,
+            self.completed + other.completed,
+            self.total_queries + other.total_queries,
+            self.makespan_seconds + other.makespan_seconds,
+        )
+
+    def scaled(self, k: float) -> "SimResult":
+        return SimResult(
+            self.strategy,
+            self.lost_seconds * k,
+            self.idle_seconds * k,
+            int(round(self.completed * k)),
+            int(round(self.total_queries * k)),
+            self.makespan_seconds * k,
+        )
+
+
+def replay(
+    avail: np.ndarray,
+    durations: Sequence[float],
+    *,
+    strategy: str = "always_run",
+    dt: float = 180.0,
+    predictor: Optional[PredictorFn] = None,
+    horizon_cycles: int = 1,
+) -> SimResult:
+    """Replay one trace with one strategy.
+
+    Args:
+      avail: (T,) binary pool availability per collection cycle.
+      durations: query durations (seconds).
+      strategy: "always_run" | "sjf" | "predict_ar".
+      predictor: required for predict_ar — maps cycle -> predicted label
+        (1 = stays available over the horizon).
+      horizon_cycles: deferral length when the predictor flags risk.
+    """
+    avail = np.asarray(avail).astype(bool)
+    queue: List[float] = list(durations)
+    if strategy == "sjf":
+        queue.sort()
+    elif strategy == "predict_ar" and predictor is None:
+        raise ValueError("predict_ar requires a predictor")
+
+    t_cycles = len(avail)
+    lost = 0.0
+    idle = 0.0
+    completed = 0
+    makespan = t_cycles * dt
+    remaining: Optional[float] = None    # remaining work of running query
+    progress = 0.0                        # work done on the running query
+    defer_until_cycle = -1
+
+    for c in range(t_cycles):
+        if not avail[c]:
+            # pool down for this cycle: running query loses all progress
+            if remaining is not None:
+                lost += progress
+                queue.insert(0, progress + remaining)  # retry full query
+                remaining, progress = None, 0.0
+            continue
+
+        if strategy == "predict_ar" and c > defer_until_cycle:
+            if predictor(c) == 0:  # forecast: will NOT stay available
+                defer_until_cycle = c + horizon_cycles
+
+        budget = dt
+        while budget > 1e-9:
+            if remaining is None:
+                deferred = strategy == "predict_ar" and c <= defer_until_cycle
+                if not queue or deferred:
+                    idle += budget
+                    break
+                remaining, progress = queue.pop(0), 0.0
+            step = min(budget, remaining)
+            remaining -= step
+            progress += step
+            budget -= step
+            if remaining <= 1e-9:
+                completed += 1
+                remaining, progress = None, 0.0
+                if not queue:
+                    makespan = min(makespan, (c + 1) * dt - budget)
+
+    # a query still running when the trace ends is neither lost nor complete
+    return SimResult(
+        strategy=strategy,
+        lost_seconds=lost,
+        idle_seconds=idle,
+        completed=completed,
+        total_queries=len(durations),
+        makespan_seconds=makespan,
+    )
+
+
+def run_strategies(
+    avail: np.ndarray,
+    durations: Sequence[float],
+    *,
+    dt: float = 180.0,
+    predictor: Optional[PredictorFn] = None,
+    horizon_cycles: int = 1,
+    n_permutations: int = 5,
+    seed: int = 0,
+) -> List[SimResult]:
+    """Average each strategy over query-order permutations (§VI-E)."""
+    rng = np.random.default_rng(seed)
+    durations = np.asarray(durations, dtype=np.float64)
+    strategies = ["always_run", "sjf"]
+    if predictor is not None:
+        strategies.append("predict_ar")
+    totals = {}
+    for _ in range(n_permutations):
+        perm = rng.permutation(durations)
+        for s in strategies:
+            r = replay(
+                avail, perm, strategy=s, dt=dt,
+                predictor=predictor, horizon_cycles=horizon_cycles,
+            )
+            totals[s] = r if s not in totals else totals[s] + r
+    return [totals[s].scaled(1.0 / n_permutations) for s in strategies]

@@ -1,0 +1,11 @@
+from .ckpt_policy import FixedInterval, SnSHazard, YoungDaly
+from .elastic import ElasticMeshManager, MeshPlan, reshard
+from .events import PodEvent, PodTrace, traces_from_campaign
+from .runner import ReplayResult, run_replay
+
+__all__ = [
+    "FixedInterval", "SnSHazard", "YoungDaly",
+    "ElasticMeshManager", "MeshPlan", "reshard",
+    "PodEvent", "PodTrace", "traces_from_campaign",
+    "ReplayResult", "run_replay",
+]

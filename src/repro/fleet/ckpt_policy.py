@@ -1,0 +1,77 @@
+"""Checkpoint-interval policies for preemptible training.
+
+The paper stops at "prediction enables proactive checkpoint triggering"
+(§I); this module operationalises it for the training data plane:
+
+* **FixedInterval** — checkpoint every ``interval`` seconds (baseline).
+* **YoungDaly** — the classical optimum ``τ* = sqrt(2·δ·MTBF)`` for
+  checkpoint cost δ and a *static* mean time between failures.
+* **SnSHazard** — beyond-paper: Young–Daly with a *time-varying* MTBF
+  estimated from the SnS interrupt predictor.  The predictor's probability
+  that the pool does NOT survive the next horizon ``h`` converts to an
+  instantaneous hazard ``λ = -ln(p_survive) / h`` and the interval adapts
+  as ``τ(t) = sqrt(2·δ/λ)``, clamped to [δ, τ_max].  Additionally, a
+  forecast above ``panic_threshold`` triggers an immediate checkpoint
+  (the Predict-AR analogue for training).
+
+All policies answer one question: "given the last checkpoint at time
+``t_ckpt`` and the current SnS features, should we checkpoint now?"
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+__all__ = ["FixedInterval", "YoungDaly", "SnSHazard"]
+
+
+@dataclasses.dataclass
+class FixedInterval:
+    interval: float                 # seconds
+
+    def should_checkpoint(self, now, t_last_ckpt, p_survive=None) -> bool:
+        return now - t_last_ckpt >= self.interval
+
+
+@dataclasses.dataclass
+class YoungDaly:
+    ckpt_cost: float                # δ: seconds to write a checkpoint
+    mtbf: float                     # static mean time between failures (s)
+
+    @property
+    def interval(self) -> float:
+        return math.sqrt(2.0 * self.ckpt_cost * self.mtbf)
+
+    def should_checkpoint(self, now, t_last_ckpt, p_survive=None) -> bool:
+        return now - t_last_ckpt >= self.interval
+
+
+@dataclasses.dataclass
+class SnSHazard:
+    """Young–Daly with SnS-predicted time-varying hazard."""
+
+    ckpt_cost: float                # δ (seconds)
+    horizon: float                  # predictor horizon (seconds)
+    tau_max: float = 3600.0         # interval ceiling when hazard ~ 0
+    panic_threshold: float = 0.5    # P(interrupt within horizon) forcing ckpt
+    floor_hazard: float = 1e-6
+
+    def interval(self, p_survive: float) -> float:
+        p_survive = min(max(p_survive, 1e-6), 1.0 - 1e-9)
+        lam = max(-math.log(p_survive) / self.horizon, self.floor_hazard)
+        tau = math.sqrt(2.0 * self.ckpt_cost / lam)
+        return float(np.clip(tau, self.ckpt_cost, self.tau_max))
+
+    def should_checkpoint(self, now, t_last_ckpt, p_survive=None) -> bool:
+        p = 1.0 if p_survive is None else float(p_survive)
+        since = now - t_last_ckpt
+        if 1.0 - p >= self.panic_threshold:
+            # imminent-interrupt forecast: checkpoint NOW — but under
+            # *sustained* panic don't re-write faster than 2δ, or the
+            # checkpoint overhead itself destroys goodput
+            return since >= 2.0 * self.ckpt_cost
+        return since >= self.interval(p)

@@ -1,0 +1,86 @@
+"""Elastic mesh management: re-mesh + re-shard when pods come and go.
+
+JAX's SPMD model has no dynamic membership — the idiomatic elastic
+pattern is *checkpoint → rebuild mesh → restore*: on pod loss the job
+restarts its jit functions on a smaller `(pod, data, model)` mesh and
+re-shards the latest checkpoint onto it; on pod recovery it scales back
+up.  ``ElasticMeshManager`` encapsulates that decision logic (which mesh
+for how many pods, when a re-mesh is worth it) and the resharding itself,
+which is a plain ``device_put`` with the new mesh's NamedShardings — XLA
+moves the bytes.
+
+Data determinism across re-meshes: the data iterator is indexed by
+(global step, microbatch id), not by device, so a re-meshed run consumes
+exactly the same token stream (straggler/ordering safety).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshPlan", "ElasticMeshManager", "reshard"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    def build(self, devices: Optional[np.ndarray] = None) -> Mesh:
+        devices = devices if devices is not None else np.array(jax.devices())
+        n = int(np.prod(self.shape))
+        if devices.size < n:
+            raise ValueError(f"need {n} devices, have {devices.size}")
+        return Mesh(
+            devices.reshape(-1)[:n].reshape(self.shape), self.axes
+        )
+
+
+class ElasticMeshManager:
+    """Chooses a mesh for the currently-available pods.
+
+    ``pod_capacity`` devices per pod; the `(data, model)` in-pod layout is
+    fixed, the pod axis grows/shrinks.  Scale-down to zero pods pauses the
+    job (the runner accounts that as unavailable time).
+    """
+
+    def __init__(
+        self,
+        *,
+        n_pods: int,
+        data_per_pod: int,
+        model_parallel: int,
+        min_pods: int = 1,
+    ):
+        self.n_pods = n_pods
+        self.data = data_per_pod
+        self.model = model_parallel
+        self.min_pods = min_pods
+
+    def plan_for(self, up_pods: List[int]) -> Optional[MeshPlan]:
+        k = len(up_pods)
+        if k < self.min_pods:
+            return None  # job pauses
+        if k == 1:
+            return MeshPlan((self.data, self.model), ("data", "model"))
+        return MeshPlan((k, self.data, self.model), ("pod", "data", "model"))
+
+    def global_batch_scale(self, up_pods: List[int]) -> float:
+        """Elastic batch policy: keep per-pod batch fixed, so global batch
+        scales with surviving pods (loss scaling handled by the trainer)."""
+        return max(len(up_pods), 0) / self.n_pods
+
+
+def reshard(tree, mesh: Mesh, specs) -> object:
+    """Re-shard a (restored) pytree onto a new mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree,
+        specs,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+    )

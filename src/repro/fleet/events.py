@@ -1,0 +1,77 @@
+"""Fleet events: provider availability traces → pod up/down event streams.
+
+The data plane trains on TPU pods that are spot capacity: one capacity
+pool per pod (a pod slice = the paper's "node pool", where any lost host
+kills the slice — the binary availability formulation maps exactly).  This
+module converts per-pool binary availability traces into the pod
+preemption/restore events the elastic runner consumes, plus SnS feature
+streams for the hazard-adaptive checkpoint policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collector import CampaignResult
+from repro.core.features import compute_features
+from repro.core.labels import binary_availability
+
+__all__ = ["PodEvent", "PodTrace", "traces_from_campaign"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PodEvent:
+    time: float
+    pod_id: int
+    up: bool
+
+
+@dataclasses.dataclass
+class PodTrace:
+    """One pod's availability over a campaign, with its SnS features."""
+
+    pod_id: int
+    pool_id: str
+    times: np.ndarray        # (T,) seconds
+    available: np.ndarray    # (T,) {0,1} — ground truth (running == N)
+    features: np.ndarray     # (T, 3) — SR/UR/CUT from SnS probes
+    dt: float                # collection interval (seconds)
+
+    def events(self) -> List[PodEvent]:
+        out = []
+        prev = True  # pods assumed up at t=0; first down edge emits an event
+        for t, a in zip(self.times, self.available.astype(bool)):
+            if a != prev:
+                out.append(PodEvent(float(t), self.pod_id, bool(a)))
+                prev = a
+        return out
+
+
+def traces_from_campaign(
+    result: CampaignResult,
+    *,
+    n_pods: Optional[int] = None,
+    window_minutes: float = 480.0,
+) -> List[PodTrace]:
+    """Map the first `n_pods` pools of a campaign onto pods."""
+    avail = binary_availability(result.running, result.n)
+    feats = compute_features(
+        result.s, result.n, window_minutes, result.interval / 60.0
+    )
+    n_pods = n_pods if n_pods is not None else len(result.pool_ids)
+    out = []
+    for pod in range(min(n_pods, len(result.pool_ids))):
+        out.append(
+            PodTrace(
+                pod_id=pod,
+                pool_id=result.pool_ids[pod],
+                times=result.times,
+                available=avail[pod],
+                features=feats[pod],
+                dt=result.interval,
+            )
+        )
+    return out

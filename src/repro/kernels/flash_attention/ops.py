@@ -1,0 +1,33 @@
+"""Public entry point for the flash-attention kernel.
+
+``flash_attention_op`` auto-selects interpret mode off-TPU so the same
+call sites work in CPU tests and on real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+__all__ = ["flash_attention_op"]
+
+
+def flash_attention_op(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 2**30,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )

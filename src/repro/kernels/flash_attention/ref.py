@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,     # (B, H, S_q, hd)
+    k: jnp.ndarray,     # (B, K, S_k, hd)
+    v: jnp.ndarray,     # (B, K, S_k, hd)
+    *,
+    causal: bool = True,
+    window: int = 2**30,
+) -> jnp.ndarray:
+    """Naive GQA attention with causal + sliding-window masking."""
+    b, h, s_q, hd = q.shape
+    kv = k.shape[1]
+    n_rep = h // kv
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / (hd**0.5)
+    q_pos = jnp.arange(s_q)[:, None]
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((s_q, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

@@ -1,0 +1,118 @@
+"""Selective-scan (Mamba-1) Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of warp-level
+parallelism, the channel axis is tiled over the grid (each program owns a
+``block_d`` slab of channels) and the **SSM state stays resident in VMEM
+scratch across sequence chunks** — the grid's innermost axis walks chunks
+sequentially, so the (block_d × N) state never round-trips to HBM.  This
+is exactly the fusion the XLA chunked-`associative_scan` path cannot
+express (it materialises (B, S, D, N) discretisation tensors in HBM;
+~17 GB/device at falcon-mamba's train_4k shape).
+
+Within a chunk the recurrence runs as a `fori_loop` over timesteps on the
+VPU; all loads/stores are (chunk × block_d) and (block_d × N) tiles.
+
+grid = (B, D/block_d, S/chunk)   [chunk axis innermost/sequential]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+    y_ref, hout_ref,
+    h_scr,
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)       # (chunk, bd)
+    dt = dt_ref[...].astype(jnp.float32)     # (chunk, bd)
+    a = a_ref[...].astype(jnp.float32)       # (bd, N)
+    b = b_ref[...].astype(jnp.float32)       # (chunk, N)
+    c = c_ref[...].astype(jnp.float32)       # (chunk, N)
+
+    def step(t, carry):
+        h, ys = carry
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, axis=0)[0]   # (bd,)
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=0)[0]
+        b_t = jax.lax.dynamic_slice_in_dim(b, t, 1, axis=0)[0]     # (N,)
+        c_t = jax.lax.dynamic_slice_in_dim(c, t, 1, axis=0)[0]
+        decay = jnp.exp(dt_t[:, None] * a)                         # (bd, N)
+        h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = (h * c_t[None, :]).sum(axis=1)                       # (bd,)
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y_t[None], t, axis=0)
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros_like(x)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_scr[...] = h
+    y_ref[...] = ys.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        hout_ref[...] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_d", "chunk", "interpret")
+)
+def selective_scan(
+    x: jnp.ndarray,      # (B, S, D)
+    dt: jnp.ndarray,     # (B, S, D)
+    a: jnp.ndarray,      # (D, N)
+    b: jnp.ndarray,      # (B, S, N)
+    c: jnp.ndarray,      # (B, S, N)
+    h0: jnp.ndarray,     # (B, D, N)
+    *,
+    block_d: int = 512,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    bsz, s, d = x.shape
+    n = a.shape[1]
+    block_d = min(block_d, d)
+    chunk = min(chunk, s)
+    assert d % block_d == 0 and s % chunk == 0
+    n_chunks = s // chunk
+    grid = (bsz, d // block_d, n_chunks)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+
+    y, h_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, block_d), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((None, chunk, block_d), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((block_d, n), lambda ib, id_, ic: (id_, 0)),
+            pl.BlockSpec((None, chunk, n), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((None, chunk, n), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((None, block_d, n), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, block_d), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((None, block_d, n), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, h0)
+    return y, h_out

@@ -1,0 +1,17 @@
+"""Public entry point for the selective-scan kernel (auto-interpret off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import selective_scan
+
+__all__ = ["selective_scan_op"]
+
+
+def selective_scan_op(x, dt, a, b, c, h0, *, block_d: int = 512, chunk: int = 128):
+    interpret = jax.default_backend() != "tpu"
+    return selective_scan(
+        x, dt, a, b, c, h0, block_d=block_d, chunk=chunk, interpret=interpret
+    )

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the selective-scan (Mamba-1 SSM) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(
+    x: jnp.ndarray,      # (B, S, D)   — conv+silu'd inputs (f32)
+    dt: jnp.ndarray,     # (B, S, D)   — softplus'd step sizes
+    a: jnp.ndarray,      # (D, N)      — negative state matrix
+    b: jnp.ndarray,      # (B, S, N)
+    c: jnp.ndarray,      # (B, S, N)
+    h0: jnp.ndarray,     # (B, D, N)   — initial state
+):
+    """Sequential reference: h_t = exp(dt_t a) h_{t-1} + dt_t x_t b_t.
+
+    Returns (y (B,S,D), h_final (B,D,N)).
+    """
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t[..., None] * a)                 # (B, D, N)
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b, 1, 0),
+        jnp.moveaxis(c, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final

@@ -1,0 +1,74 @@
+"""Batched SnS feature-replay Pallas kernel (Algorithm 1 at fleet scale).
+
+The paper's Data Pipeline updates SR/UR/CUT per pool in O(1); at
+SpotLake-class collection scale (instance types × regions × AZs ≈ 10⁴
+pools) the natural TPU formulation is a *batched replay*: one fused kernel
+recomputes all three features for a (pool-block × T) tile entirely in
+VMEM — one HBM read of the success counts, one write per feature, no
+intermediate cumulative arrays in HBM.
+
+Per pool-block tile:
+* ``SR`` — elementwise scale;
+* ``UR`` — prefix-sum of unfulfilled counts along T, then a shifted
+  difference (the paper's cumulative-array trick, vectorised);
+* ``CUT`` — running max of the last fully-fulfilled index (a `cummax`
+  replaces the sequential reset-counter recurrence, an associative-scan
+  rewrite of Algorithm 1 lines 10-14).
+
+grid = (pools / block_p,);  block = (block_p, T) in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _features_kernel(s_ref, sr_ref, ur_ref, cut_ref, *, n: int, w: int, dt: float):
+    s = s_ref[...].astype(jnp.float32)                       # (bp, T)
+    bp, t_max = s.shape
+
+    sr_ref[...] = s / n
+
+    unful = n - s
+    p = jnp.cumsum(unful, axis=1)                            # P[t], t >= 1
+    lagged = jnp.pad(p, ((0, 0), (w, 0)))[:, :t_max]         # P[t - w] (P<=0 -> 0)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (bp, t_max), 1) + 1
+    wlen = jnp.where(t_idx >= w, w, t_idx).astype(jnp.float32)
+    ur_ref[...] = (p - lagged) / (wlen * n)
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bp, t_max), 1)
+    full = (s == n) | (idx == 0)
+    last_full = jax.lax.cummax(jnp.where(full, idx, -1), axis=1)
+    cut_ref[...] = (idx - last_full).astype(jnp.float32) * dt
+
+
+@functools.partial(jax.jit, static_argnames=("n", "w", "dt", "block_p", "interpret"))
+def sns_features(
+    s: jnp.ndarray,        # (pools, T) int32
+    *,
+    n: int,
+    w: int,
+    dt: float,
+    block_p: int = 8,
+    interpret: bool = False,
+):
+    pools, t_max = s.shape
+    block_p = min(block_p, pools)
+    assert pools % block_p == 0
+    grid = (pools // block_p,)
+
+    kernel = functools.partial(_features_kernel, n=n, w=w, dt=dt)
+    out_shape = jax.ShapeDtypeStruct((pools, t_max), jnp.float32)
+    sr, ur, cut = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_p, t_max), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_p, t_max), lambda i: (i, 0))] * 3,
+        out_shape=[out_shape] * 3,
+        interpret=interpret,
+    )(s)
+    return jnp.stack([sr, ur, cut], axis=-1)

@@ -1,0 +1,20 @@
+"""Public entry point for the SnS feature kernel (auto-interpret off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import sns_features
+
+__all__ = ["sns_features_op"]
+
+
+def sns_features_op(s, *, n: int, window_minutes: float, dt_minutes: float,
+                    block_p: int = 8):
+    w = int(round(window_minutes / dt_minutes))
+    interpret = jax.default_backend() != "tpu"
+    return sns_features(
+        jnp.asarray(s, jnp.int32), n=n, w=w, dt=dt_minutes,
+        block_p=block_p, interpret=interpret,
+    )

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the batched SnS feature kernel (Algorithm 1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sns_features_ref(
+    s: jnp.ndarray,       # (pools, T) int32 success counts
+    n: int,
+    w: int,               # window length in cycles
+    dt: float,            # collection interval (minutes)
+):
+    """Vectorised replay of Algorithm 1; returns (pools, T, 3) f32.
+
+    Matches ``repro.core.features.compute_features`` bit-for-bit (that
+    numpy implementation is itself property-tested against the streaming
+    update)."""
+    pools, t_max = s.shape
+    sf = s.astype(jnp.float32)
+    sr = sf / n
+
+    unful = n - sf
+    p = jnp.concatenate(
+        [jnp.zeros((pools, 1), jnp.float32), jnp.cumsum(unful, axis=1)], axis=1
+    )
+    t_idx = jnp.arange(1, t_max + 1)
+    lag = jnp.maximum(t_idx - w, 0)
+    wlen = jnp.where(t_idx >= w, w, t_idx).astype(jnp.float32)
+    ur = (p[:, t_idx] - p[:, lag]) / (wlen * n)
+
+    # CUT via running max of "last fully-fulfilled index"
+    idx = jnp.arange(t_max)
+    full = (s == n) | (idx == 0)[None, :]
+    last_full = jax.lax.cummax(jnp.where(full, idx, -1), axis=1)
+    cut = (idx[None, :] - last_full).astype(jnp.float32) * dt
+
+    return jnp.stack([sr, ur, cut], axis=-1)

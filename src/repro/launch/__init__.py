@@ -1,0 +1,3 @@
+from .mesh import data_axes_of, make_production_mesh, mesh_axis_sizes
+
+__all__ = ["data_axes_of", "make_production_mesh", "mesh_axis_sizes"]

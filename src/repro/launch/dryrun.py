@@ -1,0 +1,382 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step, in_shardings, out_shardings).lower(**input_specs).compile()``
+must succeed on the production meshes; memory_analysis() proves the
+per-device footprint fits, cost_analysis() + the HLO-text roofline feed
+EXPERIMENTS.md.
+
+Run ONE cell:      python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+Run the full grid: python -m repro.launch.dryrun --all  [--mesh both] [--out results/dryrun]
+(--all spawns one subprocess per cell: isolates compiler memory and makes
+the sweep resumable — finished cells are skipped via their JSON files.)
+"""
+
+# The placeholder-device flag MUST precede any other import (jax locks the
+# device count on first init).  Deliberately NOT set in conftest/pyproject:
+# only the dry-run sees 512 fake devices.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, SHAPES, get_config, shape_applicability
+from repro.launch.mesh import data_axes_of, make_production_mesh, mesh_axis_sizes
+from repro.launch.roofline import HW, analyze_hlo, roofline_report
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.models.sharding import make_rules, param_specs
+from repro.train import OptConfig, init_opt_state
+from repro.train.trainer import make_train_step
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape, mesh):
+    """Abstract inputs + their shardings for one cell."""
+    dp = data_axes_of(mesh)
+    dp_size = int(np.prod([mesh_axis_sizes(mesh)[a] for a in dp]))
+    b, s = shape.global_batch, shape.seq_len
+    batch_axes = dp if b % dp_size == 0 else None
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = {}
+    shardings = {}
+    if shape.kind == "train":
+        specs = {"tokens": tok, "labels": tok}
+        shardings = {k: NamedSharding(mesh, P(batch_axes, None)) for k in specs}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32
+            )
+            shardings["frames"] = NamedSharding(mesh, P(batch_axes, None, None))
+    elif shape.kind == "prefill":
+        specs = {"tokens": tok}
+        shardings = {"tokens": NamedSharding(mesh, P(batch_axes, None))}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32
+            )
+            shardings["frames"] = NamedSharding(mesh, P(batch_axes, None, None))
+    else:  # decode
+        specs = {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        shardings = {"token": NamedSharding(mesh, P(batch_axes))}
+    return specs, shardings, batch_axes
+
+
+def _spec_tree_to_shardings(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _cache_spec_tree(cfg, batch_axes):
+    """PartitionSpec tree matching api.init_cache's structure."""
+    if cfg.family == "encdec":
+        return {
+            "k": P(None, batch_axes, "model", None, None),
+            "v": P(None, batch_axes, "model", None, None),
+            "xk": P(None, batch_axes, None, None, None),
+            "xv": P(None, batch_axes, None, None, None),
+            "len": P(),
+        }
+    from repro.models.lm import block_pattern
+
+    pattern, _ = block_pattern(cfg)
+    entries = []
+    for mixer, _moe, _w in pattern:
+        if mixer == "attn":
+            entries.append({
+                "k": P(None, batch_axes, "model", None, None),
+                "v": P(None, batch_axes, "model", None, None),
+            })
+        else:
+            entries.append({
+                "ssm": P(None, batch_axes, "model", None),
+                "conv": P(None, batch_axes, None, "model"),
+            })
+    return {"layers": entries, "len": P()}
+
+
+# --------------------------------------------------------------------------
+# Cell runner
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, hlo_dir=None,
+             variant: str = "baseline"):
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if variant == "optimized":
+        # §Perf hillclimb variant: sequence-parallel attention for archs
+        # whose head count doesn't divide the model axis
+        cfg = _dc.replace(cfg, seq_parallel_attn=True)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicability(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    dp = data_axes_of(mesh)
+    rules = make_rules(mesh)
+
+    t0 = time.time()
+    params_struct = jax.eval_shape(lambda: api.init_params(cfg, 0))
+    pspecs = param_specs(cfg, params_struct, rules)
+    pshard = _spec_tree_to_shardings(pspecs, mesh)
+    specs, in_shardings, batch_axes = input_specs(cfg, shape, mesh)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": int(n_dev), "kind": shape.kind, "variant": variant,
+    }
+
+    # -- per-cell tuning heuristics (recorded in the result) ----------------
+    n_params = cfg.param_count()
+    # bf16 Adam moments when f32 state would blow the 16 GiB HBM budget
+    moments = "bfloat16" if n_params * 10.0 / n_dev > 14 * 2**30 else "float32"
+    # q-chunk sized so per-chunk f32 scores stay ~<= 0.5 GiB/device
+    dp_size = int(np.prod([mesh_axis_sizes(mesh)[a] for a in dp]))
+    tp = mesh_axis_sizes(mesh)["model"]
+    heads_sharded = cfg.n_heads % tp == 0
+    h_loc = cfg.n_heads // tp if heads_sharded else cfg.n_heads
+    result["tuning"] = {"moments_dtype": moments, "heads_sharded": heads_sharded}
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            # memory-aware accumulation: grow grad_accum only until one
+            # microbatch's per-device activations fit ~1 GiB (per-micro
+            # overheads — FSDP weight gathers, gradient all-reduces —
+            # scale LINEARLY with grad_accum, so smaller is faster)
+            max_accum = max(1, shape.global_batch // dp_size)
+            grad_accum = int(os.environ.get("REPRO_GRAD_ACCUM", "0")) or 1
+            while grad_accum == 1 and grad_accum < min(16, max_accum):
+                b_loc_t = max(1, shape.global_batch // grad_accum // dp_size)
+                act_bytes = b_loc_t * shape.seq_len * cfg.d_model * 2
+                if act_bytes <= 1 * 2**30:
+                    break
+                grad_accum *= 2
+            while shape.global_batch % (grad_accum * dp_size):
+                grad_accum -= 1
+            result["grad_accum"] = grad_accum
+            b_loc = max(1, shape.global_batch // grad_accum // dp_size)
+            q_chunk = 1024
+            while (b_loc * h_loc * q_chunk * shape.seq_len * 4 > 0.5 * 2**30
+                   and q_chunk > 128):
+                q_chunk //= 2
+            result["tuning"]["q_chunk"] = q_chunk
+            opt_struct = jax.eval_shape(
+                lambda p: init_opt_state(p, moments_dtype=moments), params_struct
+            )
+            ospecs = {
+                "m": pspecs, "v": pspecs, "step": P(),  # moments shard like params
+            }
+            oshard = _spec_tree_to_shardings(ospecs, mesh)
+            accum_dtype = "bfloat16" if moments == "bfloat16" else "float32"
+            result["tuning"]["accum_dtype"] = accum_dtype
+            opt_cfg = OptConfig(moments_dtype=moments, update_dtype=accum_dtype)
+            step_fn = make_train_step(
+                cfg, opt_cfg, mesh=mesh,
+                data_axes=batch_axes or (), grad_accum=grad_accum,
+                remat="full", q_chunk=q_chunk, accum_dtype=accum_dtype,
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, in_shardings),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_struct, opt_struct, specs)
+        elif shape.kind == "prefill":
+            cache_specs = _cache_spec_tree(cfg, batch_axes)
+            cshard = _spec_tree_to_shardings(cache_specs, mesh)
+
+            def prefill_fn(params, batch):
+                return api.prefill(
+                    cfg, params, batch, mesh=mesh,
+                    data_axes=batch_axes or (), max_seq=shape.seq_len,
+                )
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(pshard, in_shardings),
+                out_shardings=(None, cshard),
+            )
+            lowered = jitted.lower(params_struct, specs)
+        else:  # decode / serve_step
+            cache_struct = jax.eval_shape(
+                lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            cache_specs = _cache_spec_tree(cfg, batch_axes)
+            cshard = _spec_tree_to_shardings(cache_specs, mesh)
+
+            def serve_step(params, cache, token):
+                return api.decode_step(
+                    cfg, params, cache, token, mesh=mesh,
+                    data_axes=batch_axes or (),
+                )
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cshard, in_shardings["token"]),
+                out_shardings=(None, cshard),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_struct, cache_struct, specs["token"])
+
+        result["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- memory & cost --------------------------------------------------
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        result["memory"] = {
+            "argument_gib": round(ma.argument_size_in_bytes / 2**30, 3),
+            "output_gib": round(ma.output_size_in_bytes / 2**30, 3),
+            "temp_gib": round(ma.temp_size_in_bytes / 2**30, 3),
+            "alias_gib": round(ma.alias_size_in_bytes / 2**30, 3),
+            "peak_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3,
+            ),
+        }
+    ca = compiled.cost_analysis() or {}
+    result["xla_cost"] = {
+        "flops": ca.get("flops", 0.0),
+        "bytes_accessed": ca.get("bytes accessed", 0.0),
+        "note": "XLA counts while bodies once; see loop-adjusted analysis",
+    }
+
+    # ---- loop-adjusted roofline -----------------------------------------
+    text = compiled.as_text()
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(
+            hlo_dir, f"{arch}__{shape_name}__{mesh_kind}.hlo.txt"
+        ), "w") as f:
+            f.write(text)
+    analysis = analyze_hlo(text, total_devices=n_dev)
+    result["analysis"] = {k: float(v) for k, v in analysis.items()}
+
+    model_flops = _model_flops(cfg, shape, n_dev)
+    result["model_flops_per_device"] = model_flops
+    result["roofline"] = roofline_report(
+        analysis, model_flops_per_device=model_flops
+    )
+    result["status"] = "ok"
+    return result
+
+
+def _model_flops(cfg: ModelConfig, shape, n_dev: int) -> float:
+    """Analytic MODEL_FLOPS per device: 6·N·D (dense) / 6·N_active·D (MoE),
+    ×1.5 extra backward factor folded into the 6 for training; decode uses
+    D = global_batch tokens per step; prefill D = B·S forward-only (2·N·D)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_dev
+
+
+# --------------------------------------------------------------------------
+# Grid orchestration
+# --------------------------------------------------------------------------
+
+def _cell_path(out_dir, arch, shape, mesh_kind):
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--hlo-dir", default=None, help="dump compiled HLO text")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        cells = [
+            (a, s, m)
+            for a in sorted(REGISTRY)
+            for s in SHAPES
+            for m in meshes
+        ]
+        failed = []
+        for arch, shape, mesh_kind in cells:
+            path = _cell_path(args.out, arch, shape, mesh_kind)
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {arch} {shape} {mesh_kind} (done)")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                "--out", args.out, "--variant", args.variant,
+            ]
+            if args.hlo_dir:
+                cmd += ["--hlo-dir", args.hlo_dir]
+            print(f"[run ] {arch} {shape} {mesh_kind}", flush=True)
+            rc = subprocess.run(cmd).returncode
+            if rc != 0:
+                failed.append((arch, shape, mesh_kind))
+        print(f"grid done; {len(failed)} failures: {failed}")
+        sys.exit(1 if failed else 0)
+
+    assert args.arch and args.shape, "--arch/--shape required without --all"
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh,
+                          hlo_dir=args.hlo_dir, variant=args.variant)
+    except Exception as e:
+        result = {
+            "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    with open(_cell_path(args.out, args.arch, args.shape, args.mesh), "w") as f:
+        json.dump(result, f, indent=1)
+    status = result["status"]
+    print(f"[{status}] {args.arch} {args.shape} {args.mesh} "
+          + (result.get("reason") or result.get("error") or ""))
+    if status == "ok":
+        r = result["roofline"]
+        print(f"  compute {r['t_compute_s']:.4f}s  memory {r['t_memory_s']:.4f}s  "
+              f"collective {r['t_collective_s']:.4f}s  -> {r['bottleneck']}  "
+              f"(roofline_frac {r['roofline_fraction']:.3f})")
+        if "memory" in result:
+            print(f"  peak/device: {result['memory']['peak_gib']} GiB; "
+                  f"compile {result['compile_s']}s")
+    sys.exit(0 if status in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

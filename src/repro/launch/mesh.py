@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required so tests/benches keep seeing the single
+real CPU device; only the dry-run subprocess sets the 512-placeholder-
+device XLA flag before first jax init).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes_of", "mesh_axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod mesh, or 2×16×16 across two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    """The batch/data-parallel axes of a mesh (pod included when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return {name: size for name, size in zip(mesh.axis_names, mesh.devices.shape)}

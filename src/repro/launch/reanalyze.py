@@ -1,0 +1,50 @@
+"""Recompute roofline analyses from saved HLO dumps (no recompilation).
+
+The byte model in roofline.py evolves during §Perf iteration; this tool
+re-derives `analysis` + `roofline` for every dry-run JSON whose HLO text
+was dumped, keeping the table consistent with the current model.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze --out results/dryrun --hlo results/hlo
+"""
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.roofline import analyze_hlo, roofline_report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--hlo", default="results/hlo")
+    args = ap.parse_args()
+
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.out, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok":
+            continue
+        hlo_path = os.path.join(
+            args.hlo, f"{cell['arch']}__{cell['shape']}__{cell['mesh']}.hlo.txt"
+        )
+        if not os.path.exists(hlo_path):
+            print(f"[miss] {hlo_path}")
+            continue
+        with open(hlo_path) as f:
+            text = f.read()
+        analysis = analyze_hlo(text, total_devices=cell["devices"])
+        cell["analysis"] = {k: float(v) for k, v in analysis.items()}
+        cell["roofline"] = roofline_report(
+            analysis, model_flops_per_device=cell["model_flops_per_device"]
+        )
+        with open(path, "w") as f:
+            json.dump(cell, f, indent=1)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,340 @@
+"""Roofline analysis from compiled HLO (no hardware required).
+
+`compiled.cost_analysis()` on XLA:CPU counts while-loop *bodies once* —
+useless for scan-over-layers models where ~all compute sits inside the
+layer loop.  This module therefore parses the post-optimization HLO text
+into per-computation symbol tables, extracts
+
+* **FLOPs** — ``2 · |result| · K`` for every `dot`/`convolution`, with
+  ``K`` looked up from the contracting-dim sizes of the lhs operand;
+* **HBM bytes** — Σ (result + operand bytes) over *top-level* (post-
+  fusion) instructions: XLA:TPU materialises fusion boundaries to HBM, so
+  fusion inputs/outputs are the honest traffic proxy;
+* **collective wire bytes** — per collective kind, with ring multipliers:
+  all-reduce ``2(n−1)/n·bytes``, all-gather ``(n−1)/n·full``,
+  reduce-scatter ``(n−1)·result``, all-to-all ``(n−1)/n``, permute ``1×``;
+  group size ``n`` parsed from ``replica_groups`` (both explicit-list and
+  iota ``[a,b]<=[N]`` forms);
+
+and multiplies every computation's totals by its **loop multiplicity**,
+derived from each `while` op's ``known_trip_count`` backend config
+(product over nested loops; call/fusion subcomputations inherit their
+callers' multiplicity).
+
+Hardware constants (TPU v5e-class, from the assignment):
+197 TFLOP/s bf16 per chip · 819 GB/s HBM · 50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "analyze_hlo", "roofline_report"]
+
+HW = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # bytes/s per chip
+    "ici_bw": 50e9,           # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+([\w\-]+)\(([^;]*)$"
+)
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s+->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s+((?:\([^)]*\))|(?:[\w\[\],]+))")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _type_bytes_and_elems(type_str: str) -> Tuple[int, int]:
+    """Total bytes and element count of a (possibly tuple) HLO type."""
+    total_b, total_e = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_b += elems * _DTYPE_BYTES[dtype]
+        total_e += elems
+    return total_b, total_e
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str            # raw text after the opcode's '('
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]       # value name -> type string
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        # strip /*index=N*/-style tuple comments: their '=' breaks parsing
+        line = _COMMENT_RE.sub("", line)
+        header = _COMP_HEADER_RE.match(line)
+        if header and line.rstrip().endswith("{"):
+            current = Computation(header.group(1), [], {})
+            comps[current.name] = current
+            for pname, ptype in _PARAM_RE.findall(header.group(2)):
+                current.symbols[pname] = ptype
+            continue
+        if current is None:
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # operands = %refs before any attribute section
+        args = rest.split("),")[0]
+        operands = _OPERAND_RE.findall(args)
+        instr = Instr(name, type_str.strip(), op, rest, operands)
+        current.instrs.append(instr)
+        current.symbols[name] = instr.type_str
+    return comps
+
+
+def _multiplicities(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """Computation execution counts: loops multiply, calls inherit."""
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # breadth-first over call edges (while/call/fusion/conditional)
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            callees: List[Tuple[str, float]] = []
+            if ins.op == "while":
+                trip = 1.0
+                t = _TRIP_RE.search(ins.rest)
+                if t:
+                    trip = float(t.group(1))
+                for key in ("body", "condition"):
+                    m = re.search(key + r"=%?([\w\.\-]+)", ins.rest)
+                    if m:
+                        callees.append((m.group(1), trip))
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.rest):
+                    callees.append((m.group(1), 1.0))
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.rest)
+                if m:
+                    for name in _OPERAND_RE.findall(m.group(1)):
+                        callees.append((name, 1.0))
+            for callee, k in callees:
+                mult[callee] += mult[cname] * k
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return dict(mult)
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_b, out_e = _type_bytes_and_elems(ins.type_str)
+    lhs = ins.operands[0] if ins.operands else None
+    k = 1
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    if lhs and lhs in comp.symbols and mc and mc.group(1):
+        dims_m = _SHAPE_RE.search(comp.symbols[lhs])
+        if dims_m and dims_m.group(2):
+            dims = [int(d) for d in dims_m.group(2).split(",")]
+            for ci in mc.group(1).split(","):
+                idx = int(ci)
+                if idx < len(dims):
+                    k *= dims[idx]
+    return 2.0 * out_e * k
+
+
+# ops whose results/operands plausibly cross HBM at fusion boundaries
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "sort", "gather", "scatter",
+    "transpose", "concatenate", "pad", "slice", "reverse", "select-and-scatter",
+    "cholesky", "triangular-solve", "reduce-window", "bitcast-convert",
+} | set(_COLLECTIVES)
+
+
+def _group_size(ins: Instr, total_devices: int) -> int:
+    m = _GROUPS_LIST_RE.search(ins.rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(ins.rest)
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+def _collective_wire_bytes(kind: str, result_bytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * result_bytes
+    if kind == "all-gather":
+        return (n - 1) / n * result_bytes
+    if kind == "reduce-scatter":
+        return float(n - 1) * result_bytes    # operand = n × result
+    if kind == "all-to-all":
+        return (n - 1) / n * result_bytes
+    return result_bytes                        # collective-permute
+
+
+def analyze_hlo(text: str, *, total_devices: int) -> Dict[str, float]:
+    """Loop-adjusted per-device FLOPs / HBM bytes / collective wire bytes."""
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    mult = _multiplicities(comps, entry)
+
+    def _callee_root(ins: Instr) -> Optional[Instr]:
+        m2 = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+        if m2 and m2.group(1) in comps:
+            callee = comps[m2.group(1)]
+            if callee.instrs:
+                return callee.instrs[-1]
+        return None
+
+    def _mem_bytes(comp: Computation, ins: Instr) -> float:
+        """HBM traffic model per instruction.
+
+        In-place ops must NOT be charged their full buffer:
+        * dynamic-update-slice writes only the update slice (scan stacking
+          — the dominant op in scanned models);
+        * dynamic-slice reads only the slice it produces.
+        Fusions are resolved through their root: a dus-rooted fusion is an
+        in-place scatter into the big aliased operand."""
+        out_b, _ = _type_bytes_and_elems(ins.type_str)
+        op = ins.op
+        root = _callee_root(ins) if op == "fusion" else None
+        if op == "fusion" and root is not None and \
+                root.op in ("dynamic-update-slice", "dynamic-slice"):
+            op = root.op
+        if op == "dynamic-slice":
+            return 2.0 * out_b
+        if op == "dynamic-update-slice":
+            # traffic = read + write of the update slice (+ tiny indices);
+            # the big buffer operand is aliased in place
+            small = sum(
+                _type_bytes_and_elems(comp.symbols[o])[0]
+                for o in ins.operands
+                if o in comp.symbols
+                and _type_bytes_and_elems(comp.symbols[o])[0] < out_b
+            )
+            return 2.0 * small if small > 0 else out_b / 4.0
+        in_b = 0.0
+        for o in ins.operands:
+            if o in comp.symbols:
+                in_b += _type_bytes_and_elems(comp.symbols[o])[0]
+        return out_b + in_b
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    coll_by_kind: Dict[str, float] = defaultdict(float)
+    coll_count = 0
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += m * _dot_flops(comp, ins)
+            if ins.op in _MEM_OPS:
+                hbm_bytes += m * _mem_bytes(comp, ins)
+            base = ins.op.split("-start")[0]
+            if base in _COLLECTIVES:
+                if ins.op.endswith("-done"):
+                    continue  # counted at -start
+                out_b, _ = _type_bytes_and_elems(ins.type_str)
+                n = _group_size(ins, total_devices)
+                wire = _collective_wire_bytes(base, out_b, n)
+                coll_bytes += m * wire
+                coll_by_kind[base] += m * wire
+                coll_count += int(m)
+
+    out = {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_count": coll_count,
+    }
+    out.update({f"coll_{k}": v for k, v in coll_by_kind.items()})
+    return out
+
+
+def roofline_report(
+    analysis: Dict[str, float],
+    *,
+    model_flops_per_device: float,
+    hw: Dict[str, float] = HW,
+) -> Dict[str, float]:
+    """The three roofline terms (seconds) + bottleneck + usefulness ratio."""
+    t_compute = analysis["flops_per_device"] / hw["peak_flops"]
+    t_memory = analysis["hbm_bytes_per_device"] / hw["hbm_bw"]
+    t_coll = analysis["collective_bytes_per_device"] / hw["ici_bw"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    useful = (
+        model_flops_per_device / analysis["flops_per_device"]
+        if analysis["flops_per_device"] > 0 else 0.0
+    )
+    mfu = (
+        model_flops_per_device / hw["peak_flops"] / step_time
+        if step_time > 0 else 0.0
+    )
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_ratio": useful,
+        "roofline_fraction": mfu,   # model-useful-FLOPs utilisation bound
+    }

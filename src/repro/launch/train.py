@@ -1,0 +1,71 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-runnable smoke training for any assigned architecture (reduced config
+by default; ``--full`` uses the production config — only sensible on a
+real TPU fleet).  Supports resume-from-checkpoint and the SnS-hazard
+checkpoint policy (see examples/elastic_training.py for the full elastic
+loop).
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import arch_names, get_config
+from repro.models import api
+from repro.train import (
+    OptConfig,
+    init_opt_state,
+    latest_step,
+    load_checkpoint,
+    make_train_step,
+    save_checkpoint,
+    synthetic_batch,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=arch_names())
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full production config (TPU-scale!)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.scaled_down()
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    params = api.init_params(cfg, seed=0)
+    opt_state = init_opt_state(params)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        params, opt_state, start = load_checkpoint(args.ckpt_dir, params, opt_state)
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, OptConfig(lr=args.lr, total_steps=args.steps), remat="none"
+    ))
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = synthetic_batch(cfg, args.batch, args.seq, seed=i)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  "
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, i + 1, params, opt_state)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, params, opt_state)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .common import GLOBAL_WINDOW, ModelConfig
+from . import api, attention, blocks, encdec, lm, mamba, mlp, moe, sharding
+
+__all__ = [
+    "GLOBAL_WINDOW", "ModelConfig",
+    "api", "attention", "blocks", "encdec", "lm", "mamba", "mlp", "moe", "sharding",
+]

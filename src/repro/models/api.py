@@ -1,0 +1,74 @@
+"""Family-agnostic model API.
+
+Every launcher / trainer / server entry point goes through these four
+functions with a `batch` dict, so decoder-only and encoder–decoder
+families are interchangeable behind ``--arch``:
+
+* train batch:   {"tokens": (B,S) i32, "labels": (B,S) i32
+                  [, "frames": (B,T_enc,d) for encdec]}
+* prefill batch: {"tokens": (B,S) i32 [, "frames": ...]}
+* decode:        token (B,) i32 + cache pytree
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .common import ModelConfig
+
+__all__ = [
+    "init_params", "train_loss", "prefill", "init_cache", "decode_step",
+]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict:
+    if cfg.family == "encdec":
+        return encdec.init_params(cfg, seed)
+    return lm.init_params(cfg, seed)
+
+
+def train_loss(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+               data_axes=("data",), remat: str = "dots",
+               q_chunk: int = 1024, mamba_chunk: int = 64) -> jnp.ndarray:
+    if cfg.family == "encdec":
+        return encdec.train_loss(
+            cfg, params, batch["frames"], batch["tokens"], batch["labels"],
+            mesh=mesh, data_axes=data_axes, q_chunk=q_chunk, remat=remat,
+        )
+    return lm.train_loss(
+        cfg, params, batch["tokens"], batch["labels"],
+        mesh=mesh, data_axes=data_axes, remat=remat,
+        q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+    )
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict, *, mesh=None,
+            data_axes=("data",), max_seq: Optional[int] = None,
+            q_chunk: int = 1024, mamba_chunk: int = 64):
+    if cfg.family == "encdec":
+        return encdec.prefill(
+            cfg, params, batch["frames"], batch["tokens"],
+            mesh=mesh, data_axes=data_axes, max_seq=max_seq, q_chunk=q_chunk,
+        )
+    return lm.prefill(
+        cfg, params, batch["tokens"],
+        mesh=mesh, data_axes=data_axes, max_seq=max_seq,
+        q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *, mesh=None,
+               data_axes=("data",)):
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_seq, mesh=mesh, data_axes=data_axes)
+    return lm.init_cache(cfg, batch, max_seq, mesh=mesh, data_axes=data_axes)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, *, mesh=None,
+                data_axes=("data",)):
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, params, cache, token, mesh=mesh, data_axes=data_axes)
+    return lm.decode_step(cfg, params, cache, token, mesh=mesh, data_axes=data_axes)

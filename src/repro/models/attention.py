@@ -1,0 +1,383 @@
+"""GQA attention: training/prefill path, cross-attention, and a
+flash-decode path with sequence-sharded KV caches.
+
+Three execution paths, one parameter layout:
+
+* :func:`attention` — full-sequence attention for train/prefill.  Memory-
+  efficient: queries are processed in chunks (Rabe–Staats style) so the
+  (S × S) score matrix never materialises — required for the 32k-prefill
+  shapes, where full scores would be ~25 GB/device.  Supports causal and
+  bidirectional masks, per-layer sliding windows (gemma's 5:1 pattern is a
+  per-layer window *scalar*, keeping the layer scan homogeneous), GQA
+  (kv-head repetition), QKV bias (qwen1.5), and qk-norm (qwen3/chameleon).
+* :func:`cross_attention` — whisper decoder attending to encoder states.
+* :func:`decode_attention` — one-token decode against a KV cache whose
+  *sequence axis is sharded over the `model` mesh axis* (flash-decoding):
+  each shard computes partial (max, sumexp, weighted-V) statistics over its
+  cache slice and the results combine with three `psum`s.  This is what
+  makes 32k/500k decode fit: an unsharded 32k cache would need 34–51
+  GB/device on the MoE/VLM archs.
+
+The Pallas flash-attention kernel (``repro.kernels.flash_attention``) is a
+drop-in replacement for the inner chunk computation on real TPUs; the XLA
+path here is used for CPU tests and the dry-run (Pallas kernels cannot
+lower to the CPU backend outside interpret mode).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import GLOBAL_WINDOW, ModelConfig, apply_rope, init_dense, rms_norm, rope_angles
+
+__all__ = [
+    "init_attention",
+    "attention",
+    "cross_attention",
+    "flash_decode",
+    "decode_project_q",
+    "decode_project_kv",
+    "update_kv_cache",
+]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> Dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(keys[0], (d, h, hd), cfg.pdtype, fan_in=d),
+        "wk": init_dense(keys[1], (d, k, hd), cfg.pdtype, fan_in=d),
+        "wv": init_dense(keys[2], (d, k, hd), cfg.pdtype, fan_in=d),
+        "wo": init_dense(keys[3], (h, hd, d), cfg.pdtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), cfg.pdtype)
+        p["bk"] = jnp.zeros((k, hd), cfg.pdtype)
+        p["bv"] = jnp.zeros((k, hd), cfg.pdtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.pdtype)
+    return p
+
+
+def _project_qkv(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,
+    kv_source: jnp.ndarray,
+    positions: Optional[jnp.ndarray],
+    kv_positions: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_source, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_source, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope and positions is not None:
+        cos_q, sin_q = rope_angles(positions, cfg.hd, cfg.rope_theta)
+        cos_k, sin_k = rope_angles(
+            positions if kv_positions is None else kv_positions, cfg.hd, cfg.rope_theta
+        )
+        q = apply_rope(q, cos_q, sin_q)
+        k = apply_rope(k, cos_k, sin_k)
+    return q, k, v
+
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return x
+    b, s, k, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, k, n_rep, hd)).reshape(
+        b, s, k * n_rep, hd
+    )
+
+
+def _chunked_scores_softmax(
+    q: jnp.ndarray,           # (B, S_q, H, hd)
+    k: jnp.ndarray,           # (B, S_k, H, hd)
+    v: jnp.ndarray,           # (B, S_k, H, hd)
+    *,
+    causal: bool,
+    window: jnp.ndarray,      # scalar int32 (GLOBAL_WINDOW = unbounded)
+    q_offset: int,
+    chunk: int,
+) -> jnp.ndarray:
+    """Memory-efficient attention: scan over query chunks, f32 softmax."""
+    b, s_q, h, hd = q.shape
+    s_k = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    n_chunks = max(1, s_q // chunk)
+    assert s_q % n_chunks == 0, f"S_q={s_q} not divisible into chunks of {chunk}"
+    csz = s_q // n_chunks
+
+    kt = k.astype(jnp.bfloat16) if k.dtype == jnp.bfloat16 else k
+    k_pos = jnp.arange(s_k)
+
+    def one_chunk(i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * csz, csz, axis=1)
+        scores = jnp.einsum("bqhk,bshk->bhqs", qc, kt).astype(jnp.float32) * scale
+        q_pos = q_offset + i * csz + jnp.arange(csz)
+        mask = jnp.ones((csz, s_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        mask &= k_pos[None, :] > q_pos[:, None] - window  # sliding window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqs,bshk->bqhk", probs.astype(v.dtype), v)
+
+    if n_chunks == 1:
+        return one_chunk(0)
+    # remat the chunk body: without this, backward-through-map saves every
+    # chunk's (csz, S_k) probs — i.e. the full S×S matrix in f32 — which is
+    # exactly the materialisation chunking exists to avoid
+    out = jax.lax.map(
+        jax.checkpoint(one_chunk, prevent_cse=False), jnp.arange(n_chunks)
+    )   # (C, B, csz, H, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s_q, h, hd)
+
+
+def _banded_scores_softmax(
+    q: jnp.ndarray,           # (B, S, H, hd)
+    k: jnp.ndarray,           # (B, S, H, hd)
+    v: jnp.ndarray,
+    *,
+    window: int,
+) -> jnp.ndarray:
+    """Sliding-window attention computing only the S×(2W) band.
+
+    For local layers (gemma's 22/26) the full-S path wastes S/W× compute
+    and score traffic; here each W-sized q chunk attends to its own chunk
+    plus the previous one (causal window ≤ W)."""
+    b, s, h, hd = q.shape
+    w = int(window)
+    scale = 1.0 / math.sqrt(hd)
+    n_chunks = s // w
+    kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+
+    def one_chunk(i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * w, w, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(kp, i * w, 2 * w, axis=1)  # [i*w-w, i*w+w)
+        vc = jax.lax.dynamic_slice_in_dim(vp, i * w, 2 * w, axis=1)
+        scores = jnp.einsum("bqhk,bshk->bhqs", qc, kc).astype(jnp.float32) * scale
+        q_pos = i * w + jnp.arange(w)[:, None]                  # global q rows
+        k_pos = (i - 1) * w + jnp.arange(2 * w)[None, :]        # global k cols
+        mask = (k_pos >= 0) & (k_pos <= q_pos) & (k_pos > q_pos - w)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqs,bshk->bqhk", probs.astype(vc.dtype), vc)
+
+    out = jax.lax.map(
+        jax.checkpoint(one_chunk, prevent_cse=False), jnp.arange(n_chunks)
+    )
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,
+    *,
+    window: int = int(GLOBAL_WINDOW),
+    positions: Optional[jnp.ndarray] = None,
+    causal: Optional[bool] = None,
+    q_chunk: int = 1024,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Self-attention for train/prefill.
+
+    Returns (output, (k, v)) — the kv tensors feed cache initialisation in
+    the prefill path.  ``window`` is static: local layers (< S) take the
+    banded path.  With ``cfg.seq_parallel_attn`` and a mesh whose model
+    axis doesn't divide the head count, activations are re-sharded onto
+    the sequence axis for the attention block (sequence parallelism)
+    instead of replicating the whole attention computation per model rank.
+    """
+    b, s, _ = x.shape
+    window = int(window)
+    causal = cfg.causal if causal is None else causal
+
+    seq_par = False
+    if mesh is not None and cfg.seq_parallel_attn:
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        seq_par = cfg.n_heads % tp != 0 and s % tp == 0
+    if seq_par:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = tuple(data_axes) if data_axes else None
+        x = jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, "model", None))
+        )
+
+    if positions is None and cfg.use_rope:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, x, positions, None)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kf, vf = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+
+    if causal and window < s and s % window == 0:
+        out = _banded_scores_softmax(q, kf, vf, window=window)
+    else:
+        out = _chunked_scores_softmax(
+            q, kf, vf, causal=causal, window=window,
+            q_offset=0, chunk=min(q_chunk, s),
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if seq_par:
+        y = jax.lax.with_sharding_constraint(
+            y, NamedSharding(mesh, P(dp, None, None))
+        )
+    return y, (k, v)
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,
+    enc: jnp.ndarray,
+    *,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Decoder-to-encoder attention (whisper); no mask, no rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    out = _chunked_scores_softmax(
+        q, k, v, causal=False, window=jnp.asarray(GLOBAL_WINDOW, jnp.int32),
+        q_offset=0, chunk=min(q_chunk, x.shape[1]),
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Decode path: sequence-sharded KV cache + flash-decoding combine
+# --------------------------------------------------------------------------
+
+def update_kv_cache(
+    k_cache: jnp.ndarray,     # (B, S_max, K, hd)
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,       # (B, 1, K, hd)
+    v_new: jnp.ndarray,
+    cache_len: jnp.ndarray,   # scalar int32 — tokens already in the cache
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write one decode step's K/V at position `cache_len`."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1
+    )
+    return k_cache, v_cache
+
+
+def flash_decode(
+    q: jnp.ndarray,           # (B, H, hd) — current token's query, RoPE'd
+    k_cache: jnp.ndarray,     # (B, S_shard, K, hd) — LOCAL cache shard
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,       # (B, 1, K, hd) — current token's K (RoPE'd)
+    v_new: jnp.ndarray,
+    cache_len: jnp.ndarray,   # scalar int32: tokens cached INCLUDING new one
+    *,
+    window: jnp.ndarray = GLOBAL_WINDOW,
+    model_axis: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Flash-decoding over a sequence-sharded KV cache.
+
+    Runs inside ``shard_map`` with the cache sharded along its sequence
+    axis over ``model_axis`` (or unsharded when ``model_axis=None``).  The
+    shard owning position ``cache_len - 1`` writes the new K/V, every shard
+    computes partial (max, sumexp, V-weighted) statistics over its slice,
+    and the statistics combine with one ``pmax`` + two ``psum``s.
+
+    Returns ``(attn_out (B, H, hd), k_cache, v_cache)``.
+    """
+    b, h, hd = q.shape
+    pos = cache_len - 1  # global position of the token being decoded
+
+    s_shard = k_cache.shape[1]
+    shard_idx = jax.lax.axis_index(model_axis) if model_axis else 0
+    local_pos = pos - shard_idx * s_shard
+    owns = (local_pos >= 0) & (local_pos < s_shard)
+    lp = jnp.clip(local_pos, 0, s_shard - 1)
+    k_upd = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), lp, axis=1
+    )
+    v_upd = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), lp, axis=1
+    )
+    k_cache = jnp.where(owns, k_upd, k_cache)
+    v_cache = jnp.where(owns, v_upd, v_cache)
+
+    slot_pos = shard_idx * s_shard + jnp.arange(s_shard)     # global positions
+    valid = (slot_pos < cache_len) & (slot_pos > pos - window)
+
+    n_rep = h // k_cache.shape[2]
+    kf = _repeat_kv(k_cache, n_rep)   # (B, S_shard, H, hd)
+    vf = _repeat_kv(v_cache, n_rep)
+
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bhk,bshk->bhs", q, kf).astype(jnp.float32) * scale
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+
+    m_loc = scores.max(axis=-1)                              # (B, H)
+    m_safe = jnp.maximum(m_loc, NEG_INF / 2)                 # fully-masked guard
+    e = jnp.exp(scores - m_safe[..., None])
+    e = jnp.where(valid[None, None, :], e, 0.0)
+    l_loc = e.sum(axis=-1)                                   # (B, H)
+    o_loc = jnp.einsum("bhs,bshk->bhk", e.astype(vf.dtype), vf).astype(jnp.float32)
+
+    if model_axis is not None:
+        m_glob = jax.lax.pmax(m_safe, model_axis)
+        corr = jnp.exp(m_safe - m_glob)
+        l = jax.lax.psum(l_loc * corr, model_axis)
+        o = jax.lax.psum(o_loc * corr[..., None], model_axis)
+    else:
+        l, o = l_loc, o_loc
+    out = o / jnp.maximum(l, 1e-30)[..., None]               # (B, H, hd) f32
+    return out, k_cache, v_cache
+
+
+def decode_project_q(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray, cache_len: jnp.ndarray
+) -> jnp.ndarray:
+    """Project + RoPE the current token's query: (B, 1, d) -> (B, H, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        pos = cache_len - 1
+        cos, sin = rope_angles(pos[None, None], cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+    return q[:, 0]
+
+
+def decode_project_kv(
+    cfg: ModelConfig, p: Dict, x: jnp.ndarray, cache_len: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Project the current token's K/V for cache insertion (B, 1, K, hd)."""
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        pos = cache_len - 1
+        cos, sin = rope_angles(pos[None, None], cfg.hd, cfg.rope_theta)
+        k = apply_rope(k, cos, sin)
+    return k, v

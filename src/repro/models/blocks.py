@@ -1,0 +1,92 @@
+"""Decoder layer bodies: attention/mamba mixers × dense/MoE FFNs.
+
+A layer is ``x + mixer(norm(x))`` then ``x + ffn(norm(x))`` (pre-norm).
+Falcon-mamba layers are mixer-only (the assignment's ``d_ff=0``); arctic
+adds a *dense residual* MLP in parallel with its MoE FFN.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from .common import GLOBAL_WINDOW, ModelConfig, apply_norm, make_norm_params
+
+__all__ = ["init_layer", "layer_forward", "layer_kinds"]
+
+
+def layer_kinds(cfg: ModelConfig):
+    """Static per-layer structure: (mixer, is_moe, window) per layer.
+
+    The window is part of the *static* kind so sliding-window layers can
+    take the banded attention path (computing only S×W scores); gemma's
+    5:1 local:global pattern folds into a period-6 block pattern (or an
+    unrolled stack when layers don't divide the period)."""
+    kinds = []
+    windows = cfg.layer_windows()
+    for i in range(cfg.n_layers):
+        mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+        kinds.append((mixer, cfg.is_moe_layer(i), int(windows[i])))
+    return kinds
+
+
+def init_layer(key, cfg: ModelConfig, *, mixer: str, use_moe: bool) -> Dict:
+    keys = jax.random.split(key, 4)
+    p: Dict = {"norm1": make_norm_params(cfg, (cfg.d_model,))}
+    if mixer == "attn":
+        p["attn"] = attn_mod.init_attention(keys[0], cfg)
+    else:
+        p["mamba"] = mamba_mod.init_mamba(keys[0], cfg)
+    if cfg.family == "ssm":
+        return p  # mixer-only layers (falcon-mamba: d_ff = 0)
+    p["norm2"] = make_norm_params(cfg, (cfg.d_model,))
+    if use_moe:
+        p["moe"] = moe_mod.init_moe(keys[1], cfg)
+        if cfg.dense_residual:
+            p["residual_mlp"] = mlp_mod.init_mlp(
+                keys[2], cfg, d_ff=cfg.residual_d_ff or cfg.d_ff
+            )
+    else:
+        p["mlp"] = mlp_mod.init_mlp(keys[1], cfg)
+    return p
+
+
+def layer_forward(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,
+    *,
+    mixer: str,
+    use_moe: bool,
+    window: int = int(GLOBAL_WINDOW),
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    q_chunk: int = 1024,
+    mamba_chunk: int = 64,
+) -> jnp.ndarray:
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        mixed, _ = attn_mod.attention(
+            cfg, p["attn"], h, window=window, q_chunk=q_chunk,
+            mesh=mesh, data_axes=data_axes,
+        )
+    else:
+        mixed = mamba_mod.mamba_block(cfg, p["mamba"], h, chunk=mamba_chunk)
+    x = x + mixed
+    if cfg.family == "ssm":
+        return x
+
+    h = apply_norm(cfg, p["norm2"], x)
+    if use_moe:
+        y = moe_mod.moe_ffn(cfg, p["moe"], h, mesh=mesh, data_axes=data_axes)
+        if cfg.dense_residual:
+            y = y + mlp_mod.mlp(cfg, p["residual_mlp"], h)
+    else:
+        y = mlp_mod.mlp(cfg, p["mlp"], h)
+    return x + y

@@ -1,0 +1,331 @@
+"""Encoder–decoder stack (whisper-large-v3 backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+feeds precomputed frame embeddings ``(B, T_enc, d_model)`` directly to the
+encoder (sinusoidal positions stand in for whisper's learned/conv
+positions — noted in DESIGN.md).  Encoder layers are bidirectional
+self-attention + GELU MLP with LayerNorm; decoder layers add causal
+self-attention and cross-attention to the encoder output.  Embeddings are
+tied to the LM head as in whisper.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from .common import (
+    GLOBAL_WINDOW,
+    ModelConfig,
+    apply_norm,
+    init_dense,
+    make_norm_params,
+    sincos_positions,
+)
+
+__all__ = [
+    "init_params",
+    "encode",
+    "train_loss",
+    "prefill",
+    "init_cache",
+    "decode_step",
+]
+
+
+def _shard(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _norm_axes(data_axes):
+    """() / None -> None (replicated batch, e.g. long_500k's B=1)."""
+    return tuple(data_axes) if data_axes else None
+
+
+def _sincos_at(pos, d: int) -> jnp.ndarray:
+    """Sinusoidal position vector at a (traced) scalar position, (1, 1, d)."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32) / (10000.0 ** (2.0 * i / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)])[None, None, :]
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": make_norm_params(cfg, (cfg.d_model,)),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "norm2": make_norm_params(cfg, (cfg.d_model,)),
+        "mlp": mlp_mod.init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": make_norm_params(cfg, (cfg.d_model,)),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "norm_x": make_norm_params(cfg, (cfg.d_model,)),
+        "xattn": attn_mod.init_attention(k2, cfg, cross=True),
+        "norm2": make_norm_params(cfg, (cfg.d_model,)),
+        "mlp": mlp_mod.init_mlp(k3, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    ke, kd, kemb = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embedding": init_dense(
+            kemb, (cfg.vocab_size, cfg.d_model), cfg.pdtype, fan_in=cfg.d_model
+        ),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": make_norm_params(cfg, (cfg.d_model,)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": make_norm_params(cfg, (cfg.d_model,)),
+    }
+
+
+def encode(
+    cfg: ModelConfig,
+    params: Dict,
+    frames: jnp.ndarray,             # (B, T_enc, d) stubbed frame embeddings
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    data_axes = _norm_axes(data_axes)
+    x = frames.astype(cfg.adtype) + sincos_positions(
+        frames.shape[1], cfg.d_model
+    ).astype(cfg.adtype)
+    x = _shard(x, mesh, P(data_axes, None, None))
+
+    def body(h, p):
+        hn = apply_norm(cfg, p["norm1"], h)
+        mixed, _ = attn_mod.attention(cfg, p["attn"], hn, causal=False, q_chunk=q_chunk)
+        h = h + mixed
+        hn = apply_norm(cfg, p["norm2"], h)
+        h = h + mlp_mod.mlp(cfg, p["mlp"], hn)
+        return _shard(h, mesh, P(data_axes, None, None)), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _decoder_stack(
+    cfg, params, x, enc_out, *, mesh, data_axes, q_chunk
+) -> jnp.ndarray:
+    def body(h, p):
+        hn = apply_norm(cfg, p["norm1"], h)
+        mixed, _ = attn_mod.attention(cfg, p["attn"], hn, causal=True, q_chunk=q_chunk)
+        h = h + mixed
+        hn = apply_norm(cfg, p["norm_x"], h)
+        h = h + attn_mod.cross_attention(cfg, p["xattn"], hn, enc_out, q_chunk=q_chunk)
+        hn = apply_norm(cfg, p["norm2"], h)
+        h = h + mlp_mod.mlp(cfg, p["mlp"], hn)
+        return _shard(h, mesh, P(data_axes, None, None)), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def _embed_tokens(cfg, params, tokens):
+    s = tokens.shape[1]
+    x = params["embedding"][tokens].astype(cfg.adtype)
+    return x + sincos_positions(s, cfg.d_model).astype(cfg.adtype)
+
+
+def train_loss(
+    cfg: ModelConfig,
+    params: Dict,
+    frames: jnp.ndarray,             # (B, T_enc, d)
+    tokens: jnp.ndarray,             # (B, S)
+    labels: jnp.ndarray,             # (B, S)
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+    q_chunk: int = 1024,
+    remat: str = "none",
+) -> jnp.ndarray:
+    del remat  # enc-dec stack is shallow-activation; scan already bounds it
+    data_axes = _norm_axes(data_axes)
+    enc_out = encode(cfg, params, frames, mesh=mesh, data_axes=data_axes, q_chunk=q_chunk)
+    x = _embed_tokens(cfg, params, tokens)
+    x = _shard(x, mesh, P(data_axes, None, None))
+    h = _decoder_stack(cfg, params, x, enc_out, mesh=mesh, data_axes=data_axes, q_chunk=q_chunk)
+    from .lm import chunked_cross_entropy
+    return chunked_cross_entropy(cfg, params, h, labels, mesh=mesh,
+                                 data_axes=data_axes)
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Dict:
+    data_axes = _norm_axes(data_axes)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    spec = P(None, data_axes, "model", None, None)
+    cache = {
+        "k": _shard(jnp.zeros(shape, cfg.adtype), mesh, spec),
+        "v": _shard(jnp.zeros(shape, cfg.adtype), mesh, spec),
+        # cross-attention K/V computed once at prefill
+        "xk": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), cfg.adtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), cfg.adtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    return cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Dict,
+    frames: jnp.ndarray,
+    tokens: jnp.ndarray,
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+    max_seq: Optional[int] = None,
+    q_chunk: int = 1024,
+) -> Tuple[jnp.ndarray, Dict]:
+    data_axes = _norm_axes(data_axes)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    enc_out = encode(cfg, params, frames, mesh=mesh, data_axes=data_axes, q_chunk=q_chunk)
+    x = _embed_tokens(cfg, params, tokens)
+    x = _shard(x, mesh, P(data_axes, None, None))
+
+    def body(h, p):
+        hn = apply_norm(cfg, p["norm1"], h)
+        mixed, (k_new, v_new) = attn_mod.attention(
+            cfg, p["attn"], hn, causal=True, q_chunk=q_chunk
+        )
+        h = h + mixed
+        hn = apply_norm(cfg, p["norm_x"], h)
+        h = h + attn_mod.cross_attention(cfg, p["xattn"], hn, enc_out, q_chunk=q_chunk)
+        hn = apply_norm(cfg, p["norm2"], h)
+        h = h + mlp_mod.mlp(cfg, p["mlp"], hn)
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+        if cfg.qkv_bias:
+            xk, xv = xk + p["xattn"]["bk"], xv + p["xattn"]["bv"]
+        if max_seq > s:
+            pad = ((0, 0), (0, max_seq - s), (0, 0), (0, 0))
+            k_new, v_new = jnp.pad(k_new, pad), jnp.pad(v_new, pad)
+        return _shard(h, mesh, P(data_axes, None, None)), (
+            k_new.astype(cfg.adtype), v_new.astype(cfg.adtype),
+            xk.astype(cfg.adtype), xv.astype(cfg.adtype),
+        )
+
+    h, (k, v, xk, xv) = jax.lax.scan(body, x, params["dec_layers"])
+    h = apply_norm(cfg, params["final_norm"], h)
+    last = (h[:, -1:, :] @ params["embedding"].T.astype(h.dtype))[:, 0]
+    spec = P(None, data_axes, "model", None, None)
+    cache = {
+        "k": _shard(k, mesh, spec),
+        "v": _shard(v, mesh, spec),
+        "xk": xk,
+        "xv": xv,
+        "len": jnp.asarray(s, jnp.int32),
+    }
+    return last, cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict,
+    cache: Dict,
+    token: jnp.ndarray,              # (B,)
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Tuple[jnp.ndarray, Dict]:
+    data_axes = _norm_axes(data_axes)
+    new_len = cache["len"] + 1
+    x = params["embedding"][token[:, None]].astype(cfg.adtype)
+    # decoder learned-position stub: sinusoid at the *current* position
+    x = x + _sincos_at(new_len - 1, cfg.d_model).astype(cfg.adtype)
+    x = _shard(x, mesh, P(data_axes, None, None))
+
+    def attn_decode(p, h, k_cache, v_cache):
+        q = attn_mod.decode_project_q(cfg, p, h, new_len)
+        k_new, v_new = attn_mod.decode_project_kv(cfg, p, h, new_len)
+        if mesh is None:
+            out, k_c, v_c = attn_mod.flash_decode(
+                q, k_cache, v_cache, k_new, v_new, new_len, model_axis=None
+            )
+        else:
+            def body(q_, kc_, vc_, kn_, vn_):
+                return attn_mod.flash_decode(
+                    q_, kc_, vc_, kn_, vn_, new_len, model_axis="model"
+                )
+
+            out, k_c, v_c = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(
+                    P(data_axes, None, None),
+                    P(data_axes, "model", None, None),
+                    P(data_axes, "model", None, None),
+                    P(data_axes, None, None, None),
+                    P(data_axes, None, None, None),
+                ),
+                out_specs=(
+                    P(data_axes, None, None),
+                    P(data_axes, "model", None, None),
+                    P(data_axes, "model", None, None),
+                ),
+                check_vma=False,
+            )(q, k_cache, v_cache, k_new, v_new)
+        y = jnp.einsum("bhk,hkd->bd", out.astype(h.dtype), p["wo"])[:, None, :]
+        return y, k_c, v_c
+
+    def body(h, xs):
+        p, k_c, v_c, xk, xv = xs
+        hn = apply_norm(cfg, p["norm1"], h)
+        y, k_c, v_c = attn_decode(p["attn"], hn, k_c, v_c)
+        h = h + y
+        hn = apply_norm(cfg, p["norm_x"], h)
+        h = h + _cross_decode(cfg, p["xattn"], hn, xk, xv)
+        hn = apply_norm(cfg, p["norm2"], h)
+        h = h + mlp_mod.mlp(cfg, p["mlp"], hn)
+        return h, (k_c, v_c)
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = (x @ params["embedding"].T.astype(x.dtype))[:, 0]
+    new_cache = dict(cache)
+    new_cache.update({"k": k, "v": v, "len": new_len})
+    return logits, new_cache
+
+
+def _cross_decode(cfg, p, x, xk, xv):
+    """Single-token cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kf = attn_mod._repeat_kv(xk, n_rep)
+    vf = attn_mod._repeat_kv(xv, n_rep)
+    scale = 1.0 / (cfg.hd ** 0.5)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, kf).astype(jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs.astype(vf.dtype), vf)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"])

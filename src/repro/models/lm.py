@@ -1,0 +1,459 @@
+"""Causal LM assembly: embed → scanned layer stack → norm → logits.
+
+Handles every decoder-only family in the zoo through a *block pattern*:
+the per-layer structure sequence ``(mixer, is_moe)`` is folded to its
+smallest period ``p`` and the stack runs as ``lax.scan`` over
+``n_layers / p`` super-blocks, each super-block unrolling ``p``
+structurally distinct positions (dense archs: p = 1; jamba: p = 8).
+Scalar-only heterogeneity (gemma's 5:1 local:global window) rides along
+as a scanned per-layer array, keeping the traced HLO to one super-block.
+
+Three entry points per the assignment's shape grid:
+
+* :func:`train_loss`    — full forward + causal LM cross-entropy (train_*).
+* :func:`prefill`       — forward that also returns KV/SSM caches and the
+  last position's logits (prefill_*).
+* :func:`decode_step`   — one-token step against sequence-sharded caches
+  (decode_* / long_*), flash-decoding across the `model` mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from .blocks import init_layer, layer_forward, layer_kinds
+from .common import GLOBAL_WINDOW, ModelConfig, apply_norm, init_dense, make_norm_params
+
+__all__ = [
+    "block_pattern",
+    "init_params",
+    "forward",
+    "logits_from_hidden",
+    "train_loss",
+    "prefill",
+    "init_cache",
+    "decode_step",
+]
+
+
+# --------------------------------------------------------------------------
+# Block pattern
+# --------------------------------------------------------------------------
+
+def block_pattern(cfg: ModelConfig) -> Tuple[List[Tuple[str, bool]], int]:
+    """Smallest repeating (mixer, moe) pattern and its repeat count."""
+    kinds = layer_kinds(cfg)
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if n % p:
+            continue
+        if all(kinds[i] == kinds[i % p] for i in range(n)):
+            return kinds[:p], n // p
+    return kinds, 1  # fully heterogeneous: one "repeat" of everything
+
+
+def _shard(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _norm_axes(data_axes):
+    """() / None -> None (replicated batch, e.g. long_500k's B=1)."""
+    return tuple(data_axes) if data_axes else None
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    pattern, repeats = block_pattern(cfg)
+
+    params: Dict = {
+        "embedding": init_dense(
+            k_embed, (cfg.vocab_size, cfg.d_model), cfg.pdtype, fan_in=cfg.d_model
+        ),
+        "final_norm": make_norm_params(cfg, (cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.pdtype, fan_in=cfg.d_model
+        )
+
+    blocks = []
+    for pos, (mixer, moe, _window) in enumerate(pattern):
+        def one(rep_key):
+            return init_layer(rep_key, cfg, mixer=mixer, use_moe=moe)
+
+        keys = jax.random.split(jax.random.fold_in(k_layers, pos), repeats)
+        blocks.append(jax.vmap(one)(keys))
+    params["layers"] = blocks
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _stack_forward(
+    cfg: ModelConfig,
+    blocks,
+    x: jnp.ndarray,
+    *,
+    mesh=None,
+    data_axes=("data",),
+    q_chunk=1024,
+    mamba_chunk=64,
+    remat: str = "none",
+):
+    pattern, repeats = block_pattern(cfg)
+    dp_spec = P(data_axes, None, None)
+
+    def one_layer(p_slice, h, pos):
+        mixer, moe, window = pattern[pos]
+        return layer_forward(
+            cfg, p_slice, h,
+            mixer=mixer, use_moe=moe, window=window,
+            mesh=mesh, data_axes=data_axes,
+            q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+        )
+
+    # remat granularity is PER LAYER, not per super-block: long unrolled
+    # patterns (gemma's 26 distinct positions) would otherwise hold every
+    # layer's recomputed activations live at once in the backward pass
+    if remat == "full":
+        layer_fn = jax.checkpoint(one_layer, prevent_cse=False,
+                                  static_argnums=(2,))
+    elif remat == "dots":
+        layer_fn = jax.checkpoint(
+            one_layer,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False, static_argnums=(2,),
+        )
+    else:
+        layer_fn = one_layer
+
+    def body(h, block_slices):
+        for pos in range(len(pattern)):
+            h = layer_fn(block_slices[pos], h, pos)
+        h = _shard(h, mesh, dp_spec)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, blocks)
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jnp.ndarray,            # (B, S) int32
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+    q_chunk: int = 1024,
+    mamba_chunk: int = 64,
+    remat: str = "none",
+) -> jnp.ndarray:
+    """Token ids → final hidden states (B, S, d)."""
+    data_axes = _norm_axes(data_axes)
+    x = params["embedding"][tokens].astype(cfg.adtype)
+    x = _shard(x, mesh, P(data_axes, None, None))
+    x = _stack_forward(
+        cfg, params["layers"], x,
+        mesh=mesh, data_axes=data_axes,
+        q_chunk=q_chunk, mamba_chunk=mamba_chunk, remat=remat,
+    )
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def logits_from_hidden(cfg: ModelConfig, params: Dict, h: jnp.ndarray) -> jnp.ndarray:
+    head = params["embedding"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head.astype(h.dtype)
+
+
+def train_loss(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jnp.ndarray,            # (B, S)
+    labels: jnp.ndarray,            # (B, S) — next-token targets
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+    remat: str = "dots",
+    q_chunk: int = 1024,
+    mamba_chunk: int = 64,
+) -> jnp.ndarray:
+    data_axes = _norm_axes(data_axes)
+    h = forward(
+        cfg, params, tokens,
+        mesh=mesh, data_axes=data_axes, remat=remat,
+        q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+    )
+    return chunked_cross_entropy(cfg, params, h, labels, mesh=mesh,
+                                 data_axes=data_axes)
+
+
+def chunked_cross_entropy(cfg, params, h, labels, *, mesh=None,
+                          data_axes=None, seq_chunk: int = 512):
+    """Sequence-chunked CE: full (S, V) f32 logits never materialise.
+
+    Each chunk's logits are computed, reduced to (logsumexp, gold) and
+    dropped; the chunk body is rematerialised in the backward pass.  At
+    gemma's 262k vocab this removes ~0.8 TB/device/step of logits traffic
+    versus whole-sequence CE (§Perf hillclimb record)."""
+    b, s, d = h.shape
+    head = params["embedding"].T if cfg.tie_embeddings else params["lm_head"]
+    n_chunks = max(1, s // seq_chunk)
+    csz = s // n_chunks
+    assert s % n_chunks == 0
+
+    def one_chunk(i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * csz, csz, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * csz, csz, axis=1)
+        logits = (hc @ head.astype(hc.dtype)).astype(jnp.float32)
+        if mesh is not None:
+            logits = _shard(logits, mesh, P(data_axes, None, "model"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    if n_chunks == 1:
+        total = one_chunk(0)
+    else:
+        totals = jax.lax.map(
+            jax.checkpoint(one_chunk, prevent_cse=False), jnp.arange(n_chunks)
+        )
+        total = totals.sum()
+    return total / (b * s)
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def _cache_spec(cfg, data_axes):
+    """PartitionSpec templates for one pattern position's cache slice."""
+    return {
+        "attn": {
+            "k": P(None, data_axes, "model", None, None),  # (R, B, S, K, hd)
+            "v": P(None, data_axes, "model", None, None),
+        },
+        "mamba": {
+            "ssm": P(None, data_axes, "model", None),      # (R, B, din, n)
+            "conv": P(None, data_axes, None, "model"),     # (R, B, dc-1, din)
+        },
+    }
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Dict:
+    """Empty caches, one entry per pattern position, stacked over repeats.
+
+    Attention caches are sharded (batch→data, seq→model): sequence-sharding
+    is what lets 32k/500k caches fit (flash-decoding combines shards).
+    """
+    data_axes = _norm_axes(data_axes)
+    pattern, repeats = block_pattern(cfg)
+    k, hd, dc = cfg.n_kv_heads, cfg.hd, cfg.d_conv
+    entries = []
+    for mixer, _moe, _w in pattern:
+        if mixer == "attn":
+            shape = (repeats, batch, max_seq, k, hd)
+            entry = {
+                "k": jnp.zeros(shape, cfg.adtype),
+                "v": jnp.zeros(shape, cfg.adtype),
+            }
+            spec = _cache_spec(cfg, data_axes)["attn"]
+        else:
+            entry = {
+                "ssm": jnp.zeros((repeats, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((repeats, batch, dc - 1, cfg.d_inner), cfg.adtype),
+            }
+            spec = _cache_spec(cfg, data_axes)["mamba"]
+        if mesh is not None:
+            entry = {
+                kk: _shard(vv, mesh, spec[kk]) for kk, vv in entry.items()
+            }
+        entries.append(entry)
+    return {"layers": entries, "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jnp.ndarray,            # (B, S)
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+    max_seq: Optional[int] = None,
+    q_chunk: int = 1024,
+    mamba_chunk: int = 64,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward that also fills the caches.
+
+    Returns (last-token logits (B, V), cache).
+    """
+    data_axes = _norm_axes(data_axes)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    pattern, repeats = block_pattern(cfg)
+    x = params["embedding"][tokens].astype(cfg.adtype)
+    x = _shard(x, mesh, P(data_axes, None, None))
+
+    def body(h, block_slices):
+        new_entries = []
+        for pos, (mixer, moe, window) in enumerate(pattern):
+            p = block_slices[pos]
+            hn = apply_norm(cfg, p["norm1"], h)
+            if mixer == "attn":
+                mixed, (k_new, v_new) = attn_mod.attention(
+                    cfg, p["attn"], hn, window=window, q_chunk=q_chunk,
+                    mesh=mesh, data_axes=data_axes,
+                )
+                if max_seq > s:
+                    pad = ((0, 0), (0, max_seq - s), (0, 0), (0, 0))
+                    k_new = jnp.pad(k_new, pad)
+                    v_new = jnp.pad(v_new, pad)
+                entry = {"k": k_new.astype(cfg.adtype), "v": v_new.astype(cfg.adtype)}
+            else:
+                mixed, state = mamba_mod.mamba_block(
+                    cfg, p["mamba"], hn, chunk=mamba_chunk, return_state=True
+                )
+                entry = state
+            h = h + mixed
+            if cfg.family != "ssm":
+                hn = apply_norm(cfg, p["norm2"], h)
+                if moe:
+                    y = moe_mod.moe_ffn(cfg, p["moe"], hn, mesh=mesh, data_axes=data_axes)
+                    if cfg.dense_residual:
+                        y = y + mlp_mod.mlp(cfg, p["residual_mlp"], hn)
+                else:
+                    y = mlp_mod.mlp(cfg, p["mlp"], hn)
+                h = h + y
+            new_entries.append(entry)
+        h = _shard(h, mesh, P(data_axes, None, None))
+        return h, tuple(new_entries)
+
+    x, stacked = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    last = logits_from_hidden(cfg, params, x[:, -1:, :])[:, 0]
+
+    specs = _cache_spec(cfg, data_axes)
+    entries = []
+    for pos, (mixer, _moe, _w) in enumerate(pattern):
+        e = dict(stacked[pos])
+        if mesh is not None:
+            e = {kk: _shard(vv, mesh, specs[mixer][kk]) for kk, vv in e.items()}
+        entries.append(e)
+    cache = {"layers": entries, "len": jnp.asarray(s, jnp.int32)}
+    return last, cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict,
+    cache: Dict,
+    token: jnp.ndarray,             # (B,) int32 — most recent token
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: logits for the next token + updated caches."""
+    data_axes = _norm_axes(data_axes)
+    pattern, repeats = block_pattern(cfg)
+    new_len = cache["len"] + 1
+
+    x = params["embedding"][token[:, None]].astype(cfg.adtype)  # (B, 1, d)
+    x = _shard(x, mesh, P(data_axes, None, None))
+    specs = _cache_spec(cfg, data_axes)
+
+    def attn_decode(p, h, entry, window):
+        q = attn_mod.decode_project_q(cfg, p["attn"], h, new_len)
+        k_new, v_new = attn_mod.decode_project_kv(cfg, p["attn"], h, new_len)
+
+        if mesh is None:
+            out, k_c, v_c = attn_mod.flash_decode(
+                q, entry["k"], entry["v"], k_new, v_new, new_len,
+                window=window, model_axis=None,
+            )
+        else:
+            def body(q_, kc_, vc_, kn_, vn_):
+                return attn_mod.flash_decode(
+                    q_, kc_, vc_, kn_, vn_, new_len,
+                    window=window, model_axis="model",
+                )
+
+            out, k_c, v_c = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(
+                    P(data_axes, None, None),
+                    P(data_axes, "model", None, None),
+                    P(data_axes, "model", None, None),
+                    P(data_axes, None, None, None),
+                    P(data_axes, None, None, None),
+                ),
+                out_specs=(
+                    P(data_axes, None, None),
+                    P(data_axes, "model", None, None),
+                    P(data_axes, "model", None, None),
+                ),
+                check_vma=False,
+            )(q, entry["k"], entry["v"], k_new, v_new)
+        y = jnp.einsum("bhk,hkd->bd", out.astype(h.dtype), p["attn"]["wo"])[:, None, :]
+        return y, {"k": k_c, "v": v_c}
+
+    def body(h, xs):
+        block_slices, cache_slices = xs
+        new_slices = []
+        for pos, (mixer, moe, window) in enumerate(pattern):
+            p = block_slices[pos]
+            hn = apply_norm(cfg, p["norm1"], h)
+            if mixer == "attn":
+                mixed, new_entry = attn_decode(p, hn, cache_slices[pos], window)
+            else:
+                mixed, new_entry = mamba_mod.mamba_decode_step(
+                    cfg, p["mamba"], hn, cache_slices[pos]
+                )
+            h = h + mixed
+            if cfg.family != "ssm":
+                hn = apply_norm(cfg, p["norm2"], h)
+                if moe:
+                    y = moe_mod.moe_ffn(cfg, p["moe"], hn, mesh=mesh, data_axes=data_axes)
+                    if cfg.dense_residual:
+                        y = y + mlp_mod.mlp(cfg, p["residual_mlp"], hn)
+                else:
+                    y = mlp_mod.mlp(cfg, p["mlp"], hn)
+                h = h + y
+            new_slices.append(new_entry)
+        return h, tuple(new_slices)
+
+    x, stacked = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, x)[:, 0]
+
+    entries = []
+    for pos, (mixer, _moe, _w) in enumerate(pattern):
+        e = dict(stacked[pos])
+        if mesh is not None:
+            e = {kk: _shard(vv, mesh, specs[mixer][kk]) for kk, vv in e.items()}
+        entries.append(e)
+    return logits, {"layers": entries, "len": new_len}

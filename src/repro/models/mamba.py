@@ -1,0 +1,188 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b; jamba's mamba layers).
+
+Training/prefill uses a **chunked parallel scan**: the sequence is split
+into chunks; within a chunk the linear recurrence ``h_t = a_t·h_{t-1} +
+b_t`` runs as a `lax.associative_scan`, and a `lax.scan` threads the state
+across chunks.  This bounds the materialised ``(B, chunk, d_inner, state)``
+discretisation tensors — the full-sequence version would need ~17
+GB/device at the falcon-mamba train_4k shape.  On TPU the Pallas
+``selective_scan`` kernel replaces the chunk body, keeping state in VMEM
+(see ``repro.kernels.selective_scan``); the XLA path remains the oracle.
+
+Decode is the O(1) recurrence: one state update per token, with a rolling
+convolution buffer — no KV cache, which is why the SSM/hybrid archs are the
+ones that run `long_500k`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense
+
+__all__ = [
+    "init_mamba",
+    "mamba_block",
+    "mamba_decode_step",
+    "init_mamba_state",
+]
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    d, din, n, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    r = dt_rank(cfg)
+    keys = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias so softplus(dt) spans (1e-3, 0.1)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (din, 1))
+    u = jax.random.uniform(keys[0], (din,), minval=1e-3, maxval=0.1)
+    dt_bias = jnp.log(jnp.expm1(u))  # inverse softplus
+    return {
+        "in_proj": init_dense(keys[1], (d, 2 * din), cfg.pdtype, fan_in=d),
+        "conv_w": init_dense(keys[2], (dc, din), cfg.pdtype, fan_in=dc),
+        "conv_b": jnp.zeros((din,), cfg.pdtype),
+        "x_proj": init_dense(keys[3], (din, r + 2 * n), cfg.pdtype, fan_in=din),
+        "dt_proj": init_dense(keys[4], (r, din), cfg.pdtype, fan_in=r),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": init_dense(keys[5], (din, d), cfg.pdtype, fan_in=din),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over sequence: x (B,S,din), w (dc,din)."""
+    dc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(dc):  # dc is 4: unrolled taps beat a conv op at this size
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssm_params(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+    """Input-dependent (dt, B, C) from x (B,S,din) — f32 for stability."""
+    r, n = dt_rank(cfg), cfg.ssm_state
+    proj = (x @ p["x_proj"]).astype(jnp.float32)
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    return dt, b_ssm, c_ssm  # (B,S,din), (B,S,n), (B,S,n)
+
+
+def mamba_block(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,               # (B, S, d)
+    *,
+    chunk: int = 64,
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    din, n = cfg.d_inner, cfg.ssm_state
+
+    xz = x @ p["in_proj"]
+    x1_pre, z = jnp.split(xz, 2, axis=-1)
+    x1 = jax.nn.silu(_causal_conv(x1_pre, p["conv_w"], p["conv_b"]))
+
+    dt, b_ssm, c_ssm = _ssm_params(cfg, p, x1)
+    a = -jnp.exp(p["a_log"])                                  # (din, n)
+    x1f = x1.astype(jnp.float32)
+
+    n_chunks = max(1, s // chunk)
+    assert s % n_chunks == 0, f"seq {s} not divisible by chunk {chunk}"
+    csz = s // n_chunks
+
+    # The (B, chunk, d_inner, state) discretisation tensors dominate HBM
+    # traffic on the XLA path (the Pallas kernel keeps them in VMEM); they
+    # carry short-range products only, so bf16 storage with an f32 carry
+    # keeps the recurrence stable at half the traffic (§Perf hillclimb).
+    scan_dtype = jnp.bfloat16 if x.dtype == jnp.bfloat16 else jnp.float32
+
+    a_sc = a.astype(scan_dtype)
+
+    def scan_chunk(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * csz, csz, axis=1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(b_ssm), sl(c_ssm), sl(x1f)
+        # discretise: decay (B,c,din,n), drive (B,c,din,n) — cast the
+        # *small* (din-sized) factors first so the big (din×n) tensors are
+        # BORN in scan_dtype; casting afterwards would materialise the f32
+        # versions and double the traffic instead of halving it
+        dt_sc = dt_c.astype(scan_dtype)
+        decay = jnp.exp(dt_sc[..., None] * a_sc)             # ZOH on A
+        drive = (dt_sc * x_c.astype(scan_dtype))[..., None] \
+            * b_c.astype(scan_dtype)[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        pref_a, pref_b = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        h_all = pref_b + pref_a * h[:, None].astype(scan_dtype)  # inject carry
+        y_c = jnp.einsum(
+            "bsdn,bsn->bsd", h_all, c_c.astype(scan_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return h_all[:, -1].astype(jnp.float32), y_c
+
+    h0 = jnp.zeros((b, din, n), jnp.float32)
+    h_last, ys = jax.lax.scan(scan_chunk, h0, jnp.arange(n_chunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, din)
+
+    y = y + p["d_skip"] * x1f
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        # decode continues from the final SSM state + conv tail
+        tail = x1_pre[:, -(cfg.d_conv - 1):, :].astype(cfg.adtype)
+        return out, {"ssm": h_last, "conv": tail}
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decode path — O(1) per token
+# --------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), cfg.adtype),
+    }
+
+
+def mamba_decode_step(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,               # (B, 1, d)
+    state: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = x.shape[0]
+    din, n, dc = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+
+    xz = x[:, 0] @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)                        # (B, din)
+
+    # rolling depthwise conv buffer
+    window = jnp.concatenate([state["conv"], x1[:, None, :]], axis=1)  # (B,dc,din)
+    conv_out = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    x1 = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :].astype(state["conv"].dtype)
+
+    dt, b_ssm, c_ssm = _ssm_params(cfg, p, x1[:, None, :])
+    dt, b_ssm, c_ssm = dt[:, 0], b_ssm[:, 0], c_ssm[:, 0]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[..., None] * a)                       # (B, din, n)
+    drive = (dt * x1)[..., None] * b_ssm[:, None, :]
+    h = decay * state["ssm"] + drive
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm) + p["d_skip"] * x1
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"ssm": h, "conv": new_conv}

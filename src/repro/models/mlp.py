@@ -1,0 +1,36 @@
+"""Dense feed-forward blocks: gated (SwiGLU) and plain GELU MLPs."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense
+
+__all__ = ["init_mlp", "mlp"]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    d = cfg.d_model
+    dff = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    p = {
+        "w_up": init_dense(keys[0], (d, dff), cfg.pdtype, fan_in=d),
+        "w_down": init_dense(keys[1], (dff, d), cfg.pdtype, fan_in=dff),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = init_dense(keys[2], (d, dff), cfg.pdtype, fan_in=d)
+    else:
+        p["b_up"] = jnp.zeros((dff,), cfg.pdtype)
+        p["b_down"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def mlp(cfg: ModelConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.gated_mlp:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]

@@ -1,0 +1,162 @@
+"""Logical→mesh sharding rules for the LM zoo.
+
+The production mesh is ``(data=16, model=16)`` per pod, with an optional
+leading ``pod`` axis (pure data parallelism across pods).  The scheme is
+the standard 2-D layout:
+
+* **TP** — attention heads / FFN hidden / expert axis shard over ``model``;
+* **FSDP** — the remaining large parameter axis (usually ``d_model``)
+  shards over ``data`` (ZeRO-3; XLA all-gathers per layer inside the
+  scan);
+* **DP** — batch shards over ``(pod, data)``; gradients all-reduce over
+  both.
+
+Rules are *divisibility-aware*: an axis is only mapped to a mesh axis that
+divides it evenly (e.g. whisper's 20 heads and arctic's 56 heads cannot
+shard 16 ways — attention falls back to replicated heads there, an honest
+cost that shows up in the roofline and motivates the sequence-parallel
+hillclimb in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .common import ModelConfig
+
+__all__ = ["ShardingRules", "make_rules", "param_specs", "param_shardings"]
+
+
+class ShardingRules:
+    """Resolves named logical axes to mesh axes with divisibility checks."""
+
+    def __init__(self, mesh_axes: Dict[str, int], *, tp_axis="model"):
+        self.sizes = dict(mesh_axes)
+        self.tp = tp_axis if tp_axis in self.sizes else None
+        dp = [a for a in ("pod", "data") if a in self.sizes]
+        self.dp: Tuple[str, ...] = tuple(dp) if dp else ()
+        # FSDP spans ALL data-parallel axes (pods included): ZeRO-3 across
+        # pods is what keeps arctic's 480B params + f32 Adam state under
+        # the per-chip HBM budget.
+        self.fsdp: Optional[Tuple[str, ...]] = self.dp or None
+
+    def tp_if(self, dim: int) -> Optional[str]:
+        if self.tp and dim % self.sizes[self.tp] == 0:
+            return self.tp
+        return None
+
+    def fsdp_if(self, dim: int):
+        if not self.fsdp:
+            return None
+        total = 1
+        for a in self.fsdp:
+            total *= self.sizes[a]
+        if dim % total == 0:
+            return self.fsdp if len(self.fsdp) > 1 else self.fsdp[0]
+        # fall back to the largest single axis that divides
+        for a in self.fsdp:
+            if dim % self.sizes[a] == 0:
+                return a
+        return None
+
+
+def make_rules(mesh: Optional[Mesh]) -> ShardingRules:
+    if mesh is None:
+        return ShardingRules({})
+    return ShardingRules({name: size for name, size in zip(mesh.axis_names, mesh.devices.shape)})
+
+
+def _leaf_spec(cfg: ModelConfig, r: ShardingRules, path: Tuple[str, ...], shape) -> P:
+    """Spec for one parameter leaf.  `path` is the nested-dict key path
+    WITHOUT the stacked-layer prefix; stacked leading axes get None."""
+    name = path[-1]
+    d, v = cfg.d_model, cfg.vocab_size
+    # -- embeddings / head ------------------------------------------------
+    if name == "embedding":
+        return P(r.tp_if(v), r.fsdp_if(d))
+    if name == "lm_head":
+        return P(r.fsdp_if(d), r.tp_if(v))
+    if name in ("pos_embedding",):
+        return P(None, None)
+    # -- attention ---------------------------------------------------------
+    if name == "wq":
+        return P(r.fsdp_if(d), r.tp_if(cfg.n_heads), None)
+    if name in ("wk", "wv"):
+        return P(r.fsdp_if(d), r.tp_if(cfg.n_kv_heads), None)
+    if name == "wo":
+        return P(r.tp_if(cfg.n_heads), None, r.fsdp_if(d))
+    if name == "bq":
+        return P(r.tp_if(cfg.n_heads), None)
+    if name in ("bk", "bv"):
+        return P(r.tp_if(cfg.n_kv_heads), None)
+    # -- dense mlp -----------------------------------------------------------
+    if name in ("w_gate", "w_up") and len(shape) == 2:
+        return P(r.fsdp_if(shape[0]), r.tp_if(shape[1]))
+    if name == "w_down" and len(shape) == 2:
+        return P(r.tp_if(shape[0]), r.fsdp_if(shape[1]))
+    if name in ("b_up",):
+        return P(r.tp_if(shape[0]))
+    # -- moe (must match moe_ffn shard_map in_specs) -------------------------
+    if name == "router":
+        return P(None, None)
+    if name in ("w_gate", "w_up") and len(shape) == 3:   # (E, d, dff)
+        return P(r.tp_if(cfg.n_experts), None, r.fsdp_if(shape[2]))
+    if name == "w_down" and len(shape) == 3:             # (E, dff, d)
+        return P(r.tp_if(cfg.n_experts), r.fsdp_if(shape[1]), None)
+    # -- mamba ----------------------------------------------------------------
+    din = cfg.d_inner
+    if name == "in_proj":
+        return P(r.fsdp_if(d), r.tp_if(2 * din))
+    if name == "conv_w":
+        return P(None, r.tp_if(din))
+    if name in ("conv_b", "d_skip", "dt_bias"):
+        return P(r.tp_if(din))
+    if name == "x_proj":
+        return P(r.tp_if(din), None)
+    if name == "dt_proj":
+        return P(None, r.tp_if(din))
+    if name == "a_log":
+        return P(r.tp_if(din), None)
+    if name == "out_proj":
+        return P(r.tp_if(din), r.fsdp_if(d))
+    # -- norms / everything else: replicated ------------------------------------
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, params, rules: ShardingRules, *, stacked_prefixes=("layers", "enc_layers", "dec_layers")):
+    """PartitionSpec pytree matching `params`.
+
+    Leaves under a stacked-layers subtree get a leading ``None`` for the
+    layer axis; leaf rules are keyed by the final dict key.
+    """
+
+    def walk(tree, path, stacked):
+        if isinstance(tree, dict):
+            return {
+                k: walk(v, path + (k,), stacked or k in stacked_prefixes)
+                for k, v in tree.items()
+            }
+        if isinstance(tree, (list, tuple)):
+            out = [walk(v, path, stacked) for v in tree]
+            return type(tree)(out)
+        shape = np.shape(tree)
+        if stacked:
+            inner = _leaf_spec(cfg, rules, path, shape[1:])
+            return P(None, *inner)
+        return _leaf_spec(cfg, rules, path, shape)
+
+    return walk(params, (), False)
+
+
+def param_shardings(cfg: ModelConfig, params, mesh: Mesh):
+    rules = make_rules(mesh)
+    specs = param_specs(cfg, params, rules)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

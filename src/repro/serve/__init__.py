@@ -1,0 +1,3 @@
+from .engine import AdmissionController, generate, plan_migration
+
+__all__ = ["AdmissionController", "generate", "plan_migration"]

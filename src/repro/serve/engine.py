@@ -1,0 +1,95 @@
+"""Serving engine: batched prefill + decode with SnS-aware admission.
+
+``generate`` is the plain engine (prefill once, decode N tokens).
+``AdmissionController`` applies the paper's Predict-AR policy to serving:
+consult the SnS predictor each collection cycle; when it forecasts that
+the pool will not stay available over the horizon, *defer admitting new
+requests* (drain-friendly) while letting in-flight decodes finish — the
+same leave-running-work-undisturbed semantics as §VI-E.  ``plan_migration``
+picks the healthiest alternative pool by current SnS features (SpotServe-
+style proactive migration, reduced to its scheduling decision).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.common import ModelConfig
+
+__all__ = ["generate", "AdmissionController", "plan_migration"]
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    batch: Dict,
+    *,
+    max_new_tokens: int = 16,
+    mesh=None,
+    data_axes=("data",),
+    greedy: bool = True,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """Prefill + decode loop; returns (B, max_new_tokens) generated ids."""
+    b, s = batch["tokens"].shape
+    logits, cache = api.prefill(
+        cfg, params, batch, mesh=mesh, data_axes=data_axes,
+        max_seq=s + max_new_tokens,
+    )
+    key = jax.random.PRNGKey(seed)
+    outs = []
+    tok = None
+    for i in range(max_new_tokens):
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+        outs.append(tok)
+        if i + 1 < max_new_tokens:
+            logits, cache = api.decode_step(
+                cfg, params, cache, tok, mesh=mesh, data_axes=data_axes
+            )
+    return jnp.stack(outs, axis=1)
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Predict-AR for serving admission (one controller per pool)."""
+
+    predictor: Callable[[np.ndarray], float]   # features -> P(stays available)
+    horizon_cycles: int = 5
+    threshold: float = 0.5
+    _defer_until: int = -1
+
+    def on_cycle(self, cycle: int, features: np.ndarray) -> bool:
+        """Returns True if NEW requests may be admitted this cycle."""
+        if cycle <= self._defer_until:
+            return False
+        p_stay = float(self.predictor(features))
+        if 1.0 - p_stay >= self.threshold:
+            self._defer_until = cycle + self.horizon_cycles
+            return False
+        return True
+
+
+def plan_migration(
+    pool_features: Dict[str, np.ndarray],
+    predictor: Callable[[np.ndarray], float],
+    *,
+    current: str,
+) -> Optional[str]:
+    """Pick the best migration target when `current` looks unhealthy.
+
+    Returns None if `current` still scores best (no migration)."""
+    scores = {pid: float(predictor(f)) for pid, f in pool_features.items()}
+    best = max(scores, key=scores.get)
+    if best == current or scores[best] <= scores[current] + 1e-9:
+        return None
+    return best

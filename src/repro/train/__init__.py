@@ -1,0 +1,9 @@
+from .checkpoint import latest_step, list_steps, load_checkpoint, save_checkpoint
+from .optim import OptConfig, apply_updates, init_opt_state, schedule
+from .trainer import make_eval_step, make_train_step, synthetic_batch
+
+__all__ = [
+    "latest_step", "list_steps", "load_checkpoint", "save_checkpoint",
+    "OptConfig", "apply_updates", "init_opt_state", "schedule",
+    "make_eval_step", "make_train_step", "synthetic_batch",
+]

@@ -1,0 +1,123 @@
+"""AdamW with f32 master state over bf16 parameters.
+
+Production mixed-precision scheme: parameters/activations live in bf16,
+optimizer moments and the update math in f32.  Global-norm gradient
+clipping and a linear-warmup + cosine-decay schedule.  The optimizer
+state is a plain pytree, so it checkpoints/reshards exactly like params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # Low-precision moments (distributed-memory trick): bf16 m/v halves the
+    # optimizer footprint — what lets arctic-480b + Adam fit v5e-256.
+    moments_dtype: str = "float32"
+    # Update arithmetic dtype.  f32 is standard; bf16 is the memory-
+    # constrained mode for the 480B-class cells: it eliminates the hoisted
+    # whole-stack f32 convert buffers XLA:CPU materialises around the
+    # update (≈2.3 GiB per expert-stack leaf).  Precision cost documented
+    # in EXPERIMENTS.md.
+    update_dtype: str = "float32"
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params, *, moments_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(moments_dtype)
+    zeros = lambda p: jnp.zeros(jnp.shape(p), dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    # accumulate in f32 WITHOUT materialising f32 copies of bf16 leaves
+    # (an .astype here costs a full-leaf HBM temp per parameter tensor)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l), dtype=jnp.float32) for l in leaves))
+
+
+def apply_updates(
+    params, grads, state: Dict[str, Any], cfg: OptConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step; returns (params, state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state["step"]
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - cfg.b1**t
+    c2 = 1.0 - cfg.b2**t
+
+    mdt = jnp.dtype(cfg.moments_dtype)
+    udt = jnp.dtype(cfg.update_dtype)
+
+    def upd_math(p, g, m, v):
+        g = g.astype(udt) * scale.astype(udt)
+        m = (cfg.b1 * m.astype(udt) + (1 - cfg.b1) * g)
+        v = (cfg.b2 * v.astype(udt) + (1 - cfg.b2) * g * g)
+        update = (m / c1) / (jnp.sqrt(v / c2) + jnp.asarray(cfg.eps, udt))
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(udt)
+        new_p = (p.astype(udt) - lr.astype(udt) * update).astype(p.dtype)
+        return new_p, m.astype(mdt), v.astype(mdt)
+
+    def upd(p, g, m, v):
+        # Layer-stacked leaves (leading scan axis) update via lax.map so the
+        # f32 temporaries are bounded by ONE layer's slice, not the whole
+        # stack — at arctic scale this is ~10 GiB of transient HBM saved.
+        if p.ndim >= 3 and 1 < p.shape[0] <= 512:
+            return jax.lax.map(lambda a: upd_math(*a), (p, g, m, v))
+        return upd_math(p, g, m, v)
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        p2, m2, v2 = upd(p, g, m, v)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (
+        jax.tree.unflatten(tree, new_p),
+        {
+            "m": jax.tree.unflatten(tree, new_m),
+            "v": jax.tree.unflatten(tree, new_v),
+            "step": step + 1,
+        },
+        metrics,
+    )

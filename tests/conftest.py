@@ -1,0 +1,24 @@
+"""Shared fixtures.
+
+NOTE: XLA_FLAGS / host device count is deliberately NOT set here — smoke
+tests and benchmarks must see the single real CPU device.  Only
+``repro.launch.dryrun`` (run as a subprocess) uses placeholder devices.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SimulatedProvider, default_fleet, run_campaign
+
+
+@pytest.fixture(scope="session")
+def small_campaign():
+    """A small but statistically meaningful campaign, shared session-wide."""
+    fleet = default_fleet(12, seed=1)
+    provider = SimulatedProvider(fleet, seed=2)
+    return run_campaign(provider, duration=12 * 3600.0)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

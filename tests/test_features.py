@@ -1,0 +1,106 @@
+"""Algorithm 1 (SR/UR/CUT) — unit, equivalence, and hypothesis properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.features import compute_features, init_state, update
+
+
+def stream(s_seq, n, window, dt):
+    state = init_state(n, window, dt)
+    rows = []
+    for s_t in s_seq:
+        state, feats = update(state, s_t)
+        rows.append(feats)
+    return np.asarray(rows)
+
+
+class TestAlgorithm1:
+    def test_sr_is_ratio(self):
+        out = stream([10, 5, 0], n=10, window=30, dt=3)
+        np.testing.assert_allclose(out[:, 0], [1.0, 0.5, 0.0])
+
+    def test_ur_partial_window(self):
+        # paper lines 7-8: before the window fills, divide by t*N
+        out = stream([5, 5], n=10, window=30, dt=3)  # w = 10 cycles
+        np.testing.assert_allclose(out[:, 1], [0.5, 0.5])
+
+    def test_ur_full_window_slides(self):
+        # w=2: UR over the last 2 cycles only
+        out = stream([0, 0, 10, 10], n=10, window=6, dt=3)
+        np.testing.assert_allclose(out[:, 1], [1.0, 1.0, 0.5, 0.0])
+
+    def test_cut_resets_on_full_fulfilment(self):
+        out = stream([10, 4, 4, 10, 4], n=10, window=30, dt=3)
+        np.testing.assert_allclose(out[:, 2], [0.0, 3.0, 6.0, 0.0, 3.0])
+
+    def test_cut_zero_at_first_cycle_even_if_unfulfilled(self):
+        # Algorithm 1 line 10: t == 1 forces CUT = 0
+        out = stream([0, 0], n=10, window=30, dt=3)
+        np.testing.assert_allclose(out[:, 2], [0.0, 3.0])
+
+    def test_rejects_out_of_range(self):
+        state = init_state(10, 30, 3)
+        with pytest.raises(ValueError):
+            update(state, 11)
+        with pytest.raises(ValueError):
+            update(state, -1)
+
+
+class TestBatchEquivalence:
+    @given(
+        s=st.lists(st.integers(0, 10), min_size=1, max_size=200),
+        w_cycles=st.integers(1, 50),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_batch_matches_streaming(self, s, w_cycles):
+        dt = 3.0
+        batch = compute_features(np.array(s), 10, w_cycles * dt, dt)
+        streamed = stream(s, 10, w_cycles * dt, dt)
+        np.testing.assert_allclose(batch, streamed, atol=1e-12)
+
+    def test_multi_pool_shape(self):
+        s = np.random.default_rng(0).integers(0, 11, size=(7, 50))
+        out = compute_features(s, 10, 30, 3)
+        assert out.shape == (7, 50, 3)
+        # each pool independently equals its own streaming result
+        for p in range(7):
+            np.testing.assert_allclose(out[p], stream(s[p], 10, 30, 3))
+
+
+class TestProperties:
+    @given(s=st.lists(st.integers(0, 10), min_size=2, max_size=120))
+    @settings(max_examples=40, deadline=None)
+    def test_ranges(self, s):
+        out = compute_features(np.array(s), 10, 30, 3)
+        sr, ur, cut = out[:, 0], out[:, 1], out[:, 2]
+        assert ((0 <= sr) & (sr <= 1)).all()
+        assert ((0 <= ur) & (ur <= 1)).all()
+        assert (cut >= 0).all()
+        # CUT is bounded by elapsed time
+        assert (cut <= np.arange(len(s)) * 3.0 + 1e-9).all()
+
+    @given(s=st.lists(st.integers(0, 10), min_size=2, max_size=120))
+    @settings(max_examples=40, deadline=None)
+    def test_all_success_trace_is_flat_zero(self, s):
+        full = np.full(len(s), 10)
+        out = compute_features(full, 10, 30, 3)
+        np.testing.assert_allclose(out[:, 0], 1.0)
+        np.testing.assert_allclose(out[:, 1], 0.0)
+        np.testing.assert_allclose(out[:, 2], 0.0)
+
+    @given(
+        s=st.lists(st.integers(0, 10), min_size=12, max_size=120),
+        w=st.integers(2, 10),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_ur_is_window_mean_of_failure_rate(self, s, w):
+        # UR over a full window must equal the mean per-cycle failure ratio
+        arr = np.array(s)
+        out = compute_features(arr, 10, w * 3.0, 3.0)
+        fail = 1.0 - arr / 10.0
+        for t in range(w - 1, len(arr)):
+            expected = fail[t - w + 1 : t + 1].mean()
+            np.testing.assert_allclose(out[t, 1], expected, atol=1e-12)

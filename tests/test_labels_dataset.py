@@ -1,0 +1,92 @@
+"""Binary availability labels, horizon shifting, dataset construction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import binary_availability, build_dataset, horizon_labels
+
+
+class TestLabels:
+    def test_binary_availability(self):
+        running = np.array([[10, 9, 10, 0]])
+        np.testing.assert_array_equal(
+            binary_availability(running, 10), [[1, 0, 1, 0]]
+        )
+
+    def test_horizon_zero_is_identity(self):
+        a = np.array([1, 0, 1, 1])
+        np.testing.assert_array_equal(horizon_labels(a, 0), a)
+
+    def test_horizon_requires_sustained_availability(self):
+        #          t:  0  1  2  3  4
+        a = np.array([1, 1, 0, 1, 1])
+        # h=1: y[t] = a[t+1]
+        np.testing.assert_array_equal(horizon_labels(a, 1), [1, 0, 1, 1])
+        # h=2: y[t] = min(a[t+1], a[t+2])
+        np.testing.assert_array_equal(horizon_labels(a, 2), [0, 0, 1])
+
+    @given(
+        a=st.lists(st.integers(0, 1), min_size=5, max_size=60),
+        h=st.integers(1, 4),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_horizon_monotone_in_h(self, a, h):
+        """Longer horizons can only flip labels 1 -> 0, never 0 -> 1."""
+        arr = np.array(a)
+        y1 = horizon_labels(arr, h)
+        y2 = horizon_labels(arr, h + 1) if h + 1 < len(a) else None
+        if y2 is not None:
+            assert (y2 <= y1[: len(y2)]).all()
+
+    def test_horizon_too_long_raises(self):
+        with pytest.raises(ValueError):
+            horizon_labels(np.ones(5), 5)
+
+
+class TestDataset:
+    def test_point_dataset_shapes(self, small_campaign):
+        ds = build_dataset(small_campaign, window_minutes=60, horizon_minutes=9)
+        assert ds.x_train.ndim == 2 and ds.x_train.shape[1] == 3
+        assert len(ds.x_train) + len(ds.x_test) > 0
+        assert set(np.unique(ds.y_train)) <= {0, 1}
+        # 75/25 split
+        frac = len(ds.x_train) / (len(ds.x_train) + len(ds.x_test))
+        assert 0.74 < frac < 0.76
+
+    def test_sequence_dataset_shapes(self, small_campaign):
+        ds = build_dataset(
+            small_campaign, window_minutes=60, sequence_length=8
+        )
+        assert ds.x_train.ndim == 3 and ds.x_train.shape[1:] == (8, 3)
+
+    def test_feature_subset(self, small_campaign):
+        ds = build_dataset(small_campaign, feature_set=("SR",))
+        assert ds.x_train.shape[1] == 1
+        assert ds.feature_names == ("SR",)
+
+    def test_pool_split_is_disjoint(self, small_campaign):
+        ds = build_dataset(small_campaign, split="pool", seed=3)
+        assert set(np.unique(ds.train_pools)).isdisjoint(np.unique(ds.test_pools))
+
+    def test_standardization(self, small_campaign):
+        ds = build_dataset(small_campaign, window_minutes=60)
+        assert abs(ds.x_train.mean()) < 0.2
+        assert 0.5 < ds.x_train.std() < 2.0
+
+    def test_sequence_alignment_last_step_equals_point_features(self, small_campaign):
+        """The last step of each sequence must be that cycle's features."""
+        ds_seq = build_dataset(
+            small_campaign, window_minutes=60, sequence_length=4,
+            split="pool", seed=7, standardize=False,
+        )
+        ds_pt = build_dataset(
+            small_campaign, window_minutes=60,
+            split="pool", seed=7, standardize=False,
+        )
+        # pool split with same seed -> same pools; sequence dataset drops
+        # the first (L-1) cycles of each pool
+        pools_seq = np.unique(ds_seq.test_pools)
+        pools_pt = np.unique(ds_pt.test_pools)
+        np.testing.assert_array_equal(pools_seq, pools_pt)

@@ -1,0 +1,60 @@
+"""Spot request lifecycle state machine (paper Fig. 1)."""
+
+import pytest
+
+from repro.core.lifecycle import IllegalTransition, RequestState, SpotRequest
+
+
+def test_happy_path_probe():
+    req = SpotRequest(pool_id="p", submit_time=0.0)
+    req.transition(RequestState.PROVISIONING, 1.0)
+    req.transition(RequestState.CANCELLED, 1.5)
+    assert req.is_terminal
+    assert req.billed_seconds(now=100.0) == 0.0  # never reached RUNNING
+
+
+def test_running_bills_only_running_interval():
+    req = SpotRequest(pool_id="p", submit_time=0.0)
+    req.transition(RequestState.PROVISIONING, 1.0)
+    req.transition(RequestState.RUNNING, 10.0)
+    req.transition(RequestState.INTERRUPTED, 70.0)
+    assert req.billed_seconds() == 60.0
+
+
+def test_rejected_is_terminal():
+    req = SpotRequest(pool_id="p", submit_time=0.0)
+    req.transition(RequestState.REJECTED, 0.1)
+    with pytest.raises(IllegalTransition):
+        req.transition(RequestState.PROVISIONING, 0.2)
+
+
+@pytest.mark.parametrize(
+    "path",
+    [
+        [RequestState.RUNNING],                      # skip provisioning
+        [RequestState.CANCELLED],                    # cancel before accept
+        [RequestState.PROVISIONING, RequestState.TERMINATED],
+        [RequestState.PROVISIONING, RequestState.REJECTED],
+    ],
+)
+def test_illegal_paths(path):
+    req = SpotRequest(pool_id="p", submit_time=0.0)
+    with pytest.raises(IllegalTransition):
+        for s in path:
+            req.transition(s, 1.0)
+
+
+def test_history_is_ordered():
+    req = SpotRequest(pool_id="p", submit_time=0.0)
+    req.transition(RequestState.PROVISIONING, 1.0)
+    req.transition(RequestState.RUNNING, 2.0)
+    req.transition(RequestState.TERMINATED, 3.0)
+    states = [s for _, s in req.history]
+    assert states == [
+        RequestState.PENDING,
+        RequestState.PROVISIONING,
+        RequestState.RUNNING,
+        RequestState.TERMINATED,
+    ]
+    times = [t for t, _ in req.history]
+    assert times == sorted(times)

@@ -1,0 +1,53 @@
+"""Data Pipeline (§V): incremental O(1) updates, window table, archive."""
+
+import numpy as np
+
+from repro.core import FeatureProcessor, compute_features
+
+
+def test_pipeline_matches_batch_replay():
+    rng = np.random.default_rng(0)
+    pools = ["a", "b", "c"]
+    t_max, n = 60, 10
+    s = rng.integers(0, n + 1, size=(len(pools), t_max))
+
+    proc = FeatureProcessor(pools, n_requests=n, window_minutes=30, dt_minutes=3)
+    streamed = np.zeros((len(pools), t_max, 3))
+    for t in range(t_max):
+        rows = proc.on_cycle(t, t * 180.0, s[:, t])
+        for i, pid in enumerate(pools):
+            streamed[i, t] = rows[pid].features
+
+    batch = compute_features(s, n, 30, 3)
+    np.testing.assert_allclose(streamed, batch, atol=1e-12)
+
+
+def test_window_table_bounded_and_archive_grows():
+    pools = ["a"]
+    proc = FeatureProcessor(pools, n_requests=10, window_minutes=30, dt_minutes=3)
+    w = proc.window_cycles
+    for t in range(3 * w):
+        proc.on_cycle(t, t * 180.0, [10])
+    assert len(proc.table.rows["a"]) == w          # bounded by the window
+    assert len(proc.table.archive) == 2 * w        # evictions archived
+
+
+def test_update_work_is_constant_per_cycle():
+    """O(1) incremental property: state-update count is pools x cycles,
+    independent of history length (Algorithm 1's point)."""
+    pools = [f"p{i}" for i in range(5)]
+    proc = FeatureProcessor(pools, n_requests=10, window_minutes=60, dt_minutes=3)
+    for t in range(100):
+        proc.on_cycle(t, t * 180.0, [10] * 5)
+    assert proc.update_ops == 5 * 100
+
+
+def test_predictions_attached_to_rows():
+    proc = FeatureProcessor(
+        ["a"], n_requests=10, window_minutes=30, dt_minutes=3,
+        predict_fn=lambda feats: float(feats[0] > 0.5),
+    )
+    rows = proc.on_cycle(0, 0.0, [10])
+    assert rows["a"].prediction == 1.0
+    rows = proc.on_cycle(1, 180.0, [0])
+    assert rows["a"].prediction == 0.0

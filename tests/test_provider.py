@@ -1,0 +1,97 @@
+"""Simulated provider: admission, reclamation, rate limits, calibration."""
+
+import numpy as np
+import pytest
+
+from repro.core import binary_availability
+from repro.core.lifecycle import RequestState
+from repro.core.provider import (
+    PoolConfig,
+    RateLimitError,
+    SimulatedProvider,
+    default_fleet,
+)
+
+
+def make_provider(**kw):
+    cfg = PoolConfig(instance_type="t", region="r", base_capacity=30.0)
+    return SimulatedProvider([cfg], seed=0, **kw), cfg.pool_id
+
+
+class TestAdmission:
+    def test_accepts_when_capacity_available(self):
+        prov, pid = make_provider()
+        reqs = prov.submit_spot_request(pid, n=5)
+        assert sum(r.state is RequestState.PROVISIONING for r in reqs) >= 4
+
+    def test_concurrent_batch_consumes_headroom(self):
+        # 100 concurrent requests against capacity 30 -> ~30 accepted
+        prov, pid = make_provider()
+        reqs = prov.submit_spot_request(pid, n=100)
+        accepted = sum(r.state is RequestState.PROVISIONING for r in reqs)
+        assert 20 <= accepted <= 31
+
+    def test_rate_limit(self):
+        prov, pid = make_provider(requests_per_minute_per_region=50)
+        prov.submit_spot_request(pid, n=50)
+        with pytest.raises(RateLimitError):
+            prov.submit_spot_request(pid, n=1)
+        # budget frees up after the 60 s window
+        prov.advance(61.0)
+        prov.submit_spot_request(pid, n=10)
+
+
+class TestLifecycleIntegration:
+    def test_uncancelled_requests_reach_running_and_bill(self):
+        prov, pid = make_provider()
+        reqs = prov.submit_spot_request(pid, n=3)
+        prov.advance(120.0)  # provisioning completes
+        running = [r for r in reqs if r.state is RequestState.RUNNING]
+        assert running, "requests left alone must reach RUNNING"
+        assert all(r.billed_seconds(prov.now) > 0 for r in running)
+
+    def test_cancelled_requests_never_bill(self):
+        prov, pid = make_provider()
+        reqs = prov.submit_spot_request(pid, n=3)
+        for r in reqs:
+            prov.cancel(r)
+        prov.advance(120.0)
+        assert all(r.state is RequestState.CANCELLED for r in reqs if r.run_started is None)
+        assert all(r.billed_seconds(prov.now) == 0.0 for r in reqs)
+
+    def test_node_pool_maintains_target(self):
+        prov, pid = make_provider()
+        prov.set_node_pool(pid, 10)
+        prov.advance(600.0)
+        assert prov.running_count(pid) == 10
+
+
+class TestCalibration:
+    """Statistical properties the paper reports (Table I / Fig 3 bands)."""
+
+    @pytest.fixture(scope="class")
+    def campaign(self):
+        from repro.core import run_campaign
+
+        fleet = default_fleet(16, seed=1)
+        prov = SimulatedProvider(fleet, seed=2)
+        return run_campaign(prov, duration=24 * 3600.0)
+
+    def test_agreement_asymmetry(self, campaign):
+        # Table I: SnS rarely over-estimates availability
+        agree = (campaign.s == campaign.running).mean()
+        under = (campaign.running > campaign.s).mean()   # Actual > SnS
+        over = (campaign.running < campaign.s).mean()    # Actual < SnS
+        assert 0.6 <= agree <= 0.95
+        assert under > 5 * over, "conservatism asymmetry lost"
+
+    def test_availability_mostly_full(self, campaign):
+        avail = binary_availability(campaign.running, campaign.n)
+        assert 0.8 <= avail.mean() <= 0.995
+
+    def test_interruptions_occur(self, campaign):
+        assert len(campaign.interruptions) > 20
+
+    def test_probe_cost_is_zero(self, campaign):
+        assert campaign.probe_compute_cost == 0.0
+        assert campaign.node_pool_cost > 100.0

@@ -1,0 +1,113 @@
+"""Trace-driven simulation (§VI-E) + cost model (§VI-B) + co-interrupts."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    cost_report,
+    fraction_within,
+    proximities,
+    replay,
+    run_strategies,
+    tpcds_profile,
+)
+from repro.core.provider import InterruptionEvent
+from repro.core.workloads import (
+    TPCDS_MAX_SECONDS,
+    TPCDS_MIN_SECONDS,
+    TPCDS_TOTAL_SECONDS,
+)
+
+
+class TestWorkload:
+    def test_tpcds_profile_matches_published_stats(self):
+        d = tpcds_profile()
+        assert len(d) == 99
+        assert d.min() == TPCDS_MIN_SECONDS
+        assert d.max() == TPCDS_MAX_SECONDS
+        assert abs(d.sum() - TPCDS_TOTAL_SECONDS) < 1.0
+
+
+class TestReplay:
+    def test_no_interruptions_no_loss(self):
+        avail = np.ones(480, dtype=int)
+        r = replay(avail, [100.0, 200.0, 50.0])
+        assert r.lost_seconds == 0.0
+        assert r.completed == 3
+
+    def test_interruption_loses_running_progress(self):
+        # one query of 400 s; pool drops at cycle 2 (t=360 s)
+        avail = np.array([1, 1, 0, 1, 1, 1])
+        r = replay(avail, [400.0], dt=180.0)
+        assert r.lost_seconds == pytest.approx(360.0)
+        assert r.completed == 1  # retried and finished
+
+    def test_fully_unavailable_trace_completes_nothing(self):
+        r = replay(np.zeros(10, dtype=int), [100.0])
+        assert r.completed == 0
+        assert r.lost_seconds == 0.0  # nothing ever started
+
+    def test_predict_ar_defers_and_avoids_loss(self):
+        # pool: up 5 cycles, down 5, up 10 — oracle predictor
+        avail = np.concatenate([np.ones(5), np.zeros(5), np.ones(10)]).astype(int)
+
+        def oracle(c):
+            h = 2
+            future = avail[c + 1 : c + 1 + h]
+            return int(future.all())
+
+        base = replay(avail, [400.0] * 3, strategy="always_run", dt=180.0)
+        pred = replay(
+            avail, [400.0] * 3, strategy="predict_ar",
+            predictor=oracle, horizon_cycles=2, dt=180.0,
+        )
+        assert pred.lost_seconds < base.lost_seconds
+        assert pred.idle_seconds > 0.0  # deferral shows up as idle time
+
+    def test_sjf_orders_queue(self):
+        avail = np.ones(3, dtype=int)
+        r = replay(avail, [500.0, 10.0, 20.0], strategy="sjf", dt=180.0)
+        assert r.completed == 3  # 10+20+500 fits into 540
+
+    def test_run_strategies_averages_permutations(self):
+        avail = (np.arange(100) % 7 != 0).astype(int)
+        results = run_strategies(avail, tpcds_profile()[:20], n_permutations=3)
+        names = {r.strategy for r in results}
+        assert names == {"always_run", "sjf"}
+        for r in results:
+            assert r.total_queries == 20
+
+
+class TestCost:
+    def test_fig5_ordering_and_bands(self, small_campaign):
+        rep = cost_report(small_campaign)
+        # continuous >> periodic >> SnS (Fig. 5, log scale)
+        assert rep.continuous > rep.periodic > rep.sns_total
+        assert rep.sns_compute == 0.0
+        # paper: 249.5x over continuous, 2.5x over periodic — same decade
+        assert 50 < rep.continuous_over_sns < 2000
+        assert rep.periodic_over_sns > 1.0
+        assert rep.resolution_ratio == pytest.approx(600.0 / small_campaign.interval)
+
+
+class TestCoInterrupt:
+    def test_proximity_nearest_neighbour(self):
+        events = [
+            InterruptionEvent("p", 1, 0.0),
+            InterruptionEvent("p", 2, 10.0),
+            InterruptionEvent("p", 3, 500.0),
+        ]
+        gaps = np.sort(proximities(events))
+        np.testing.assert_allclose(gaps, [10.0, 10.0, 490.0])
+
+    def test_singleton_pools_excluded(self):
+        events = [InterruptionEvent("a", 1, 0.0), InterruptionEvent("b", 2, 5.0)]
+        assert proximities(events).size == 0
+
+    def test_campaign_cointerrupt_band(self, small_campaign):
+        """Fig. 3: >85% within 1 min, ~93% within 3 min (loose band here)."""
+        f1 = fraction_within(small_campaign.interruptions, 60.0)
+        f3 = fraction_within(small_campaign.interruptions, 180.0)
+        assert f3 >= f1
+        assert f1 > 0.6
+        assert f3 > 0.8
