@@ -1,0 +1,18 @@
+# Tier-1 verification — identical to what CI runs.
+#   make verify   : full test suite + pipeline-throughput smoke
+#   make test     : test suite only
+#   make bench    : full pipeline-throughput benchmark (asserts >= 50x)
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: verify test bench
+
+verify: test
+	python benchmarks/pipeline_throughput.py --smoke
+
+test:
+	python -m pytest -x -q
+
+bench:
+	python benchmarks/pipeline_throughput.py

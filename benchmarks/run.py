@@ -20,6 +20,7 @@ from . import (
     fig7_window,
     fig8_horizon,
     fig9_simulation,
+    pipeline_throughput,
     roofline_report,
     table1_agreement,
 )
@@ -41,6 +42,10 @@ BENCHES = [
      lambda r: f"reduction@3min={r['h=3min']['predict_ar_reduction']} @15min={r['h=15min']['predict_ar_reduction']}"),
     ("roofline_report", roofline_report.run,
      lambda r: f"cells ok={r['ok']} skipped={r['skipped']} errors={r['errors']}"),
+    ("pipeline_throughput", pipeline_throughput.run,
+     lambda r: (f"numpy={r['speedup']['vectorized_numpy']}x "
+                f"kernel={r['speedup']['kernel_replay']}x "
+                f"bit_identical={r['kernel_bit_identical_atol0']}")),
 ]
 
 

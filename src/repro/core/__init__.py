@@ -8,16 +8,33 @@ from .collector import CampaignResult, DataLake, SnSCollector, run_campaign
 from .cointerrupt import fraction_within, proximities, proximity_cdf
 from .cost import CostReport, ServerlessPricing, cost_report
 from .dataset import Dataset, build_dataset
-from .features import FEATURE_NAMES, compute_features, init_state, update
+from .features import (
+    FEATURE_NAMES,
+    FleetFeatureState,
+    compute_features,
+    init_fleet_state,
+    init_state,
+    update,
+    update_batch,
+)
 from .labels import binary_availability, horizon_labels
 from .lifecycle import RequestState, SpotRequest
-from .pipeline import DataArchive, FeatureProcessor, WindowTable
+from .pipeline import (
+    DataArchive,
+    FeatureProcessor,
+    FleetCycleResult,
+    FleetFeatureProcessor,
+    FleetWindowTable,
+    WindowTable,
+)
 from .predictor import (
     MODEL_REGISTRY,
     SEQUENCE_MODELS,
+    batched_predict_fn,
     evaluate,
     fit_predictor,
     make_model,
+    pointwise_predict_fn,
 )
 from .provider import (
     InterruptionEvent,
@@ -35,10 +52,13 @@ __all__ = [
     "CostReport", "ServerlessPricing", "cost_report",
     "Dataset", "build_dataset",
     "FEATURE_NAMES", "compute_features", "init_state", "update",
+    "FleetFeatureState", "init_fleet_state", "update_batch",
     "binary_availability", "horizon_labels",
     "RequestState", "SpotRequest",
     "DataArchive", "FeatureProcessor", "WindowTable",
+    "FleetCycleResult", "FleetFeatureProcessor", "FleetWindowTable",
     "MODEL_REGISTRY", "SEQUENCE_MODELS", "evaluate", "fit_predictor", "make_model",
+    "batched_predict_fn", "pointwise_predict_fn",
     "InterruptionEvent", "PoolConfig", "RateLimitError",
     "SimulatedProvider", "default_fleet",
     "SimResult", "replay", "run_strategies",

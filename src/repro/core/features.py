@@ -12,13 +12,20 @@ Three complementary features derived from the per-cycle SnS success count
   resets to 0 whenever ``S_t == N`` (or at t==1), otherwise grows by the
   collection interval ``dt``.
 
-Every update is O(1) (Algorithm 1).  Two implementations are provided:
+Every update is O(1) (Algorithm 1).  Three implementations are provided:
 
 * :class:`FeatureState` / :func:`update` — the incremental streaming form
   used by the online Data Pipeline (pure Python scalars, exact).
+* :class:`FleetFeatureState` / :func:`update_batch` — the same O(1) cycle
+  update vectorised over a whole fleet of pools: all per-pool state lives
+  in stacked ``(pools,)`` / ``(pools, w + 1)`` arrays and one cycle's
+  success-count *vector* is ingested with a handful of numpy ops,
+  independent of fleet size in Python-interpreter work.  Outputs are
+  bit-identical to running :func:`update` per pool.
 * :func:`compute_features` — a vectorised batch "replay" over whole traces
   (numpy), used for dataset construction and as the oracle shape for the
-  ``kernels/sns_features`` Pallas kernel.
+  ``kernels/sns_features`` Pallas kernels (full-trace and chunked
+  streaming variants).
 
 Cycle indexing follows the paper: cycles are 1-based (``t = 1, 2, ...``)
 and the window length in cycles is ``w = W / dt`` with ``W`` in the same
@@ -36,6 +43,9 @@ __all__ = [
     "FeatureState",
     "init_state",
     "update",
+    "FleetFeatureState",
+    "init_fleet_state",
+    "update_batch",
     "compute_features",
     "FEATURE_NAMES",
 ]
@@ -116,6 +126,92 @@ def update(state: FeatureState, s_t: int) -> Tuple[FeatureState, Tuple[float, fl
         state.cut += dt
 
     return state, (sr, ur, float(state.cut))
+
+
+@dataclasses.dataclass
+class FleetFeatureState:
+    """Stacked Algorithm 1 state for a whole fleet of pools.
+
+    Structure mirrors :class:`FeatureState` with every per-pool scalar
+    promoted to a ``(pools,)`` array and the ring buffer to
+    ``(pools, w + 1)``.  The cycle counter and ring head stay scalar —
+    all pools advance in lock-step, one collection cycle at a time.
+    """
+
+    n: int                        # concurrent requests per measurement point
+    w: int                        # window length in collection cycles
+    dt: float                     # collection interval (minutes)
+    pools: int                    # fleet size
+    t: int = 0                    # last completed cycle (shared by all pools)
+    p_t: np.ndarray = None        # (pools,) int64 — P[t] per pool
+    cut: np.ndarray = None        # (pools,) float64 — CUT_t per pool
+    p_window: np.ndarray = None   # (pools, w + 1) int64 ring buffer of P
+    head: int = 0                 # ring index of P[t]
+
+    def __post_init__(self):
+        if self.p_t is None:
+            self.p_t = np.zeros(self.pools, dtype=np.int64)
+        if self.cut is None:
+            self.cut = np.zeros(self.pools, dtype=np.float64)
+        if self.p_window is None:
+            self.p_window = np.zeros((self.pools, self.w + 1), dtype=np.int64)
+
+
+def init_fleet_state(
+    pools: int, n: int, window_minutes: float, dt_minutes: float
+) -> FleetFeatureState:
+    """Create stacked streaming state for ``pools`` pools (see
+    :func:`init_state` for the per-pool parameters)."""
+    if pools <= 0:
+        raise ValueError(f"pools must be positive, got {pools}")
+    proto = init_state(n, window_minutes, dt_minutes)  # validates n/w/dt
+    return FleetFeatureState(n=proto.n, w=proto.w, dt=proto.dt, pools=pools)
+
+
+def update_batch(
+    state: FleetFeatureState, s_t: np.ndarray
+) -> Tuple[FleetFeatureState, np.ndarray]:
+    """Algorithm 1 for one cycle across the whole fleet at once.
+
+    ``s_t`` is the cycle's success-count vector, shape ``(pools,)``.
+    Mutates and returns ``state`` along with a ``(pools, 3)`` float64
+    feature matrix ordered ``(SR, UR, CUT)`` — bit-identical to applying
+    the scalar :func:`update` to each pool independently.  Interpreter
+    work per cycle is a constant number of vector ops (no per-pool loop).
+    """
+    n, w, dt = state.n, state.w, state.dt
+    s_t = np.asarray(s_t)
+    if s_t.shape != (state.pools,):
+        raise ValueError(f"s_t shape {s_t.shape} != (pools,) = ({state.pools},)")
+    ok = (s_t >= 0) & (s_t <= n)  # NaN fails both comparisons
+    if not ok.all():
+        raise ValueError(f"S_t={s_t[~ok][0]} out of range [0, {n}]")
+    s_int = s_t.astype(np.int64)
+    if np.any(s_int != s_t):  # fractional counts would silently truncate
+        raise ValueError(f"S_t must be integral, got {s_t[s_int != s_t][0]}")
+    s_t = s_int
+
+    state.t += 1
+    t = state.t
+
+    sr = s_t / n
+
+    state.p_t += n - s_t
+    state.head = (state.head + 1) % (w + 1)
+    state.p_window[:, state.head] = state.p_t
+
+    if t >= w:
+        p_t_minus_w = state.p_window[:, (state.head - w) % (w + 1)]
+        ur = (state.p_t - p_t_minus_w) / (w * n)
+    else:
+        ur = state.p_t / (t * n)  # P[0] == 0
+
+    if t == 1:
+        state.cut[:] = 0.0
+    else:
+        state.cut = np.where(s_t == n, 0.0, state.cut + dt)
+
+    return state, np.stack([sr, ur, state.cut], axis=-1)
 
 
 def compute_features(

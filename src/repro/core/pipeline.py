@@ -1,34 +1,65 @@
-"""Data Pipeline — paper §V, Fig. 4 (middle module).
+"""Data Pipeline — paper §V, Fig. 4 (middle module), at two scales.
 
-Connects the Data Lake to the Interrupt Predictor:
+Connects the Data Lake to the Interrupt Predictor.  Two implementations
+share the same cycle contract (ingest one collection cycle's success
+counts, update SR/UR/CUT incrementally in O(1) per pool, attach the
+predictor's output to the stored record):
 
-* **WindowTable** — per-pool streaming feature state (the ring buffer of
-  cumulative counts) plus the most recent feature rows and attached
-  predictions.
-* **FeatureProcessor** — consumes new per-cycle success counts and updates
-  features *incrementally in O(1)* per pool (Algorithm 1); records that
-  fall out of the window are moved to the **DataArchive**.
-* Predictions from the attached predictor are written back onto the window
-  rows (§V: "attaches the prediction result to the corresponding input
-  record and stores it in the Window Table").
+* **Per-pool objects** (:class:`FeatureProcessor` / :class:`WindowTable` /
+  :class:`DataArchive`) — the paper-faithful reference: a Python dict of
+  per-pool streaming states, one ``PredictFn`` call per pool per cycle.
+  Exact, readable, and fine at the paper's 68 pools.
 
-The O(1) claim is tested by counting state-update work per cycle
-(``tests/test_pipeline.py``).
+* **Fleet-vectorised** (:class:`FleetFeatureProcessor` /
+  :class:`FleetWindowTable`) — the SpotLake-class scale-up (instance
+  types × regions × AZs ≈ 10⁴–10⁶ pools): all per-pool state lives in
+  stacked arrays (``repro.core.features.update_batch``), one cycle is a
+  constant number of vector ops regardless of fleet size, and the
+  predictor is invoked **once per cycle on the full (pools, features)
+  batch** instead of once per pool.  The window table is a set of ring
+  arrays — no per-row Python objects — bounded by the window length,
+  with evictions counted into a stacked archive.  Outputs are
+  bit-identical to the per-pool path (``tests/test_fleet_pipeline.py``).
+
+For offline bulk replay of long traces at this scale use the chunked
+streaming kernel (``repro.kernels.sns_features``) which carries the same
+per-pool state across time-chunks in VMEM; this module is the *online*
+(cycle-at-a-time) form of the same computation.
+
+The O(1) claim is tested by counting state-update work per cycle for both
+paths (``tests/test_pipeline.py``, ``tests/test_fleet_pipeline.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .features import FeatureState, init_state, update
+from .features import (
+    FeatureState,
+    FleetFeatureState,
+    init_fleet_state,
+    init_state,
+    update,
+    update_batch,
+)
 
-__all__ = ["WindowRow", "WindowTable", "DataArchive", "FeatureProcessor"]
+__all__ = [
+    "WindowRow",
+    "WindowTable",
+    "DataArchive",
+    "FeatureProcessor",
+    "FleetCycleResult",
+    "FleetWindowTable",
+    "FleetFeatureProcessor",
+]
 
 PredictFn = Callable[[np.ndarray], float]
+#: fleet-scale predictor: one (pools, n_features) batch -> (pools,) scores
+BatchPredictFn = Callable[[np.ndarray], np.ndarray]
 
 
 @dataclasses.dataclass
@@ -76,7 +107,12 @@ class WindowTable:
 
 
 class FeatureProcessor:
-    """Incremental feature computation + prediction fan-out (§V)."""
+    """Incremental feature computation + prediction fan-out (§V).
+
+    The per-pool reference implementation: exact, O(1) per pool per cycle,
+    but with Python-interpreter work linear in the fleet size.  Use
+    :class:`FleetFeatureProcessor` past a few hundred pools.
+    """
 
     def __init__(
         self,
@@ -117,3 +153,203 @@ class FeatureProcessor:
     def feature_matrix(self, pool_id: str) -> np.ndarray:
         """(rows, 3) matrix of in-window features for one pool."""
         return np.asarray([r.features for r in self.table.rows.get(pool_id, [])])
+
+
+# --------------------------------------------------------------------------
+# Fleet-vectorised pipeline
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetCycleResult:
+    """One cycle's outputs for the whole fleet (stacked, not per-row)."""
+
+    cycle: int
+    time: float
+    s_t: np.ndarray                      # (pools,) int
+    features: np.ndarray                 # (pools, 3) float64 — (SR, UR, CUT)
+    predictions: Optional[np.ndarray]    # (pools,) float or None
+
+
+class FleetWindowTable:
+    """Window Table as stacked ring arrays — no per-row Python objects.
+
+    Holds the last ``window_cycles`` cycles of success counts, features,
+    and attached predictions for every pool; rows falling out of the
+    window are *counted* into the archive (cold storage at fleet scale is
+    a bulk store, not per-row objects — keep ``archive_evicted=True`` to
+    retain the evicted feature blocks for offline dataset builds).
+    """
+
+    def __init__(
+        self,
+        pools: int,
+        window_cycles: int,
+        *,
+        n_features: int = 3,
+        archive_evicted: bool = False,
+    ):
+        w = int(window_cycles)
+        self.pools = pools
+        self.window_cycles = w
+        self.s = np.zeros((pools, w), dtype=np.int64)
+        self.features = np.zeros((pools, w, n_features), dtype=np.float64)
+        self.predictions = np.full((pools, w), np.nan)
+        self.cycles = np.full(w, -1, dtype=np.int64)   # slot -> cycle id
+        self.times = np.zeros(w)
+        self.head = -1          # ring slot of the latest cycle
+        self.count = 0          # filled slots (<= window_cycles)
+        self.archived_cycles = 0
+        self.archive_evicted = archive_evicted
+        self._archive_blocks: List[np.ndarray] = []    # evicted (pools, F) rows
+
+    def append_cycle(
+        self,
+        cycle: int,
+        time: float,
+        s_t: np.ndarray,
+        features: np.ndarray,
+        predictions: Optional[np.ndarray] = None,
+    ) -> None:
+        self.head = (self.head + 1) % self.window_cycles
+        if self.count == self.window_cycles:
+            self.archived_cycles += 1
+            if self.archive_evicted:
+                self._archive_blocks.append(self.features[:, self.head].copy())
+        else:
+            self.count += 1
+        self.s[:, self.head] = s_t
+        self.features[:, self.head] = features
+        self.predictions[:, self.head] = (
+            np.nan if predictions is None else predictions
+        )
+        self.cycles[self.head] = cycle
+        self.times[self.head] = time
+
+    @property
+    def archived(self) -> int:
+        """Evicted rows across the fleet (pools × evicted cycles)."""
+        return self.archived_cycles * self.pools
+
+    def _order(self) -> np.ndarray:
+        """Ring slots in chronological order (oldest -> newest)."""
+        w, c = self.window_cycles, self.count
+        return (np.arange(self.head - c + 1, self.head + 1)) % w
+
+    def feature_matrix(self, pool_index: int) -> np.ndarray:
+        """(rows, F) in-window features for one pool, oldest first."""
+        return self.features[pool_index, self._order()]
+
+    def trailing(self, length: int) -> np.ndarray:
+        """(pools, length, F) most recent feature sequences (for sequence
+        models); requires at least ``length`` ingested cycles."""
+        if self.count < length:
+            raise ValueError(f"only {self.count} cycles in window, need {length}")
+        return self.features[:, self._order()[-length:]]
+
+    def latest(self) -> FleetCycleResult:
+        if self.count == 0:
+            raise ValueError("window table is empty")
+        h = self.head
+        preds = self.predictions[:, h]
+        # copies, not views: a held result must stay stable after the ring
+        # wraps and overwrites the slot
+        return FleetCycleResult(
+            cycle=int(self.cycles[h]),
+            time=float(self.times[h]),
+            s_t=self.s[:, h].copy(),
+            features=self.features[:, h].copy(),
+            predictions=None if np.isnan(preds).all() else preds.copy(),
+        )
+
+
+class FleetFeatureProcessor:
+    """Fleet-vectorised incremental features + one batched prediction/cycle.
+
+    Per cycle: one :func:`~repro.core.features.update_batch` call (a
+    constant number of vector ops over stacked state — the fleet-scale
+    form of Algorithm 1's O(1) update) and, when a predictor is attached,
+    exactly one ``predict_fn`` call on the full ``(pools, features)``
+    matrix (see ``repro.core.predictor.batched_predict_fn``).  With
+    ``sequence_length=L`` the predictor instead receives the fleet's
+    trailing-window tensor ``(pools, L, features)`` — the sequence-model
+    serving path (lstm/transformer); predictions stay ``None`` until L
+    cycles of history exist.
+
+    Feature outputs are bit-identical to :class:`FeatureProcessor`;
+    interpreter work per cycle is O(1) in the fleet size.
+    """
+
+    def __init__(
+        self,
+        pools: Union[int, Sequence[str]],
+        *,
+        n_requests: int = 10,
+        window_minutes: float = 480.0,
+        dt_minutes: float = 3.0,
+        predict_fn: Optional[BatchPredictFn] = None,
+        sequence_length: Optional[int] = None,
+        archive_evicted: bool = False,
+    ):
+        if isinstance(pools, int):
+            self.pool_ids = [f"pool{i}" for i in range(pools)]
+        else:
+            self.pool_ids = list(pools)
+        self.pool_index = {pid: i for i, pid in enumerate(self.pool_ids)}
+        self.n = n_requests
+        self.dt_minutes = dt_minutes
+        self.state: FleetFeatureState = init_fleet_state(
+            len(self.pool_ids), n_requests, window_minutes, dt_minutes
+        )
+        self.window_cycles = self.state.w  # the one validated derivation
+        self.table = FleetWindowTable(
+            len(self.pool_ids), self.window_cycles,
+            archive_evicted=archive_evicted,
+        )
+        self.predict_fn = predict_fn
+        if sequence_length is not None and not 1 <= sequence_length <= self.window_cycles:
+            raise ValueError(
+                f"sequence_length {sequence_length} outside [1, window_cycles"
+                f"={self.window_cycles}]"
+            )
+        self.sequence_length = sequence_length
+        # instrumentation for the O(1)-work-per-cycle tests:
+        self.update_ops = 0     # batched state updates (1 per cycle)
+        self.predict_calls = 0  # predictor invocations (<= 1 per cycle)
+
+    def on_cycle(self, cycle: int, time: float, s: Sequence[int]) -> FleetCycleResult:
+        """Ingest one collection cycle's success-count vector for the fleet."""
+        s_t = np.array(s)  # copy: the result must not alias a caller buffer
+        self.state, feats = update_batch(self.state, s_t)
+        self.update_ops += 1  # one batched O(pools)-element / O(1)-op update
+
+        # Commit the row before predicting: a failing predictor then leaves
+        # state and table in sync (predictions just stay None), so a caller
+        # that catches the error and moves on never double-applies this S_t.
+        self.table.append_cycle(cycle, time, s_t, feats, None)
+
+        preds = None
+        if self.predict_fn is not None:
+            if self.sequence_length is None:
+                x = feats
+            elif self.table.count >= self.sequence_length:
+                x = self.table.trailing(self.sequence_length)
+            else:
+                x = None  # sequence history still filling
+            if x is not None:
+                preds = np.asarray(self.predict_fn(x), dtype=np.float64)
+                self.predict_calls += 1
+                if preds.shape != (len(self.pool_ids),):
+                    raise ValueError(
+                        f"predict_fn returned shape {preds.shape}, "
+                        f"expected ({len(self.pool_ids)},)"
+                    )
+                self.table.predictions[:, self.table.head] = preds
+        return FleetCycleResult(
+            cycle=cycle, time=time, s_t=s_t, features=feats, predictions=preds
+        )
+
+    def feature_matrix(self, pool_id: Union[str, int]) -> np.ndarray:
+        """(rows, 3) in-window features for one pool, oldest first."""
+        idx = pool_id if isinstance(pool_id, int) else self.pool_index[pool_id]
+        return self.table.feature_matrix(idx)

@@ -16,11 +16,24 @@ name            class                        input
 
 ``fit_predictor`` trains on a :class:`~repro.core.dataset.Dataset`;
 ``evaluate`` reports F1-macro and per-class scores.
+
+For the Data Pipeline's online serving path two adapters wrap a fitted
+model into the pipeline's calling conventions:
+
+* :func:`pointwise_predict_fn` — one feature vector -> one score, for the
+  per-pool :class:`~repro.core.pipeline.FeatureProcessor` loop;
+* :func:`batched_predict_fn` — one ``(pools, features)`` matrix -> one
+  ``(pools,)`` score vector in a single ``predict_proba`` call, for
+  :class:`~repro.core.pipeline.FleetFeatureProcessor` (every point-wise
+  model's ``predict_proba`` is natively batched — lr/svm/mlp are one
+  jitted matmul, rf/xgb route the whole batch through the tree ensemble
+  at once); sequence models get the fleet's trailing-window tensor
+  ``(pools, L, features)`` instead.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 
@@ -38,6 +51,8 @@ __all__ = [
     "make_model",
     "fit_predictor",
     "evaluate",
+    "pointwise_predict_fn",
+    "batched_predict_fn",
 ]
 
 MODEL_REGISTRY = {
@@ -73,9 +88,53 @@ def fit_predictor(name: str, dataset: Dataset, **hparams):
     return model.fit(x, dataset.y_train)
 
 
+def _is_sequence_model(model) -> bool:
+    return isinstance(model, (LSTM, TransformerClassifier))
+
+
+def pointwise_predict_fn(model) -> Callable[[np.ndarray], float]:
+    """Adapt a fitted point-wise model to ``FeatureProcessor``'s per-pool
+    ``PredictFn`` (one (features,) vector -> one probability)."""
+    if _is_sequence_model(model):
+        raise ValueError(
+            "sequence models need trailing windows; FeatureProcessor's "
+            "per-point PredictFn cannot feed them"
+        )
+
+    def fn(feats: np.ndarray) -> float:
+        x = np.asarray(feats, np.float32)[None, :]
+        return float(np.asarray(model.predict_proba(x)).reshape(1)[0])
+
+    return fn
+
+
+def batched_predict_fn(model) -> Callable[[np.ndarray], np.ndarray]:
+    """Adapt a fitted model to ``FleetFeatureProcessor``'s ``BatchPredictFn``
+    — ONE vectorised ``predict_proba`` call per cycle for the whole fleet.
+
+    Point-wise models receive the cycle's ``(pools, features)`` matrix;
+    sequence models the trailing-window tensor ``(pools, L, features)``
+    (attach via ``FleetFeatureProcessor(..., sequence_length=L)``, which
+    feeds ``FleetWindowTable.trailing`` once L cycles of history exist).
+    Scores agree with the per-pool adapter to float32 round-off.
+    """
+
+    def fn(x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        expected_ndim = 3 if _is_sequence_model(model) else 2
+        if x.ndim != expected_ndim:
+            raise ValueError(
+                f"{type(model).__name__} expects a {expected_ndim}-D batch, "
+                f"got shape {x.shape}"
+            )
+        return np.asarray(model.predict_proba(x)).reshape(len(x))
+
+    return fn
+
+
 def evaluate(model, dataset: Dataset) -> Dict[str, float]:
     """F1-macro & friends on the dataset's test split."""
-    wants_seq = isinstance(model, (LSTM, TransformerClassifier))
+    wants_seq = _is_sequence_model(model)
     has_seq = dataset.x_test.ndim == 3
     x = dataset.x_test if wants_seq or not has_seq else dataset.x_test[:, -1, :]
     y_pred = model.predict(x)

@@ -1,21 +1,45 @@
-"""Batched SnS feature-replay Pallas kernel (Algorithm 1 at fleet scale).
+"""Batched SnS feature Pallas kernels (Algorithm 1 at fleet scale).
 
 The paper's Data Pipeline updates SR/UR/CUT per pool in O(1); at
-SpotLake-class collection scale (instance types × regions × AZs ≈ 10⁴
-pools) the natural TPU formulation is a *batched replay*: one fused kernel
-recomputes all three features for a (pool-block × T) tile entirely in
-VMEM — one HBM read of the success counts, one write per feature, no
-intermediate cumulative arrays in HBM.
+SpotLake-class collection scale (instance types × regions × AZs ≈ 10⁴–10⁶
+pools) the natural TPU formulation is a *batched replay*.  Two kernels
+share the same math:
 
-Per pool-block tile:
+* :func:`sns_features` — full-trace replay: one fused kernel recomputes
+  all three features for a (pool-block × T) tile entirely in VMEM — one
+  HBM read of the success counts, one write per feature, no intermediate
+  cumulative arrays in HBM.  Requires the whole trace resident per tile,
+  so T is bounded by VMEM.
+* :func:`sns_features_stream` — **chunked streaming replay**: the grid's
+  innermost axis walks ``chunk``-cycle time slabs sequentially while the
+  carry state lives in VMEM scratch, so arbitrarily long traces are
+  processed in (block_p × chunk) tiles.  The carry per pool block is
+  exactly Algorithm 1's constant-memory state:
+
+  - ``tail``  (block_p, w) — the last ``w`` values of the cumulative
+    unfulfilled array ``P`` (``P[t0-w+1 .. t0]``; entries for t ≤ 0 stay
+    0 ≡ P[0], which makes the paper's partial-window case fall out for
+    free), giving both ``P[t]`` (its last column) and the lagged
+    ``P[t-w]`` lookups for the next chunk;
+  - ``lf``    (block_p, 1) — the global index of the last fully-fulfilled
+    cycle (the associative-scan rewrite of the CUT reset counter).
+
+Per tile:
 * ``SR`` — elementwise scale;
-* ``UR`` — prefix-sum of unfulfilled counts along T, then a shifted
-  difference (the paper's cumulative-array trick, vectorised);
-* ``CUT`` — running max of the last fully-fulfilled index (a `cummax`
-  replaces the sequential reset-counter recurrence, an associative-scan
-  rewrite of Algorithm 1 lines 10-14).
+* ``UR`` — carry-seeded prefix-sum of unfulfilled counts along the chunk,
+  then a lagged difference against the (tail ++ chunk) buffer;
+* ``CUT`` — running max of the last fully-fulfilled index, seeded with the
+  carry (a ``cummax`` replaces the sequential reset-counter recurrence).
 
-grid = (pools / block_p,);  block = (block_p, T) in VMEM.
+All ``P`` arithmetic is int32, so chunked and full-trace paths are
+bit-identical to each other and to the float64 numpy replay
+(``repro.core.features.compute_features``) wherever the final f32
+divisions are exact or correctly rounded — in practice for any
+``T·N < 2²⁴``.
+
+full:   grid = (pools / block_p,);           block = (block_p, T)
+stream: grid = (pools / block_p, T / chunk); block = (block_p, chunk)
+        [chunk axis innermost/sequential; scratch persists across chunks]
 """
 
 from __future__ import annotations
@@ -25,6 +49,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _features_kernel(s_ref, sr_ref, ur_ref, cut_ref, *, n: int, w: int, dt: float):
@@ -58,7 +83,8 @@ def sns_features(
 ):
     pools, t_max = s.shape
     block_p = min(block_p, pools)
-    assert pools % block_p == 0
+    if pools % block_p:
+        raise ValueError(f"pools={pools} not divisible by block_p={block_p}")
     grid = (pools // block_p,)
 
     kernel = functools.partial(_features_kernel, n=n, w=w, dt=dt)
@@ -69,6 +95,92 @@ def sns_features(
         in_specs=[pl.BlockSpec((block_p, t_max), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((block_p, t_max), lambda i: (i, 0))] * 3,
         out_shape=[out_shape] * 3,
+        interpret=interpret,
+    )(s)
+    return jnp.stack([sr, ur, cut], axis=-1)
+
+
+def _stream_kernel(
+    s_ref, sr_ref, ur_ref, cut_ref,
+    tail_scr, lf_scr,
+    *,
+    n: int,
+    w: int,
+    dt: float,
+    chunk: int,
+):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        tail_scr[...] = jnp.zeros_like(tail_scr)   # P[t] = 0 for t <= 0
+        lf_scr[...] = jnp.full_like(lf_scr, -1)    # no full cycle seen yet
+
+    s = s_ref[...]                                 # (bp, C) int32
+    bp, c = s.shape
+    g0 = ic * chunk                                # 0-based global index offset
+
+    sr_ref[...] = s.astype(jnp.float32) / n
+
+    tail = tail_scr[...]                           # (bp, w): P[t0-w+1 .. t0]
+    p = tail[:, -1:] + jnp.cumsum(n - s, axis=1)   # (bp, C): P[t0+1 .. t0+C]
+    buf = jnp.concatenate([tail, p], axis=1)       # (bp, w+C): P[t0-w+1 .. t0+C]
+    lagged = buf[:, :c]                            # P[t-w]  (0 ≡ P[0] while t <= w)
+    t_idx = g0 + jax.lax.broadcasted_iota(jnp.int32, (bp, c), 1) + 1
+    wlen = jnp.where(t_idx >= w, w, t_idx).astype(jnp.float32)
+    ur_ref[...] = (p - lagged).astype(jnp.float32) / (wlen * n)
+
+    g = t_idx - 1
+    full = (s == n) | (g == 0)
+    lf = jnp.maximum(jax.lax.cummax(jnp.where(full, g, -1), axis=1), lf_scr[...])
+    cut_ref[...] = (g - lf).astype(jnp.float32) * dt
+
+    tail_scr[...] = buf[:, c:]                     # last w columns
+    lf_scr[...] = lf[:, -1:]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "w", "dt", "block_p", "chunk", "interpret")
+)
+def sns_features_stream(
+    s: jnp.ndarray,        # (pools, T) int32
+    *,
+    n: int,
+    w: int,
+    dt: float,
+    block_p: int = 8,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Chunked streaming replay; bit-identical to :func:`sns_features`.
+
+    Requires ``pools % block_p == 0`` and ``T % chunk == 0`` — use
+    ``ops.sns_features_stream_op`` for the padded general-shape wrapper.
+    """
+    pools, t_max = s.shape
+    block_p = min(block_p, pools)
+    chunk = min(chunk, t_max)
+    if pools % block_p or t_max % chunk:
+        # a bare assert would vanish under -O and leave grid-uncovered
+        # output rows silently uninitialized
+        raise ValueError(
+            f"pools={pools} / T={t_max} not divisible by block_p={block_p} / "
+            f"chunk={chunk}; use ops.sns_features_stream_op for padding"
+        )
+    grid = (pools // block_p, t_max // chunk)
+
+    kernel = functools.partial(_stream_kernel, n=n, w=w, dt=dt, chunk=chunk)
+    out_shape = jax.ShapeDtypeStruct((pools, t_max), jnp.float32)
+    sr, ur, cut = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_p, chunk), lambda i, ic: (i, ic))],
+        out_specs=[pl.BlockSpec((block_p, chunk), lambda i, ic: (i, ic))] * 3,
+        out_shape=[out_shape] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((block_p, w), jnp.int32),
+            pltpu.VMEM((block_p, 1), jnp.int32),
+        ],
         interpret=interpret,
     )(s)
     return jnp.stack([sr, ur, cut], axis=-1)

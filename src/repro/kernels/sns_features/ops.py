@@ -1,13 +1,28 @@
-"""Public entry point for the SnS feature kernel (auto-interpret off-TPU)."""
+"""Public entry points for the SnS feature kernels.
+
+* :func:`sns_features_op` — full-trace replay (whole T resident per tile).
+* :func:`sns_features_stream_op` — chunked streaming replay for
+  arbitrarily long traces and arbitrary shapes: pads ``T`` up to a
+  multiple of ``chunk`` (with fully-fulfilled cycles — causally inert)
+  and ``pools`` up to a multiple of ``block_p``, runs the carry-state
+  path, and slices back.  Backend selection:
+
+  - ``"pallas"`` — the Pallas kernel (interpret mode off-TPU);
+  - ``"jnp"``    — the pure-jnp ``lax.scan`` carry fallback (bit-identical
+    to the kernel; the fast path on CPU, where Pallas interpret mode
+    costs a Python roundtrip per grid step);
+  - ``"auto"``   — Pallas on TPU, jnp scan elsewhere.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import sns_features
+from .kernel import sns_features, sns_features_stream
+from .ref import sns_features_stream_ref
 
-__all__ = ["sns_features_op"]
+__all__ = ["sns_features_op", "sns_features_stream_op"]
 
 
 def sns_features_op(s, *, n: int, window_minutes: float, dt_minutes: float,
@@ -18,3 +33,48 @@ def sns_features_op(s, *, n: int, window_minutes: float, dt_minutes: float,
         jnp.asarray(s, jnp.int32), n=n, w=w, dt=dt_minutes,
         block_p=block_p, interpret=interpret,
     )
+
+
+def sns_features_stream_op(
+    s,
+    *,
+    n: int,
+    window_minutes: float,
+    dt_minutes: float,
+    block_p: int = 8,
+    chunk: int = 128,
+    backend: str = "auto",
+):
+    w = int(round(window_minutes / dt_minutes))
+    s = jnp.asarray(s, jnp.int32)
+    pools, t_max = s.shape
+
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    chunk = min(chunk, t_max)
+    pad_t = (-t_max) % chunk
+    if pad_t:
+        # fully-fulfilled padding cycles never influence earlier outputs
+        # (every per-cycle feature is causal in S)
+        s = jnp.concatenate(
+            [s, jnp.full((pools, pad_t), n, jnp.int32)], axis=1
+        )
+
+    if backend == "jnp":
+        out = sns_features_stream_ref(s, n, w, dt_minutes, chunk=chunk)
+        return out[:, :t_max]
+
+    block_p = min(block_p, pools)
+    pad_p = (-pools) % block_p
+    if pad_p:
+        s = jnp.concatenate(
+            [s, jnp.full((pad_p, s.shape[1]), n, jnp.int32)], axis=0
+        )
+    out = sns_features_stream(
+        s, n=n, w=w, dt=dt_minutes, block_p=block_p, chunk=chunk,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[:pools, :t_max]

@@ -1,6 +1,21 @@
-"""Pure-jnp oracle for the batched SnS feature kernel (Algorithm 1)."""
+"""Pure-jnp oracles for the batched SnS feature kernels (Algorithm 1).
+
+Two forms, mirroring the two kernels in ``kernel.py``:
+
+* :func:`sns_features_ref` — whole-trace vectorised replay (the shape
+  oracle for the full-trace kernel);
+* :func:`sns_features_stream_ref` — a ``lax.scan`` over ``chunk``-cycle
+  slabs carrying exactly the streaming kernel's state (the ``P`` tail
+  ring and the last-fully-fulfilled index).  This is also the production
+  CPU fallback for fleet-scale traces: it XLA-compiles to a tight scan
+  with O(pools · w) live state instead of materialising whole-trace
+  intermediates, and is bit-identical to the chunked Pallas kernel
+  (identical int32 / f32 operations).
+"""
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -37,3 +52,58 @@ def sns_features_ref(
     cut = (idx[None, :] - last_full).astype(jnp.float32) * dt
 
     return jnp.stack([sr, ur, cut], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "w", "dt", "chunk"))
+def sns_features_stream_ref(
+    s: jnp.ndarray,       # (pools, T) int32 success counts
+    n: int,
+    w: int,
+    dt: float,
+    chunk: int = 128,
+):
+    """Carry-scan replay of Algorithm 1 in ``chunk``-cycle slabs.
+
+    Returns (pools, T, 3) f32; requires ``T % chunk == 0`` (the ops
+    wrapper pads).  Carry = (``tail`` (pools, w) int32 — last w values of
+    the cumulative unfulfilled array P, zeros standing in for P[t ≤ 0];
+    ``lf`` (pools,) int32 — last fully-fulfilled 0-based cycle index).
+    """
+    pools, t_max = s.shape
+    chunk = min(chunk, t_max)
+    assert t_max % chunk == 0, f"T={t_max} not a multiple of chunk={chunk}"
+    n_chunks = t_max // chunk
+    s = s.astype(jnp.int32)
+    s_chunks = s.reshape(pools, n_chunks, chunk).transpose(1, 0, 2)
+    g0s = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+
+    local_iota = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+
+    def step(carry, xs):
+        tail, lf_prev = carry
+        s_c, g0 = xs
+        sr = s_c.astype(jnp.float32) / n
+
+        p = tail[:, -1:] + jnp.cumsum(n - s_c, axis=1)
+        buf = jnp.concatenate([tail, p], axis=1)
+        lagged = buf[:, :chunk]
+        t_idx = g0 + local_iota + 1
+        wlen = jnp.where(t_idx >= w, w, t_idx).astype(jnp.float32)
+        ur = (p - lagged).astype(jnp.float32) / (wlen * n)
+
+        g = t_idx - 1
+        full = (s_c == n) | (g == 0)
+        lf = jnp.maximum(
+            jax.lax.cummax(jnp.where(full, g, -1), axis=1), lf_prev[:, None]
+        )
+        cut = (g - lf).astype(jnp.float32) * dt
+
+        out = jnp.stack([sr, ur, cut], axis=-1)
+        return (buf[:, chunk:], lf[:, -1]), out
+
+    init = (
+        jnp.zeros((pools, w), jnp.int32),
+        jnp.full((pools,), -1, jnp.int32),
+    )
+    _, outs = jax.lax.scan(step, init, (s_chunks, g0s))   # (nc, pools, C, 3)
+    return outs.transpose(1, 0, 2, 3).reshape(pools, t_max, 3)

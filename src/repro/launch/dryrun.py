@@ -34,7 +34,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import REGISTRY, SHAPES, get_config, shape_applicability
-from repro.launch.mesh import data_axes_of, make_production_mesh, mesh_axis_sizes
+from repro.launch.mesh import (
+    data_axes_of, make_production_mesh, mesh_axis_sizes, use_mesh,
+)
 from repro.launch.roofline import HW, analyze_hlo, roofline_report
 from repro.models import api
 from repro.models.common import ModelConfig
@@ -158,7 +160,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, hlo_dir=None,
     h_loc = cfg.n_heads // tp if heads_sharded else cfg.n_heads
     result["tuning"] = {"moments_dtype": moments, "heads_sharded": heads_sharded}
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             # memory-aware accumulation: grow grad_accum only until one
             # microbatch's per-device activations fit ~1 GiB (per-micro
@@ -259,6 +261,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, hlo_dir=None,
             ),
         }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict], one per device set
+        ca = ca[0] if ca else {}
     result["xla_cost"] = {
         "flops": ca.get("flops", 0.0),
         "bytes_accessed": ca.get("bytes accessed", 0.0),

@@ -1,27 +1,65 @@
-"""Production mesh construction.
+"""Production mesh construction + JAX version-compat helpers.
 
 A FUNCTION, not a module-level constant — importing this module never
 touches jax device state (required so tests/benches keep seeing the single
 real CPU device; only the dry-run subprocess sets the 512-placeholder-
 device XLA flag before first jax init).
+
+``make_explicit_mesh`` / ``use_mesh`` paper over the mesh-API churn across
+JAX releases: ``jax.sharding.AxisType`` and ``jax.set_mesh`` only exist in
+newer versions, while older ones spell the same things as a plain
+``jax.make_mesh`` plus the ``Mesh`` context manager.  All repo code (and
+the subprocess snippets in ``tests/test_distribution.py``) goes through
+these two helpers instead of the raw APIs.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "data_axes_of", "mesh_axis_sizes"]
+__all__ = [
+    "make_explicit_mesh",
+    "use_mesh",
+    "make_production_mesh",
+    "data_axes_of",
+    "mesh_axis_sizes",
+]
+
+
+def make_explicit_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them.
+
+    Newer JAX requires ``axis_types`` to opt out of explicit-sharding mode;
+    older JAX (no ``jax.sharding.AxisType``) has exactly that behaviour by
+    default and rejects the keyword.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axis_names, axis_types=(axis_type.Auto,) * len(axis_names)
+        )
+    return jax.make_mesh(shape, axis_names)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` when it exists,
+    else ``jax.sharding.use_mesh``, else the legacy ``Mesh`` context."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    sharding_use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if sharding_use_mesh is not None:
+        return sharding_use_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod mesh, or 2×16×16 across two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_explicit_mesh(shape, axes)
 
 
 def data_axes_of(mesh) -> Tuple[str, ...]:

@@ -28,6 +28,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer JAX exposes it at the top level with a ``check_vma`` flag; older
+    releases only have ``jax.experimental.shard_map.shard_map`` where the
+    same knob is spelled ``check_rep``.
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped axis (``jax.lax.axis_size`` across versions;
+    older JAX exposes it as ``jax.core.axis_frame``)."""
+    native = getattr(jax.lax, "axis_size", None)
+    if native is not None:
+        return native(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return getattr(frame, "size", frame)
+
 __all__ = [
     "ModelConfig",
     "rms_norm",

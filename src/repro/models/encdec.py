@@ -25,6 +25,7 @@ from .common import (
     apply_norm,
     init_dense,
     make_norm_params,
+    shard_map,
     sincos_positions,
 )
 
@@ -276,7 +277,7 @@ def decode_step(
                     q_, kc_, vc_, kn_, vn_, new_len, model_axis="model"
                 )
 
-            out, k_c, v_c = jax.shard_map(
+            out, k_c, v_c = shard_map(
                 body, mesh=mesh,
                 in_specs=(
                     P(data_axes, None, None),

@@ -32,7 +32,10 @@ from . import mamba as mamba_mod
 from . import mlp as mlp_mod
 from . import moe as moe_mod
 from .blocks import init_layer, layer_forward, layer_kinds
-from .common import GLOBAL_WINDOW, ModelConfig, apply_norm, init_dense, make_norm_params
+from .common import (
+    GLOBAL_WINDOW, ModelConfig, apply_norm, init_dense, make_norm_params,
+    shard_map,
+)
 
 __all__ = [
     "block_pattern",
@@ -402,7 +405,7 @@ def decode_step(
                     window=window, model_axis="model",
                 )
 
-            out, k_c, v_c = jax.shard_map(
+            out, k_c, v_c = shard_map(
                 body, mesh=mesh,
                 in_specs=(
                     P(data_axes, None, None),

@@ -31,7 +31,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .common import ModelConfig, init_dense
+from .common import ModelConfig, axis_size, init_dense, shard_map
 
 __all__ = ["init_moe", "moe_ffn", "local_moe_ffn"]
 
@@ -65,7 +65,7 @@ def local_moe_ffn(
     both axis names are None for single-device tests)."""
     t, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
-    n_ranks = jax.lax.axis_size(model_axis) if model_axis else 1
+    n_ranks = axis_size(model_axis) if model_axis else 1
     assert e % n_ranks == 0, f"{e} experts not divisible over {n_ranks} ranks"
     e_local = e // n_ranks
     cap = _capacity(t, e, k, cfg.capacity_factor)
@@ -74,7 +74,7 @@ def local_moe_ffn(
     fsdp_size = 1
     if fsdp_axes:
         for a in fsdp_axes:
-            fsdp_size *= jax.lax.axis_size(a)
+            fsdp_size *= axis_size(a)
     if fsdp_size > 1:
         # ZeRO-3: re-assemble this layer's local experts from FSDP shards
         w_gate = jax.lax.all_gather(w_gate, fsdp_axes, axis=2, tiled=True)
@@ -170,7 +170,7 @@ def moe_ffn(
         )
         return y.reshape(bl, sl, dl)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
         check_vma=False,
     )(x, p)

@@ -1,0 +1,152 @@
+"""Minimal in-repo stand-in for `hypothesis` (property-based testing).
+
+The real `hypothesis` package is the declared test dependency
+(``requirements-dev.txt``); this shim exists so the tier-1 suite still
+*collects and runs* in hermetic environments where it cannot be installed.
+Importing this module (done by ``tests/conftest.py`` only when the real
+package is absent) registers ``hypothesis`` and ``hypothesis.strategies``
+modules in ``sys.modules`` backed by a tiny deterministic random-sampling
+engine:
+
+* ``@given(**strategies)`` draws ``max_examples`` pseudo-random examples
+  (seeded per test function, so runs are reproducible) and calls the test
+  once per example;
+* ``@settings(...)`` records ``max_examples`` (other knobs are accepted and
+  ignored — there is no shrinking, database, or deadline enforcement);
+* strategies cover what this repo uses: ``integers``, ``floats``,
+  ``booleans``, ``just``, ``sampled_from``, ``lists``, ``tuples``.
+
+Failures report the drawn example in the assertion chain but are NOT
+shrunk — install real hypothesis for minimal counterexamples.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 30
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self.draw(rng)))
+
+    def filter(self, pred, _tries: int = 1000):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict for shim strategy")
+        return _Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(size)]
+    return _Strategy(draw)
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def settings(**kw):
+    """Decorator recording settings for ``given``.
+
+    Works in either decorator order (real hypothesis accepts both):
+    the settings dict is merged onto whatever it decorates — the raw
+    test function (``@given`` above ``@settings``) or the already-built
+    given-wrapper (``@settings`` above ``@given``), which reads it at
+    call time.
+    """
+    def deco(fn):
+        fn._shim_settings = {**getattr(fn, "_shim_settings", {}), **kw}
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):  # *args carries `self` for methods
+            n_examples = getattr(wrapper, "_shim_settings", {}).get(
+                "max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            rng = random.Random(seed)
+            for i in range(n_examples):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"shim-hypothesis falsified {fn.__qualname__} on "
+                        f"example {i}: {drawn!r}"
+                    ) from e
+
+        # Hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper supplies them, so they must not look like fixture requests.
+        del wrapper.__wrapped__
+        wrapper._shim_settings = getattr(fn, "_shim_settings", {})
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs
+        ])
+        return wrapper
+    return deco
+
+
+def _install():
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "lists", "tuples"):
+        setattr(st, name, globals()[name])
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install()

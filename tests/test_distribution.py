@@ -36,6 +36,7 @@ class TestShardedNumerics:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
+        from repro.launch.mesh import make_explicit_mesh, use_mesh
         from repro.models import api
 
         cfg = get_config("phi3.5-moe-42b-a6.6b").scaled_down(capacity_factor=4.0)
@@ -46,9 +47,8 @@ class TestShardedNumerics:
 
         loss_ref = api.train_loss(cfg, params, batch, remat="none")
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_explicit_mesh((2, 2), ("data", "model"))
+        with use_mesh(mesh):
             loss_sh = jax.jit(
                 lambda p, b: api.train_loss(cfg, p, b, mesh=mesh,
                                             data_axes=("data",), remat="none")
@@ -59,7 +59,7 @@ class TestShardedNumerics:
         lg_ref, cache_ref = api.prefill(cfg, params, {"tokens": toks}, max_seq=20)
         lg1_ref, _ = api.decode_step(cfg, params, cache_ref,
                                      jnp.argmax(lg_ref, -1).astype(jnp.int32))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lg_sh, cache_sh = jax.jit(
                 lambda p, t: api.prefill(cfg, p, {"tokens": t}, mesh=mesh,
                                          data_axes=("data",), max_seq=20)
@@ -84,6 +84,7 @@ class TestShardedNumerics:
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
+        from repro.launch.mesh import make_explicit_mesh, use_mesh
         from repro.models import api
 
         # 3 heads % 2 != 0 -> the seq-parallel path engages on a (2,2) mesh
@@ -96,9 +97,8 @@ class TestShardedNumerics:
         loss_ref = api.train_loss(cfg, params, batch, remat="none")
 
         cfg_sp = dataclasses.replace(cfg, seq_parallel_attn=True)
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_explicit_mesh((2, 2), ("data", "model"))
+        with use_mesh(mesh):
             loss_sp = jax.jit(
                 lambda p, b: api.train_loss(cfg_sp, p, b, mesh=mesh,
                                             data_axes=("data",), remat="none")
@@ -155,10 +155,10 @@ class TestRooflineParser:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.mesh import make_explicit_mesh, use_mesh
         from repro.launch.roofline import analyze_hlo
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_explicit_mesh((2, 4), ("data", "model"))
         D, L, B = 128, 8, 32
 
         def f(ws, x):
@@ -168,7 +168,7 @@ class TestRooflineParser:
                     h, NamedSharding(mesh, P("data", "model"))), None
             return jax.lax.scan(body, x, ws)[0].sum()
 
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             comp = jax.jit(f).lower(
                 jax.ShapeDtypeStruct((L, D, D), jnp.float32),
                 jax.ShapeDtypeStruct((B, D), jnp.float32),

@@ -5,7 +5,13 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.features import compute_features, init_state, update
+from repro.core.features import (
+    compute_features,
+    init_fleet_state,
+    init_state,
+    update,
+    update_batch,
+)
 
 
 def stream(s_seq, n, window, dt):
@@ -104,3 +110,57 @@ class TestProperties:
         for t in range(w - 1, len(arr)):
             expected = fail[t - w + 1 : t + 1].mean()
             np.testing.assert_allclose(out[t, 1], expected, atol=1e-12)
+
+
+class TestFleetBatchUpdate:
+    """update_batch ≡ per-pool scalar update — bit-identical, cycle by cycle."""
+
+    @given(
+        pools=st.integers(1, 9),
+        t_max=st.integers(1, 80),
+        w_cycles=st.integers(1, 20),
+        n=st.integers(1, 12),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_bit_identical_to_scalar_update(self, pools, t_max, w_cycles, n):
+        rng = np.random.default_rng(pools * 1000 + t_max)
+        s = rng.integers(0, n + 1, size=(pools, t_max))
+        dt = 3.0
+        fleet = init_fleet_state(pools, n, w_cycles * dt, dt)
+        scalar = [init_state(n, w_cycles * dt, dt) for _ in range(pools)]
+        for t in range(t_max):
+            fleet, batch_rows = update_batch(fleet, s[:, t])
+            for p in range(pools):
+                scalar[p], row = update(scalar[p], int(s[p, t]))
+                assert batch_rows[p].tolist() == list(row)
+
+    @given(
+        pools=st.integers(1, 8),
+        t_max=st.integers(1, 60),
+        w_cycles=st.integers(1, 15),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_matches_batch_replay(self, pools, t_max, w_cycles):
+        n, dt = 10, 3.0
+        rng = np.random.default_rng(pools + 31 * t_max)
+        s = rng.integers(0, n + 1, size=(pools, t_max))
+        state = init_fleet_state(pools, n, w_cycles * dt, dt)
+        streamed = np.empty((pools, t_max, 3))
+        for t in range(t_max):
+            state, streamed[:, t] = update_batch(state, s[:, t])
+        replay = compute_features(s, n, w_cycles * dt, dt)
+        np.testing.assert_array_equal(streamed, replay)
+
+    def test_rejects_bad_shape_and_range(self):
+        state = init_fleet_state(3, 10, 30, 3)
+        with pytest.raises(ValueError):
+            update_batch(state, np.array([1, 2]))          # wrong fleet size
+        with pytest.raises(ValueError):
+            update_batch(state, np.array([1, 2, 11]))      # S_t > N
+        with pytest.raises(ValueError):
+            update_batch(state, np.array([1, -1, 3]))      # S_t < 0
+        with pytest.raises(ValueError):
+            update_batch(state, np.array([1.0, np.nan, 3.0]))  # collector gap
+        with pytest.raises(ValueError):
+            init_fleet_state(0, 10, 30, 3)                 # empty fleet
+        assert state.t == 0  # rejected cycles never touch the state

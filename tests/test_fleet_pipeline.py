@@ -1,0 +1,232 @@
+"""Fleet-vectorised Data Pipeline (§V at SpotLake scale).
+
+FleetFeatureProcessor must be an observationally-equivalent drop-in for
+the per-pool FeatureProcessor loop — same features bit-for-bit, same
+predictions to float32 round-off — while doing O(1) interpreter work and
+exactly one batched predictor call per cycle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FeatureProcessor,
+    FleetFeatureProcessor,
+    batched_predict_fn,
+    compute_features,
+    make_model,
+    pointwise_predict_fn,
+)
+
+RNG = np.random.default_rng(7)
+
+N_REQ = 10
+POOLS = 6
+CYCLES = 40
+
+#: small hyperparameters — these tests check plumbing, not model quality
+POINT_MODELS = {
+    "lr": dict(steps=40),
+    "svm": dict(steps=40),
+    "mlp": dict(steps=40, hidden=8),
+    "rf": dict(n_rounds=5, depth=3, n_bins=16),
+    "xgb": dict(n_rounds=5, depth=3, n_bins=16),
+}
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return RNG.integers(0, N_REQ + 1, size=(POOLS, CYCLES))
+
+
+@pytest.fixture(scope="module")
+def fitted_models():
+    x = RNG.normal(size=(256, 3)).astype(np.float32)
+    y = (x[:, 0] + 0.3 * RNG.normal(size=256) > 0).astype(np.int64)
+    return {
+        name: make_model(name, **hp).fit(x, y)
+        for name, hp in POINT_MODELS.items()
+    }
+
+
+def run_both(traces, *, window_minutes=30.0, dt=3.0, point_fn=None, batch_fn=None):
+    pools, cycles = traces.shape
+    ids = [f"p{i}" for i in range(pools)]
+    ref = FeatureProcessor(
+        ids, n_requests=N_REQ, window_minutes=window_minutes, dt_minutes=dt,
+        predict_fn=point_fn,
+    )
+    fleet = FleetFeatureProcessor(
+        ids, n_requests=N_REQ, window_minutes=window_minutes, dt_minutes=dt,
+        predict_fn=batch_fn,
+    )
+    ref_feats = np.empty((pools, cycles, 3))
+    ref_preds = np.full((pools, cycles), np.nan)
+    fleet_feats = np.empty_like(ref_feats)
+    fleet_preds = np.full_like(ref_preds, np.nan)
+    for t in range(cycles):
+        rows = ref.on_cycle(t, t * dt * 60.0, traces[:, t])
+        res = fleet.on_cycle(t, t * dt * 60.0, traces[:, t])
+        for i, pid in enumerate(ids):
+            ref_feats[i, t] = rows[pid].features
+            if rows[pid].prediction is not None:
+                ref_preds[i, t] = rows[pid].prediction
+        fleet_feats[:, t] = res.features
+        if res.predictions is not None:
+            fleet_preds[:, t] = res.predictions
+    return ref, fleet, (ref_feats, ref_preds), (fleet_feats, fleet_preds)
+
+
+class TestFeatureParity:
+    def test_features_bit_identical_and_match_replay(self, traces):
+        _, _, (ref_feats, _), (fleet_feats, _) = run_both(traces)
+        np.testing.assert_array_equal(fleet_feats, ref_feats)
+        replay = compute_features(traces, N_REQ, 30.0, 3.0)
+        np.testing.assert_array_equal(fleet_feats, replay)
+
+    def test_window_table_contents_match(self, traces):
+        ref, fleet, _, _ = run_both(traces)
+        for i, pid in enumerate(ref.pool_ids):
+            np.testing.assert_array_equal(
+                fleet.feature_matrix(pid), ref.feature_matrix(pid)
+            )
+            assert fleet.feature_matrix(i).shape[0] == fleet.window_cycles
+
+    def test_window_bounded_and_archive_counts(self, traces):
+        _, fleet, _, _ = run_both(traces)
+        w = fleet.window_cycles
+        assert fleet.table.count == w
+        assert fleet.table.archived == POOLS * (CYCLES - w)
+        latest = fleet.table.latest()
+        assert latest.cycle == CYCLES - 1
+        np.testing.assert_array_equal(latest.s_t, traces[:, -1])
+
+
+class TestBatchedPrediction:
+    @pytest.mark.parametrize("name", sorted(POINT_MODELS))
+    def test_fleet_agrees_with_per_pool_loop(self, traces, fitted_models, name):
+        """One batched predict per cycle ≡ the per-pool PredictFn loop."""
+        model = fitted_models[name]
+        _, fleet, (_, ref_preds), (_, fleet_preds) = run_both(
+            traces,
+            point_fn=pointwise_predict_fn(model),
+            batch_fn=batched_predict_fn(model),
+        )
+        np.testing.assert_allclose(fleet_preds, ref_preds, atol=1e-6)
+        assert fleet.predict_calls == CYCLES  # exactly one call per cycle
+
+    def test_predictions_attached_to_table(self, traces, fitted_models):
+        model = fitted_models["lr"]
+        _, fleet, _, (_, fleet_preds) = run_both(
+            traces, batch_fn=batched_predict_fn(model)
+        )
+        latest = fleet.table.latest()
+        np.testing.assert_allclose(latest.predictions, fleet_preds[:, -1])
+
+    def test_sequence_model_serving_path(self, traces):
+        """sequence_length=L feeds the trailing (pools, L, F) tensor to the
+        predictor once L cycles of history exist; None before that."""
+        from repro.core.models.lstm import LSTM
+
+        L = 4
+        x = RNG.normal(size=(64, L, 3)).astype(np.float32)
+        y = RNG.integers(0, 2, 64)
+        lstm = LSTM(hidden=4, steps=5).fit(x, y)
+        fn = batched_predict_fn(lstm)
+
+        fleet = FleetFeatureProcessor(
+            POOLS, n_requests=N_REQ, window_minutes=30, dt_minutes=3,
+            predict_fn=fn, sequence_length=L,
+        )
+        for t in range(L - 1):
+            res = fleet.on_cycle(t, t * 180.0, traces[:, t])
+            assert res.predictions is None           # history still short
+        res = fleet.on_cycle(L - 1, (L - 1) * 180.0, traces[:, L - 1])
+        assert res.predictions.shape == (POOLS,)
+        # the attached scores equal a manual call on the trailing tensor
+        np.testing.assert_allclose(
+            res.predictions, fn(fleet.table.trailing(L)), atol=1e-7
+        )
+        assert fleet.predict_calls == 1
+
+        with pytest.raises(ValueError):
+            fn(fleet.table.trailing(L)[:, -1, :])    # point batch rejected
+        with pytest.raises(ValueError):
+            pointwise_predict_fn(lstm)               # no per-point adapter
+        with pytest.raises(ValueError):
+            FleetFeatureProcessor(
+                POOLS, n_requests=N_REQ, window_minutes=30, dt_minutes=3,
+                sequence_length=11,                  # > window_cycles
+            )
+
+    def test_bad_predictor_shape_rejected(self, traces):
+        fleet = FleetFeatureProcessor(
+            POOLS, n_requests=N_REQ, window_minutes=30, dt_minutes=3,
+            predict_fn=lambda feats: np.zeros(3),    # wrong fleet size
+        )
+        with pytest.raises(ValueError):
+            fleet.on_cycle(0, 0.0, traces[:, 0])
+
+    def test_failed_predictor_keeps_state_and_table_in_sync(self, traces):
+        """A predictor failure must not leave the cycle half-applied: the
+        row is committed (predictions=None) so a catching caller never
+        re-ingests the same S_t."""
+        calls = {"n": 0}
+
+        def flaky(feats):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise RuntimeError("predictor briefly down")
+            return np.zeros(len(feats))
+
+        fleet = FleetFeatureProcessor(
+            POOLS, n_requests=N_REQ, window_minutes=30, dt_minutes=3,
+            predict_fn=flaky,
+        )
+        fleet.on_cycle(0, 0.0, traces[:, 0])
+        with pytest.raises(RuntimeError):
+            fleet.on_cycle(1, 180.0, traces[:, 1])
+        assert fleet.state.t == fleet.table.count == 2  # cycle committed
+        assert fleet.table.latest().predictions is None
+        res = fleet.on_cycle(2, 360.0, traces[:, 2])    # clean resume
+        np.testing.assert_array_equal(
+            np.stack([fleet.table.latest().features]),
+            np.stack([res.features]),
+        )
+
+    def test_latest_is_a_stable_snapshot(self, traces):
+        """latest() must not alias the ring arrays — a held result stays
+        unchanged after the window wraps (parity with WindowRow)."""
+        fleet = FleetFeatureProcessor(
+            POOLS, n_requests=N_REQ, window_minutes=9, dt_minutes=3,  # w=3
+        )
+        fleet.on_cycle(0, 0.0, traces[:, 0])
+        held = fleet.table.latest()
+        s_before = held.s_t.copy()
+        f_before = held.features.copy()
+        for t in range(1, 8):   # wrap the 3-slot ring several times
+            fleet.on_cycle(t, t * 180.0, traces[:, t])
+        np.testing.assert_array_equal(held.s_t, s_before)
+        np.testing.assert_array_equal(held.features, f_before)
+
+
+class TestConstantWorkPerCycle:
+    def test_fleet_update_work_is_constant_per_cycle(self):
+        """The fleet path's O(1) accounting: ONE batched state update and
+        at most ONE predictor call per cycle, independent of both fleet
+        size and history length (vs. pools × cycles for the loop)."""
+        for pools in (5, 50):
+            loop = FeatureProcessor(
+                [f"p{i}" for i in range(pools)],
+                n_requests=N_REQ, window_minutes=60, dt_minutes=3,
+            )
+            fleet = FleetFeatureProcessor(
+                pools, n_requests=N_REQ, window_minutes=60, dt_minutes=3,
+                predict_fn=lambda feats: np.zeros(len(feats)),
+            )
+            for t in range(100):
+                loop.on_cycle(t, t * 180.0, [N_REQ] * pools)
+                fleet.on_cycle(t, t * 180.0, [N_REQ] * pools)
+            assert loop.update_ops == pools * 100
+            assert fleet.update_ops == 100       # independent of fleet size
+            assert fleet.predict_calls == 100

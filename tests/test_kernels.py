@@ -4,14 +4,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core.features import compute_features
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.selective_scan.kernel import selective_scan
 from repro.kernels.selective_scan.ref import selective_scan_ref
-from repro.kernels.sns_features.kernel import sns_features
-from repro.kernels.sns_features.ref import sns_features_ref
+from repro.kernels.sns_features.kernel import sns_features, sns_features_stream
+from repro.kernels.sns_features.ops import sns_features_stream_op
+from repro.kernels.sns_features.ref import sns_features_ref, sns_features_stream_ref
 
 RNG = np.random.default_rng(0)
 
@@ -142,3 +145,97 @@ class TestSnSFeatures:
         o1 = sns_features(s, n=10, w=8, dt=3.0, block_p=2, interpret=True)
         o2 = sns_features(s, n=10, w=8, dt=3.0, block_p=16, interpret=True)
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+
+
+class TestSnSFeaturesStream:
+    """Chunked streaming kernel — carry state across time-chunks must be
+    invisible: bit-identical to the full-trace kernel / jnp carry-scan,
+    and equal to the float64 numpy replay of Algorithm 1."""
+
+    @pytest.mark.parametrize(
+        "pools,t,w,chunk",
+        [
+            (8, 64, 10, 16),    # w < chunk
+            (8, 128, 32, 16),   # w > chunk (tail spans multiple carries)
+            (4, 480, 160, 96),  # paper-scale window
+            (8, 96, 8, 96),     # single chunk == full trace
+            (8, 40, 50, 8),     # whole trace inside the partial window
+        ],
+    )
+    def test_stream_kernel_bit_identical_to_full(self, pools, t, w, chunk):
+        s = jnp.asarray(RNG.integers(0, 11, size=(pools, t)), jnp.int32)
+        full = sns_features(s, n=10, w=w, dt=3.0, block_p=4, interpret=True)
+        strm = sns_features_stream(
+            s, n=10, w=w, dt=3.0, block_p=4, chunk=chunk, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(strm), np.asarray(full))
+        ref = sns_features_stream_ref(s, 10, w, 3.0, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(strm), np.asarray(ref))
+
+    def test_cut_reset_exactly_at_chunk_boundary(self):
+        """A fully-fulfilled cycle landing on the first column of a chunk
+        must reset CUT through the carry, not stale state."""
+        n, w, chunk = 10, 4, 8
+        s = np.zeros((2, 32), np.int64)
+        s[0, 8] = n    # reset at a chunk boundary
+        s[1, 15] = n   # reset at the last column of a chunk
+        out = sns_features_stream_op(
+            s, n=n, window_minutes=w * 3.0, dt_minutes=3.0, chunk=chunk,
+            backend="jnp",
+        )
+        core = compute_features(s, n, w * 3.0, 3.0)
+        np.testing.assert_array_equal(np.asarray(out), core.astype(np.float32))
+        assert float(out[0, 8, 2]) == 0.0 and float(out[1, 15, 2]) == 0.0
+
+    def test_ragged_t_and_pools_padding(self):
+        """ops wrapper: T % chunk != 0 and pools % block_p != 0."""
+        s = RNG.integers(0, 11, size=(5, 101))
+        core = compute_features(s, 10, 21.0, 3.0)
+        for backend in ("jnp", "pallas"):
+            out = sns_features_stream_op(
+                s, n=10, window_minutes=21.0, dt_minutes=3.0,
+                block_p=4, chunk=16, backend=backend,
+            )
+            assert out.shape == (5, 101, 3)
+            np.testing.assert_allclose(np.asarray(out), core, atol=1e-6)
+
+    def test_bit_identical_atol0_to_compute_features(self):
+        """Acceptance: with exactly-representable params (N and window
+        power-of-two, dt = 3.0) the f32 streaming kernel equals the f64
+        numpy replay bit-for-bit after the cast — atol=0, both backends."""
+        n, w = 8, 16
+        s = RNG.integers(0, n + 1, size=(8, 200))
+        core = compute_features(s, n, w * 3.0, 3.0).astype(np.float32)
+        for backend in ("jnp", "pallas"):
+            out = sns_features_stream_op(
+                s, n=n, window_minutes=w * 3.0, dt_minutes=3.0,
+                chunk=48, backend=backend,
+            )
+            np.testing.assert_array_equal(np.asarray(out), core)
+
+    @given(
+        pools=st.integers(1, 6),
+        t_max=st.integers(1, 70),
+        w_cycles=st.integers(1, 20),
+        n=st.integers(1, 12),
+        chunk=st.integers(1, 80),
+        dt=st.sampled_from([0.5, 1.0, 3.0]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_stream_equals_algorithm1(
+        self, pools, t_max, w_cycles, n, chunk, dt
+    ):
+        """Random (n, w, dt, T, chunk_T) incl. T % chunk != 0 and t < w:
+        jnp carry-scan ≡ Pallas chunked kernel (bit-identical) ≡ float64
+        replay (f32 round-off)."""
+        rng = np.random.default_rng(pools * 7919 + t_max * 13 + chunk)
+        s = rng.integers(0, n + 1, size=(pools, t_max))
+        kw = dict(
+            n=n, window_minutes=w_cycles * dt, dt_minutes=dt, chunk=chunk,
+            block_p=4,
+        )
+        out_jnp = sns_features_stream_op(s, backend="jnp", **kw)
+        out_pl = sns_features_stream_op(s, backend="pallas", **kw)
+        np.testing.assert_array_equal(np.asarray(out_pl), np.asarray(out_jnp))
+        core = compute_features(s, n, w_cycles * dt, dt)
+        np.testing.assert_allclose(np.asarray(out_jnp), core, atol=1e-5)
