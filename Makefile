@@ -1,7 +1,7 @@
 # Tier-1 verification — identical to what CI runs.
-#   make verify   : full test suite + pipeline-throughput smoke
+#   make verify   : full test suite + pipeline/campaign-throughput smokes
 #   make test     : test suite only
-#   make bench    : full pipeline-throughput benchmark (asserts >= 50x)
+#   make bench    : full throughput benchmarks (assert >= 50x / >= 20x)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
@@ -10,9 +10,11 @@ export PYTHONPATH
 
 verify: test
 	python benchmarks/pipeline_throughput.py --smoke
+	python benchmarks/campaign_throughput.py --smoke
 
 test:
 	python -m pytest -x -q
 
 bench:
 	python benchmarks/pipeline_throughput.py
+	python benchmarks/campaign_throughput.py

@@ -16,7 +16,7 @@ from repro.core import (
     build_dataset,
     compute_features,
     fit_predictor,
-    run_strategies,
+    run_fleet_strategies,
     tpcds_profile,
 )
 
@@ -41,24 +41,26 @@ def run(horizons_min=(3, 15), n_permutations=5):
         model = fit_predictor("xgb", ds)
         test_pools = sorted(set(int(p) for p in np.unique(ds.test_pools)))
 
-        totals = {"always_run": 0.0, "sjf": 0.0, "predict_ar": 0.0}
-        idle = {"always_run": 0.0, "sjf": 0.0, "predict_ar": 0.0}
-        for pool in test_pools:
-            x = feats[pool]
-            if ds.standardizer is not None:
-                x = ds.standardizer(x)
-
-            def predictor(cycle, x=x, model=model):
-                return int(model.predict(x[cycle : cycle + 1])[0])
-
-            results = run_strategies(
-                avail[pool], durations, dt=c.interval,
-                predictor=predictor, horizon_cycles=h_cycles,
-                n_permutations=n_permutations, seed=pool,
-            )
-            for r in results:
-                totals[r.strategy] += r.lost_seconds
-                idle[r.strategy] += r.idle_seconds
+        # one model call per pool over its whole trace (the batched
+        # predictor contract), then every (pool x permutation x strategy)
+        # trace replays inside three replay_batch calls
+        predictions = np.stack(
+            [
+                model.predict(
+                    ds.standardizer(feats[pool])
+                    if ds.standardizer is not None
+                    else feats[pool]
+                )
+                for pool in test_pools
+            ]
+        )
+        per_pool = run_fleet_strategies(
+            avail[test_pools], durations, dt=c.interval,
+            predictions=predictions, horizon_cycles=h_cycles,
+            n_permutations=n_permutations, seeds=test_pools,
+        )
+        totals = {s: sum(r.lost_seconds for r in rs) for s, rs in per_pool.items()}
+        idle = {s: sum(r.idle_seconds for r in rs) for s, rs in per_pool.items()}
 
         base = totals["always_run"]
         out[f"h={h}min"] = {

@@ -14,6 +14,7 @@ import sys
 import time
 
 from . import (
+    campaign_throughput,
     fig3_cointerrupt,
     fig5_cost,
     fig6_fidelity,
@@ -46,6 +47,9 @@ BENCHES = [
      lambda r: (f"numpy={r['speedup']['vectorized_numpy']}x "
                 f"kernel={r['speedup']['kernel_replay']}x "
                 f"bit_identical={r['kernel_bit_identical_atol0']}")),
+    ("campaign_throughput", campaign_throughput.run,
+     lambda r: (f"fleet/scalar={r['speedup']}x "
+                f"parity={r['parity_identical']}")),
 ]
 
 

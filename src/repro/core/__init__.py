@@ -4,7 +4,13 @@
 # workload simulator.  Sibling subpackages (models/, train/, serve/,
 # fleet/) are the data-plane substrates that consume these signals.
 
-from .collector import CampaignResult, DataLake, SnSCollector, run_campaign
+from .collector import (
+    CampaignResult,
+    DataLake,
+    FleetCollector,
+    SnSCollector,
+    run_campaign,
+)
 from .cointerrupt import fraction_within, proximities, proximity_cdf
 from .cost import CostReport, ServerlessPricing, cost_report
 from .dataset import Dataset, build_dataset
@@ -26,6 +32,7 @@ from .pipeline import (
     FleetFeatureProcessor,
     FleetWindowTable,
     WindowTable,
+    run_campaign_pipeline,
 )
 from .predictor import (
     MODEL_REGISTRY,
@@ -43,11 +50,17 @@ from .provider import (
     SimulatedProvider,
     default_fleet,
 )
-from .simulate import SimResult, replay, run_strategies
+from .simulate import (
+    SimResult,
+    replay,
+    replay_batch,
+    run_fleet_strategies,
+    run_strategies,
+)
 from .workloads import tpcds_profile
 
 __all__ = [
-    "CampaignResult", "DataLake", "SnSCollector", "run_campaign",
+    "CampaignResult", "DataLake", "FleetCollector", "SnSCollector", "run_campaign",
     "fraction_within", "proximities", "proximity_cdf",
     "CostReport", "ServerlessPricing", "cost_report",
     "Dataset", "build_dataset",
@@ -57,10 +70,12 @@ __all__ = [
     "RequestState", "SpotRequest",
     "DataArchive", "FeatureProcessor", "WindowTable",
     "FleetCycleResult", "FleetFeatureProcessor", "FleetWindowTable",
+    "run_campaign_pipeline",
     "MODEL_REGISTRY", "SEQUENCE_MODELS", "evaluate", "fit_predictor", "make_model",
     "batched_predict_fn", "pointwise_predict_fn",
     "InterruptionEvent", "PoolConfig", "RateLimitError",
     "SimulatedProvider", "default_fleet",
-    "SimResult", "replay", "run_strategies",
+    "SimResult", "replay", "replay_batch", "run_strategies",
+    "run_fleet_strategies",
     "tpcds_profile",
 ]

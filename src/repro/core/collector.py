@@ -1,4 +1,4 @@
-"""SnS Collector — paper §V, Fig. 4 (left module).
+"""SnS Collector — paper §V, Fig. 4 (left module), at two scales.
 
 Three components, mirrored from the paper's serverless deployment as an
 in-process event-driven system with identical responsibilities:
@@ -7,32 +7,56 @@ in-process event-driven system with identical responsibilities:
   schedule (EventBridge analogue): triggers one collection cycle every
   ``interval`` seconds.
 * **ParallelSpotRequester** — submits ``N`` concurrent spot requests per
-  pool per cycle and appends one :class:`ProbeRecord` per request to the
+  pool per cycle and records one probe outcome per request in the
   :class:`DataLake`.
-* **RequestTerminator** — subscribes to provisioning lifecycle events and
-  cancels accepted requests *immediately and independently of the
-  requester* (the event-driven design in §V that keeps the provisioning
-  window, and therefore cost, minimal).  A configurable ``terminator_delay``
-  models a slow/polling terminator; with delay ≥ the provider's
-  provisioning duration, probes leak into RUNNING and start billing — the
-  failure mode the paper's design eliminates (covered by tests).
+* **RequestTerminator** — cancels accepted requests *immediately and
+  independently of the requester* (the event-driven design in §V that
+  keeps the provisioning window, and therefore cost, minimal).  A
+  configurable ``terminator_delay`` models a slow/polling terminator; with
+  delay ≥ the provider's provisioning duration, probes leak into RUNNING
+  and start billing — the failure mode the paper's design eliminates
+  (covered by tests at both engine scales).
 
-:func:`run_campaign` drives a full measurement campaign: ground-truth node
-pools (``set_node_pool``) plus probing, producing time-aligned ``S_t`` /
-``running_t`` matrices, the interruption event log, and cost accounting.
+Two engines share the protocol:
+
+* :class:`SnSCollector` — the paper-faithful scalar engine: one
+  ``submit_spot_request`` per pool per cycle, per-request
+  :class:`~repro.core.lifecycle.SpotRequest` objects, an
+  ``on_provisioning``-event terminator, and per-request
+  :class:`ProbeRecord` rows.
+* :class:`FleetCollector` — the SpotLake-scale engine: every pool probed
+  per cycle in **one** batched admission call
+  (``provider.submit_spot_requests``), outcomes written straight into
+  preallocated ``(pools, cycles)`` matrices with no per-probe Python
+  objects on the hot path; the terminator and its ``terminator_delay``
+  leak are modelled at fleet granularity (held request cohorts, cancelled
+  after the delay).
+
+Both engines ride the provider's counter-based per-pool RNG streams, so
+:func:`run_campaign(engine="fleet")` and ``engine="scalar"`` produce
+**identical** ``S_t`` / ``running_t`` matrices, interruption event logs,
+and cost accounting (the parity anchor, asserted in
+``tests/test_fleet_campaign.py`` and ``benchmarks/campaign_throughput.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from .lifecycle import RequestState, SpotRequest
 from .provider import RateLimitError, SimulatedProvider
 
-__all__ = ["ProbeRecord", "DataLake", "SnSCollector", "CampaignResult", "run_campaign"]
+__all__ = [
+    "ProbeRecord",
+    "DataLake",
+    "SnSCollector",
+    "FleetCollector",
+    "CampaignResult",
+    "run_campaign",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,29 +70,70 @@ class ProbeRecord:
 
 
 class DataLake:
-    """Append-only store of probe outcomes with per-pool aggregation."""
+    """Append-only store of probe outcomes with per-pool aggregation.
 
-    def __init__(self):
+    Outcomes are kept in columnar buffers (interned pool codes, cycles,
+    accept flags, timestamps) so aggregation is a vectorized
+    ``np.add.at`` scatter rather than an O(records) Python loop.  Per-row
+    :class:`ProbeRecord` objects are only materialized when
+    ``retain_records=True`` (the default); switch it off to cap hot-path
+    retention at fleet scale — the columnar aggregate stays exact either
+    way.
+    """
+
+    def __init__(self, *, retain_records: bool = True):
+        self.retain_records = retain_records
         self.records: List[ProbeRecord] = []
+        self._pool_code: Dict[str, int] = {}
+        self._code_name: List[str] = []
+        self._pcode: List[int] = []
+        self._cycle: List[int] = []
+        self._accepted: List[bool] = []
+        self._time: List[float] = []
+
+    def add(self, time: float, pool_id: str, accepted: bool, cycle: int) -> None:
+        """Record one probe outcome (columnar hot path)."""
+        code = self._pool_code.get(pool_id)
+        if code is None:
+            code = self._pool_code[pool_id] = len(self._code_name)
+            self._code_name.append(pool_id)
+        self._pcode.append(code)
+        self._cycle.append(cycle)
+        self._accepted.append(accepted)
+        self._time.append(time)
+        if self.retain_records:
+            self.records.append(ProbeRecord(time, pool_id, accepted, cycle))
 
     def append(self, rec: ProbeRecord) -> None:
-        self.records.append(rec)
+        self.add(rec.time, rec.pool_id, rec.accepted, rec.cycle)
 
     def __len__(self) -> int:
-        return len(self.records)
+        return len(self._pcode)
 
     def success_counts(self, pool_ids: Sequence[str], n_cycles: int) -> np.ndarray:
-        """Aggregate to ``S[pool, cycle]`` success-count matrix."""
-        index = {p: i for i, p in enumerate(pool_ids)}
+        """Aggregate to ``S[pool, cycle]`` success-count matrix.
+
+        Unknown pool ids and cycles ≥ ``n_cycles`` are dropped, matching
+        the historical per-record loop (negative cycles wrap, as Python
+        indexing did).
+        """
         s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
-        for rec in self.records:
-            if rec.accepted and rec.cycle < n_cycles and rec.pool_id in index:
-                s[index[rec.pool_id], rec.cycle] += 1
+        if not self._pcode:
+            return s
+        index = {p: i for i, p in enumerate(pool_ids)}
+        code_row = np.array(
+            [index.get(name, -1) for name in self._code_name], dtype=np.int64
+        )
+        row = code_row[np.asarray(self._pcode, dtype=np.int64)]
+        cyc = np.asarray(self._cycle, dtype=np.int64)
+        keep = np.asarray(self._accepted, dtype=bool) & (row >= 0) & (cyc < n_cycles)
+        np.add.at(s, (row[keep], cyc[keep]), 1)
         return s
 
 
 class SnSCollector:
-    """Invoker + parallel requester + event-driven terminator."""
+    """Invoker + parallel requester + event-driven terminator (scalar
+    engine: per-pool submissions, per-request objects)."""
 
     def __init__(
         self,
@@ -78,13 +143,15 @@ class SnSCollector:
         n_requests: int = 10,
         interval: float = 180.0,
         terminator_delay: float = 0.0,
+        retain_records: bool = True,
     ):
         self.provider = provider
         self.pool_ids = list(pool_ids)
         self.n = int(n_requests)
         self.interval = float(interval)
         self.terminator_delay = float(terminator_delay)
-        self.lake = DataLake()
+        self.retain_records = retain_records
+        self.lake = DataLake(retain_records=retain_records)
         self.probe_requests: List[SpotRequest] = []
         self._pending_cancel: List[SpotRequest] = []
         self._probing = False  # True only while the requester is submitting
@@ -106,6 +173,12 @@ class SnSCollector:
         for req in self._pending_cancel:
             self.provider.cancel(req)  # no-op if it already reached RUNNING
         self._pending_cancel.clear()
+        if not self.retain_records:
+            # keep only requests that actually leaked into RUNNING (the
+            # only ones that can ever bill) — hot-path retention cap
+            self.probe_requests = [
+                r for r in self.probe_requests if r.run_started is not None
+            ]
 
     # -- ParallelSpotRequester ----------------------------------------------
 
@@ -119,12 +192,14 @@ class SnSCollector:
             reqs = []  # rate-limited cycle records total failure
         finally:
             self._probing = False
+        keep_all = self.retain_records
         for req in reqs:
             accepted = req.state is not RequestState.REJECTED
             if accepted:
                 successes += 1
-            self.lake.append(ProbeRecord(self.provider.now, pool_id, accepted, cycle))
-            self.probe_requests.append(req)
+            self.lake.add(self.provider.now, pool_id, accepted, cycle)
+            if keep_all or req.state is RequestState.PROVISIONING:
+                self.probe_requests.append(req)
         return successes
 
     # -- RequestInvoker -----------------------------------------------------
@@ -152,6 +227,65 @@ class SnSCollector:
         return total
 
 
+class FleetCollector:
+    """Batched SnS collector: the whole fleet per cycle in one admission
+    call, matrices instead of per-probe objects.
+
+    ``S_t`` and ``running_t`` land directly in preallocated
+    ``(pools, cycles)`` matrices.  The event-driven terminator is modelled
+    at fleet granularity: with ``terminator_delay == 0`` accepted probes
+    are cancelled on provisioning acceptance inside the batched call
+    (provider state untouched — the scoot); with a positive delay the
+    accepted cohorts are *held*, the clock advances by the delay, and only
+    then are the still-provisioning cohorts cancelled — probes that
+    finished provisioning meanwhile leak into RUNNING and bill, exactly as
+    in the scalar engine.
+    """
+
+    def __init__(
+        self,
+        provider: SimulatedProvider,
+        pool_ids: Sequence[str],
+        *,
+        n_cycles: int,
+        n_requests: int = 10,
+        interval: float = 180.0,
+        terminator_delay: float = 0.0,
+    ):
+        self.provider = provider
+        self.pool_ids = list(pool_ids)
+        self.idx = provider.pool_index(self.pool_ids)
+        self.n = int(n_requests)
+        self.interval = float(interval)
+        self.terminator_delay = float(terminator_delay)
+        self.n_cycles = int(n_cycles)
+        self.s = np.zeros((len(self.pool_ids), self.n_cycles), dtype=np.int64)
+        self.running = np.zeros_like(self.s)
+        self.times = np.zeros(self.n_cycles)
+        # scope cost accounting to this campaign: leaked-probe instances
+        # already on the provider's ledger belong to earlier collectors
+        self._ledger_start = provider.probe_ledger_len()
+
+    def run_cycle(self, cycle: int) -> np.ndarray:
+        """One collection cycle: batched probe + ground-truth readout."""
+        prov = self.provider
+        self.times[cycle] = prov.now
+        if self.terminator_delay <= 0.0:
+            s = prov.submit_spot_requests(self.idx, n=self.n)
+        else:
+            s, cohorts = prov.submit_spot_requests(self.idx, n=self.n, hold=True)
+            prov.advance(prov.now + self.terminator_delay)
+            prov.cancel_cohorts(cohorts)  # leaked cohorts already RUNNING
+        self.s[:, cycle] = s
+        self.running[:, cycle] = prov.running_counts(self.idx)
+        return s
+
+    def probe_compute_cost(self) -> float:
+        """$ billed to leaked probe instances (provider-side ledger,
+        scoped to probes submitted since this collector was created)."""
+        return float(self.provider.probe_instance_cost(since=self._ledger_start))
+
+
 @dataclasses.dataclass
 class CampaignResult:
     pool_ids: List[str]
@@ -164,6 +298,12 @@ class CampaignResult:
     probe_compute_cost: float  # $ billed to probes (≈ 0 by design)
     node_pool_cost: float      # $ billed to ground-truth running nodes
     api_calls: int
+    engine: str = "scalar"     # which collector engine produced this
+
+
+#: per-cycle hook: (cycle index, timestamp, S_t vector) — the Data
+#: Pipeline glue point (see ``repro.core.pipeline.run_campaign_pipeline``)
+CycleHook = Callable[[int, float, np.ndarray], object]
 
 
 def run_campaign(
@@ -175,38 +315,71 @@ def run_campaign(
     n_requests: int = 10,
     node_pool_size: int = 10,
     terminator_delay: float = 0.0,
+    engine: str = "fleet",
+    retain_records: bool = True,
+    on_cycle: Optional[CycleHook] = None,
 ) -> CampaignResult:
-    """Run a §III-B style campaign: node pools + SnS probing side by side."""
+    """Run a §III-B style campaign: node pools + SnS probing side by side.
+
+    ``engine="fleet"`` (default) probes every pool per cycle in one
+    batched admission call and writes matrices directly;
+    ``engine="scalar"`` is the paper-faithful per-pool object path.  Both
+    produce identical results from the same provider seed.  ``on_cycle``
+    is invoked after every collection cycle with ``(cycle, time, S_t)``.
+    """
+    if engine not in ("fleet", "scalar"):
+        raise ValueError(f"unknown engine {engine!r} (want 'fleet' or 'scalar')")
     pool_ids = list(pool_ids) if pool_ids is not None else provider.pool_ids
-    collector = SnSCollector(
-        provider,
-        pool_ids,
-        n_requests=n_requests,
-        interval=interval,
-        terminator_delay=terminator_delay,
-    )
     for pid in pool_ids:
         provider.set_node_pool(pid, node_pool_size)
     # Let pools acquire their initial nodes before the first measurement.
     provider.advance(provider.now + 3 * provider.tick)
 
     n_cycles = int(duration // interval)
-    times = np.zeros(n_cycles)
-    s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
-    running = np.zeros_like(s)
     t0 = provider.now
-    for c in range(n_cycles):
-        provider.advance(t0 + c * interval)
-        times[c] = provider.now
-        s[:, c] = collector.run_cycle(c)
-        for i, pid in enumerate(pool_ids):
-            running[i, c] = provider.running_count(pid)
+    if engine == "fleet":
+        collector = FleetCollector(
+            provider,
+            pool_ids,
+            n_cycles=n_cycles,
+            n_requests=n_requests,
+            interval=interval,
+            terminator_delay=terminator_delay,
+        )
+        for c in range(n_cycles):
+            provider.advance(t0 + c * interval)
+            s_t = collector.run_cycle(c)
+            if on_cycle is not None:
+                # the cycle's measurement timestamp, not the post-
+                # terminator-delay clock — identical to the scalar engine
+                on_cycle(c, collector.times[c], s_t)
+        times, s, running = collector.times, collector.s, collector.running
+        probe_cost = collector.probe_compute_cost()
+    else:
+        collector = SnSCollector(
+            provider,
+            pool_ids,
+            n_requests=n_requests,
+            interval=interval,
+            terminator_delay=terminator_delay,
+            retain_records=retain_records,
+        )
+        times = np.zeros(n_cycles)
+        s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
+        running = np.zeros_like(s)
+        for c in range(n_cycles):
+            provider.advance(t0 + c * interval)
+            times[c] = provider.now
+            s[:, c] = collector.run_cycle(c)
+            for i, pid in enumerate(pool_ids):
+                running[i, c] = provider.running_count(pid)
+            if on_cycle is not None:
+                on_cycle(c, times[c], s[:, c])
+        probe_cost = collector.probe_compute_cost()
 
     # node-pool compute cost: integrate running counts over the campaign
-    node_cost = 0.0
-    for i, pid in enumerate(pool_ids):
-        price = provider.pool_config(pid).price_per_hour
-        node_cost += float(running[i].sum()) * interval / 3600.0 * price
+    prices = np.array([provider.pool_config(pid).price_per_hour for pid in pool_ids])
+    node_cost = float((running.sum(axis=1) * (interval / 3600.0) * prices).sum())
 
     return CampaignResult(
         pool_ids=pool_ids,
@@ -216,7 +389,8 @@ def run_campaign(
         n=n_requests,
         interval=interval,
         interruptions=list(provider.interruptions),
-        probe_compute_cost=collector.probe_compute_cost(),
+        probe_compute_cost=probe_cost,
         node_pool_cost=node_cost,
         api_calls=provider.api_calls,
+        engine=engine,
     )

@@ -76,11 +76,17 @@ def cost_report(
     periodic_reduction: float = 100.0,
     periodic_interval: float = 600.0,
 ) -> CostReport:
-    """Itemized cost comparison for one campaign (Fig. 5)."""
+    """Itemized cost comparison for one campaign (Fig. 5).
+
+    Everything derives from the campaign's count matrices and counters —
+    no per-record iteration: ``api_calls`` is the exact number of probe
+    requests submitted (rate-limited cycles submit fewer than
+    ``pools × cycles × N``).
+    """
     pools, cycles = result.s.shape
     n_requests = result.n
     pool_cycles = pools * cycles
-    records = pool_cycles * n_requests
+    records = int(result.api_calls)
 
     invocations = (
         records              # parallel spot requester: one Lambda per request

@@ -55,6 +55,7 @@ __all__ = [
     "FleetCycleResult",
     "FleetWindowTable",
     "FleetFeatureProcessor",
+    "run_campaign_pipeline",
 ]
 
 PredictFn = Callable[[np.ndarray], float]
@@ -353,3 +354,55 @@ class FleetFeatureProcessor:
         """(rows, 3) in-window features for one pool, oldest first."""
         idx = pool_id if isinstance(pool_id, int) else self.pool_index[pool_id]
         return self.table.feature_matrix(idx)
+
+
+# --------------------------------------------------------------------------
+# Campaign → pipeline glue
+# --------------------------------------------------------------------------
+
+
+def run_campaign_pipeline(
+    provider,
+    *,
+    processor: Optional[FleetFeatureProcessor] = None,
+    predict_fn: Optional[BatchPredictFn] = None,
+    window_minutes: float = 480.0,
+    sequence_length: Optional[int] = None,
+    **campaign_kwargs,
+):
+    """Stream a measurement campaign straight into the batched pipeline.
+
+    Drives :func:`repro.core.collector.run_campaign` (fleet engine by
+    default) and feeds every collection cycle's success-count vector into
+    a :class:`FleetFeatureProcessor` as it lands: one batched
+    ``update_batch`` and at most **one** ``predict_fn`` call per cycle for
+    the whole fleet — the measure → featurize → predict loop of §V with
+    no per-pool Python work between the layers.
+
+    Pass an existing ``processor`` to keep accumulating into it, or let
+    one be built from the campaign's pool list and cadence.  Returns
+    ``(CampaignResult, FleetFeatureProcessor)``.
+    """
+    from .collector import run_campaign  # local: avoid import cycle
+
+    pool_ids = campaign_kwargs.pop("pool_ids", None)
+    pool_ids = list(pool_ids) if pool_ids is not None else provider.pool_ids
+    n_requests = campaign_kwargs.pop("n_requests", 10)
+    interval = campaign_kwargs.get("interval", 180.0)
+    if processor is None:
+        processor = FleetFeatureProcessor(
+            pool_ids,
+            n_requests=n_requests,
+            window_minutes=window_minutes,
+            dt_minutes=interval / 60.0,
+            predict_fn=predict_fn,
+            sequence_length=sequence_length,
+        )
+    result = run_campaign(
+        provider,
+        pool_ids=pool_ids,
+        n_requests=n_requests,
+        on_cycle=processor.on_cycle,
+        **campaign_kwargs,
+    )
+    return result, processor

@@ -1,4 +1,4 @@
-"""Simulated cloud provider with spot capacity pools.
+"""Simulated cloud provider with spot capacity pools — array-native.
 
 This is the offline stand-in for the AWS/Azure control planes probed in the
 paper (no cloud credentials in this environment).  It reproduces the
@@ -23,6 +23,22 @@ paper's published statistics:
 * **Rate limits** — per-region request budgets per minute; the 3-minute
   probe cadence in the paper is the fastest cadence that stays within them.
 
+Architecture (SpotLake-class fleets, 10^4–10^6 pools): all per-pool state —
+capacity ``C_t``, regime, admission margin, running / provisioning counts,
+dwell clocks — lives in stacked ``(pools,)`` arrays.  One dynamics tick is
+:meth:`SimulatedProvider.step_batch`: a constant number of vector ops that
+advances every pool at once.  Randomness is *counter-based* per pool
+(``repro.core.rng``): every draw is a pure function of
+``(seed, pool, counter, draw-site)``, so the batched admission path
+(:meth:`submit_spot_requests`) and the scalar object API
+(:meth:`submit_spot_request`, which wraps the same array core in
+:class:`~repro.core.lifecycle.SpotRequest` views) produce bit-identical
+trajectories — the parity anchor for the fleet campaign engine.
+
+Per-*instance* bookkeeping (ground-truth node pools, leaked probes) is
+event-driven, not per-tick: instances exist as small FIFO entries touched
+only on provisioning-settle / reclaim / terminate, never on the hot path.
+
 The provider is deliberately *interface-first* (`submit_spot_request` /
 `cancel` / node-pool maintenance) so the SnS collector code is portable to
 a real cloud backend (§VII provider-agnostic claim).
@@ -32,11 +48,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .lifecycle import RequestState, SpotRequest
+from .rng import (
+    keyed_exponential,
+    keyed_normal,
+    keyed_uniform,
+    keyed_uniform_between,
+)
 
 __all__ = [
     "PoolConfig",
@@ -57,6 +80,23 @@ class RateLimitError(RuntimeError):
 
 STABLE, TIGHT, CRUNCH = 0, 1, 2
 _REGIME_NAMES = ("stable", "tight", "crunch")
+
+#: transient API flakiness: rare spurious rejections even with headroom
+_FLAKE_P = 0.012
+
+# Draw-site tags for the counter-based per-pool RNG streams.  Dynamics
+# sites are keyed on the tick counter, admission sites on per-pool
+# sequence counters; the tag ranges are disjoint so no key collides.
+_TAG_NEXT_REGIME = 1
+_TAG_DWELL = 2
+_TAG_DEGRADE_BUMP = 3
+_TAG_NOISE_A = 4
+_TAG_NOISE_B = 5
+_TAG_TARGET = 6
+_TAG_RECLAIM_BUMP = 7
+_TAG_RECLAIM = 1_000          # + 2*i per victim (mixture choice, delay)
+_TAG_REPLENISH = 10_000_000   # + attempt index
+_TAG_SUBMIT = 20_000_000      # + request index within one submission batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,17 +130,26 @@ class InterruptionEvent:
 
 
 @dataclasses.dataclass
-class _PoolState:
-    cfg: PoolConfig
-    capacity: float                       # hidden C_t
-    regime: int = STABLE
-    regime_until: float = 0.0             # next regime re-draw time
-    admission_margin: float = 0.0         # conservatism margin (decaying)
-    running: Dict[int, SpotRequest] = dataclasses.field(default_factory=dict)
-    provisioning: Dict[int, SpotRequest] = dataclasses.field(default_factory=dict)
-    # node-pool ground truth bookkeeping
-    target_nodes: int = 0
-    replenish_at: float = math.inf
+class _Instance:
+    """One RUNNING instance — FIFO ledger entry, touched only on events."""
+
+    uid: int                  # per-pool instance sequence number
+    pool: int                 # pool index
+    start: float              # entered RUNNING (billing starts)
+    end: Optional[float] = None
+    probe: bool = False       # leaked SnS probe (for cost accounting)
+    obj: Optional[SpotRequest] = None   # scalar-API view, if any
+
+
+@dataclasses.dataclass
+class _Cohort:
+    """Requests accepted together, provisioning since ``start``."""
+
+    pool: int
+    start: float
+    count: int
+    probe: bool = False
+    requests: Optional[List[SpotRequest]] = None  # scalar-API views
 
 
 # --------------------------------------------------------------------------
@@ -109,11 +158,16 @@ class _PoolState:
 
 
 class SimulatedProvider:
-    """Discrete-event simulated spot control plane.
+    """Discrete-event simulated spot control plane over stacked pool state.
 
     Time is continuous (seconds); dynamics advance on a fixed tick
     (default 60 s).  Clients call :meth:`advance` to move the clock, then
-    interact via the request API.
+    interact via the request API — either the scalar object API
+    (:meth:`submit_spot_request`, one pool at a time, returning
+    :class:`SpotRequest` views) or the batched fleet API
+    (:meth:`submit_spot_requests`, every pool in one vector op).  Both sit
+    on the same array core and the same counter-based per-pool RNG
+    streams, so they are bit-identical.
     """
 
     def __init__(
@@ -132,188 +186,361 @@ class SimulatedProvider:
         self.rate_limit = int(requests_per_minute_per_region)
         self.replenish_delay = float(replenish_delay)
         self.margin_decay_tau = float(margin_decay_tau)
-        self._rng = np.random.default_rng(seed)
+        self._margin_decay = math.exp(-self.tick / self.margin_decay_tau)
+        self._seed = int(seed)
         self.now = 0.0
-        self._pools: Dict[str, _PoolState] = {}
-        for cfg in pools:
-            st = _PoolState(cfg=cfg, capacity=cfg.base_capacity)
-            st.regime_until = self._draw_dwell(cfg, STABLE)
-            self._pools[cfg.pool_id] = st
+
+        self.configs: List[PoolConfig] = list(pools)
+        P = len(self.configs)
+        self.n_pools = P
+        self._pool_index: Dict[str, int] = {
+            cfg.pool_id: i for i, cfg in enumerate(self.configs)
+        }
+        if len(self._pool_index) != P:
+            raise ValueError("duplicate pool ids in fleet")
+        self._idx = np.arange(P)
+
+        # -- static per-pool config, stacked ------------------------------
+        self.base_capacity = np.array([c.base_capacity for c in self.configs])
+        self.volatility = np.array([c.volatility for c in self.configs])
+        self.price_per_hour = np.array([c.price_per_hour for c in self.configs])
+        self._p_tight_first = np.array([c.p_tight_first for c in self.configs])
+        self._dwell = np.array(
+            [[c.dwell_stable, c.dwell_tight, c.dwell_crunch] for c in self.configs]
+        )
+        regions = sorted({c.region for c in self.configs})
+        self._region_code = np.array(
+            [regions.index(c.region) for c in self.configs], dtype=np.int64
+        )
+        self._region_names = regions
+
+        # -- dynamic per-pool state, stacked ------------------------------
+        self.capacity = self.base_capacity.copy()
+        self.regime = np.zeros(P, dtype=np.int64)
+        self.admission_margin = np.zeros(P)
+        self.n_running = np.zeros(P, dtype=np.int64)
+        self.n_provisioning = np.zeros(P, dtype=np.int64)
+        self.target_nodes = np.zeros(P, dtype=np.int64)
+        self.replenish_at = np.full(P, math.inf)
+        self._tick_count = 0
+        self._submit_seq = np.zeros(P, dtype=np.int64)
+        self._instance_seq = np.zeros(P, dtype=np.int64)
+        u0 = keyed_uniform(self._seed, self._idx, 0, _TAG_DWELL)
+        self.regime_until = keyed_exponential(self._dwell[:, STABLE], u0)
+
+        # -- event-driven per-instance bookkeeping ------------------------
+        self._instances: List[Deque[_Instance]] = [deque() for _ in range(P)]
+        self._cohorts: List[_Cohort] = []
+        self._req_cohort: Dict[int, _Cohort] = {}
+        self._probe_instances: List[_Instance] = []
         self.interruptions: List[InterruptionEvent] = []
         self._provision_listeners: List[Callable[[SpotRequest], None]] = []
-        self._rate_window: Dict[str, List[float]] = {}
+
+        # -- per-region rate limiting (sliding 60 s window) ----------------
+        self._rate_window: List[Deque[Tuple[float, int]]] = [
+            deque() for _ in regions
+        ]
+        self._rate_sum = np.zeros(len(regions), dtype=np.int64)
         self.api_calls = 0
 
     # -- public API -------------------------------------------------------
 
     @property
     def pool_ids(self) -> List[str]:
-        return list(self._pools)
+        return [cfg.pool_id for cfg in self.configs]
+
+    def pool_index(self, pool_ids: Sequence[str]) -> np.ndarray:
+        """Map pool ids to stacked-array indices."""
+        return np.array([self._pool_index[p] for p in pool_ids], dtype=np.int64)
 
     def pool_config(self, pool_id: str) -> PoolConfig:
-        return self._pools[pool_id].cfg
+        return self.configs[self._pool_index[pool_id]]
 
     def on_provisioning(self, callback: Callable[[SpotRequest], None]) -> None:
         """Subscribe to provisioning-started lifecycle events (the hook the
-        SnS Request Terminator uses)."""
+        SnS Request Terminator uses).  Fired by the scalar object API only;
+        the batched fleet path models the terminator explicitly."""
         self._provision_listeners.append(callback)
 
-    def submit_spot_request(self, pool_id: str, *, n: int = 1) -> List[SpotRequest]:
-        """Submit ``n`` *concurrent* spot requests.
+    # -- admission core (shared by both APIs) ------------------------------
 
-        Two-phase, modelling true concurrency: (1) all ``n`` requests pass
+    def _accept_mask(self, pool_idx: np.ndarray, n: int) -> np.ndarray:
+        """(K, n) accept pattern for one concurrent batch of ``n`` requests
+        per pool; consumes one submission sequence number per pool.
+
+        Two-phase concurrency semantics: all ``n`` requests of a pool pass
         the capacity check together, each accepted request consuming one
-        unit of headroom; (2) provisioning lifecycle events fire afterwards
-        (so an event-driven canceller cannot free capacity mid-batch).
-        This is what makes the accepted/submitted ratio a *graded* estimate
-        of available capacity (§III-A).
+        unit of headroom — this is what makes the accepted/submitted ratio
+        a *graded* estimate of available capacity (§III-A).
         """
-        st = self._pools[pool_id]
-        self._charge_rate_limit(st.cfg.region, n)
-        out, accepted = [], []
-        headroom = (
-            st.capacity - len(st.running) - len(st.provisioning) - st.admission_margin
+        seq = self._submit_seq[pool_idx]
+        self._submit_seq[pool_idx] = seq + 1
+        u = keyed_uniform(
+            self._seed,
+            pool_idx[:, None],
+            seq[:, None],
+            _TAG_SUBMIT + np.arange(n)[None, :],
         )
-        for _ in range(n):
+        ok = u >= _FLAKE_P
+        headroom = (
+            self.capacity[pool_idx]
+            - self.n_running[pool_idx]
+            - self.n_provisioning[pool_idx]
+            - self.admission_margin[pool_idx]
+        )
+        # request r is admitted iff it passes the flake draw and the
+        # headroom left after the accepts before it is still positive
+        return ok & ((np.cumsum(ok, axis=1) - 1) < headroom[:, None])
+
+    def submit_spot_request(self, pool_id: str, *, n: int = 1) -> List[SpotRequest]:
+        """Submit ``n`` *concurrent* spot requests (scalar object API).
+
+        Provisioning lifecycle events fire after the whole batch has passed
+        the capacity check, so an event-driven canceller cannot free
+        capacity mid-batch.  Raises :class:`RateLimitError` when the
+        region's request budget is exhausted (nothing is charged).
+        """
+        p = self._pool_index[pool_id]
+        self._charge_rate_limit(int(self._region_code[p]), n)
+        accept = self._accept_mask(np.array([p]), n)[0]
+        out: List[SpotRequest] = []
+        accepted: List[SpotRequest] = []
+        k = int(accept.sum())
+        cohort = _Cohort(p, self.now, k, probe=True, requests=[]) if k else None
+        for r in range(n):
             req = SpotRequest(pool_id=pool_id, submit_time=self.now)
-            if headroom > 0.0 and self._rng.random() >= 0.012:
-                headroom -= 1.0
+            if accept[r]:
                 req.transition(RequestState.PROVISIONING, self.now)
-                st.provisioning[req.request_id] = req
+                cohort.requests.append(req)
+                self._req_cohort[req.request_id] = cohort
                 accepted.append(req)
             else:
                 req.transition(RequestState.REJECTED, self.now)
             out.append(req)
+        if cohort is not None:
+            self._cohorts.append(cohort)
+            self.n_provisioning[p] += k
         for req in accepted:
             for cb in self._provision_listeners:
                 cb(req)
         return out
 
+    def submit_spot_requests(
+        self, pool_idx: np.ndarray, *, n: int = 1, hold: bool = False
+    ):
+        """Batched admission: ``n`` concurrent requests against *every*
+        pool in ``pool_idx`` in one vector op (the fleet probing path).
+
+        Returns the accepted-count vector ``(len(pool_idx),)``.  With the
+        default ``hold=False`` the accepted requests are cancelled on
+        provisioning acceptance (the event-driven SnS scoot), leaving
+        provider state untouched; ``hold=True`` instead leaves them
+        provisioning and returns ``(counts, cohorts)`` so the caller can
+        :meth:`cancel_cohorts` later (the slow-terminator model).  Pools
+        whose region budget is exhausted count 0 (rate-limited cycles
+        record total failure, as in the scalar path).
+        """
+        pool_idx = np.asarray(pool_idx, dtype=np.int64)
+        counts = np.zeros(len(pool_idx), dtype=np.int64)
+        admitted = self._charge_rate_limit_batch(pool_idx, n)
+        cohorts: List[_Cohort] = []
+        if admitted.any():
+            sub = pool_idx[admitted]
+            counts[admitted] = self._accept_mask(sub, n).sum(axis=1)
+            if hold:
+                for p, k in zip(sub, counts[admitted]):
+                    if k > 0:
+                        ch = _Cohort(int(p), self.now, int(k), probe=True)
+                        cohorts.append(ch)
+                        self._cohorts.append(ch)
+                self.n_provisioning[sub] += counts[admitted]
+        return (counts, cohorts) if hold else counts
+
     def cancel(self, request: SpotRequest) -> None:
         """Cancel a PROVISIONING request (the scoot)."""
-        st = self._pools[request.pool_id]
         if request.state is RequestState.PROVISIONING:
             request.transition(RequestState.CANCELLED, self.now)
-            st.provisioning.pop(request.request_id, None)
+            cohort = self._req_cohort.pop(request.request_id, None)
+            if cohort is not None:
+                cohort.count -= 1
+                cohort.requests.remove(request)
+                self.n_provisioning[cohort.pool] -= 1
         # cancelling REJECTED/terminal requests is a no-op, like real APIs
 
+    def cancel_cohorts(self, cohorts: Sequence[_Cohort]) -> None:
+        """Cancel still-provisioning members of held request batches
+        (the fleet-path equivalent of flushing delayed per-request
+        cancels; cohorts that already settled to RUNNING — marked
+        ``count == -1`` by the settle pass — are left alone, like
+        cancelling a RUNNING request in the real APIs)."""
+        for ch in cohorts:
+            if ch.count > 0:
+                self.n_provisioning[ch.pool] -= ch.count
+                ch.count = 0
+
     def terminate(self, request: SpotRequest) -> None:
-        st = self._pools[request.pool_id]
         if request.state is RequestState.RUNNING:
             request.transition(RequestState.TERMINATED, self.now)
-            st.running.pop(request.request_id, None)
+            p = self._pool_index[request.pool_id]
+            for inst in self._instances[p]:
+                if inst.obj is request:
+                    inst.end = self.now
+                    self._instances[p].remove(inst)
+                    self.n_running[p] -= 1
+                    break
 
     def set_node_pool(self, pool_id: str, n_nodes: int) -> None:
         """Declare a ground-truth node pool that tries to keep ``n_nodes``
         running (an autoscaling-group analogue; §III-B's 10-node pools)."""
-        self._pools[pool_id].target_nodes = int(n_nodes)
-        self._pools[pool_id].replenish_at = self.now  # acquire ASAP
+        p = self._pool_index[pool_id]
+        self.target_nodes[p] = int(n_nodes)
+        self.replenish_at[p] = self.now  # acquire ASAP
 
     def running_count(self, pool_id: str) -> int:
-        return len(self._pools[pool_id].running)
+        return int(self.n_running[self._pool_index[pool_id]])
+
+    def running_counts(self, pool_idx: Optional[np.ndarray] = None) -> np.ndarray:
+        """Stacked running counts (a copy) for the fleet collector."""
+        if pool_idx is None:
+            return self.n_running.copy()
+        return self.n_running[np.asarray(pool_idx, dtype=np.int64)]
 
     def running_cost(self, pool_id: str, now: Optional[float] = None) -> float:
         """Total compute cost billed so far for RUNNING time in this pool."""
         now = self.now if now is None else now
-        st = self._pools[pool_id]
-        price = st.cfg.price_per_hour / 3600.0
+        p = self._pool_index[pool_id]
+        price = self.price_per_hour[p] / 3600.0
+        return sum(max(0.0, now - inst.start) * price for inst in self._instances[p])
+
+    def probe_ledger_len(self) -> int:
+        """Current length of the leaked-probe ledger (a scope marker for
+        per-campaign cost accounting)."""
+        return len(self._probe_instances)
+
+    def probe_instance_cost(
+        self, now: Optional[float] = None, *, since: int = 0
+    ) -> float:
+        """Compute dollars billed to probe requests that leaked into
+        RUNNING (≈ 0 by design: only a slow terminator leaks).  ``since``
+        restricts the sum to ledger entries added after that marker."""
+        now = self.now if now is None else now
         total = 0.0
-        for req in st.running.values():
-            total += req.billed_seconds(now) * price
-        return total
+        for inst in self._probe_instances[since:]:
+            end = now if inst.end is None else inst.end
+            total += max(0.0, end - inst.start) * self.price_per_hour[inst.pool]
+        return total / 3600.0
 
     def advance(self, to_time: float) -> None:
-        """Advance simulation clock, stepping pool dynamics each tick."""
+        """Advance simulation clock, stepping the whole fleet each tick."""
         if to_time < self.now:
             raise ValueError("time moves forward only")
         while self.now + self.tick <= to_time:
-            self.now += self.tick
-            for st in self._pools.values():
-                self._step_pool(st)
+            self.step_batch()
         # fractional remainder advances the clock without a dynamics step
         if to_time > self.now:
             self.now = to_time
             self._settle_provisioning()
 
+    def step_batch(self, dt: Optional[float] = None) -> None:
+        """One dynamics tick for every pool at once (a constant number of
+        vector ops over the stacked state, independent of fleet size).
+
+        ``dt`` rescales the step's clock advance and margin decay; the
+        regime/capacity increments are calibrated per tick, so dynamics
+        are faithful at ``dt == tick`` (the default) and approximate
+        otherwise.
+        """
+        if dt is None:
+            dt, decay = self.tick, self._margin_decay
+        else:
+            dt = float(dt)
+            decay = math.exp(-dt / self.margin_decay_tau)
+        self.now += dt
+        self._tick_count += 1
+        self._settle_provisioning()
+        self._step_fleet(decay)
+
     # -- internals ---------------------------------------------------------
 
-    def _draw_dwell(self, cfg: PoolConfig, regime: int) -> float:
-        mean = (cfg.dwell_stable, cfg.dwell_tight, cfg.dwell_crunch)[regime]
-        if regime == STABLE:
-            return self.now + float(self._rng.exponential(mean))
-        # Degraded regimes have concentrated dwell times: elapsed time in
-        # degradation is informative about time-to-interruption, which is
-        # what gives CUT its predictive value at long horizons (§IV-B).
-        return self.now + float(self._rng.uniform(0.7 * mean, 1.3 * mean))
-
-    def _admit(self, st: _PoolState) -> bool:
-        """Capacity check for a single new request (Fig. 1, first decision)."""
-        headroom = (
-            st.capacity - len(st.running) - len(st.provisioning) - st.admission_margin
-        )
-        if headroom <= 0.0:
-            return False
-        # Transient API flakiness: rare spurious rejections even with room.
-        if self._rng.random() < 0.012:
-            return False
-        return True
-
-    def _step_pool(self, st: _PoolState) -> None:
-        cfg = st.cfg
-        # -- regime transitions ------------------------------------------
-        if self.now >= st.regime_until:
-            st.regime = self._next_regime(st)
-            st.regime_until = self._draw_dwell(cfg, st.regime)
-            if st.regime in (TIGHT, CRUNCH):
-                # Degradation raises the admission margin — new requests
-                # start failing *partially* before running instances are
-                # reclaimed (paper Fig. 2 lead-time behaviour; Table I's
-                # Actual > SnS cases are mostly graded, not blackouts).
-                bump = self._rng.uniform(0.15, 0.7) * max(st.target_nodes, 4)
-                st.admission_margin = max(st.admission_margin, bump)
+    def _step_fleet(self, margin_decay: float) -> None:
+        seed, k, idx = self._seed, self._tick_count, self._idx
+        # -- regime transitions (due pools only) ---------------------------
+        due = self.now >= self.regime_until
+        if due.any():
+            dp = idx[due]
+            u = keyed_uniform(seed, dp, k, _TAG_NEXT_REGIME)
+            r = self.regime[dp]
+            # STABLE degrades, usually via TIGHT (prediction lead time),
+            # rarely straight to CRUNCH (the hard, unpredictable case);
+            # TIGHT mostly falls to CRUNCH; CRUNCH mostly recovers via TIGHT.
+            new = np.where(
+                r == STABLE,
+                np.where(u < self._p_tight_first[dp], TIGHT, CRUNCH),
+                np.where(
+                    r == TIGHT,
+                    np.where(u < 0.75, CRUNCH, STABLE),
+                    np.where(u < 0.6, TIGHT, STABLE),
+                ),
+            )
+            self.regime[dp] = new
+            # Degraded regimes have concentrated dwell times: elapsed time
+            # in degradation is informative about time-to-interruption,
+            # which is what gives CUT its predictive value (§IV-B).
+            ud = keyed_uniform(seed, dp, k, _TAG_DWELL)
+            mean = self._dwell[dp, new]
+            self.regime_until[dp] = self.now + np.where(
+                new == STABLE,
+                keyed_exponential(mean, ud),
+                keyed_uniform_between(0.7 * mean, 1.3 * mean, ud),
+            )
+            # Degradation raises the admission margin — new requests start
+            # failing *partially* before running instances are reclaimed
+            # (paper Fig. 2 lead-time behaviour; Table I's Actual > SnS
+            # cases are mostly graded, not blackouts).
+            deg = dp[new != STABLE]
+            if deg.size:
+                ub = keyed_uniform(seed, deg, k, _TAG_DEGRADE_BUMP)
+                bump = keyed_uniform_between(0.15, 0.7, ub) * np.maximum(
+                    self.target_nodes[deg], 4
+                )
+                self.admission_margin[deg] = np.maximum(
+                    self.admission_margin[deg], bump
+                )
         # -- capacity mean-reversion to regime target ----------------------
-        target = self._regime_target(st)
-        st.capacity += 0.35 * (target - st.capacity) + float(
-            self._rng.normal(0.0, cfg.volatility)
+        nmax = np.maximum(self.target_nodes, 1).astype(np.float64)
+        ut = keyed_uniform(seed, idx, k, _TAG_TARGET)
+        target = np.where(
+            self.regime == STABLE,
+            self.base_capacity,
+            np.where(
+                self.regime == TIGHT,
+                # just around the running demand: probes contend with demand
+                nmax + keyed_uniform_between(0.15 * nmax, 0.6 * nmax, ut),
+                # CRUNCH: below running demand -> forces reclamation
+                keyed_uniform_between(0.0, 0.8 * nmax, ut),
+            ),
         )
-        st.capacity = max(0.0, st.capacity)
+        ua = keyed_uniform(seed, idx, k, _TAG_NOISE_A)
+        ub = keyed_uniform(seed, idx, k, _TAG_NOISE_B)
+        self.capacity += 0.35 * (target - self.capacity) + keyed_normal(
+            self.volatility, ua, ub
+        )
+        np.maximum(self.capacity, 0.0, out=self.capacity)
         # -- admission margin decays slowly (conservative recovery) --------
-        st.admission_margin *= math.exp(-self.tick / self.margin_decay_tau)
-        if st.admission_margin < 0.05:
-            st.admission_margin = 0.0
+        self.admission_margin *= margin_decay
+        self.admission_margin[self.admission_margin < 0.05] = 0.0
         # -- reclaim running instances if capacity fell below them ---------
         # Hysteresis: providers reclaim in sweeps, not single-node dribbles;
         # a 1-2 node transient dip outside CRUNCH does not trigger a sweep.
-        overflow = len(st.running) - int(st.capacity)
-        if overflow > 0 and (st.regime == CRUNCH or overflow >= 3):
-            self._reclaim(st, overflow)
+        overflow = self.n_running - self.capacity.astype(np.int64)
+        sweep = (overflow > 0) & ((self.regime == CRUNCH) | (overflow >= 3))
+        if sweep.any():
+            for p in np.nonzero(sweep)[0]:
+                self._reclaim(int(p), int(overflow[p]))
         # -- node-pool replenishment ---------------------------------------
-        self._replenish(st)
-        self._settle_provisioning()
+        self._replenish_batch()
 
-    def _next_regime(self, st: _PoolState) -> int:
-        r = st.regime
-        u = self._rng.random()
-        if r == STABLE:
-            # degrade; usually via TIGHT (prediction lead time), rarely
-            # straight to CRUNCH (the hard, unpredictable case)
-            return TIGHT if u < st.cfg.p_tight_first else CRUNCH
-        if r == TIGHT:
-            return CRUNCH if u < 0.75 else STABLE
-        # CRUNCH: mostly recover through TIGHT
-        return TIGHT if u < 0.6 else STABLE
-
-    def _regime_target(self, st: _PoolState) -> float:
-        cfg, n = st.cfg, max(st.target_nodes, 1)
-        if st.regime == STABLE:
-            return cfg.base_capacity
-        if st.regime == TIGHT:
-            # just around the running demand: probes contend with demand
-            return n + float(self._rng.uniform(0.15 * n, 0.6 * n))
-        # CRUNCH: below running demand -> forces reclamation
-        return float(self._rng.uniform(0.0, 0.8 * n))
-
-    def _reclaim(self, st: _PoolState, k: int) -> None:
+    def _reclaim(self, p: int, k: int) -> None:
         """Interrupt ``k`` running instances with clustered timestamps.
 
         Co-interrupt proximity calibration (paper Fig. 3): delays are a
@@ -321,66 +548,142 @@ class SimulatedProvider:
         slower uniform tail (independent follow-up sweeps).  Calibrated to
         >85 % of proximities < 1 min and ≈93 % < 3 min.
         """
-        victims = list(st.running.values())[:k]
-        base = self.now
-        for i, req in enumerate(victims):
-            if i == 0 or self._rng.random() < 0.86:
-                delay = float(self._rng.exponential(16.0))
-            else:
-                delay = float(self._rng.uniform(60.0, 600.0))
-            t = base + delay
-            req.transition(RequestState.INTERRUPTED, t)
-            st.running.pop(req.request_id, None)
-            self.interruptions.append(
-                InterruptionEvent(st.cfg.pool_id, req.request_id, t)
-            )
+        fifo = self._instances[p]
+        k = min(k, len(fifo))
+        if k == 0:
+            return
+        i = np.arange(k)
+        tick = self._tick_count
+        um = keyed_uniform(self._seed, p, tick, _TAG_RECLAIM + 2 * i)
+        ud = keyed_uniform(self._seed, p, tick, _TAG_RECLAIM + 2 * i + 1)
+        delay = np.where(
+            (i == 0) | (um < 0.86),
+            keyed_exponential(16.0, ud),
+            keyed_uniform_between(60.0, 600.0, ud),
+        )
+        pool_id = self.configs[p].pool_id
+        for j in range(k):
+            inst = fifo.popleft()  # oldest first: sweeps reclaim in order
+            t = self.now + float(delay[j])
+            inst.end = t
+            if inst.obj is not None:
+                inst.obj.transition(RequestState.INTERRUPTED, t)
+            self.interruptions.append(InterruptionEvent(pool_id, inst.uid, t))
+        self.n_running[p] -= k
         # A sweep that actually reclaimed nodes means the pool has zero
         # spare capacity: new admissions black out until the margin decays
         # (this is what keeps post-interruption unavailability episodes
         # alive for tens of minutes, as in the paper's Fig. 2 traces).
-        st.admission_margin += k + self._rng.uniform(0.4, 1.0) * max(
-            st.target_nodes, 4
+        ubump = keyed_uniform(self._seed, p, tick, _TAG_RECLAIM_BUMP)
+        self.admission_margin[p] += k + float(
+            keyed_uniform_between(0.4, 1.0, ubump)
+        ) * max(int(self.target_nodes[p]), 4)
+        self.replenish_at[p] = max(
+            self.replenish_at[p], self.now + self.replenish_delay
         )
-        st.replenish_at = max(st.replenish_at, self.now + self.replenish_delay)
 
-    def _replenish(self, st: _PoolState) -> None:
-        """Node pool tries to restore target_nodes (ASG behaviour): retries
-        every tick once the post-interruption cooldown has passed."""
-        if st.target_nodes <= 0 or self.now < st.replenish_at:
+    def _replenish_batch(self) -> None:
+        """Node pools try to restore target_nodes (ASG behaviour): retry
+        every tick once the post-interruption cooldown has passed, stopping
+        at the first failed admission (retry next tick)."""
+        deficit = self.target_nodes - self.n_running - self.n_provisioning
+        mask = (self.target_nodes > 0) & (self.now >= self.replenish_at) & (deficit > 0)
+        if not mask.any():
             return
-        deficit = st.target_nodes - len(st.running) - len(st.provisioning)
-        for _ in range(max(0, deficit)):
-            if not self._admit(st):
-                break  # retry next tick
-            req = SpotRequest(pool_id=st.cfg.pool_id, submit_time=self.now)
-            req.transition(RequestState.PROVISIONING, self.now)
-            st.provisioning[req.request_id] = req
+        mp = self._idx[mask]
+        d = deficit[mp]
+        dmax = int(d.max())
+        j = np.arange(dmax)
+        u = keyed_uniform(
+            self._seed, mp[:, None], self._tick_count, _TAG_REPLENISH + j[None, :]
+        )
+        headroom = (
+            self.capacity[mp]
+            - self.n_running[mp]
+            - self.n_provisioning[mp]
+            - self.admission_margin[mp]
+        )
+        # attempt j succeeds while j < headroom (each accept consumes one
+        # unit), passes the flake draw, and is within the pool's deficit;
+        # the first failure stops the pool's attempts for this tick.
+        ok = (j[None, :] < headroom[:, None]) & (u >= _FLAKE_P) & (j[None, :] < d[:, None])
+        accepts = np.where(ok.all(axis=1), dmax, np.argmax(~ok, axis=1))
+        got = accepts > 0
+        for p, c in zip(mp[got], accepts[got]):
+            self._cohorts.append(_Cohort(int(p), self.now, int(c)))
+        self.n_provisioning[mp] += accepts
 
     def _settle_provisioning(self) -> None:
-        """Provisioning completes after `provisioning_duration`: requests
+        """Provisioning completes after `provisioning_duration`: cohorts
         not cancelled by then transition to RUNNING (and start billing)."""
-        for st in self._pools.values():
-            done = [
-                r
-                for r in st.provisioning.values()
-                if self.now - r.history[-1][0] >= self.provisioning_duration
-            ]
-            for req in done:
-                req.transition(RequestState.RUNNING, self.now)
-                st.provisioning.pop(req.request_id)
-                st.running[req.request_id] = req
+        if not self._cohorts:
+            return
+        pending: List[_Cohort] = []
+        for ch in self._cohorts:
+            if self.now - ch.start < self.provisioning_duration:
+                pending.append(ch)
+                continue
+            if ch.count <= 0:
+                continue  # fully cancelled while provisioning
+            p, k = ch.pool, ch.count
+            ch.count = -1  # settled marker: no longer cancellable
+            self.n_provisioning[p] -= k
+            self.n_running[p] += k
+            uid0 = int(self._instance_seq[p])
+            self._instance_seq[p] += k
+            objs = ch.requests if ch.requests is not None else []
+            for i in range(k):
+                obj = objs[i] if i < len(objs) else None
+                inst = _Instance(
+                    uid=uid0 + i, pool=p, start=self.now, probe=ch.probe, obj=obj
+                )
+                self._instances[p].append(inst)
+                if obj is not None:
+                    obj.transition(RequestState.RUNNING, self.now)
+                    self._req_cohort.pop(obj.request_id, None)
+                if ch.probe:
+                    self._probe_instances.append(inst)
+        self._cohorts = pending
 
-    def _charge_rate_limit(self, region: str, n: int) -> None:
-        window = self._rate_window.setdefault(region, [])
+    # -- rate limiting -----------------------------------------------------
+
+    def _prune_rate_window(self, rc: int) -> None:
+        window = self._rate_window[rc]
         cutoff = self.now - 60.0
-        window[:] = [t for t in window if t > cutoff]
-        if len(window) + n > self.rate_limit:
+        while window and window[0][0] <= cutoff:
+            _, c = window.popleft()
+            self._rate_sum[rc] -= c
+
+    def _charge_rate_limit(self, rc: int, n: int) -> None:
+        self._prune_rate_window(rc)
+        if self._rate_sum[rc] + n > self.rate_limit:
             raise RateLimitError(
-                f"region {region}: {len(window) + n} requests in 60 s "
-                f"exceeds limit {self.rate_limit}"
+                f"region {self._region_names[rc]}: {int(self._rate_sum[rc]) + n} "
+                f"requests in 60 s exceeds limit {self.rate_limit}"
             )
-        window.extend([self.now] * n)
+        self._rate_window[rc].append((self.now, n))
+        self._rate_sum[rc] += n
         self.api_calls += n
+
+    def _charge_rate_limit_batch(self, pool_idx: np.ndarray, n: int) -> np.ndarray:
+        """Sequential-semantics budget check for a batch: per region, the
+        first ``floor(budget / n)`` pools (in submission order) are
+        admitted, the rest fail without consuming budget — exactly what a
+        pool-by-pool loop of :meth:`_charge_rate_limit` yields."""
+        admitted = np.zeros(len(pool_idx), dtype=bool)
+        codes = self._region_code[pool_idx]
+        for rc in np.unique(codes):
+            rc = int(rc)
+            self._prune_rate_window(rc)
+            sel = np.nonzero(codes == rc)[0]
+            budget = int(self.rate_limit - self._rate_sum[rc])
+            k = min(len(sel), max(0, budget // n))
+            if k > 0:
+                admitted[sel[:k]] = True
+                self._rate_window[rc].append((self.now, k * n))
+                self._rate_sum[rc] += k * n
+                self.api_calls += k * n
+        return admitted
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,90 @@
+"""Counter-based per-pool random streams for the campaign engine.
+
+The batched fleet engine and the scalar object API must produce
+*bit-identical* trajectories (the PR's parity anchor), which rules out a
+shared sequential generator: the scalar path visits pools one at a time
+while the fleet path draws for every pool in one vector op, so any RNG
+whose output depends on call *order* diverges immediately.
+
+Instead every draw is a pure function of a key::
+
+    u = uniform(seed, pool, counter, tag)        # in [0, 1)
+
+where ``pool`` is the pool index, ``counter`` is a monotone event counter
+(the dynamics tick index, or the pool's submission sequence number), and
+``tag`` names the draw site (regime transition, capacity noise, the k-th
+admission check, ...).  Consumption order is irrelevant — the scalar view
+and the batched engine evaluate the same hash at the same keys and get the
+same bits.  The hash is SplitMix64 over the mixed-in key lanes, evaluated
+elementwise on uint64 numpy arrays so a whole fleet's draws are one
+vector op.
+
+Derived variates (exponential, bounded uniform, normal via Box–Muller) are
+deterministic float64 transforms of the base uniforms, shared by both
+engines.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "keyed_uniform",
+    "keyed_exponential",
+    "keyed_uniform_between",
+    "keyed_normal",
+]
+
+_U64 = np.uint64
+# SplitMix64 constants + distinct odd multipliers per key lane.
+_M1 = _U64(0xBF58476D1CE4E5B9)
+_M2 = _U64(0x94D049BB133111EB)
+_GOLDEN = _U64(0x9E3779B97F4A7C15)
+_LANE_POOL = _U64(0xD6E8FEB86659FD93)
+_LANE_CTR = _U64(0xA5CB3B207C7E6B45)
+_LANE_TAG = _U64(0x2545F4914F6CDD1D)
+_S30, _S27, _S31, _S11 = _U64(30), _U64(27), _U64(31), _U64(11)
+_INV53 = np.float64(2.0 ** -53)
+
+
+def _mix(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer, elementwise on uint64."""
+    x = (x ^ (x >> _S30)) * _M1
+    x = (x ^ (x >> _S27)) * _M2
+    return x ^ (x >> _S31)
+
+
+def _as_u64(x) -> np.ndarray:
+    # int64 -> uint64 must wrap, not raise: go through the signed dtype.
+    return np.asarray(x, dtype=np.int64).astype(np.uint64)
+
+
+def keyed_uniform(seed: int, pool, counter, tag) -> np.ndarray:
+    """Uniform [0, 1) float64, a pure function of the key.
+
+    ``pool``, ``counter`` and ``tag`` broadcast like numpy operands; the
+    result has the broadcast shape (0-d inputs give a 0-d array).
+    """
+    with np.errstate(over="ignore"):  # uint64 wraparound is the hash
+        h = _U64(seed & 0xFFFFFFFFFFFFFFFF) * _GOLDEN
+        h = _mix(h ^ (_as_u64(pool) * _LANE_POOL))
+        h = _mix(h ^ (_as_u64(counter) * _LANE_CTR))
+        h = _mix(h ^ (_as_u64(tag) * _LANE_TAG))
+    return (h >> _S11).astype(np.float64) * _INV53
+
+
+def keyed_exponential(mean, u: np.ndarray) -> np.ndarray:
+    """Exponential(mean) from a base uniform (inverse CDF)."""
+    return -np.asarray(mean, dtype=np.float64) * np.log1p(-u)
+
+
+def keyed_uniform_between(lo, hi, u: np.ndarray) -> np.ndarray:
+    """Uniform [lo, hi) from a base uniform."""
+    lo = np.asarray(lo, dtype=np.float64)
+    return lo + (np.asarray(hi, dtype=np.float64) - lo) * u
+
+
+def keyed_normal(std, u1: np.ndarray, u2: np.ndarray) -> np.ndarray:
+    """N(0, std^2) via Box–Muller from two base uniforms."""
+    r = np.sqrt(-2.0 * np.log1p(-u1))
+    return np.asarray(std, dtype=np.float64) * r * np.cos(2.0 * np.pi * u2)

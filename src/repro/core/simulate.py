@@ -18,19 +18,44 @@ becomes unavailable (binary formulation — §IV-A), and the query is retried
 later.  Metrics: total lost computation, idle-while-available time, and
 makespan.  The experiment repeats each run over random permutations of the
 query queue and averages (§VI-E).
+
+Two implementations share these semantics exactly:
+
+* :func:`replay` — the scalar reference: one trace, one strategy, a plain
+  Python event loop (readable, and the parity oracle for the batch path).
+* :func:`replay_batch` — the fleet-scale path: a ``(B, T)`` stack of
+  traces advances in lock-step with all per-trace state (queue head,
+  running query, deferral clock, metrics) in stacked arrays, so thousands
+  of (pool × permutation) traces replay in one call.  Results are
+  bit-identical to :func:`replay` row by row.
+
+:func:`run_strategies` (one trace, permutation-averaged) and
+:func:`run_fleet_strategies` (pools × permutations × strategies in one
+shot — the §VI-E experiment) are thin drivers over :func:`replay_batch`.
+Prediction inputs are per-cycle label *arrays* (one model call for the
+whole trace) rather than per-cycle callables — the batched-predictor
+contract of the fleet pipeline.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-__all__ = ["SimResult", "replay", "run_strategies"]
+__all__ = [
+    "SimResult",
+    "replay",
+    "replay_batch",
+    "run_strategies",
+    "run_fleet_strategies",
+]
 
-# prediction callback: cycle index -> 1 if pool forecast to stay available
+#: legacy prediction callback: cycle index -> 1 if pool forecast available
 PredictorFn = Callable[[int], int]
+
+STRATEGIES = ("always_run", "sjf", "predict_ar")
 
 
 @dataclasses.dataclass
@@ -64,31 +89,45 @@ class SimResult:
         )
 
 
+def _predictions_array(
+    predictions, predictor: Optional[PredictorFn], t_cycles: int
+) -> Optional[np.ndarray]:
+    """Normalize the prediction input to a per-cycle label array."""
+    if predictions is not None:
+        return np.asarray(predictions)
+    if predictor is not None:
+        return np.array([int(predictor(c)) for c in range(t_cycles)])
+    return None
+
+
 def replay(
     avail: np.ndarray,
     durations: Sequence[float],
     *,
     strategy: str = "always_run",
     dt: float = 180.0,
+    predictions: Optional[np.ndarray] = None,
     predictor: Optional[PredictorFn] = None,
     horizon_cycles: int = 1,
 ) -> SimResult:
-    """Replay one trace with one strategy.
+    """Replay one trace with one strategy (scalar reference).
 
     Args:
       avail: (T,) binary pool availability per collection cycle.
       durations: query durations (seconds).
       strategy: "always_run" | "sjf" | "predict_ar".
-      predictor: required for predict_ar — maps cycle -> predicted label
-        (1 = stays available over the horizon).
+      predictions: required for predict_ar — (T,) per-cycle predicted
+        labels (1 = stays available over the horizon).  ``predictor`` is
+        the legacy per-cycle callable form, evaluated over all cycles.
       horizon_cycles: deferral length when the predictor flags risk.
     """
     avail = np.asarray(avail).astype(bool)
     queue: List[float] = list(durations)
     if strategy == "sjf":
         queue.sort()
-    elif strategy == "predict_ar" and predictor is None:
-        raise ValueError("predict_ar requires a predictor")
+    pred = _predictions_array(predictions, predictor, len(avail))
+    if strategy == "predict_ar" and pred is None:
+        raise ValueError("predict_ar requires predictions")
 
     t_cycles = len(avail)
     lost = 0.0
@@ -109,7 +148,7 @@ def replay(
             continue
 
         if strategy == "predict_ar" and c > defer_until_cycle:
-            if predictor(c) == 0:  # forecast: will NOT stay available
+            if pred[c] == 0:  # forecast: will NOT stay available
                 defer_until_cycle = c + horizon_cycles
 
         budget = dt
@@ -141,29 +180,244 @@ def replay(
     )
 
 
+def replay_batch(
+    avail: np.ndarray,
+    durations: np.ndarray,
+    *,
+    strategy: str = "always_run",
+    dt: float = 180.0,
+    predictions: Optional[np.ndarray] = None,
+    horizon_cycles: int = 1,
+) -> Dict[str, np.ndarray]:
+    """Replay a stack of traces with one strategy, all rows in lock-step.
+
+    Args:
+      avail: (B, T) — or (T,), broadcast — binary availability per trace.
+      durations: (B, Q) — or (Q,), broadcast — per-trace query queues in
+        launch order (``sjf`` sorts each row internally).
+      predictions: (B, T) or (T,) per-cycle labels, required for
+        ``predict_ar``.
+
+    Returns stacked metrics, bit-identical to calling :func:`replay` per
+    row: ``{"lost_seconds", "idle_seconds", "completed", "total_queries",
+    "makespan_seconds"}``, each of shape (B,).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    avail = np.atleast_2d(np.asarray(avail).astype(bool))
+    dur = np.atleast_2d(np.asarray(durations, dtype=np.float64))
+    B = max(avail.shape[0], dur.shape[0])
+    T, Q = avail.shape[1], dur.shape[1]
+    avail = np.broadcast_to(avail, (B, T))
+    # owned copy: interrupted queries write their duration back to the queue
+    dur = np.array(np.broadcast_to(dur, (B, Q)))
+    if strategy == "sjf":
+        dur = np.sort(dur, axis=1)
+    pred = None
+    if strategy == "predict_ar":
+        if predictions is None:
+            raise ValueError("predict_ar requires predictions")
+        pred = np.atleast_2d(np.asarray(predictions))
+        pred = np.broadcast_to(pred, (B, T))
+
+    head = np.zeros(B, dtype=np.int64)          # next queue slot to launch
+    running = np.zeros(B, dtype=bool)
+    remaining = np.zeros(B)
+    progress = np.zeros(B)
+    defer_until = np.full(B, -1, dtype=np.int64)
+    lost = np.zeros(B)
+    idle = np.zeros(B)
+    completed = np.zeros(B, dtype=np.int64)
+    makespan = np.full(B, T * dt, dtype=np.float64)
+    rows = np.arange(B)
+
+    for c in range(T):
+        up = avail[:, c]
+        # pool down: the running query loses all progress and is re-queued
+        # at the front (progress + remaining == its full duration)
+        drop = ~up & running
+        if drop.any():
+            lost[drop] += progress[drop]
+            head[drop] -= 1
+            dur[rows[drop], head[drop]] = progress[drop] + remaining[drop]
+            running[drop] = False
+            progress[drop] = 0.0
+        if pred is not None:
+            trig = up & (c > defer_until) & (pred[:, c] == 0)
+            defer_until[trig] = c + horizon_cycles
+        budget = np.where(up, dt, 0.0)
+        while True:
+            act = budget > 1e-9
+            if not act.any():
+                break
+            # rows with no running query: launch the next one, or idle out
+            need = act & ~running
+            if need.any():
+                blocked = head >= Q
+                if pred is not None:
+                    blocked = blocked | (c <= defer_until)
+                sit = need & blocked
+                idle[sit] += budget[sit]
+                budget[sit] = 0.0
+                pop = need & ~blocked
+                if pop.any():
+                    remaining[pop] = dur[rows[pop], head[pop]]
+                    head[pop] += 1
+                    progress[pop] = 0.0
+                    running[pop] = True
+            # advance the running queries by min(budget, remaining)
+            go = (budget > 1e-9) & running
+            if not go.any():
+                break  # every live row idled out this cycle
+            step = np.where(go, np.minimum(budget, remaining), 0.0)
+            remaining -= step
+            progress = progress + np.where(go, step, 0.0)
+            budget -= step
+            fin = go & (remaining <= 1e-9)
+            if fin.any():
+                completed[fin] += 1
+                running[fin] = False
+                progress[fin] = 0.0
+                last = fin & (head >= Q)
+                if last.any():
+                    makespan[last] = np.minimum(
+                        makespan[last], (c + 1) * dt - budget[last]
+                    )
+
+    return {
+        "lost_seconds": lost,
+        "idle_seconds": idle,
+        "completed": completed,
+        "total_queries": np.full(B, Q, dtype=np.int64),
+        "makespan_seconds": makespan,
+    }
+
+
+def _results_from_batch(
+    strategy: str, batch: Dict[str, np.ndarray]
+) -> List[SimResult]:
+    return [
+        SimResult(
+            strategy=strategy,
+            lost_seconds=float(batch["lost_seconds"][b]),
+            idle_seconds=float(batch["idle_seconds"][b]),
+            completed=int(batch["completed"][b]),
+            total_queries=int(batch["total_queries"][b]),
+            makespan_seconds=float(batch["makespan_seconds"][b]),
+        )
+        for b in range(len(batch["lost_seconds"]))
+    ]
+
+
+def _mean_result(strategy: str, batch: Dict[str, np.ndarray]) -> SimResult:
+    return SimResult(
+        strategy=strategy,
+        lost_seconds=float(batch["lost_seconds"].sum() / len(batch["lost_seconds"])),
+        idle_seconds=float(batch["idle_seconds"].sum() / len(batch["idle_seconds"])),
+        completed=int(round(batch["completed"].sum() / len(batch["completed"]))),
+        total_queries=int(
+            round(batch["total_queries"].sum() / len(batch["total_queries"]))
+        ),
+        makespan_seconds=float(
+            batch["makespan_seconds"].sum() / len(batch["makespan_seconds"])
+        ),
+    )
+
+
 def run_strategies(
     avail: np.ndarray,
     durations: Sequence[float],
     *,
     dt: float = 180.0,
+    predictions: Optional[np.ndarray] = None,
     predictor: Optional[PredictorFn] = None,
     horizon_cycles: int = 1,
     n_permutations: int = 5,
     seed: int = 0,
 ) -> List[SimResult]:
-    """Average each strategy over query-order permutations (§VI-E)."""
+    """Average each strategy over query-order permutations (§VI-E).
+
+    All permutations of one strategy replay as a single
+    :func:`replay_batch` call instead of a Python loop of scalar replays.
+    """
     rng = np.random.default_rng(seed)
+    avail = np.asarray(avail)
     durations = np.asarray(durations, dtype=np.float64)
+    pred = _predictions_array(predictions, predictor, avail.shape[-1])
     strategies = ["always_run", "sjf"]
-    if predictor is not None:
+    if pred is not None:
         strategies.append("predict_ar")
-    totals = {}
-    for _ in range(n_permutations):
-        perm = rng.permutation(durations)
-        for s in strategies:
-            r = replay(
-                avail, perm, strategy=s, dt=dt,
-                predictor=predictor, horizon_cycles=horizon_cycles,
+    perms = np.stack([rng.permutation(durations) for _ in range(n_permutations)])
+    out = []
+    for s in strategies:
+        batch = replay_batch(
+            np.broadcast_to(avail, (n_permutations, avail.shape[-1])),
+            perms,
+            strategy=s,
+            dt=dt,
+            predictions=pred,
+            horizon_cycles=horizon_cycles,
+        )
+        out.append(_mean_result(s, batch))
+    return out
+
+
+def run_fleet_strategies(
+    avail: np.ndarray,
+    durations: Sequence[float],
+    *,
+    dt: float = 180.0,
+    predictions: Optional[np.ndarray] = None,
+    horizon_cycles: int = 1,
+    n_permutations: int = 5,
+    seeds: Optional[Sequence[int]] = None,
+) -> Dict[str, List[SimResult]]:
+    """The §VI-E experiment in one shot: every (pool × permutation ×
+    strategy) trace replays inside three :func:`replay_batch` calls.
+
+    Args:
+      avail: (pools, T) per-pool availability traces.
+      durations: (Q,) query profile, permuted per pool/permutation.
+      predictions: (pools, T) per-pool per-cycle predicted labels;
+        enables the ``predict_ar`` strategy.
+      seeds: per-pool permutation seeds (defaults to the pool index, the
+        historical per-pool convention).
+
+    Returns ``{strategy: [per-pool permutation-averaged SimResult]}``.
+    """
+    avail = np.asarray(avail)
+    if avail.ndim != 2:
+        raise ValueError(f"avail must be (pools, T), got {avail.shape}")
+    pools, T = avail.shape
+    durations = np.asarray(durations, dtype=np.float64)
+    if seeds is None:
+        seeds = range(pools)
+    perm_rows = []
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        perm_rows.extend(rng.permutation(durations) for _ in range(n_permutations))
+    perms = np.stack(perm_rows)  # (pools * n_permutations, Q)
+    big_avail = np.repeat(avail, n_permutations, axis=0)
+    strategies = ["always_run", "sjf"]
+    big_pred = None
+    if predictions is not None:
+        big_pred = np.repeat(np.asarray(predictions), n_permutations, axis=0)
+        strategies.append("predict_ar")
+    out: Dict[str, List[SimResult]] = {}
+    for s in strategies:
+        batch = replay_batch(
+            big_avail,
+            perms,
+            strategy=s,
+            dt=dt,
+            predictions=big_pred,
+            horizon_cycles=horizon_cycles,
+        )
+        per_pool = []
+        for p in range(pools):
+            sl = slice(p * n_permutations, (p + 1) * n_permutations)
+            per_pool.append(
+                _mean_result(s, {k: v[sl] for k, v in batch.items()})
             )
-            totals[s] = r if s not in totals else totals[s] + r
-    return [totals[s].scaled(1.0 / n_permutations) for s in strategies]
+        out[s] = per_pool
+    return out

@@ -1,0 +1,308 @@
+"""Fleet campaign engine: scalar/fleet parity, batched provider API,
+terminator-delay leak accounting, Data Lake aggregation, pipeline glue."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FleetCollector,
+    FleetFeatureProcessor,
+    SimulatedProvider,
+    compute_features,
+    default_fleet,
+    run_campaign,
+    run_campaign_pipeline,
+)
+from repro.core.collector import DataLake, ProbeRecord
+from repro.core.lifecycle import RequestState
+
+
+def twin_providers(n_pools=8, seed=7, **kw):
+    fleet = default_fleet(n_pools, seed=seed)
+    return (
+        SimulatedProvider(fleet, seed=seed + 1, **kw),
+        SimulatedProvider(fleet, seed=seed + 1, **kw),
+    )
+
+
+class TestEngineParity:
+    """The parity anchor: identical S_t / running_t / interruption logs
+    when both engines are driven from the same per-pool RNG streams."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        pa, pb = twin_providers(10, seed=11)
+        ca = run_campaign(pa, duration=6 * 3600.0, engine="scalar")
+        cb = run_campaign(pb, duration=6 * 3600.0, engine="fleet")
+        return ca, cb
+
+    def test_success_counts_identical(self, pair):
+        ca, cb = pair
+        np.testing.assert_array_equal(ca.s, cb.s)
+
+    def test_running_counts_identical(self, pair):
+        ca, cb = pair
+        np.testing.assert_array_equal(ca.running, cb.running)
+        np.testing.assert_array_equal(ca.times, cb.times)
+
+    def test_interruption_logs_identical(self, pair):
+        ca, cb = pair
+        assert len(ca.interruptions) > 0
+        assert ca.interruptions == cb.interruptions  # pool, instance, time
+
+    def test_accounting_identical(self, pair):
+        ca, cb = pair
+        assert ca.api_calls == cb.api_calls
+        assert ca.probe_compute_cost == cb.probe_compute_cost == 0.0
+        assert ca.node_pool_cost == cb.node_pool_cost
+
+    def test_subset_pool_campaign_parity(self):
+        pa, pb = twin_providers(6, seed=3)
+        subset = pa.pool_ids[1:4]
+        ca = run_campaign(pa, pool_ids=subset, duration=2 * 3600.0, engine="scalar")
+        cb = run_campaign(pb, pool_ids=subset, duration=2 * 3600.0, engine="fleet")
+        np.testing.assert_array_equal(ca.s, cb.s)
+        np.testing.assert_array_equal(ca.running, cb.running)
+        assert ca.interruptions == cb.interruptions
+
+    def test_rate_limited_parity(self):
+        # all pools share one region and the budget covers only some of
+        # them per cycle; both engines must zero-out the same starved ones
+        from repro.core import PoolConfig
+
+        fleet = [
+            PoolConfig(instance_type=f"t{i}", region="r", base_capacity=30.0)
+            for i in range(8)
+        ]
+        pa = SimulatedProvider(fleet, seed=5, requests_per_minute_per_region=30)
+        pb = SimulatedProvider(fleet, seed=5, requests_per_minute_per_region=30)
+        ca = run_campaign(pa, duration=2 * 3600.0, engine="scalar")
+        cb = run_campaign(pb, duration=2 * 3600.0, engine="fleet")
+        assert (ca.s.sum(axis=1) == 0).any(), "expected starved pools"
+        np.testing.assert_array_equal(ca.s, cb.s)
+        assert ca.api_calls == cb.api_calls
+
+    def test_unknown_engine_rejected(self):
+        pa, _ = twin_providers(2)
+        with pytest.raises(ValueError):
+            run_campaign(pa, duration=3600.0, engine="warp")
+
+
+class TestTerminatorDelayLeak:
+    """Slow terminator ⇒ probes reach RUNNING ⇒ nonzero probe instance
+    cost — the §V failure mode, at both engine scales, with matching
+    cost accounting."""
+
+    DELAY = 30.0
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        pa, pb = twin_providers(6, seed=21, provisioning_duration=8.0)
+        ca = run_campaign(
+            pa, duration=2 * 3600.0, engine="scalar", terminator_delay=self.DELAY
+        )
+        cb = run_campaign(
+            pb, duration=2 * 3600.0, engine="fleet", terminator_delay=self.DELAY
+        )
+        return ca, cb
+
+    def test_leak_bills_on_both_engines(self, pair):
+        ca, cb = pair
+        assert ca.probe_compute_cost > 0.0
+        assert cb.probe_compute_cost > 0.0
+
+    def test_cost_accounting_matches(self, pair):
+        ca, cb = pair
+        assert ca.probe_compute_cost == pytest.approx(
+            cb.probe_compute_cost, rel=1e-12
+        )
+
+    def test_signal_matrices_still_identical(self, pair):
+        ca, cb = pair
+        np.testing.assert_array_equal(ca.s, cb.s)
+        np.testing.assert_array_equal(ca.running, cb.running)
+        assert ca.interruptions == cb.interruptions
+
+    def test_fast_terminator_never_bills(self):
+        pa, pb = twin_providers(6, seed=21, provisioning_duration=8.0)
+        ca = run_campaign(pa, duration=3600.0, engine="scalar")
+        cb = run_campaign(pb, duration=3600.0, engine="fleet")
+        assert ca.probe_compute_cost == cb.probe_compute_cost == 0.0
+
+
+class TestBatchedProviderAPI:
+    def test_step_batch_advances_every_pool(self):
+        prov, _ = twin_providers(5, seed=2)
+        t0, ticks0 = prov.now, prov._tick_count
+        prov.step_batch()
+        assert prov.now == t0 + prov.tick
+        assert prov._tick_count == ticks0 + 1
+
+    def test_batched_submit_matches_scalar_submit(self):
+        pa, pb = twin_providers(6, seed=9)
+        idx = pa.pool_index(pa.pool_ids)
+        counts = pa.submit_spot_requests(idx, n=10)
+        for i, pid in enumerate(pb.pool_ids):
+            reqs = pb.submit_spot_request(pid, n=10)
+            accepted = sum(r.state is RequestState.PROVISIONING for r in reqs)
+            assert counts[i] == accepted
+
+    def test_batched_submit_leaves_state_untouched(self):
+        prov, _ = twin_providers(4, seed=1)
+        idx = prov.pool_index(prov.pool_ids)
+        counts = prov.submit_spot_requests(idx, n=10)
+        assert counts.sum() > 0
+        assert prov.n_provisioning.sum() == 0  # scooted inside the call
+
+    def test_held_cohorts_cancel_cleanly(self):
+        prov, _ = twin_providers(4, seed=1)
+        idx = prov.pool_index(prov.pool_ids)
+        counts, cohorts = prov.submit_spot_requests(idx, n=10, hold=True)
+        assert prov.n_provisioning.sum() == counts.sum() > 0
+        prov.cancel_cohorts(cohorts)
+        assert prov.n_provisioning.sum() == 0
+        prov.advance(600.0)
+        assert prov.probe_instance_cost() == 0.0
+
+    def test_held_cohorts_leak_after_provisioning_duration(self):
+        prov, _ = twin_providers(4, seed=1, provisioning_duration=8.0)
+        idx = prov.pool_index(prov.pool_ids)
+        counts, cohorts = prov.submit_spot_requests(idx, n=10, hold=True)
+        prov.advance(prov.now + 30.0)  # > provisioning_duration: leak
+        prov.cancel_cohorts(cohorts)   # too late — already RUNNING
+        assert prov.running_counts().sum() == counts.sum()
+        prov.advance(prov.now + 60.0)
+        assert prov.probe_instance_cost() > 0.0
+
+
+class TestDataLake:
+    def records(self):
+        return [
+            ProbeRecord(0.0, "a", True, 0),
+            ProbeRecord(0.0, "a", True, 0),
+            ProbeRecord(0.0, "a", False, 1),
+            ProbeRecord(0.0, "b", True, 1),
+            ProbeRecord(0.0, "ghost", True, 0),   # unknown pool: dropped
+            ProbeRecord(0.0, "b", True, 99),      # cycle out of range: dropped
+        ]
+
+    def reference_counts(self, records, pool_ids, n_cycles):
+        # the historical per-record loop, kept as the oracle
+        index = {p: i for i, p in enumerate(pool_ids)}
+        s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
+        for rec in records:
+            if rec.accepted and rec.cycle < n_cycles and rec.pool_id in index:
+                s[index[rec.pool_id], rec.cycle] += 1
+        return s
+
+    def test_vectorized_matches_loop(self):
+        lake = DataLake()
+        for rec in self.records():
+            lake.append(rec)
+        got = lake.success_counts(["a", "b"], 3)
+        np.testing.assert_array_equal(
+            got, self.reference_counts(self.records(), ["a", "b"], 3)
+        )
+
+    def test_vectorized_matches_loop_randomized(self, rng):
+        pools = [f"p{i}" for i in range(7)]
+        recs = [
+            ProbeRecord(
+                float(t),
+                rng.choice(pools + ["nope"]),
+                bool(rng.random() < 0.7),
+                int(rng.integers(0, 30)),
+            )
+            for t in range(500)
+        ]
+        lake = DataLake()
+        for rec in recs:
+            lake.append(rec)
+        np.testing.assert_array_equal(
+            lake.success_counts(pools, 20),
+            self.reference_counts(recs, pools, 20),
+        )
+
+    def test_retention_flag_caps_objects(self):
+        on, off = DataLake(), DataLake(retain_records=False)
+        for rec in self.records():
+            on.append(rec)
+            off.append(rec)
+        assert len(on.records) == len(on) == 6
+        assert len(off.records) == 0 and len(off) == 6
+        np.testing.assert_array_equal(
+            on.success_counts(["a", "b"], 3), off.success_counts(["a", "b"], 3)
+        )
+
+    def test_collector_retention_off_keeps_cost_accounting(self):
+        pa, pb = twin_providers(4, seed=13, provisioning_duration=8.0)
+        ca = run_campaign(
+            pa, duration=3600.0, engine="scalar", terminator_delay=30.0
+        )
+        cb = run_campaign(
+            pb, duration=3600.0, engine="scalar", terminator_delay=30.0,
+            retain_records=False,
+        )
+        np.testing.assert_array_equal(ca.s, cb.s)
+        assert ca.probe_compute_cost == pytest.approx(cb.probe_compute_cost)
+        assert cb.probe_compute_cost > 0.0
+
+
+class TestCostScoping:
+    def test_second_campaign_excludes_prior_leaks(self):
+        # leaked probes from campaign 1 keep billing on the provider, but
+        # campaign 2's accounting must not inherit them (both engines)
+        for engine in ("scalar", "fleet"):
+            prov, _ = twin_providers(4, seed=23, provisioning_duration=8.0)
+            c1 = run_campaign(
+                prov, duration=3600.0, engine=engine, terminator_delay=30.0
+            )
+            assert c1.probe_compute_cost > 0.0
+            c2 = run_campaign(prov, duration=3600.0, engine=engine)
+            assert c2.probe_compute_cost == 0.0, engine
+
+
+class TestCampaignPipelineGlue:
+    def test_on_cycle_timestamps_match_across_engines(self):
+        # with a slow terminator the fleet engine advances the clock
+        # mid-cycle; the hook must still see the measurement timestamp
+        seen = {}
+        for engine in ("scalar", "fleet"):
+            prov, _ = twin_providers(4, seed=29, provisioning_duration=8.0)
+            stamps = []
+            res = run_campaign(
+                prov, duration=3600.0, engine=engine, terminator_delay=30.0,
+                on_cycle=lambda c, t, s: stamps.append(t),
+            )
+            np.testing.assert_array_equal(np.asarray(stamps), res.times)
+            seen[engine] = stamps
+        assert seen["scalar"] == seen["fleet"]
+
+    def test_campaign_streams_into_fleet_processor(self):
+        prov, _ = twin_providers(6, seed=17)
+        result, proc = run_campaign_pipeline(
+            prov,
+            duration=4 * 3600.0,
+            predict_fn=lambda x: x[:, 0],  # score = SR
+            window_minutes=30.0,
+        )
+        t = result.s.shape[1]
+        assert proc.update_ops == t            # one batched update per cycle
+        assert proc.predict_calls == t         # ONE predict_proba per cycle
+        # streamed features == offline replay of the campaign's S matrix
+        expect = compute_features(result.s, result.n, 30.0, result.interval / 60.0)
+        w = proc.window_cycles
+        np.testing.assert_array_equal(
+            proc.table.features[:, proc.table._order()], expect[:, t - w:, :]
+        )
+
+    def test_existing_processor_is_reused(self):
+        prov, _ = twin_providers(3, seed=19)
+        proc = FleetFeatureProcessor(
+            prov.pool_ids, n_requests=10, window_minutes=30.0, dt_minutes=3.0
+        )
+        result, got = run_campaign_pipeline(
+            prov, processor=proc, duration=3600.0
+        )
+        assert got is proc
+        assert proc.update_ops == result.s.shape[1]

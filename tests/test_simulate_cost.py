@@ -8,6 +8,8 @@ from repro.core import (
     fraction_within,
     proximities,
     replay,
+    replay_batch,
+    run_fleet_strategies,
     run_strategies,
     tpcds_profile,
 )
@@ -15,6 +17,7 @@ from repro.core.provider import InterruptionEvent
 from repro.core.workloads import (
     TPCDS_MAX_SECONDS,
     TPCDS_MIN_SECONDS,
+    TPCDS_N_QUERIES,
     TPCDS_TOTAL_SECONDS,
 )
 
@@ -25,7 +28,19 @@ class TestWorkload:
         assert len(d) == 99
         assert d.min() == TPCDS_MIN_SECONDS
         assert d.max() == TPCDS_MAX_SECONDS
-        assert abs(d.sum() - TPCDS_TOTAL_SECONDS) < 1.0
+        assert abs(d.sum() - TPCDS_TOTAL_SECONDS) < 1e-6
+
+    @pytest.mark.parametrize("seed", range(32))
+    def test_profile_invariants_hold_for_every_seed(self, seed):
+        """Property: sum / min / max / count are exact, not approximate —
+        the clip-then-rescale loop must converge without re-violating the
+        clip bounds on its final iteration."""
+        d = tpcds_profile(seed)
+        assert len(d) == TPCDS_N_QUERIES
+        assert d.min() == TPCDS_MIN_SECONDS
+        assert d.max() == TPCDS_MAX_SECONDS
+        assert (d >= TPCDS_MIN_SECONDS).all() and (d <= TPCDS_MAX_SECONDS).all()
+        assert abs(d.sum() - TPCDS_TOTAL_SECONDS) < 1e-6, d.sum()
 
 
 class TestReplay:
@@ -48,18 +63,17 @@ class TestReplay:
         assert r.lost_seconds == 0.0  # nothing ever started
 
     def test_predict_ar_defers_and_avoids_loss(self):
-        # pool: up 5 cycles, down 5, up 10 — oracle predictor
+        # pool: up 5 cycles, down 5, up 10 — oracle prediction array
         avail = np.concatenate([np.ones(5), np.zeros(5), np.ones(10)]).astype(int)
-
-        def oracle(c):
-            h = 2
-            future = avail[c + 1 : c + 1 + h]
-            return int(future.all())
+        h = 2
+        oracle = np.array(
+            [int(avail[c + 1 : c + 1 + h].all()) for c in range(len(avail))]
+        )
 
         base = replay(avail, [400.0] * 3, strategy="always_run", dt=180.0)
         pred = replay(
             avail, [400.0] * 3, strategy="predict_ar",
-            predictor=oracle, horizon_cycles=2, dt=180.0,
+            predictions=oracle, horizon_cycles=2, dt=180.0,
         )
         assert pred.lost_seconds < base.lost_seconds
         assert pred.idle_seconds > 0.0  # deferral shows up as idle time
@@ -76,6 +90,62 @@ class TestReplay:
         assert names == {"always_run", "sjf"}
         for r in results:
             assert r.total_queries == 20
+
+
+class TestReplayBatch:
+    """The vectorized lock-step replay is bit-identical to the scalar
+    reference, row by row, for every strategy."""
+
+    @pytest.mark.parametrize("strategy", ["always_run", "sjf", "predict_ar"])
+    def test_batch_matches_scalar_rows(self, strategy, rng):
+        T, Q, B = 48, 7, 16
+        avail = (rng.random((B, T)) > 0.25).astype(int)
+        dur = rng.uniform(5.0, 700.0, size=(B, Q))
+        pred = (rng.random((B, T)) > 0.3).astype(int)
+        batch = replay_batch(
+            avail, dur, strategy=strategy, predictions=pred, horizon_cycles=2
+        )
+        for b in range(B):
+            r = replay(
+                avail[b], dur[b], strategy=strategy,
+                predictions=pred[b], horizon_cycles=2,
+            )
+            assert batch["lost_seconds"][b] == r.lost_seconds
+            assert batch["idle_seconds"][b] == r.idle_seconds
+            assert batch["completed"][b] == r.completed
+            assert batch["makespan_seconds"][b] == r.makespan_seconds
+            assert batch["total_queries"][b] == r.total_queries
+
+    def test_broadcast_single_trace(self):
+        avail = np.ones(6, dtype=int)
+        batch = replay_batch(avail, np.array([[100.0, 50.0], [700.0, 600.0]]))
+        assert batch["completed"].tolist() == [2, 1]
+
+    def test_predict_ar_requires_predictions(self):
+        with pytest.raises(ValueError):
+            replay_batch(np.ones(4), [10.0], strategy="predict_ar")
+
+    def test_fleet_strategies_one_shot(self, rng):
+        """pools × permutations × strategies in three batched calls,
+        matching per-pool run_strategies driven with the pool's seed."""
+        pools, T = 3, 60
+        avail = (rng.random((pools, T)) > 0.2).astype(int)
+        pred = (rng.random((pools, T)) > 0.3).astype(int)
+        dur = tpcds_profile()[:12]
+        out = run_fleet_strategies(
+            avail, dur, predictions=pred, horizon_cycles=2, n_permutations=2
+        )
+        assert set(out) == {"always_run", "sjf", "predict_ar"}
+        for p in range(pools):
+            expect = run_strategies(
+                avail[p], dur, predictions=pred[p], horizon_cycles=2,
+                n_permutations=2, seed=p,
+            )
+            for r in expect:
+                got = out[r.strategy][p]
+                assert got.lost_seconds == pytest.approx(r.lost_seconds)
+                assert got.idle_seconds == pytest.approx(r.idle_seconds)
+                assert got.completed == r.completed
 
 
 class TestCost:
