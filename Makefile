@@ -1,7 +1,7 @@
 # Tier-1 verification — identical to what CI runs.
-#   make verify   : full test suite + pipeline/campaign-throughput smokes
+#   make verify   : full test suite + pipeline/campaign/replay-throughput smokes
 #   make test     : test suite only
-#   make bench    : full throughput benchmarks (assert >= 50x / >= 20x)
+#   make bench    : full throughput benchmarks (assert >= 50x / >= 20x / >= 3x)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
@@ -11,6 +11,7 @@ export PYTHONPATH
 verify: test
 	python benchmarks/pipeline_throughput.py --smoke
 	python benchmarks/campaign_throughput.py --smoke
+	python benchmarks/replay_throughput.py --smoke
 
 test:
 	python -m pytest -x -q
@@ -18,3 +19,4 @@ test:
 bench:
 	python benchmarks/pipeline_throughput.py
 	python benchmarks/campaign_throughput.py
+	python benchmarks/replay_throughput.py

@@ -25,7 +25,7 @@ from .common import paper_campaign
 PAPER = {"reduction_3min": 0.27, "reduction_15min": 0.46}
 
 
-def run(horizons_min=(3, 15), n_permutations=5):
+def run(horizons_min=(3, 15), n_permutations=5, engine="auto"):
     c = paper_campaign()
     dt_min = c.interval / 60.0
     durations = tpcds_profile()
@@ -43,7 +43,8 @@ def run(horizons_min=(3, 15), n_permutations=5):
 
         # one model call per pool over its whole trace (the batched
         # predictor contract), then every (pool x permutation x strategy)
-        # trace replays inside three replay_batch calls
+        # trace replays inside three replay_batch calls — through the
+        # scan engine by default (engine="auto")
         predictions = np.stack(
             [
                 model.predict(
@@ -57,7 +58,7 @@ def run(horizons_min=(3, 15), n_permutations=5):
         per_pool = run_fleet_strategies(
             avail[test_pools], durations, dt=c.interval,
             predictions=predictions, horizon_cycles=h_cycles,
-            n_permutations=n_permutations, seeds=test_pools,
+            n_permutations=n_permutations, seeds=test_pools, engine=engine,
         )
         totals = {s: sum(r.lost_seconds for r in rs) for s, rs in per_pool.items()}
         idle = {s: sum(r.idle_seconds for r in rs) for s, rs in per_pool.items()}

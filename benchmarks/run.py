@@ -22,6 +22,7 @@ from . import (
     fig8_horizon,
     fig9_simulation,
     pipeline_throughput,
+    replay_throughput,
     roofline_report,
     table1_agreement,
 )
@@ -50,6 +51,11 @@ BENCHES = [
     ("campaign_throughput", campaign_throughput.run,
      lambda r: (f"fleet/scalar={r['speedup']}x "
                 f"parity={r['parity_identical']}")),
+    ("replay_throughput", replay_throughput.run,
+     lambda r: (f"scan/numpy={r['speedup_vs_numpy']}x "
+                f"scan/loop={r['speedup_vs_python_loop']}x "
+                f"parity={r['parity_atol0']} "
+                f"fig9_identical={r['fig9_simresults_identical']}")),
 ]
 
 

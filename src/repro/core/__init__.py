@@ -45,6 +45,7 @@ from .predictor import (
 )
 from .provider import (
     InterruptionEvent,
+    InterruptionLog,
     PoolConfig,
     RateLimitError,
     SimulatedProvider,
@@ -73,7 +74,7 @@ __all__ = [
     "run_campaign_pipeline",
     "MODEL_REGISTRY", "SEQUENCE_MODELS", "evaluate", "fit_predictor", "make_model",
     "batched_predict_fn", "pointwise_predict_fn",
-    "InterruptionEvent", "PoolConfig", "RateLimitError",
+    "InterruptionEvent", "InterruptionLog", "PoolConfig", "RateLimitError",
     "SimulatedProvider", "default_fleet",
     "SimResult", "replay", "replay_batch", "run_strategies",
     "run_fleet_strategies",

@@ -19,7 +19,32 @@ __all__ = ["proximities", "proximity_cdf", "fraction_within"]
 
 
 def proximities(events: Iterable[InterruptionEvent]) -> np.ndarray:
-    """Nearest co-interrupt gap (seconds) per event, pools with >= 2 events."""
+    """Nearest co-interrupt gap (seconds) per event, pools with >= 2 events.
+
+    Columnar inputs (an ``InterruptionLog`` / campaign snapshot) take a
+    vectorised sort-and-diff path; any other iterable of events falls
+    back to the per-pool dict walk.  Both produce the same multiset of
+    gaps (ordering differs; every consumer aggregates).
+    """
+    columns = getattr(events, "columns", None)
+    if columns is not None:
+        pool, _, time = columns
+        if len(pool) == 0:
+            return np.asarray([], dtype=np.float64)
+        order = np.lexsort((time, pool))
+        p, ts = pool[order], time[order]
+        same_prev = np.zeros(len(ts), dtype=bool)
+        same_prev[1:] = p[1:] == p[:-1]
+        same_next = np.zeros(len(ts), dtype=bool)
+        same_next[:-1] = same_prev[1:]
+        gap = np.empty(len(ts))
+        gap[1:] = ts[1:] - ts[:-1]
+        prev_gap = np.where(same_prev, gap, np.inf)
+        next_gap = np.full(len(ts), np.inf)
+        next_gap[:-1] = np.where(same_next[:-1], gap[1:], np.inf)
+        nearest = np.minimum(prev_gap, next_gap)
+        keep = same_prev | same_next        # pools with >= 2 events only
+        return nearest[keep]
     by_pool: Dict[str, List[float]] = {}
     for ev in events:
         by_pool.setdefault(ev.pool_id, []).append(ev.time)

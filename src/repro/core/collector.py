@@ -294,7 +294,7 @@ class CampaignResult:
     running: np.ndarray        # (pools, T) actual running node counts
     n: int                     # requests per measurement point
     interval: float            # collection interval (seconds)
-    interruptions: list        # InterruptionEvent list
+    interruptions: object      # InterruptionLog snapshot (lazy event view)
     probe_compute_cost: float  # $ billed to probes (≈ 0 by design)
     node_pool_cost: float      # $ billed to ground-truth running nodes
     api_calls: int
@@ -388,7 +388,7 @@ def run_campaign(
         running=running,
         n=n_requests,
         interval=interval,
-        interruptions=list(provider.interruptions),
+        interruptions=provider.interruptions.snapshot(),
         probe_compute_cost=probe_cost,
         node_pool_cost=node_cost,
         api_calls=provider.api_calls,

@@ -33,6 +33,15 @@ def binary_availability(running: np.ndarray, n: int) -> np.ndarray:
     return (running >= n).astype(np.int32)
 
 
+def _pad_max(dtype):
+    """A value no window minimum can take — the block-padding neutral."""
+    if np.issubdtype(dtype, np.floating):
+        return np.inf
+    if np.issubdtype(dtype, np.bool_):
+        return True
+    return np.iinfo(dtype).max
+
+
 def horizon_labels(avail: np.ndarray, horizon_cycles: int) -> np.ndarray:
     """Availability sustained over the next ``horizon_cycles`` cycles.
 
@@ -44,6 +53,13 @@ def horizon_labels(avail: np.ndarray, horizon_cycles: int) -> np.ndarray:
       labels of shape ``(..., T - h)``: ``y[..., t] = min(avail[..., t+1 :
       t+h+1])`` for ``h > 0`` — 1 iff the pool stays fully available
       through the horizon.
+
+    The sliding future-minimum runs in O(T) independent of ``h`` (the
+    prefix/suffix block-minimum decomposition: every window of length
+    ``h`` spans at most two ``h``-blocks, so its minimum is
+    ``min(suffix-min of the left block, prefix-min of the right block)``)
+    instead of stacking ``h`` shifted copies — 60-minute horizons on long
+    fleet traces no longer allocate ``h × T`` intermediates.
     """
     avail = np.asarray(avail)
     h = int(horizon_cycles)
@@ -54,6 +70,37 @@ def horizon_labels(avail: np.ndarray, horizon_cycles: int) -> np.ndarray:
     t_total = avail.shape[-1]
     if h >= t_total:
         raise ValueError(f"horizon {h} >= trace length {t_total}")
-    # sliding min over the future window (t+1 .. t+h]
+    x = avail[..., 1:]                       # windows cover (t, t + h]
+    n = x.shape[-1]
+    n_out = t_total - h                      # = n - h + 1 windows
+    if h == 1:
+        return x.copy()
+    n_blocks = -(-n // h)
+    pad = n_blocks * h - n
+    if pad:
+        fill = np.full(x.shape[:-1] + (pad,), _pad_max(x.dtype), dtype=x.dtype)
+        x = np.concatenate([x, fill], axis=-1)
+    blocks = x.reshape(x.shape[:-1] + (n_blocks, h))
+    prefix = np.minimum.accumulate(blocks, axis=-1)
+    suffix = np.minimum.accumulate(blocks[..., ::-1], axis=-1)[..., ::-1]
+    prefix = prefix.reshape(x.shape)
+    suffix = suffix.reshape(x.shape)
+    # window [t, t+h-1]: suffix-min of its head block piece + prefix-min of
+    # its tail block piece
+    return np.minimum(suffix[..., :n_out], prefix[..., h - 1 : h - 1 + n_out])
+
+
+def _horizon_labels_stacked(avail: np.ndarray, horizon_cycles: int) -> np.ndarray:
+    """O(h·T) stacked-copy form — kept as the regression oracle for
+    :func:`horizon_labels` (bit-identical output)."""
+    avail = np.asarray(avail)
+    h = int(horizon_cycles)
+    if h < 0:
+        raise ValueError("horizon must be >= 0")
+    if h == 0:
+        return avail.copy()
+    t_total = avail.shape[-1]
+    if h >= t_total:
+        raise ValueError(f"horizon {h} >= trace length {t_total}")
     stacked = np.stack([avail[..., 1 + k : t_total - h + 1 + k] for k in range(h)], 0)
     return stacked.min(axis=0)

@@ -64,6 +64,7 @@ from .rng import (
 __all__ = [
     "PoolConfig",
     "InterruptionEvent",
+    "InterruptionLog",
     "RateLimitError",
     "SimulatedProvider",
     "default_fleet",
@@ -127,6 +128,117 @@ class InterruptionEvent:
     pool_id: str
     instance_id: int
     time: float                           # continuous timestamp (seconds)
+
+
+class InterruptionLog:
+    """Struct-of-arrays interruption event log (ROADMAP event-log
+    compaction): three growable columns — pool index (int64), instance
+    uid (int64), timestamp (float64) — instead of one Python object per
+    event, so multi-day 10^5-pool campaigns stay compact and the
+    co-interrupt analysis can run columnar.
+
+    The log is a lazy *sequence view* of :class:`InterruptionEvent`:
+    ``log[i]`` / ``iter(log)`` materialise events on demand, ``len`` and
+    ``==`` (vs another log or an event list) work unchanged, so existing
+    consumers (``cointerrupt``, tests, examples) need no changes.
+    """
+
+    __slots__ = ("_pool_ids", "_pool", "_uid", "_time", "_n")
+
+    def __init__(self, pool_ids: Sequence[str], _capacity: int = 256):
+        self._pool_ids = list(pool_ids)
+        self._pool = np.empty(_capacity, dtype=np.int64)
+        self._uid = np.empty(_capacity, dtype=np.int64)
+        self._time = np.empty(_capacity, dtype=np.float64)
+        self._n = 0
+
+    # -- write path (provider-internal) -----------------------------------
+
+    def _grow_to(self, need: int) -> None:
+        cap = len(self._pool)
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        for name in ("_pool", "_uid", "_time"):
+            old = getattr(self, name)
+            new = np.empty(cap, dtype=old.dtype)
+            new[: self._n] = old[: self._n]
+            setattr(self, name, new)
+
+    def append_sweep(self, pool: int, uids, times) -> None:
+        """Record one reclamation sweep (k events of one pool) columnar."""
+        uids = np.asarray(uids, dtype=np.int64)
+        times = np.asarray(times, dtype=np.float64)
+        k = len(uids)
+        self._grow_to(self._n + k)
+        sl = slice(self._n, self._n + k)
+        self._pool[sl] = pool
+        self._uid[sl] = uids
+        self._time[sl] = times
+        self._n += k
+
+    # -- columnar read path ------------------------------------------------
+
+    @property
+    def columns(self):
+        """(pool_idx, uid, time) trimmed column views."""
+        n = self._n
+        return self._pool[:n], self._uid[:n], self._time[:n]
+
+    @property
+    def pool_ids(self) -> List[str]:
+        return self._pool_ids
+
+    def snapshot(self) -> "InterruptionLog":
+        """A frozen copy (what :class:`CampaignResult` stores)."""
+        out = InterruptionLog(self._pool_ids, _capacity=max(self._n, 1))
+        pool, uid, time = self.columns
+        out.append_sweep(0, uid, time)      # bulk copy, then fix pools
+        out._pool[: self._n] = pool
+        return out
+
+    # -- lazy InterruptionEvent sequence view ------------------------------
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _event(self, i: int) -> InterruptionEvent:
+        return InterruptionEvent(
+            self._pool_ids[int(self._pool[i])],
+            int(self._uid[i]),
+            float(self._time[i]),
+        )
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._event(j) for j in range(*i.indices(self._n))]
+        if i < 0:
+            i += self._n
+        if not 0 <= i < self._n:
+            raise IndexError(i)
+        return self._event(i)
+
+    def __iter__(self):
+        return (self._event(i) for i in range(self._n))
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, InterruptionLog):
+            if self._n != other._n:
+                return False
+            a, b = self.columns, other.columns
+            return (
+                bool(np.array_equal(a[1], b[1]))
+                and bool(np.array_equal(a[2], b[2]))
+                and [self._pool_ids[p] for p in a[0]]
+                == [other._pool_ids[p] for p in b[0]]
+            )
+        if isinstance(other, (list, tuple)):
+            return list(self) == list(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"InterruptionLog(n={self._n}, pools={len(self._pool_ids)})"
 
 
 @dataclasses.dataclass
@@ -233,7 +345,7 @@ class SimulatedProvider:
         self._cohorts: List[_Cohort] = []
         self._req_cohort: Dict[int, _Cohort] = {}
         self._probe_instances: List[_Instance] = []
-        self.interruptions: List[InterruptionEvent] = []
+        self.interruptions = InterruptionLog(self.pool_ids)
         self._provision_listeners: List[Callable[[SpotRequest], None]] = []
 
         # -- per-region rate limiting (sliding 60 s window) ----------------
@@ -561,14 +673,16 @@ class SimulatedProvider:
             keyed_exponential(16.0, ud),
             keyed_uniform_between(60.0, 600.0, ud),
         )
-        pool_id = self.configs[p].pool_id
+        uids = np.empty(k, dtype=np.int64)
+        times = self.now + delay[:k]
         for j in range(k):
             inst = fifo.popleft()  # oldest first: sweeps reclaim in order
-            t = self.now + float(delay[j])
+            t = float(times[j])
             inst.end = t
             if inst.obj is not None:
                 inst.obj.transition(RequestState.INTERRUPTED, t)
-            self.interruptions.append(InterruptionEvent(pool_id, inst.uid, t))
+            uids[j] = inst.uid
+        self.interruptions.append_sweep(p, uids, times)
         self.n_running[p] -= k
         # A sweep that actually reclaimed nodes means the pool has zero
         # spare capacity: new admissions black out until the margin decays

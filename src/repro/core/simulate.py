@@ -19,15 +19,47 @@ later.  Metrics: total lost computation, idle-while-available time, and
 makespan.  The experiment repeats each run over random permutations of the
 query queue and averages (§VI-E).
 
-Two implementations share these semantics exactly:
+The replay contract (scan form)
+-------------------------------
+
+Every implementation advances one *closed-form state transition per
+cycle* — there is no data-dependent inner drain loop.  Per trace row the
+carried state is ``(head, front, running, remaining, progress,
+defer_until, lost, idle, completed, makespan)`` and queue consumption is
+resolved against the row's *prefix-sum of query durations* ``cum``
+(``cum[j] = durations[:j].sum()``, a strict left-to-right ``np.cumsum``
+fold shared verbatim by every backend):
+
+* **down cycle** — a running query loses its progress and is re-queued at
+  the front with value ``progress + remaining`` (the ``front`` register;
+  the duration array itself is never mutated).
+* **up cycle** — after the Predict-AR deferral update, budget ``b = dt``:
+
+  - *phase A*: the in-hand item (the running query, or the re-queued
+    front when launching is not deferred) advances by ``min(b, x)``;
+  - *phase B*: with leftover budget and an undeferred queue, the number
+    of whole queries that finish this cycle is the prefix count
+    ``k = #{j >= 1 : cum[head+j] <= cum[head] + (b + 1e-9)}`` (a
+    searchsorted / windowed count — never an unrolled walk), the budget
+    afterwards is ``max(b - (cum[head+k] - cum[head]), 0)``, and at most
+    one partial launch carries ``(cum[head+k+1] - cum[head+k]) - b`` of
+    remaining work into the next cycle;
+  - *phase C*: leftover budget with nothing runnable is idle time, and
+    the completion that empties the queue sets ``makespan =
+    (c + 1) * dt - b_left``.
+
+All float arithmetic is pinned by this contract (every backend executes
+the same IEEE-754 double ops in the same order), which is what makes the
+four implementations below **bit-identical row by row**:
 
 * :func:`replay` — the scalar reference: one trace, one strategy, a plain
-  Python event loop (readable, and the parity oracle for the batch path).
-* :func:`replay_batch` — the fleet-scale path: a ``(B, T)`` stack of
-  traces advances in lock-step with all per-trace state (queue head,
-  running query, deferral clock, metrics) in stacked arrays, so thousands
-  of (pool × permutation) traces replay in one call.  Results are
-  bit-identical to :func:`replay` row by row.
+  Python cycle loop (readable; the semantic spec).
+* :func:`replay_batch` — a thin dispatcher over the batched engines:
+  ``engine="numpy"`` is the vectorised per-cycle numpy loop (the parity
+  oracle and benchmark baseline), ``engine="scan"`` is the
+  ``lax.scan`` form (``repro.kernels.replay_scan.ref``, the fast CPU
+  path), ``engine="kernel"`` is the chunked Pallas kernel, and
+  ``engine="auto"`` picks per backend (Pallas on TPU, scan elsewhere).
 
 :func:`run_strategies` (one trace, permutation-averaged) and
 :func:`run_fleet_strategies` (pools × permutations × strategies in one
@@ -40,7 +72,7 @@ contract of the fleet pipeline.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -56,6 +88,11 @@ __all__ = [
 PredictorFn = Callable[[int], int]
 
 STRATEGIES = ("always_run", "sjf", "predict_ar")
+ENGINES = ("auto", "numpy", "scan", "kernel")
+
+#: completion slack shared by every backend (a query whose remaining work
+#: is within EPS of the budget counts as finished this cycle)
+EPS = 1e-9
 
 
 @dataclasses.dataclass
@@ -110,7 +147,7 @@ def replay(
     predictor: Optional[PredictorFn] = None,
     horizon_cycles: int = 1,
 ) -> SimResult:
-    """Replay one trace with one strategy (scalar reference).
+    """Replay one trace with one strategy (the scalar contract reference).
 
     Args:
       avail: (T,) binary pool availability per collection cycle.
@@ -122,52 +159,86 @@ def replay(
       horizon_cycles: deferral length when the predictor flags risk.
     """
     avail = np.asarray(avail).astype(bool)
-    queue: List[float] = list(durations)
+    dur = np.asarray(durations, dtype=np.float64)
     if strategy == "sjf":
-        queue.sort()
+        dur = np.sort(dur)
     pred = _predictions_array(predictions, predictor, len(avail))
-    if strategy == "predict_ar" and pred is None:
+    use_pred = strategy == "predict_ar"
+    if use_pred and pred is None:
         raise ValueError("predict_ar requires predictions")
 
     t_cycles = len(avail)
+    q = len(dur)
+    cum = np.concatenate([[0.0], np.cumsum(dur)])  # cum[j] = dur[:j].sum()
+
+    head = 0
+    front = 0.0                 # re-queued (interrupted) query, if any
+    has_front = False
+    running = False
+    remaining = 0.0
+    progress = 0.0
+    defer_until = -1
     lost = 0.0
     idle = 0.0
     completed = 0
     makespan = t_cycles * dt
-    remaining: Optional[float] = None    # remaining work of running query
-    progress = 0.0                        # work done on the running query
-    defer_until_cycle = -1
 
     for c in range(t_cycles):
         if not avail[c]:
-            # pool down for this cycle: running query loses all progress
-            if remaining is not None:
+            if running:         # running query loses all progress; retry
                 lost += progress
-                queue.insert(0, progress + remaining)  # retry full query
-                remaining, progress = None, 0.0
+                front = progress + remaining
+                has_front = True
+                running = False
+                progress = 0.0
             continue
 
-        if strategy == "predict_ar" and c > defer_until_cycle:
-            if pred[c] == 0:  # forecast: will NOT stay available
-                defer_until_cycle = c + horizon_cycles
+        deferred = False
+        if use_pred:
+            if c > defer_until and pred[c] == 0:
+                defer_until = c + horizon_cycles
+            deferred = c <= defer_until
 
-        budget = dt
-        while budget > 1e-9:
-            if remaining is None:
-                deferred = strategy == "predict_ar" and c <= defer_until_cycle
-                if not queue or deferred:
-                    idle += budget
-                    break
-                remaining, progress = queue.pop(0), 0.0
-            step = min(budget, remaining)
-            remaining -= step
-            progress += step
-            budget -= step
-            if remaining <= 1e-9:
+        b = dt
+        # -- phase A: the in-hand item ------------------------------------
+        launch_front = (not running) and has_front and not deferred
+        if running or launch_front:
+            x = remaining if running else front
+            step = min(b, x)
+            xr = x - step
+            progress = (progress + step) if running else step
+            b = b - step
+            if launch_front:
+                has_front = False
+            if xr <= EPS:
                 completed += 1
-                remaining, progress = None, 0.0
-                if not queue:
-                    makespan = min(makespan, (c + 1) * dt - budget)
+                running = False
+                progress = 0.0
+                if head >= q and not has_front:
+                    makespan = min(makespan, (c + 1) * dt - b)
+            else:
+                remaining = xr
+                running = True
+        # -- phase B: queue consumption by prefix sums --------------------
+        if (not running) and (not deferred) and head < q and b > EPS:
+            base = cum[head]
+            target = base + (b + EPS)
+            k = int(np.searchsorted(cum, target, side="right")) - head - 1
+            used = cum[head + k] - base
+            b = max(b - used, 0.0)
+            completed += k
+            head += k
+            if k > 0 and head >= q:
+                makespan = min(makespan, (c + 1) * dt - b)
+            if head < q and b > EPS:
+                remaining = (cum[head + 1] - cum[head]) - b
+                progress = b
+                running = True
+                head += 1
+                b = 0.0
+        # -- phase C: leftover budget is idle time ------------------------
+        if not running and b > EPS:
+            idle += b
 
     # a query still running when the trace ends is neither lost nor complete
     return SimResult(
@@ -175,114 +246,134 @@ def replay(
         lost_seconds=lost,
         idle_seconds=idle,
         completed=completed,
-        total_queries=len(durations),
+        total_queries=len(dur),
         makespan_seconds=makespan,
     )
 
 
-def replay_batch(
-    avail: np.ndarray,
-    durations: np.ndarray,
-    *,
-    strategy: str = "always_run",
-    dt: float = 180.0,
-    predictions: Optional[np.ndarray] = None,
-    horizon_cycles: int = 1,
-) -> Dict[str, np.ndarray]:
-    """Replay a stack of traces with one strategy, all rows in lock-step.
-
-    Args:
-      avail: (B, T) — or (T,), broadcast — binary availability per trace.
-      durations: (B, Q) — or (Q,), broadcast — per-trace query queues in
-        launch order (``sjf`` sorts each row internally).
-      predictions: (B, T) or (T,) per-cycle labels, required for
-        ``predict_ar``.
-
-    Returns stacked metrics, bit-identical to calling :func:`replay` per
-    row: ``{"lost_seconds", "idle_seconds", "completed", "total_queries",
-    "makespan_seconds"}``, each of shape (B,).
-    """
+def _prepare_batch(avail, durations, strategy, predictions):
+    """Shared input normalisation for the batched engines."""
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}")
-    avail = np.atleast_2d(np.asarray(avail).astype(bool))
+    avail = np.atleast_2d(np.asarray(avail)).astype(bool)
     dur = np.atleast_2d(np.asarray(durations, dtype=np.float64))
     B = max(avail.shape[0], dur.shape[0])
     T, Q = avail.shape[1], dur.shape[1]
     avail = np.broadcast_to(avail, (B, T))
-    # owned copy: interrupted queries write their duration back to the queue
     dur = np.array(np.broadcast_to(dur, (B, Q)))
     if strategy == "sjf":
         dur = np.sort(dur, axis=1)
-    pred = None
+    pred_zero = None
     if strategy == "predict_ar":
         if predictions is None:
             raise ValueError("predict_ar requires predictions")
         pred = np.atleast_2d(np.asarray(predictions))
-        pred = np.broadcast_to(pred, (B, T))
+        pred_zero = np.array(np.broadcast_to(pred == 0, (B, T)))
+    cum = np.concatenate([np.zeros((B, 1)), np.cumsum(dur, axis=1)], axis=1)
+    return avail, dur, cum, pred_zero
 
-    head = np.zeros(B, dtype=np.int64)          # next queue slot to launch
+
+def _replay_batch_numpy(
+    avail: np.ndarray,       # (B, T) bool
+    dur: np.ndarray,         # (B, Q) f64, launch order (sjf pre-sorted)
+    cum: np.ndarray,         # (B, Q+1) f64 prefix sums of dur
+    pred_zero,               # (B, T) bool "predictor says unavailable", or None
+    *,
+    dt: float,
+    horizon_cycles: int,
+) -> Dict[str, np.ndarray]:
+    """The vectorised per-cycle numpy loop — the batch parity oracle.
+
+    One closed-form transition per cycle over stacked row state; the
+    prefix count of phase B is a plain comparison count against the
+    ``cum`` rows.  Bit-identical to :func:`replay` row by row.
+    """
+    B, T = avail.shape
+    Q = dur.shape[1]
+    use_pred = pred_zero is not None
+    rows = np.arange(B)
+
+    head = np.zeros(B, dtype=np.int64)
+    front = np.zeros(B)
+    has_front = np.zeros(B, dtype=bool)
     running = np.zeros(B, dtype=bool)
     remaining = np.zeros(B)
     progress = np.zeros(B)
-    defer_until = np.full(B, -1, dtype=np.int64)
+    defer = np.full(B, -1, dtype=np.int64)
     lost = np.zeros(B)
     idle = np.zeros(B)
     completed = np.zeros(B, dtype=np.int64)
     makespan = np.full(B, T * dt, dtype=np.float64)
-    rows = np.arange(B)
 
     for c in range(T):
         up = avail[:, c]
-        # pool down: the running query loses all progress and is re-queued
-        # at the front (progress + remaining == its full duration)
         drop = ~up & running
         if drop.any():
             lost[drop] += progress[drop]
-            head[drop] -= 1
-            dur[rows[drop], head[drop]] = progress[drop] + remaining[drop]
+            front[drop] = progress[drop] + remaining[drop]
+            has_front[drop] = True
             running[drop] = False
             progress[drop] = 0.0
-        if pred is not None:
-            trig = up & (c > defer_until) & (pred[:, c] == 0)
-            defer_until[trig] = c + horizon_cycles
-        budget = np.where(up, dt, 0.0)
-        while True:
-            act = budget > 1e-9
-            if not act.any():
-                break
-            # rows with no running query: launch the next one, or idle out
-            need = act & ~running
-            if need.any():
-                blocked = head >= Q
-                if pred is not None:
-                    blocked = blocked | (c <= defer_until)
-                sit = need & blocked
-                idle[sit] += budget[sit]
-                budget[sit] = 0.0
-                pop = need & ~blocked
-                if pop.any():
-                    remaining[pop] = dur[rows[pop], head[pop]]
-                    head[pop] += 1
-                    progress[pop] = 0.0
-                    running[pop] = True
-            # advance the running queries by min(budget, remaining)
-            go = (budget > 1e-9) & running
-            if not go.any():
-                break  # every live row idled out this cycle
-            step = np.where(go, np.minimum(budget, remaining), 0.0)
-            remaining -= step
-            progress = progress + np.where(go, step, 0.0)
-            budget -= step
-            fin = go & (remaining <= 1e-9)
-            if fin.any():
-                completed[fin] += 1
-                running[fin] = False
-                progress[fin] = 0.0
-                last = fin & (head >= Q)
-                if last.any():
-                    makespan[last] = np.minimum(
-                        makespan[last], (c + 1) * dt - budget[last]
-                    )
+        if use_pred:
+            trig = up & (c > defer) & pred_zero[:, c]
+            defer[trig] = c + horizon_cycles
+            deferred = up & (c <= defer)
+        else:
+            deferred = np.zeros(B, dtype=bool)
+
+        b = np.where(up, dt, 0.0)
+        # -- phase A ------------------------------------------------------
+        a_run = up & running
+        a_frt = up & ~running & has_front & ~deferred
+        has_a = a_run | a_frt
+        if has_a.any():
+            x = np.where(a_run, remaining, front)
+            step = np.where(has_a, np.minimum(b, x), 0.0)
+            xr = x - step
+            progress = np.where(a_run, progress + step,
+                                np.where(a_frt, step, progress))
+            b = b - step
+            has_front = has_front & ~a_frt
+            fin = has_a & (xr <= EPS)
+            completed[fin] += 1
+            running = has_a & ~fin
+            remaining = np.where(has_a & ~fin, xr, remaining)
+            progress[fin] = 0.0
+            mk_a = fin & (head >= Q) & ~has_front
+            if mk_a.any():
+                makespan[mk_a] = np.minimum(
+                    makespan[mk_a], (c + 1) * dt - b[mk_a]
+                )
+        # -- phase B ------------------------------------------------------
+        qb = up & ~running & ~deferred & (head < Q) & (b > EPS)
+        if qb.any():
+            r = rows[qb]
+            base = cum[r, head[qb]]
+            target = base + (b[qb] + EPS)
+            k = (cum[r] <= target[:, None]).sum(axis=1) - head[qb] - 1
+            used = cum[r, head[qb] + k] - base
+            b2 = np.maximum(b[qb] - used, 0.0)
+            completed[qb] += k
+            h2 = head[qb] + k
+            mk_b = (k > 0) & (h2 >= Q)
+            if mk_b.any():
+                mrows = r[mk_b]
+                makespan[mrows] = np.minimum(
+                    makespan[mrows], (c + 1) * dt - b2[mk_b]
+                )
+            part = (h2 < Q) & (b2 > EPS)
+            if part.any():
+                prow = r[part]
+                hp = h2[part]
+                remaining[prow] = (cum[prow, hp + 1] - cum[prow, hp]) - b2[part]
+                progress[prow] = b2[part]
+                running[prow] = True
+                h2 = h2 + part
+            head[qb] = h2
+            b[qb] = np.where(part, 0.0, b2)
+        # -- phase C ------------------------------------------------------
+        sit = ~running & (b > EPS)
+        idle[sit] += b[sit]
 
     return {
         "lost_seconds": lost,
@@ -293,35 +384,73 @@ def replay_batch(
     }
 
 
-def _results_from_batch(
-    strategy: str, batch: Dict[str, np.ndarray]
+def replay_batch(
+    avail: np.ndarray,
+    durations: np.ndarray,
+    *,
+    strategy: str = "always_run",
+    dt: float = 180.0,
+    predictions: Optional[np.ndarray] = None,
+    horizon_cycles: int = 1,
+    engine: str = "auto",
+) -> Dict[str, np.ndarray]:
+    """Replay a stack of traces with one strategy (thin dispatcher).
+
+    Args:
+      avail: (B, T) — or (T,), broadcast — binary availability per trace.
+      durations: (B, Q) — or (Q,), broadcast — per-trace query queues in
+        launch order (``sjf`` sorts each row internally).
+      predictions: (B, T) or (T,) per-cycle labels, required for
+        ``predict_ar``.
+      engine: "numpy" (the per-cycle vectorised oracle), "scan" (the
+        ``lax.scan`` closed form — the fast CPU path), "kernel" (the
+        chunked Pallas kernel), or "auto" (Pallas on TPU, scan
+        elsewhere).  All engines are bit-identical to :func:`replay`
+        row by row.
+
+    Returns stacked metrics ``{"lost_seconds", "idle_seconds",
+    "completed", "total_queries", "makespan_seconds"}``, each of shape
+    (B,).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (want one of {ENGINES})")
+    avail, dur, cum, pred_zero = _prepare_batch(
+        avail, durations, strategy, predictions
+    )
+    if engine == "numpy" or dur.shape[1] == 0 or avail.shape[1] == 0:
+        # degenerate shapes stay on the oracle path (nothing to scan over)
+        return _replay_batch_numpy(
+            avail, dur, cum, pred_zero, dt=dt, horizon_cycles=horizon_cycles
+        )
+    from repro.kernels.replay_scan.ops import replay_scan_op
+
+    backend = {"auto": "auto", "scan": "jnp", "kernel": "pallas"}[engine]
+    return replay_scan_op(
+        avail, dur, cum, pred_zero,
+        dt=dt, horizon_cycles=horizon_cycles, backend=backend,
+    )
+
+
+def _pool_mean_results(
+    strategy: str, batch: Dict[str, np.ndarray], pools: int, n_perm: int
 ) -> List[SimResult]:
+    """Per-pool permutation means via one columnar segment reduction.
+
+    The (pools * n_perm,) metric vectors reduce along the permutation
+    axis in a single reshape-sum per metric — no per-pool slicing.
+    """
+    sums = {k: v.reshape(pools, n_perm).sum(axis=1) for k, v in batch.items()}
     return [
         SimResult(
             strategy=strategy,
-            lost_seconds=float(batch["lost_seconds"][b]),
-            idle_seconds=float(batch["idle_seconds"][b]),
-            completed=int(batch["completed"][b]),
-            total_queries=int(batch["total_queries"][b]),
-            makespan_seconds=float(batch["makespan_seconds"][b]),
+            lost_seconds=float(sums["lost_seconds"][p] / n_perm),
+            idle_seconds=float(sums["idle_seconds"][p] / n_perm),
+            completed=int(round(sums["completed"][p] / n_perm)),
+            total_queries=int(round(sums["total_queries"][p] / n_perm)),
+            makespan_seconds=float(sums["makespan_seconds"][p] / n_perm),
         )
-        for b in range(len(batch["lost_seconds"]))
+        for p in range(pools)
     ]
-
-
-def _mean_result(strategy: str, batch: Dict[str, np.ndarray]) -> SimResult:
-    return SimResult(
-        strategy=strategy,
-        lost_seconds=float(batch["lost_seconds"].sum() / len(batch["lost_seconds"])),
-        idle_seconds=float(batch["idle_seconds"].sum() / len(batch["idle_seconds"])),
-        completed=int(round(batch["completed"].sum() / len(batch["completed"]))),
-        total_queries=int(
-            round(batch["total_queries"].sum() / len(batch["total_queries"]))
-        ),
-        makespan_seconds=float(
-            batch["makespan_seconds"].sum() / len(batch["makespan_seconds"])
-        ),
-    )
 
 
 def run_strategies(
@@ -334,6 +463,7 @@ def run_strategies(
     horizon_cycles: int = 1,
     n_permutations: int = 5,
     seed: int = 0,
+    engine: str = "auto",
 ) -> List[SimResult]:
     """Average each strategy over query-order permutations (§VI-E).
 
@@ -357,8 +487,9 @@ def run_strategies(
             dt=dt,
             predictions=pred,
             horizon_cycles=horizon_cycles,
+            engine=engine,
         )
-        out.append(_mean_result(s, batch))
+        out.append(_pool_mean_results(s, batch, 1, n_permutations)[0])
     return out
 
 
@@ -371,6 +502,7 @@ def run_fleet_strategies(
     horizon_cycles: int = 1,
     n_permutations: int = 5,
     seeds: Optional[Sequence[int]] = None,
+    engine: str = "auto",
 ) -> Dict[str, List[SimResult]]:
     """The §VI-E experiment in one shot: every (pool × permutation ×
     strategy) trace replays inside three :func:`replay_batch` calls.
@@ -382,6 +514,8 @@ def run_fleet_strategies(
         enables the ``predict_ar`` strategy.
       seeds: per-pool permutation seeds (defaults to the pool index, the
         historical per-pool convention).
+      engine: replay engine, forwarded to :func:`replay_batch` (the
+        default routes through the scan path).
 
     Returns ``{strategy: [per-pool permutation-averaged SimResult]}``.
     """
@@ -412,12 +546,7 @@ def run_fleet_strategies(
             dt=dt,
             predictions=big_pred,
             horizon_cycles=horizon_cycles,
+            engine=engine,
         )
-        per_pool = []
-        for p in range(pools):
-            sl = slice(p * n_permutations, (p + 1) * n_permutations)
-            per_pool.append(
-                _mean_result(s, {k: v[sl] for k, v in batch.items()})
-            )
-        out[s] = per_pool
+        out[s] = _pool_mean_results(s, batch, pools, n_permutations)
     return out

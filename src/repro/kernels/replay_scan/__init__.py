@@ -1,0 +1,10 @@
+"""Lock-step §VI-E trace replay in scan form (see ``core.simulate``).
+
+* ``ref``    — the ``lax.scan`` closed-form reference (fast CPU path);
+* ``kernel`` — the chunked Pallas kernel (carry in VMEM scratch);
+* ``ops``    — backend dispatch, ragged-shape padding, row sharding.
+"""
+
+from .ops import replay_scan_op
+
+__all__ = ["replay_scan_op"]

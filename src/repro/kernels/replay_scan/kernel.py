@@ -1,0 +1,259 @@
+"""Chunked Pallas kernel for the lock-step replay contract.
+
+Tiles the (traces × cycles) grid as ``(block_b × chunk)`` blocks: the
+grid's innermost axis walks ``chunk``-cycle time slabs sequentially while
+the whole carried row state — queue head, re-queued front value, running
+query remaining/progress, deferral clock, and the four metric
+accumulators — lives in VMEM scratch, exactly the
+``sns_features_stream`` pattern.  Per cycle the kernel applies the same
+closed-form transition as the ``lax.scan`` reference; phase B's prefix
+count and the ``cum`` lookups are evaluated as one-hot / masked
+reductions over the resident ``(block_b, Q+1)`` prefix-sum tile (gather-
+free, Mosaic-friendly).
+
+The arithmetic matches ``ref.replay_scan_ref`` op for op, so outputs are
+bit-identical in the shared dtype.  On CPU the kernel runs in interpret
+mode (parity/testing); float64 state requires x64, so real-TPU use means
+float32 inputs (then kernel ≡ ref still holds at f32, while the f64
+scalar oracle is the CPU story).
+
+grid = (B / block_b, T / chunk)   [chunk axis innermost / sequential]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.simulate import EPS
+
+# scratch column layout
+_F_FRONT, _F_REMAINING, _F_PROGRESS, _F_LOST, _F_IDLE, _F_MAKESPAN = range(6)
+_I_HEAD, _I_DEFER, _I_COMPLETED, _I_RUNNING, _I_HASFRONT = range(5)
+
+
+def _replay_kernel(
+    avail_ref, predz_ref, cum_ref,
+    lost_ref, idle_ref, comp_ref, mk_ref,
+    fstate, istate,
+    *,
+    dt: float,
+    horizon: int,
+    use_pred: bool,
+    chunk: int,
+    t_real: int,
+    q: int,
+):
+    ic = pl.program_id(1)
+    f = cum_ref.dtype
+    i32 = jnp.int32
+    bp = cum_ref.shape[0]
+    zero = jnp.zeros((), f)
+    eps = jnp.asarray(EPS, f)
+    dtc = jnp.asarray(dt, f)
+
+    @pl.when(ic == 0)
+    def _init():
+        fstate[...] = jnp.zeros_like(fstate)
+        init_i = jnp.zeros_like(istate)
+        fstate[:, _F_MAKESPAN] = jnp.full((bp,), t_real, f) * dtc
+        istate[...] = init_i.at[:, _I_DEFER].set(-1)
+
+    avail = avail_ref[...]            # (bp, chunk) int32
+    predz = predz_ref[...]            # (bp, chunk) int32
+    cum = cum_ref[...]                # (bp, q + 1) f
+    col_iota = jax.lax.broadcasted_iota(i32, (bp, chunk), 1)
+    q_iota = jax.lax.broadcasted_iota(i32, (bp, q + 1), 1)
+
+    def cycle(j, st):
+        (head, front, has_front, running, remaining, progress, defer,
+         lost, idle, completed, makespan) = st
+        g = ic * chunk + j
+        valid = g < t_real
+        up = (jnp.sum(jnp.where(col_iota == j, avail, 0), axis=1) > 0) & valid
+        c = g
+
+        # padded cycles beyond t_real are inert, not down-cycles: they must
+        # never interrupt a query still running at trace end
+        drop = (~up) & running & valid
+        lost = lost + jnp.where(drop, progress, zero)
+        front = jnp.where(drop, progress + remaining, front)
+        has_front = has_front | drop
+        running = running & up
+        progress = jnp.where(drop, zero, progress)
+
+        if use_pred:
+            pz = (jnp.sum(jnp.where(col_iota == j, predz, 0), axis=1) > 0)
+            trig = up & (c > defer) & pz
+            defer = jnp.where(trig, c + horizon, defer)
+            deferred = up & (c <= defer)
+        else:
+            deferred = jnp.zeros_like(up)
+
+        b = jnp.where(up, dtc, zero)
+        mk_edge = (c + 1).astype(f) * dtc
+
+        # -- phase A -------------------------------------------------------
+        a_run = up & running
+        a_frt = up & ~running & has_front & ~deferred
+        has_a = a_run | a_frt
+        x = jnp.where(a_run, remaining, front)
+        step = jnp.where(has_a, jnp.minimum(b, x), zero)
+        xr = x - step
+        progress = jnp.where(a_run, progress + step,
+                             jnp.where(a_frt, step, progress))
+        b = b - step
+        has_front = has_front & ~a_frt
+        fin = has_a & (xr <= eps)
+        completed = completed + fin.astype(i32)
+        running = has_a & ~fin
+        remaining = jnp.where(has_a & ~fin, xr, remaining)
+        progress = jnp.where(fin, zero, progress)
+        mk_a = fin & (head >= q) & ~has_front
+        makespan = jnp.where(mk_a, jnp.minimum(makespan, mk_edge - b), makespan)
+
+        # -- phase B: prefix count over the resident cum tile --------------
+        qb = up & ~running & ~deferred & (head < q) & (b > eps)
+        base = jnp.sum(jnp.where(q_iota == head[:, None], cum, zero), axis=1)
+        target = base + (b + eps)
+        k = jnp.sum(
+            (cum <= target[:, None]) & (q_iota > head[:, None]), axis=1
+        ).astype(i32)
+        k = jnp.where(qb, k, 0)
+        h2 = head + k
+        cum_k = jnp.sum(jnp.where(q_iota == h2[:, None], cum, zero), axis=1)
+        cum_k1 = jnp.sum(
+            jnp.where(q_iota == (h2 + 1)[:, None], cum, zero), axis=1
+        )
+        used = cum_k - base
+        b2 = jnp.maximum(b - used, zero)
+        completed = completed + k
+        mk_b = qb & (k > 0) & (h2 >= q)
+        makespan = jnp.where(mk_b, jnp.minimum(makespan, mk_edge - b2), makespan)
+        part = qb & (h2 < q) & (b2 > eps)
+        d = cum_k1 - cum_k
+        remaining = jnp.where(part, d - b2, remaining)
+        progress = jnp.where(part, b2, progress)
+        running = running | part
+        head = h2 + part.astype(i32)
+        b = jnp.where(qb, jnp.where(part, zero, b2), b)
+
+        # -- phase C -------------------------------------------------------
+        sit = ~running & (b > eps)
+        idle = idle + jnp.where(sit, b, zero)
+
+        return (head, front, has_front, running, remaining, progress, defer,
+                lost, idle, completed, makespan)
+
+    st = (
+        istate[:, _I_HEAD],
+        fstate[:, _F_FRONT],
+        istate[:, _I_HASFRONT] > 0,
+        istate[:, _I_RUNNING] > 0,
+        fstate[:, _F_REMAINING],
+        fstate[:, _F_PROGRESS],
+        istate[:, _I_DEFER],
+        fstate[:, _F_LOST],
+        fstate[:, _F_IDLE],
+        istate[:, _I_COMPLETED],
+        fstate[:, _F_MAKESPAN],
+    )
+    st = jax.lax.fori_loop(0, chunk, cycle, st)
+    (head, front, has_front, running, remaining, progress, defer,
+     lost, idle, completed, makespan) = st
+
+    istate[:, _I_HEAD] = head
+    fstate[:, _F_FRONT] = front
+    istate[:, _I_HASFRONT] = has_front.astype(i32)
+    istate[:, _I_RUNNING] = running.astype(i32)
+    fstate[:, _F_REMAINING] = remaining
+    fstate[:, _F_PROGRESS] = progress
+    istate[:, _I_DEFER] = defer
+    fstate[:, _F_LOST] = lost
+    fstate[:, _F_IDLE] = idle
+    istate[:, _I_COMPLETED] = completed
+    fstate[:, _F_MAKESPAN] = makespan
+
+    # same out block every chunk step: the final write is the result
+    lost_ref[...] = lost[:, None]
+    idle_ref[...] = idle[:, None]
+    comp_ref[...] = completed[:, None]
+    mk_ref[...] = makespan[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dt", "horizon_cycles", "use_pred", "block_b", "chunk", "t_real",
+        "interpret",
+    ),
+)
+def replay_scan_kernel(
+    avail: jnp.ndarray,       # (B, Tpad) int32 availability (0 beyond t_real)
+    predz: jnp.ndarray,       # (B, Tpad) int32 "predicted unavailable"
+    cum: jnp.ndarray,         # (B, Q+1) f prefix sums of durations
+    *,
+    dt: float,
+    horizon_cycles: int,
+    t_real: int,
+    use_pred: bool = False,
+    block_b: int = 8,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Chunked lock-step replay; bit-identical to ``replay_scan_ref``.
+
+    Requires ``B % block_b == 0`` and ``Tpad % chunk == 0`` — use
+    ``ops.replay_scan_op`` for the padded general-shape wrapper.
+    """
+    B, t_pad = avail.shape
+    q = cum.shape[1] - 1
+    block_b = min(block_b, B)
+    chunk = min(chunk, t_pad)
+    if B % block_b or t_pad % chunk:
+        # a bare assert would vanish under -O and leave grid-uncovered
+        # output rows silently uninitialized
+        raise ValueError(
+            f"B={B} / T={t_pad} not divisible by block_b={block_b} / "
+            f"chunk={chunk}; use ops.replay_scan_op for padding"
+        )
+    grid = (B // block_b, t_pad // chunk)
+    f = cum.dtype
+
+    kernel = functools.partial(
+        _replay_kernel,
+        dt=dt, horizon=horizon_cycles, use_pred=use_pred,
+        chunk=chunk, t_real=t_real, q=q,
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, 1), f),          # lost
+        jax.ShapeDtypeStruct((B, 1), f),          # idle
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),  # completed
+        jax.ShapeDtypeStruct((B, 1), f),          # makespan
+    ]
+    lost, idle, comp, mk = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, chunk), lambda i, ic: (i, ic)),
+            pl.BlockSpec((block_b, chunk), lambda i, ic: (i, ic)),
+            pl.BlockSpec((block_b, q + 1), lambda i, ic: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block_b, 1), lambda i, ic: (i, 0))] * 4,
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((block_b, 6), f),
+            pltpu.VMEM((block_b, 5), jnp.int32),
+        ],
+        interpret=interpret,
+    )(avail, predz, cum)
+    return {
+        "lost_seconds": lost[:, 0],
+        "idle_seconds": idle[:, 0],
+        "completed": comp[:, 0],
+        "makespan_seconds": mk[:, 0],
+    }

@@ -1,0 +1,169 @@
+"""``lax.scan`` reference for the lock-step replay contract.
+
+One closed-form state transition per cycle (the contract pinned in
+``repro.core.simulate``): the carried row state is ``(head, front,
+has_front, running, remaining, progress, defer, lost, idle, completed,
+makespan)`` and queue consumption resolves against the prefix-sum rows
+``cum`` — phase B's "how many queries finish in this cycle's budget" is a
+prefix *count*, never a data-dependent walk over the queue.
+
+The count is evaluated over a ``window``-wide slice of ``cum`` starting
+at the queue head (one contiguous ``dynamic_slice`` per row — the cheap
+gather shape on CPU); a vectorised overflow loop extends the window for
+the rare burst cycles that complete more than ``window`` queries at once
+(e.g. the first cycles of an ``sjf`` queue).  ``cum`` arrives padded with
+``+inf`` tail entries (see ``ops``) so window slices never clamp and
+beyond-queue entries can never pass the ``<= target`` test.
+
+Every floating-point op matches the numpy oracle
+(``core.simulate._replay_batch_numpy``) in kind and order, so results are
+bit-identical row by row in the shared dtype.  This function is also the
+production CPU path: XLA compiles the scan body into a handful of fused
+passes over the (B,) state, which is what clears the 10× bar over the
+per-cycle numpy loop (``benchmarks/replay_throughput.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simulate import EPS
+
+
+@functools.partial(
+    jax.jit, static_argnames=("use_pred", "window", "unroll")
+)
+def replay_scan_ref(
+    avail_t: jnp.ndarray,     # (T, B) bool — time-major availability
+    predz_t: jnp.ndarray,     # (T, B) bool — "predictor says unavailable"
+    cum_pad: jnp.ndarray,     # (B, Q + window + 2) f — prefix sums, +inf tail
+    dt,
+    horizon_cycles,
+    *,
+    q: int = None,            # true queue length (cum_pad is padded)
+    use_pred: bool = False,
+    window: int = 16,
+    unroll: int = 1,
+):
+    T, B = avail_t.shape
+    W = window
+    Q = cum_pad.shape[1] - W - 2 if q is None else q
+    f = cum_pad.dtype
+    i32 = jnp.int32
+    dtc = jnp.asarray(dt, f)
+    horizon = jnp.asarray(horizon_cycles, i32)
+    zero = jnp.zeros((), f)
+    eps = jnp.asarray(EPS, f)
+
+    slice_w = jax.vmap(lambda row, s: jax.lax.dynamic_slice(row, (s,), (W + 2,)))
+    slice_2 = jax.vmap(lambda row, s: jax.lax.dynamic_slice(row, (s,), (2,)))
+
+    def cycle(carry, xs):
+        (head, front, has_front, running, remaining, progress, defer,
+         lost, idle, completed, makespan) = carry
+        up, pz, c = xs
+
+        # -- down cycle: running query loses progress, re-queued at front --
+        drop = (~up) & running
+        lost = lost + jnp.where(drop, progress, zero)
+        front = jnp.where(drop, progress + remaining, front)
+        has_front = has_front | drop
+        running = running & up
+        progress = jnp.where(drop, zero, progress)
+
+        if use_pred:
+            trig = up & (c > defer) & pz
+            defer = jnp.where(trig, c + horizon, defer)
+            deferred = up & (c <= defer)
+        else:
+            deferred = jnp.zeros_like(up)
+
+        b = jnp.where(up, dtc, zero)
+        mk_edge = (c + 1).astype(f) * dtc
+
+        # -- phase A: the in-hand item -------------------------------------
+        a_run = up & running
+        a_frt = up & ~running & has_front & ~deferred
+        has_a = a_run | a_frt
+        x = jnp.where(a_run, remaining, front)
+        step = jnp.where(has_a, jnp.minimum(b, x), zero)
+        xr = x - step
+        progress = jnp.where(a_run, progress + step,
+                             jnp.where(a_frt, step, progress))
+        b = b - step
+        has_front = has_front & ~a_frt
+        fin = has_a & (xr <= eps)
+        completed = completed + fin.astype(i32)
+        running = has_a & ~fin
+        remaining = jnp.where(has_a & ~fin, xr, remaining)
+        progress = jnp.where(fin, zero, progress)
+        mk_a = fin & (head >= Q) & ~has_front
+        makespan = jnp.where(mk_a, jnp.minimum(makespan, mk_edge - b), makespan)
+
+        # -- phase B: prefix count over the queue window -------------------
+        qb = up & ~running & ~deferred & (head < Q) & (b > eps)
+        win = slice_w(cum_pad, head)                   # win[:, j] = cum[head+j]
+        base = win[:, 0]
+        target = base + (b + eps)
+        k = (win[:, 1 : W + 1] <= target[:, None]).sum(axis=1).astype(i32)
+        more = qb & (k == W)
+
+        def ovf_cond(st):
+            return jnp.any(st[1])
+
+        def ovf_body(st):
+            k, more = st
+            win2 = slice_w(cum_pad, head + k)
+            k2 = (win2[:, 1 : W + 1] <= target[:, None]).sum(axis=1).astype(i32)
+            k = k + jnp.where(more, k2, 0)
+            more = more & (k2 == W)
+            return (k, more)
+
+        k, _ = jax.lax.while_loop(ovf_cond, ovf_body, (k, more))
+        k = jnp.where(qb, k, 0)
+        pair = slice_2(cum_pad, head + k)     # [cum[head+k], cum[head+k+1]]
+        used = pair[:, 0] - base
+        b2 = jnp.maximum(b - used, zero)
+        completed = completed + jnp.where(qb, k, 0)
+        h2 = head + k
+        mk_b = qb & (k > 0) & (h2 >= Q)
+        makespan = jnp.where(mk_b, jnp.minimum(makespan, mk_edge - b2), makespan)
+        part = qb & (h2 < Q) & (b2 > eps)
+        d = pair[:, 1] - pair[:, 0]
+        remaining = jnp.where(part, d - b2, remaining)
+        progress = jnp.where(part, b2, progress)
+        running = running | part
+        head = h2 + part.astype(i32)
+        b = jnp.where(qb, jnp.where(part, zero, b2), b)
+
+        # -- phase C: leftover budget is idle time -------------------------
+        sit = ~running & (b > eps)
+        idle = idle + jnp.where(sit, b, zero)
+
+        return (head, front, has_front, running, remaining, progress, defer,
+                lost, idle, completed, makespan), None
+
+    carry = (
+        jnp.zeros(B, i32),              # head
+        jnp.zeros(B, f),                # front
+        jnp.zeros(B, bool),             # has_front
+        jnp.zeros(B, bool),             # running
+        jnp.zeros(B, f),                # remaining
+        jnp.zeros(B, f),                # progress
+        jnp.full(B, -1, i32),           # defer
+        jnp.zeros(B, f),                # lost
+        jnp.zeros(B, f),                # idle
+        jnp.zeros(B, i32),              # completed
+        jnp.full(B, T, f) * dtc,        # makespan = T * dt
+    )
+    xs = (avail_t, predz_t, jnp.arange(T, dtype=i32))
+    carry, _ = jax.lax.scan(cycle, carry, xs, unroll=unroll)
+    return {
+        "lost_seconds": carry[7],
+        "idle_seconds": carry[8],
+        "completed": carry[9],
+        "makespan_seconds": carry[10],
+    }

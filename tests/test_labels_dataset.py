@@ -44,6 +44,50 @@ class TestLabels:
         with pytest.raises(ValueError):
             horizon_labels(np.ones(5), 5)
 
+    @given(
+        t=st.integers(5, 90),
+        h=st.integers(1, 24),
+        pools=st.integers(1, 4),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_blockmin_matches_stacked_form(self, t, h, pools, seed):
+        """The O(T) prefix/suffix block-minimum is bit-identical to the
+        old O(h·T) stacked sliding window, including 2-D pool stacks and
+        horizons far beyond the block size."""
+        from repro.core.labels import _horizon_labels_stacked
+
+        if h >= t:
+            return
+        rng = np.random.default_rng(seed)
+        arr = rng.integers(0, 2, size=(pools, t)).astype(np.int32)
+        np.testing.assert_array_equal(
+            horizon_labels(arr, h), _horizon_labels_stacked(arr, h)
+        )
+        np.testing.assert_array_equal(
+            horizon_labels(arr[0], h), _horizon_labels_stacked(arr[0], h)
+        )
+
+    def test_blockmin_bool_input_with_partial_block(self):
+        """bool availability + (T-1) % h != 0 exercises the pad value."""
+        from repro.core.labels import _horizon_labels_stacked
+
+        arr = np.array([1, 0, 1, 1, 1, 1, 0], dtype=bool)
+        np.testing.assert_array_equal(
+            horizon_labels(arr, 4), _horizon_labels_stacked(arr, 4)
+        )
+
+    def test_blockmin_matches_stacked_60min_horizon(self):
+        """The ROADMAP case: a 60-minute horizon (h=20 at 3-min cycles)
+        on a long fleet trace."""
+        from repro.core.labels import _horizon_labels_stacked
+
+        rng = np.random.default_rng(1)
+        arr = rng.integers(0, 2, size=(8, 960)).astype(np.int32)
+        np.testing.assert_array_equal(
+            horizon_labels(arr, 20), _horizon_labels_stacked(arr, 20)
+        )
+
 
 class TestDataset:
     def test_point_dataset_shapes(self, small_campaign):

@@ -1,0 +1,223 @@
+"""Scan-form replay: cross-engine parity, contract edges, event log.
+
+The load-bearing property: scalar :func:`replay`, the numpy per-cycle
+oracle, the ``lax.scan`` reference, and the chunked Pallas kernel all
+implement the same closed-form replay contract and must agree **exactly**
+(atol=0) on all five metrics, row by row, for every strategy.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import replay, replay_batch, run_fleet_strategies, tpcds_profile
+from repro.core.simulate import STRATEGIES
+
+METRICS = (
+    "lost_seconds", "idle_seconds", "completed", "total_queries",
+    "makespan_seconds",
+)
+
+#: fixed shape pool so the property test reuses jit caches across examples
+SHAPES = ((5, 24, 6), (3, 37, 9), (4, 30, 21))
+
+
+def _workload(shape, seed, *, lo=0.5, hi=700.0, p_up=0.75):
+    b, t, q = shape
+    rng = np.random.default_rng(seed)
+    avail = (rng.random((b, t)) < p_up).astype(int)
+    dur = rng.uniform(lo, hi, size=(b, q))
+    # exact-boundary stress: durations that divide dt evenly hit the
+    # completion epsilon and the mid-cycle makespan edge
+    dur[:, : q // 3] = rng.choice([180.0, 90.0, 45.0, 360.0], size=(b, q // 3))
+    pred = (rng.random((b, t)) > 0.3).astype(int)
+    return avail, dur, pred
+
+
+def _assert_batches_equal(a, b, msg=""):
+    for k in METRICS:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{msg} {k}")
+
+
+def _assert_matches_scalar(batch, avail, dur, pred, strategy, h, dt=180.0):
+    for row in range(avail.shape[0]):
+        r = replay(
+            avail[row], dur[row], strategy=strategy, dt=dt,
+            predictions=pred[row], horizon_cycles=h,
+        )
+        assert batch["lost_seconds"][row] == r.lost_seconds
+        assert batch["idle_seconds"][row] == r.idle_seconds
+        assert batch["completed"][row] == r.completed
+        assert batch["total_queries"][row] == r.total_queries
+        assert batch["makespan_seconds"][row] == r.makespan_seconds
+
+
+class TestEngineParity:
+    """numpy oracle == scan == kernel == scalar, bit for bit."""
+
+    @given(
+        shape=st.sampled_from(SHAPES),
+        seed=st.integers(0, 10_000),
+        strategy=st.sampled_from(STRATEGIES),
+        h=st.sampled_from((1, 2, 5)),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_property_scalar_numpy_scan(self, shape, seed, strategy, h):
+        avail, dur, pred = _workload(shape, seed)
+        kw = dict(strategy=strategy, predictions=pred, horizon_cycles=h)
+        oracle = replay_batch(avail, dur, engine="numpy", **kw)
+        scan = replay_batch(avail, dur, engine="scan", **kw)
+        _assert_batches_equal(oracle, scan, f"{strategy} seed={seed}")
+        _assert_matches_scalar(oracle, avail, dur, pred, strategy, h)
+
+    @pytest.mark.parametrize(
+        "strategy,h",
+        [("always_run", 1), ("sjf", 1), ("predict_ar", 1), ("predict_ar", 5)],
+    )
+    def test_triple_parity_fig9_workload(self, strategy, h):
+        """Kernel == scan ref == scalar on the Fig-9 shape: the TPC-DS
+        99-query profile over 24 h of 3-minute cycles."""
+        t_cycles = 480
+        pools = 6
+        rng = np.random.default_rng(7)
+        avail = (rng.random((pools, t_cycles)) > 0.15).astype(int)
+        pred = (rng.random((pools, t_cycles)) > 0.3).astype(int)
+        dur = np.stack([rng.permutation(tpcds_profile()) for _ in range(pools)])
+        kw = dict(strategy=strategy, predictions=pred, horizon_cycles=h)
+        oracle = replay_batch(avail, dur, engine="numpy", **kw)
+        scan = replay_batch(avail, dur, engine="scan", **kw)
+        kernel = replay_batch(avail, dur, engine="kernel", **kw)
+        _assert_batches_equal(oracle, scan, f"scan {strategy}")
+        _assert_batches_equal(oracle, kernel, f"kernel {strategy}")
+        _assert_matches_scalar(oracle, avail, dur, pred, strategy, h)
+
+    def test_kernel_ragged_padding(self):
+        """True nonzero padding: B > block_b with B % block_b != 0 and
+        T > chunk with T % chunk != 0 (ops clamps block_b/chunk to the
+        input shape, so smaller cases pad nothing)."""
+        avail, dur, pred = _workload((11, 150, 7), seed=3)
+        kw = dict(strategy="predict_ar", predictions=pred, horizon_cycles=2)
+        oracle = replay_batch(avail, dur, engine="numpy", **kw)
+        kernel = replay_batch(avail, dur, engine="kernel", **kw)
+        _assert_batches_equal(oracle, kernel, "ragged kernel")
+
+    def test_kernel_padding_inert_for_midflight_query(self):
+        """A query still running at trace end must stay 'neither lost nor
+        complete' through the kernel's padded tail cycles (the padding is
+        avail=0, which must not act as a real down-cycle)."""
+        avail = np.ones((9, 150), dtype=int)
+        dur = np.full((9, 1), 1e9)
+        oracle = replay_batch(avail, dur, engine="numpy")
+        kernel = replay_batch(avail, dur, engine="kernel")
+        assert oracle["lost_seconds"].tolist() == [0.0] * 9
+        _assert_batches_equal(oracle, kernel, "padded midflight")
+
+    def test_burst_completions_overflow_window(self):
+        """sjf with many sub-cycle queries: one cycle completes far more
+        queries than the scan's prefix-count window — the overflow loop
+        must extend it without losing exactness."""
+        avail, dur, pred = _workload((4, 40, 48), seed=11, lo=0.5, hi=30.0)
+        for strategy in ("sjf", "always_run"):
+            kw = dict(strategy=strategy, predictions=pred, horizon_cycles=1)
+            oracle = replay_batch(avail, dur, engine="numpy", **kw)
+            scan = replay_batch(avail, dur, engine="scan", **kw)
+            _assert_batches_equal(oracle, scan, f"burst {strategy}")
+
+
+class TestContractEdges:
+    def test_mid_cycle_makespan(self):
+        # 2 queries totalling 250 s finish mid-way through cycle 1
+        r = replay(np.ones(4, dtype=int), [100.0, 150.0], dt=180.0)
+        assert r.completed == 2
+        assert r.makespan_seconds == pytest.approx(250.0)
+        batch = replay_batch(np.ones(4, dtype=int), [100.0, 150.0], engine="scan")
+        assert batch["makespan_seconds"][0] == r.makespan_seconds
+
+    def test_makespan_exact_cycle_boundary(self):
+        # the last query consumes exactly the full cycle budget
+        r = replay(np.ones(3, dtype=int), [180.0], dt=180.0)
+        assert r.completed == 1
+        assert r.makespan_seconds == pytest.approx(180.0)
+
+    def test_requeued_query_is_retried_in_full(self):
+        # 400 s query interrupted at 360 s of progress loses all of it
+        avail = np.array([1, 1, 0, 1, 1, 1])
+        r = replay(avail, [400.0], dt=180.0)
+        assert r.lost_seconds == pytest.approx(360.0)
+        assert r.completed == 1
+
+    def test_predict_ar_deferral_accrues_idle(self):
+        avail = np.ones(10, dtype=int)
+        pred = np.zeros(10, dtype=int)      # always forecasts trouble
+        r = replay(
+            avail, [100.0], strategy="predict_ar",
+            predictions=pred, horizon_cycles=100,
+        )
+        # the single query never launches; every cycle is idle
+        assert r.completed == 0
+        assert r.idle_seconds == pytest.approx(10 * 180.0)
+
+    def test_empty_queue_all_idle(self):
+        for engine in ("numpy", "scan"):
+            batch = replay_batch(
+                np.ones((2, 5), dtype=int), np.zeros((2, 0)), engine=engine
+            )
+            np.testing.assert_allclose(batch["idle_seconds"], 5 * 180.0)
+            assert batch["completed"].tolist() == [0, 0]
+
+    def test_unknown_engine_raises(self):
+        with pytest.raises(ValueError):
+            replay_batch(np.ones(4), [10.0], engine="cuda")
+
+    def test_fleet_strategies_identical_across_engines(self):
+        """The fig9 identity: run_fleet_strategies through the scan path
+        produces exactly the SimResults of the numpy path."""
+        pools, t_cycles = 3, 60
+        rng = np.random.default_rng(5)
+        avail = (rng.random((pools, t_cycles)) > 0.2).astype(int)
+        pred = (rng.random((pools, t_cycles)) > 0.3).astype(int)
+        dur = tpcds_profile()[:12]
+        a = run_fleet_strategies(
+            avail, dur, predictions=pred, horizon_cycles=2,
+            n_permutations=2, engine="numpy",
+        )
+        b = run_fleet_strategies(
+            avail, dur, predictions=pred, horizon_cycles=2,
+            n_permutations=2, engine="scan",
+        )
+        assert set(a) == set(b)
+        for s in a:
+            for ra, rb in zip(a[s], b[s]):
+                assert ra == rb
+
+
+class TestInterruptionLog:
+    def test_lazy_view_and_columns(self):
+        from repro.core import InterruptionEvent, InterruptionLog
+
+        log = InterruptionLog(["a/r/1", "b/r/1"])
+        log.append_sweep(1, [4, 5], [10.0, 11.5])
+        log.append_sweep(0, [0], [99.0])
+        assert len(log) == 3
+        assert log[0] == InterruptionEvent("b/r/1", 4, 10.0)
+        assert log[-1] == InterruptionEvent("a/r/1", 0, 99.0)
+        assert list(log) == log[:]
+        pool, uid, time = log.columns
+        assert pool.tolist() == [1, 1, 0]
+        assert uid.tolist() == [4, 5, 0]
+        assert time.tolist() == [10.0, 11.5, 99.0]
+        snap = log.snapshot()
+        assert snap == log
+        assert snap == list(log)
+        log.append_sweep(0, [9], [120.0])
+        assert len(snap) == 3          # snapshot is frozen
+        assert snap != log
+
+    def test_columnar_proximities_match_dict_path(self, small_campaign):
+        from repro.core import proximities
+
+        log = small_campaign.interruptions
+        fast = np.sort(proximities(log))
+        slow = np.sort(proximities(list(log)))
+        np.testing.assert_allclose(fast, slow)
