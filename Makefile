@@ -1,12 +1,15 @@
 # Tier-1 verification — identical to what CI runs.
 #   make verify   : full test suite + pipeline/campaign/replay-throughput smokes
 #   make test     : test suite only
-#   make bench    : full throughput benchmarks (assert >= 50x / >= 20x / >= 3x)
+#   make docs     : docs checks only (examples compile, README snippets
+#                   import, markdown links resolve, example smoke runs)
+#   make bench    : full throughput benchmarks (assert >= 50x / >= 20x /
+#                   sharded >= 1x fleet / >= 3x)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify test bench
+.PHONY: verify test docs bench
 
 verify: test
 	python benchmarks/pipeline_throughput.py --smoke
@@ -15,6 +18,9 @@ verify: test
 
 test:
 	python -m pytest -x -q
+
+docs:
+	python -m pytest -x -q tests/test_docs.py tests/test_examples.py
 
 bench:
 	python benchmarks/pipeline_throughput.py

@@ -1,27 +1,37 @@
-"""Campaign engine throughput — pool-cycles/sec, scalar vs fleet.
+"""Campaign engine throughput — pool-cycles/sec, scalar vs fleet vs sharded.
 
 Measures a full measure→record campaign (`repro.core.run_campaign`:
-regime dynamics + node pools + SnS probing) through both collector
+regime dynamics + node pools + SnS probing) through the three collector
 engines on the same fleet:
 
-1. ``scalar`` — the paper-faithful per-pool path: one
+1. ``scalar``  — the paper-faithful per-pool path: one
    ``submit_spot_request`` per pool per cycle, per-request
    ``SpotRequest`` objects, per-probe Data-Lake rows (hot-path record
    retention off, the fair configuration at this scale);
-2. ``fleet``  — the batched engine: one ``submit_spot_requests``
+2. ``fleet``   — the batched numpy engine: one ``submit_spot_requests``
    admission call per cycle for the whole fleet, matrices in place of
-   objects.
+   objects;
+3. ``sharded`` — the mesh-sharded JAX engine (`repro.core.sharded`):
+   pool state device-sharded over a 1-D ``("pools",)`` mesh, one
+   ``shard_map``-ped jitted step per cycle.  Measured after a short
+   warm-up campaign so the one-time XLA compile (cached process-wide
+   across campaigns) is excluded — the steady-state rate is what a
+   long campaign sees.
 
-Because both engines ride the provider's counter-based per-pool RNG
+Because all engines ride the provider's counter-based per-pool RNG
 streams, the benchmark also *asserts* the parity anchor: identical
-``S_t`` / ``running_t`` matrices and interruption event logs.
+``S_t`` / ``running_t`` matrices and interruption event logs from all
+three engines.
 
 Usage:
     PYTHONPATH=src python benchmarks/campaign_throughput.py [--smoke]
-        [--pools 4096] [--cycles 16]
+        [--pools 4096] [--cycles 16] [--engine all|scalar|fleet|sharded]
 
-The full run asserts the fleet engine clears >= 20x the scalar engine at
-4096 pools x 16 cycles on CPU; ``--smoke`` only checks plumbing + parity.
+The full run asserts (at 4096 pools x 16 cycles on CPU) that the fleet
+engine clears >= 20x the scalar engine and the sharded engine >= 1x the
+fleet engine on a single device, and appends a perf record (with the
+device count, so multi-device trajectories accumulate in the same file)
+to ``BENCH_campaign.json``.  ``--smoke`` only checks plumbing + parity.
 """
 
 from __future__ import annotations
@@ -29,19 +39,22 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from pathlib import Path
 
 import numpy as np
 
 N_REQ = 10
 INTERVAL = 180.0
-REQUIRED_SPEEDUP = 20.0
+REQUIRED_SPEEDUP = 20.0           # fleet vs scalar
+REQUIRED_SHARDED_SPEEDUP = 1.0    # sharded vs fleet, 1-device CPU floor
+ENGINES = ("scalar", "fleet", "sharded")
 
 
 def _provider(pools: int, seed: int = 0):
     from repro.core import SimulatedProvider, default_fleet
 
     # rate limits sized for the paper's 68-pool campaign would starve a
-    # SpotLake-class fleet; lift them so both engines probe every pool
+    # SpotLake-class fleet; lift them so all engines probe every pool
     return SimulatedProvider(
         default_fleet(pools, seed=seed),
         seed=seed + 1,
@@ -53,6 +66,16 @@ def bench_engine(engine: str, pools: int, cycles: int) -> float:
     """pool-cycles/sec for one engine (fresh provider, same seed)."""
     from repro.core import run_campaign
 
+    if engine == "sharded":
+        # warm the process-wide compiled-step cache (one short campaign);
+        # steady-state throughput is the quantity that scales with fleets
+        run_campaign(
+            _provider(pools),
+            duration=2 * INTERVAL,
+            interval=INTERVAL,
+            n_requests=N_REQ,
+            engine=engine,
+        )
     provider = _provider(pools)
     t0 = time.perf_counter()
     run_campaign(
@@ -67,57 +90,77 @@ def bench_engine(engine: str, pools: int, cycles: int) -> float:
 
 
 def check_parity(pools: int = 256, cycles: int = 8) -> bool:
-    """engine='fleet' == engine='scalar' bit-for-bit on shared RNG streams."""
+    """All engines bit-for-bit identical on shared RNG streams."""
     from repro.core import run_campaign
 
-    results = []
-    for engine in ("scalar", "fleet"):
-        results.append(
-            run_campaign(
-                _provider(pools, seed=3),
-                duration=cycles * INTERVAL,
-                interval=INTERVAL,
-                n_requests=N_REQ,
-                engine=engine,
-                retain_records=False,
-            )
+    results = {}
+    for engine in ENGINES:
+        results[engine] = run_campaign(
+            _provider(pools, seed=3),
+            duration=cycles * INTERVAL,
+            interval=INTERVAL,
+            n_requests=N_REQ,
+            engine=engine,
+            retain_records=False,
         )
-    ca, cb = results
-    np.testing.assert_array_equal(ca.s, cb.s)
-    np.testing.assert_array_equal(ca.running, cb.running)
-    assert ca.interruptions == cb.interruptions, "interruption logs diverged"
-    assert ca.api_calls == cb.api_calls
+    ref = results["scalar"]
+    for engine in ("fleet", "sharded"):
+        got = results[engine]
+        np.testing.assert_array_equal(ref.s, got.s)
+        np.testing.assert_array_equal(ref.running, got.running)
+        assert ref.interruptions == got.interruptions, (
+            f"interruption logs diverged: scalar vs {engine}"
+        )
+        assert ref.api_calls == got.api_calls
     return True
 
 
-def run(pools: int = 4096, cycles: int = 16, smoke: bool = False) -> dict:
+def run(
+    pools: int = 4096, cycles: int = 16, smoke: bool = False, engine: str = "all"
+) -> dict:
+    import jax
+
+    engines = ENGINES if engine == "all" else (engine,)
     if smoke:
         pools, cycles = min(pools, 256), min(cycles, 8)
     sizes = sorted({min(1024, pools), pools})
 
     per_size = {}
     for p in sizes:
-        scalar_rate = bench_engine("scalar", p, cycles)
-        fleet_rate = bench_engine("fleet", p, cycles)
-        per_size[p] = {
-            "pool_cycles_per_sec": {
-                "scalar": round(scalar_rate),
-                "fleet": round(fleet_rate),
-            },
-            "speedup": round(fleet_rate / scalar_rate, 1),
-        }
+        rates = {e: bench_engine(e, p, cycles) for e in engines}
+        entry = {"pool_cycles_per_sec": {e: round(r) for e, r in rates.items()}}
+        if "scalar" in rates and "fleet" in rates:
+            entry["speedup"] = round(rates["fleet"] / rates["scalar"], 1)
+        if "fleet" in rates and "sharded" in rates:
+            entry["speedup_sharded_vs_fleet"] = round(
+                rates["sharded"] / rates["fleet"], 2
+            )
+        per_size[p] = entry
 
     result = {
         "cycles": cycles,
+        "devices": len(jax.devices()),
         "per_pools": per_size,
-        "speedup": per_size[pools]["speedup"],
         "parity_identical": check_parity(
             pools=min(pools, 256), cycles=min(cycles, 8)
         ),
         "smoke": smoke,
     }
+    top = per_size[pools]
+    if "speedup" in top:
+        result["speedup"] = top["speedup"]
+    if "speedup_sharded_vs_fleet" in top:
+        result["speedup_sharded_vs_fleet"] = top["speedup_sharded_vs_fleet"]
     if not smoke:
-        assert result["speedup"] >= REQUIRED_SPEEDUP, result
+        if "speedup" in result:
+            assert result["speedup"] >= REQUIRED_SPEEDUP, result
+        if "speedup_sharded_vs_fleet" in result:
+            assert (
+                result["speedup_sharded_vs_fleet"] >= REQUIRED_SHARDED_SPEEDUP
+            ), result
+        rec = dict(result, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
+        with open(Path.cwd() / "BENCH_campaign.json", "a") as f:
+            f.write(json.dumps(rec) + "\n")
     return result
 
 
@@ -125,10 +168,15 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--pools", type=int, default=4096)
     ap.add_argument("--cycles", type=int, default=16)
+    ap.add_argument("--engine", choices=("all",) + ENGINES, default="all",
+                    help="bench one engine only (parity always checks all)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small shapes; skip the 20x assertion")
+                    help="small shapes; skip the speedup assertions")
     args = ap.parse_args()
-    result = run(pools=args.pools, cycles=args.cycles, smoke=args.smoke)
+    result = run(
+        pools=args.pools, cycles=args.cycles, smoke=args.smoke,
+        engine=args.engine,
+    )
     print(json.dumps(result, indent=1))
 
 

@@ -3,12 +3,14 @@
 Reproduces the §III-B measurement study end to end and prints the
 Table-I agreement statistics, the Fig.-3 co-interruption CDF and the
 Fig.-5 cost comparison.  (~330k spot requests, well under a second via
-the batched fleet engine; ``--engine scalar`` runs the paper-faithful
-per-pool object path instead — same numbers, both engines share the
-provider's counter-based per-pool RNG streams.)
+the batched fleet engine.)  ``--engine`` picks the collector engine:
+``fleet`` (default, batched numpy), ``scalar`` (the paper-faithful
+per-pool object path) or ``sharded`` (the mesh-sharded JAX engine) —
+same numbers from each, all three share the provider's counter-based
+per-pool RNG streams.
 
 Run:  PYTHONPATH=src python examples/probe_campaign.py [--engine fleet]
-          [--pools 68]
+          [--pools 68] [--hours 24]
 """
 
 import argparse
@@ -24,18 +26,24 @@ from repro.core import (
 )
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("fleet", "scalar"), default="fleet",
-                    help="batched fleet engine (default) or per-pool scalar")
+    ap.add_argument("--engine", choices=("fleet", "scalar", "sharded"),
+                    default="fleet",
+                    help="batched fleet engine (default), per-pool scalar, "
+                         "or the mesh-sharded JAX engine")
     ap.add_argument("--pools", type=int, default=68)
-    args = ap.parse_args()
+    ap.add_argument("--hours", type=float, default=24.0,
+                    help="campaign duration (hours)")
+    args = ap.parse_args(argv)
 
     fleet = default_fleet(args.pools, seed=0)
     regions = sorted({c.region for c in fleet})
     provider = SimulatedProvider(fleet, seed=1)
     t0 = time.perf_counter()
-    campaign = run_campaign(provider, duration=24 * 3600.0, engine=args.engine)
+    campaign = run_campaign(
+        provider, duration=args.hours * 3600.0, engine=args.engine
+    )
     elapsed = time.perf_counter() - t0
 
     print(f"fleet: {len(fleet)} instance types x {len(regions)} regions "
@@ -68,6 +76,7 @@ def main():
           f"(compute ${rep.sns_compute:.2f} + serverless "
           f"${rep.sns_serverless:.2f})")
     print(f"  paper: 249.5x / 2.5x at 3.33x finer resolution")
+    return campaign
 
 
 if __name__ == "__main__":

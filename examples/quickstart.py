@@ -24,11 +24,11 @@ from repro.models import api
 from repro.train import OptConfig, init_opt_state, make_train_step, synthetic_batch
 
 
-def main():
+def main(pools=16, hours=12.0, train_steps=5):
     # -- 1. probe a simulated spot fleet ---------------------------------
-    fleet = default_fleet(16, seed=1)
+    fleet = default_fleet(pools, seed=1)
     provider = SimulatedProvider(fleet, seed=2)
-    campaign = run_campaign(provider, duration=12 * 3600.0)
+    campaign = run_campaign(provider, duration=hours * 3600.0)
     print(f"probed {len(campaign.pool_ids)} pools x {campaign.s.shape[1]} cycles "
           f"({campaign.api_calls} requests)")
     print(f"probe compute cost: ${campaign.probe_compute_cost:.2f} "
@@ -48,7 +48,7 @@ def main():
     opt_state = init_opt_state(params)
     step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3), remat="none"))
     batch = synthetic_batch(cfg, batch=4, seq=64, seed=0)
-    for i in range(5):
+    for i in range(train_steps):
         params, opt_state, metrics = step(params, opt_state, batch)
         print(f"step {i}: loss {float(metrics['loss']):.3f} "
               f"grad_norm {float(metrics['grad_norm']):.2f}")

@@ -51,6 +51,7 @@ from .provider import (
     SimulatedProvider,
     default_fleet,
 )
+from .sharded import ShardedProvider, run_sharded_campaign
 from .simulate import (
     SimResult,
     replay,
@@ -76,6 +77,7 @@ __all__ = [
     "batched_predict_fn", "pointwise_predict_fn",
     "InterruptionEvent", "InterruptionLog", "PoolConfig", "RateLimitError",
     "SimulatedProvider", "default_fleet",
+    "ShardedProvider", "run_sharded_campaign",
     "SimResult", "replay", "replay_batch", "run_strategies",
     "run_fleet_strategies",
     "tpcds_profile",

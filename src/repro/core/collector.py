@@ -17,7 +17,7 @@ in-process event-driven system with identical responsibilities:
   and start billing — the failure mode the paper's design eliminates
   (covered by tests at both engine scales).
 
-Two engines share the protocol:
+Three engines share the protocol:
 
 * :class:`SnSCollector` — the paper-faithful scalar engine: one
   ``submit_spot_request`` per pool per cycle, per-request
@@ -31,12 +31,17 @@ Two engines share the protocol:
   objects on the hot path; the terminator and its ``terminator_delay``
   leak are modelled at fleet granularity (held request cohorts, cancelled
   after the delay).
+* the mesh-sharded engine (:mod:`repro.core.sharded`, via
+  ``run_campaign(engine="sharded")``) — the 10^5–10^6-pool scale path:
+  pool state device-sharded across a 1-D ``("pools",)`` mesh, one
+  ``shard_map``-ped jitted step per cycle.
 
-Both engines ride the provider's counter-based per-pool RNG streams, so
-:func:`run_campaign(engine="fleet")` and ``engine="scalar"`` produce
-**identical** ``S_t`` / ``running_t`` matrices, interruption event logs,
-and cost accounting (the parity anchor, asserted in
-``tests/test_fleet_campaign.py`` and ``benchmarks/campaign_throughput.py``).
+All engines ride the provider's counter-based per-pool RNG streams, so
+:func:`run_campaign` produces **identical** ``S_t`` / ``running_t``
+matrices, interruption event logs, and cost accounting from every engine
+(the parity anchor, asserted in ``tests/test_fleet_campaign.py``,
+``tests/test_sharded_campaign.py`` and
+``benchmarks/campaign_throughput.py``).
 """
 
 from __future__ import annotations
@@ -321,14 +326,61 @@ def run_campaign(
 ) -> CampaignResult:
     """Run a §III-B style campaign: node pools + SnS probing side by side.
 
-    ``engine="fleet"`` (default) probes every pool per cycle in one
-    batched admission call and writes matrices directly;
-    ``engine="scalar"`` is the paper-faithful per-pool object path.  Both
-    produce identical results from the same provider seed.  ``on_cycle``
-    is invoked after every collection cycle with ``(cycle, time, S_t)``.
+    Every ``interval`` seconds each pool in ``pool_ids`` (default: the
+    provider's whole fleet) is probed with ``n_requests`` concurrent spot
+    requests while ``node_pool_size`` ground-truth nodes per pool record
+    what was actually obtainable; the result carries the ``S_t`` /
+    ``running_t`` matrices, interruption log, and cost accounting.
+
+    Args:
+      engine: which collector implementation runs the campaign — all
+        three produce **bit-identical** results from the same provider
+        seed (they share the counter-based per-pool RNG streams):
+
+        * ``"fleet"`` (default) — batched numpy: one admission call per
+          cycle for the whole fleet, matrices instead of per-probe
+          objects.  The right choice up to ~10^4 pools on one host.
+        * ``"scalar"`` — the paper-faithful per-pool object path
+          (``SpotRequest`` lifecycles, event-driven terminator,
+          per-probe Data-Lake rows).  Readable, O(pools) Python per
+          cycle; use it to study per-request behaviour.
+        * ``"sharded"`` — the mesh-sharded JAX engine
+          (:mod:`repro.core.sharded`): per-pool state lives device-
+          sharded on a 1-D ``("pools",)`` mesh and each cycle is one
+          ``shard_map``-ped step — the 10^5–10^6-pool scale path.
+          Requires a *fresh* provider and ``terminator_delay == 0``.
+      terminator_delay: seconds the Request Terminator lags behind
+        provisioning acceptance.  ``0`` (default) models the paper's
+        event-driven terminator: accepted probes are cancelled while
+        still provisioning and never bill.  Positive values model a
+        slow/polling terminator — probes that finish provisioning within
+        the delay leak into RUNNING and show up in
+        ``probe_compute_cost`` (the failure mode §V's design
+        eliminates).  Supported by ``"scalar"`` and ``"fleet"``.
+      retain_records: keep per-probe ``ProbeRecord`` objects /
+        ``SpotRequest`` views on the scalar engine (switch off at fleet
+        scale; aggregates stay exact).
+      on_cycle: hook invoked after every collection cycle with
+        ``(cycle, time, S_t)`` — the Data-Pipeline glue point used by
+        :func:`repro.core.pipeline.run_campaign_pipeline`.
     """
+    if engine == "sharded":
+        from .sharded import run_sharded_campaign  # local: jax-dependent
+
+        return run_sharded_campaign(
+            provider,
+            pool_ids=pool_ids,
+            duration=duration,
+            interval=interval,
+            n_requests=n_requests,
+            node_pool_size=node_pool_size,
+            terminator_delay=terminator_delay,
+            on_cycle=on_cycle,
+        )
     if engine not in ("fleet", "scalar"):
-        raise ValueError(f"unknown engine {engine!r} (want 'fleet' or 'scalar')")
+        raise ValueError(
+            f"unknown engine {engine!r} (want 'fleet', 'scalar' or 'sharded')"
+        )
     pool_ids = list(pool_ids) if pool_ids is not None else provider.pool_ids
     for pid in pool_ids:
         provider.set_node_pool(pid, node_pool_size)

@@ -379,6 +379,13 @@ def run_campaign_pipeline(
     the whole fleet — the measure → featurize → predict loop of §V with
     no per-pool Python work between the layers.
 
+    Campaign options (including ``engine``) pass through via
+    ``campaign_kwargs``: with ``engine="sharded"`` the cycle's ``S_t``
+    lands from the device-sharded admission step and flows into the same
+    ``update_batch`` + ``batched_predict_fn`` path — features and
+    predictions stay bit-identical to the fleet engine
+    (``tests/test_sharded_campaign.py``).
+
     Pass an existing ``processor`` to keep accumulating into it, or let
     one be built from the campaign's pool list and cadence.  Returns
     ``(CampaignResult, FleetFeatureProcessor)``.

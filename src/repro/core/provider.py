@@ -68,6 +68,7 @@ __all__ = [
     "RateLimitError",
     "SimulatedProvider",
     "default_fleet",
+    "reclaim_sweep_delays",
 ]
 
 
@@ -239,6 +240,27 @@ class InterruptionLog:
 
     def __repr__(self) -> str:
         return f"InterruptionLog(n={self._n}, pools={len(self._pool_ids)})"
+
+
+def reclaim_sweep_delays(seed: int, pool: int, tick: int, k: int) -> np.ndarray:
+    """Clustered interruption delays for one reclamation sweep of ``k``
+    instances (paper Fig. 3 calibration: a fast exponential for the same
+    sweep, a slower uniform tail for follow-up sweeps).
+
+    A pure function of ``(seed, pool, tick, k)`` on the counter-based RNG
+    streams — shared by :meth:`SimulatedProvider._reclaim` and the sharded
+    engine's host-side interruption-log writer
+    (:mod:`repro.core.sharded`), which is what keeps interruption
+    timestamps bit-identical across engines.
+    """
+    i = np.arange(k)
+    um = keyed_uniform(seed, pool, tick, _TAG_RECLAIM + 2 * i)
+    ud = keyed_uniform(seed, pool, tick, _TAG_RECLAIM + 2 * i + 1)
+    return np.where(
+        (i == 0) | (um < 0.86),
+        keyed_exponential(16.0, ud),
+        keyed_uniform_between(60.0, 600.0, ud),
+    )
 
 
 @dataclasses.dataclass
@@ -664,15 +686,8 @@ class SimulatedProvider:
         k = min(k, len(fifo))
         if k == 0:
             return
-        i = np.arange(k)
         tick = self._tick_count
-        um = keyed_uniform(self._seed, p, tick, _TAG_RECLAIM + 2 * i)
-        ud = keyed_uniform(self._seed, p, tick, _TAG_RECLAIM + 2 * i + 1)
-        delay = np.where(
-            (i == 0) | (um < 0.86),
-            keyed_exponential(16.0, ud),
-            keyed_uniform_between(60.0, 600.0, ud),
-        )
+        delay = reclaim_sweep_delays(self._seed, p, tick, k)
         uids = np.empty(k, dtype=np.int64)
         times = self.now + delay[:k]
         for j in range(k):

@@ -1,0 +1,666 @@
+"""Mesh-sharded fleet campaign engine — the pool axis across devices.
+
+This is the third campaign engine (after ``scalar`` and ``fleet``, see
+:mod:`repro.core.collector`): the whole measure loop — provider dynamics
+ticks, node-pool replenishment, reclamation sweeps, and the per-cycle
+batched SnS admission — runs as **one** ``shard_map``-ped, jitted device
+step per collection cycle, with the stacked ``(pools,)`` state living as
+device-sharded arrays on a 1-D ``("pools",)`` mesh.  Every per-pool
+operation is elementwise along the pool axis, so the step needs **zero
+cross-device communication**: 10^5–10^6-pool fleets split across hosts /
+devices under the same ``step_batch`` contract (ROADMAP "sharded campaign
+engine" item).
+
+Bit-identity with the fleet engine
+----------------------------------
+
+``run_campaign(engine="sharded")`` is **bit-identical** row-for-row to
+``engine="fleet"`` (and therefore to ``engine="scalar"``): identical
+``S_t`` / ``running_t`` matrices, interruption logs, and cost accounting.
+Three properties make that possible:
+
+* **Counter-based RNG** (:mod:`repro.core.rng`): every draw is a pure
+  function of ``(seed, pool, counter, site)``.  The SplitMix64 hash is
+  pure uint64 integer arithmetic, which JAX reproduces bit-exactly, so
+  the device step evaluates the same hash at the same keys as numpy.
+* **Exact-arithmetic mirroring**: every floating-point expression in the
+  device step copies the numpy engine's operation order; IEEE-754 add /
+  mul / div / sqrt / compare are deterministic, and ``jnp.cos`` matches
+  numpy bitwise on the probed range.  The one libm routine that does
+  *not* match (``log1p``, used by the exponential / Box–Muller variate
+  transforms) is handled by precomputing small per-cycle ``log1p`` tables
+  on the host with numpy — their keys ``(seed, pool, tick, site)`` are
+  known before the step runs, so the tables are inputs, not round-trips.
+* **Position-stable keys**: RNG keys depend on the pool's *index*, not on
+  how pools are laid out across devices.  Padding the pool axis up to a
+  multiple of the mesh size (padded pools get ``target_nodes == 0`` and
+  are masked out of every output) is therefore the only sharding-visible
+  change — asserted in ``tests/test_sharded_campaign.py``.
+
+Event-granular bookkeeping stays off-device: reclamation *timestamps*
+(which only feed the interruption log, never the dynamics) are computed
+host-side from the step's ``(tick, pool, count, uid-start)`` outputs via
+:func:`repro.core.provider.reclaim_sweep_delays` — the same function the
+numpy engine calls — and per-region rate limiting (a tiny
+O(regions) sliding-window check with sequential semantics) runs on the
+host before the admission step, exactly as ``submit_spot_requests`` does.
+
+Scope: the sharded engine models the paper's *event-driven* terminator
+(``terminator_delay == 0``, the design point that makes probing free);
+the slow-terminator leak pathology stays on the ``fleet`` / ``scalar``
+engines.  It also requires ``provisioning_duration <= tick`` (the
+default: 8 s vs 60 s), which guarantees at most one in-flight
+replenishment cohort per pool.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .collector import CampaignResult
+from .provider import (
+    _FLAKE_P,
+    _TAG_DEGRADE_BUMP,
+    _TAG_DWELL,
+    _TAG_NEXT_REGIME,
+    _TAG_NOISE_A,
+    _TAG_NOISE_B,
+    _TAG_RECLAIM_BUMP,
+    _TAG_REPLENISH,
+    _TAG_SUBMIT,
+    _TAG_TARGET,
+    CRUNCH,
+    STABLE,
+    TIGHT,
+    PoolConfig,
+    SimulatedProvider,
+    reclaim_sweep_delays,
+)
+from .rng import keyed_uniform
+
+__all__ = ["ShardedProvider", "run_sharded_campaign"]
+
+
+# --------------------------------------------------------------------------
+# Device-side twin of repro.core.rng (uint64 SplitMix64 — bit-exact in XLA)
+# --------------------------------------------------------------------------
+
+# The hash constants come from rng.py itself — the bit-identity guarantee
+# hinges on the device twin and the numpy streams sharing one definition.
+from .rng import (  # noqa: E402
+    _GOLDEN,
+    _INV53,
+    _LANE_CTR,
+    _LANE_POOL,
+    _LANE_TAG,
+    _M1,
+    _M2,
+)
+
+_U64 = np.uint64
+_TWO_PI = 2.0 * np.pi
+
+
+def _dev_mix(x):
+    """SplitMix64 finalizer on jnp.uint64 (identical bits to rng._mix)."""
+    import jax.numpy as jnp
+
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(_M1)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(_M2)
+    return x ^ (x >> jnp.uint64(31))
+
+
+def _dev_u64(x):
+    import jax.numpy as jnp
+
+    return jnp.asarray(x, dtype=jnp.int64).astype(jnp.uint64)
+
+
+def _dev_keyed_uniform(h0, pool, counter, tag):
+    """Device twin of :func:`repro.core.rng.keyed_uniform` — uint64 ops
+    wrap identically, the final ``* 2^-53`` scaling is exact."""
+    import jax.numpy as jnp
+
+    h = _dev_mix(h0 ^ (_dev_u64(pool) * jnp.uint64(_LANE_POOL)))
+    h = _dev_mix(h ^ (_dev_u64(counter) * jnp.uint64(_LANE_CTR)))
+    h = _dev_mix(h ^ (_dev_u64(tag) * jnp.uint64(_LANE_TAG)))
+    return (h >> jnp.uint64(11)).astype(jnp.float64) * _INV53
+
+
+def _dev_unif_between(lo, hi, u):
+    """Device twin of ``keyed_uniform_between`` (same ``lo + (hi-lo)*u``)."""
+    return lo + (hi - lo) * u
+
+
+#: compiled cycle steps, shared across ShardedProvider instances: keyed on
+#: (mesh, padded_pools, d_max, n_requests); per-provider scalars (seed
+#: hash, provisioning duration, margin decay, replenish delay) are step
+#: *inputs*, so back-to-back campaigns never recompile.
+_STEP_CACHE = {}
+
+
+# --------------------------------------------------------------------------
+# Sharded provider
+# --------------------------------------------------------------------------
+
+
+class ShardedProvider:
+    """Device-sharded twin of :class:`~repro.core.provider.SimulatedProvider`
+    for campaign workloads.
+
+    Construct from a *fresh* ``SimulatedProvider`` (adopting its fleet,
+    seed and control-plane settings) or from a sequence of
+    :class:`PoolConfig` plus the same keyword settings.  All per-pool
+    state lives in ``(padded_pools,)`` arrays sharded across a 1-D
+    ``("pools",)`` mesh (built via the version-compat helpers in
+    :mod:`repro.launch.mesh`); one collection cycle —
+    dynamics ticks + fractional settle + batched admission — is a single
+    jitted ``shard_map`` call with no host round-trips inside.
+
+    ``shards`` picks the mesh size (default: all visible devices);
+    ``pad_multiple`` additionally pads the pool axis to a multiple of the
+    given value, which lets single-device tests exercise the padding +
+    masking path the multi-device mesh relies on.
+    """
+
+    def __init__(
+        self,
+        pools,
+        *,
+        shards: Optional[int] = None,
+        pad_multiple: Optional[int] = None,
+        **provider_kwargs,
+    ):
+        if isinstance(pools, SimulatedProvider):
+            if provider_kwargs:
+                raise ValueError(
+                    "pass provider settings either via an existing "
+                    "SimulatedProvider or as keyword arguments, not both"
+                )
+            host = pools
+            if host.now != 0.0 or host._tick_count != 0:
+                raise ValueError(
+                    "ShardedProvider must adopt a fresh SimulatedProvider "
+                    "(per-instance ledgers of a mid-flight provider are not "
+                    "representable as sharded state)"
+                )
+        else:
+            host = SimulatedProvider(list(pools), **provider_kwargs)
+        if host.provisioning_duration > host.tick:
+            raise NotImplementedError(
+                "sharded engine requires provisioning_duration <= tick "
+                f"({host.provisioning_duration} > {host.tick}): it carries "
+                "at most one in-flight replenishment cohort per pool"
+            )
+        self._host = host
+        self.tick = host.tick
+        self.provisioning_duration = host.provisioning_duration
+        self.replenish_delay = host.replenish_delay
+        self.now = 0.0
+        self._tick_count = 0
+        self._seed = host._seed
+        self.n_pools = host.n_pools
+        self.interruptions = host.interruptions
+
+        import jax
+
+        from ..launch.mesh import make_pool_mesh
+
+        self.shards = int(shards) if shards else len(jax.devices())
+        unit = math.lcm(self.shards, int(pad_multiple) if pad_multiple else 1)
+        self.padded_pools = ((self.n_pools + unit - 1) // unit) * unit
+        self.mesh = make_pool_mesh(self.shards)
+
+        P, Pp = self.n_pools, self.padded_pools
+
+        def pad(a, fill):
+            out = np.full(Pp, fill, dtype=np.asarray(a).dtype)
+            out[:P] = a
+            return out
+
+        dwell = np.empty((Pp, 3), dtype=np.float64)
+        dwell[:P] = host._dwell
+        dwell[P:] = (8 * 3600.0, 50 * 60.0, 10 * 60.0)
+        self._params = {
+            "pool_ix": np.arange(Pp, dtype=np.int64),
+            "base_capacity": pad(host.base_capacity, 30.0),
+            "volatility": pad(host.volatility, 1.0),
+            "p_tight_first": pad(host._p_tight_first, 0.85),
+            "dwell": dwell,
+        }
+        # regime_until follows the exact init formula of SimulatedProvider;
+        # the first n_pools entries therefore equal host.regime_until bitwise
+        from .rng import keyed_exponential
+
+        u0 = keyed_uniform(self._seed, np.arange(Pp), 0, _TAG_DWELL)
+        self._state = {
+            "capacity": pad(host.capacity, 30.0),
+            "regime": np.zeros(Pp, dtype=np.int64),
+            "regime_until": keyed_exponential(dwell[:, STABLE], u0),
+            "margin": np.zeros(Pp, dtype=np.float64),
+            "n_running": np.zeros(Pp, dtype=np.int64),
+            "n_provisioning": np.zeros(Pp, dtype=np.int64),
+            "target_nodes": np.zeros(Pp, dtype=np.int64),
+            "replenish_at": np.full(Pp, math.inf),
+            "submit_seq": np.zeros(Pp, dtype=np.int64),
+            "head_uid": np.zeros(Pp, dtype=np.int64),
+            "next_uid": np.zeros(Pp, dtype=np.int64),
+            "cohort_count": np.zeros(Pp, dtype=np.int64),
+            "cohort_start": np.zeros(Pp, dtype=np.float64),
+        }
+        self._started = False
+        self._steps = {}  # n_requests -> jitted shard_map step
+
+    # -- config / bookkeeping passthrough ----------------------------------
+
+    @property
+    def pool_ids(self) -> List[str]:
+        return self._host.pool_ids
+
+    @property
+    def api_calls(self) -> int:
+        return self._host.api_calls
+
+    def pool_index(self, pool_ids: Sequence[str]) -> np.ndarray:
+        return self._host.pool_index(pool_ids)
+
+    def pool_config(self, pool_id: str) -> PoolConfig:
+        return self._host.pool_config(pool_id)
+
+    def set_node_pools(self, pool_ids: Sequence[str], n_nodes: int) -> None:
+        """Batch ``set_node_pool``: declare ground-truth node pools for
+        every listed pool at once (pre-campaign only)."""
+        if self._started:
+            raise RuntimeError("node pools must be declared before the first step")
+        idx = self.pool_index(pool_ids)
+        self._state["target_nodes"][idx] = int(n_nodes)
+        self._state["replenish_at"][idx] = self.now
+
+    # -- device step construction ------------------------------------------
+
+    def _get_step(self, n: int):
+        if n in self._steps:
+            return self._steps[n]
+        d_max = max(int(np.asarray(self._state["target_nodes"]).max()), 1)
+        key = (self.mesh, self.padded_pools, d_max, int(n))
+        fn = _STEP_CACHE.get(key)
+        if fn is None:
+            fn = _build_step(self.mesh, d_max, int(n))
+            _STEP_CACHE[key] = fn
+        self._steps[n] = fn
+        return fn
+
+    # -- campaign-facing API ------------------------------------------------
+
+    def advance(self, to_time: float, *, n_hint: int = 1) -> None:
+        """Advance the fleet clock (dynamics ticks + fractional settle) in
+        one device call — the sharded ``SimulatedProvider.advance``.
+        ``n_hint`` lets callers reuse the compiled step of an upcoming
+        ``probe_cycle(n=n_hint)`` instead of building a second one."""
+        self._run(to_time, None, n_hint)
+
+    def probe_cycle(self, to_time: float, pool_idx: np.ndarray, n: int):
+        """Advance to ``to_time`` and probe ``pool_idx`` with ``n``
+        concurrent requests each, all in one ``shard_map``-ped step.
+
+        Returns ``(S_t, running_t)`` for ``pool_idx`` (host arrays).
+        """
+        counts, running = self._run(to_time, np.asarray(pool_idx, np.int64), n)
+        return counts, running
+
+    def _run(self, to_time: float, pool_idx: Optional[np.ndarray], n: int):
+        if to_time < self.now:
+            raise ValueError("time moves forward only")
+        P, Pp = self.n_pools, self.padded_pools
+        # -- tick schedule: mirror advance()'s accumulate-by-addition loop
+        now = self.now
+        nows, tick_ids = [], []
+        while now + self.tick <= to_time:
+            now += self.tick
+            self._tick_count += 1
+            nows.append(now)
+            tick_ids.append(self._tick_count)
+        do_frac = to_time > now
+        frac_now = to_time if do_frac else -1.0
+        if do_frac:
+            now = to_time
+        n_ticks = len(nows)
+        nows_a = np.asarray(nows, dtype=np.float64)
+        ticks_a = np.asarray(tick_ids, dtype=np.int64)
+        # -- host log1p tables for the two exponential/normal draw sites
+        if n_ticks:
+            pool_row = np.arange(Pp)[None, :]
+            l_dwell = np.log1p(
+                -keyed_uniform(self._seed, pool_row, ticks_a[:, None], _TAG_DWELL)
+            )
+            l_noise = np.log1p(
+                -keyed_uniform(self._seed, pool_row, ticks_a[:, None], _TAG_NOISE_A)
+            )
+        else:
+            l_dwell = np.zeros((0, Pp))
+            l_noise = np.zeros((0, Pp))
+        # -- host-side rate limiting (sequential per-region semantics)
+        probe_mask = np.zeros(Pp, dtype=bool)
+        do_submit = pool_idx is not None
+        if do_submit:
+            self._host.now = now  # measurement timestamp for the window
+            admitted = self._host._charge_rate_limit_batch(pool_idx, n)
+            probe_mask[pool_idx[admitted]] = True
+
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            fn = self._get_step(n)
+            if not self._started:
+                self._commit_to_devices()
+            st, counts, running, k_rec, uid0 = fn(
+                self._hyper, self._params, self._state, nows_a, ticks_a,
+                l_dwell, l_noise, np.float64(frac_now), np.bool_(do_frac),
+                probe_mask, np.bool_(do_submit),
+            )
+        self._state = st
+        self.now = now
+        # -- interruption log: sweeps in tick order, pools ascending — the
+        # same append order as the numpy engines; timestamps via the shared
+        # reclaim_sweep_delays draw (bit-identical by construction)
+        if n_ticks:
+            k_rec = np.asarray(k_rec)
+            if k_rec.any():
+                uid0 = np.asarray(uid0)
+                for i in range(n_ticks):
+                    hits = np.nonzero(k_rec[i, :P])[0]
+                    for p in hits:
+                        k = int(k_rec[i, p])
+                        delay = reclaim_sweep_delays(
+                            self._seed, int(p), int(ticks_a[i]), k
+                        )
+                        self.interruptions.append_sweep(
+                            int(p),
+                            uid0[i, p] + np.arange(k, dtype=np.int64),
+                            nows_a[i] + delay[:k],
+                        )
+        if not do_submit:
+            return None, None
+        counts = np.asarray(counts)[:P]
+        running = np.asarray(running)[:P]
+        return counts[pool_idx], running[pool_idx]
+
+    def _commit_to_devices(self) -> None:
+        """Shard the initial state/params across the mesh once, before the
+        first step (avoids an uncommitted->committed retrace later)."""
+        import jax
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as PS
+
+        with np.errstate(over="ignore"):  # uint64 wraparound is the hash
+            h0 = _U64(self._seed & 0xFFFFFFFFFFFFFFFF) * _GOLDEN
+        self._hyper = {
+            "h0": h0,
+            "pd": np.float64(self.provisioning_duration),
+            "decay": np.float64(self._host._margin_decay),
+            "replenish_delay": np.float64(self.replenish_delay),
+        }
+        sharded = NamedSharding(self.mesh, PS("pools"))
+        self._params = jax.device_put(self._params, sharded)
+        self._state = jax.device_put(self._state, sharded)
+        self._started = True
+
+def _build_step(mesh, d_max: int, n: int):
+    """Compile the one-cycle device step for ``(mesh, d_max, n)``.
+
+    The returned function is ``jit(shard_map(step))`` over the 1-D
+    ``("pools",)`` mesh: a ``lax.scan`` over the cycle's dynamics ticks
+    (settle -> regime -> capacity -> margin decay -> reclaim ->
+    replenish, mirroring ``SimulatedProvider._step_fleet`` op for op),
+    the optional fractional-advance settle, and the batched ``n``-request
+    admission.  Per-provider scalars arrive via the ``hyper`` input dict
+    so one compilation serves every provider with the same shapes.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as PS
+
+    from ..models.common import shard_map
+
+    def settle(hyper, st, now, enabled):
+        # provisioning completes after `provisioning_duration`; cohorts
+        # still pending then transition to RUNNING (uids at the tail)
+        due = enabled & (st["cohort_count"] > 0) & (
+            now - st["cohort_start"] >= hyper["pd"]
+        )
+        k = jnp.where(due, st["cohort_count"], 0)
+        st["n_provisioning"] = st["n_provisioning"] - k
+        st["n_running"] = st["n_running"] + k
+        st["next_uid"] = st["next_uid"] + k
+        st["cohort_count"] = jnp.where(due, 0, st["cohort_count"])
+        return st
+
+    def tick_body(hyper, params, st, xs):
+        now, tick_id, l_dwell, l_noise = xs
+        ku = partial(_dev_keyed_uniform, hyper["h0"])
+        st = dict(st)
+        pool = params["pool_ix"]
+        st = settle(hyper, st, now, jnp.bool_(True))
+        # -- regime transitions (mirrors _step_fleet line for line) --------
+        due = now >= st["regime_until"]
+        u = ku(pool, tick_id, _TAG_NEXT_REGIME)
+        r = st["regime"]
+        new = jnp.where(
+            r == STABLE,
+            jnp.where(u < params["p_tight_first"], TIGHT, CRUNCH),
+            jnp.where(
+                r == TIGHT,
+                jnp.where(u < 0.75, CRUNCH, STABLE),
+                jnp.where(u < 0.6, TIGHT, STABLE),
+            ),
+        )
+        ud = ku(pool, tick_id, _TAG_DWELL)
+        mean = jnp.take_along_axis(params["dwell"], new[:, None], axis=1)[:, 0]
+        dwell_draw = jnp.where(
+            new == STABLE,
+            -mean * l_dwell,  # keyed_exponential(mean, ud), host log1p
+            _dev_unif_between(0.7 * mean, 1.3 * mean, ud),
+        )
+        st["regime"] = jnp.where(due, new, r)
+        st["regime_until"] = jnp.where(due, now + dwell_draw, st["regime_until"])
+        ub = ku(pool, tick_id, _TAG_DEGRADE_BUMP)
+        bump = _dev_unif_between(0.15, 0.7, ub) * jnp.maximum(
+            st["target_nodes"], 4
+        )
+        st["margin"] = jnp.where(
+            due & (new != STABLE), jnp.maximum(st["margin"], bump), st["margin"]
+        )
+        # -- capacity mean-reversion to regime target ----------------------
+        nmax = jnp.maximum(st["target_nodes"], 1).astype(jnp.float64)
+        ut = ku(pool, tick_id, _TAG_TARGET)
+        target = jnp.where(
+            st["regime"] == STABLE,
+            params["base_capacity"],
+            jnp.where(
+                st["regime"] == TIGHT,
+                nmax + _dev_unif_between(0.15 * nmax, 0.6 * nmax, ut),
+                _dev_unif_between(0.0, 0.8 * nmax, ut),
+            ),
+        )
+        ubn = ku(pool, tick_id, _TAG_NOISE_B)
+        # keyed_normal(vol, ua, ub): sqrt/cos are bitwise-identical in
+        # XLA; log1p(-ua) arrives precomputed from the host (l_noise)
+        noise = (
+            params["volatility"]
+            * jnp.sqrt(-2.0 * l_noise)
+            * jnp.cos(_TWO_PI * ubn)
+        )
+        st["capacity"] = jnp.maximum(
+            st["capacity"] + (0.35 * (target - st["capacity"]) + noise), 0.0
+        )
+        # -- admission margin decay ----------------------------------------
+        m2 = st["margin"] * hyper["decay"]
+        st["margin"] = jnp.where(m2 < 0.05, 0.0, m2)
+        # -- reclamation sweeps (FIFO == contiguous uid range) -------------
+        overflow = st["n_running"] - st["capacity"].astype(jnp.int64)
+        sweep = (overflow > 0) & ((st["regime"] == CRUNCH) | (overflow >= 3))
+        k_rec = jnp.where(sweep, jnp.minimum(overflow, st["n_running"]), 0)
+        hit = k_rec > 0
+        uid0 = st["head_uid"]
+        st["head_uid"] = st["head_uid"] + k_rec
+        st["n_running"] = st["n_running"] - k_rec
+        ubump = ku(pool, tick_id, _TAG_RECLAIM_BUMP)
+        rbump = k_rec.astype(jnp.float64) + _dev_unif_between(
+            0.4, 1.0, ubump
+        ) * jnp.maximum(st["target_nodes"], 4)
+        st["margin"] = jnp.where(hit, st["margin"] + rbump, st["margin"])
+        st["replenish_at"] = jnp.where(
+            hit,
+            jnp.maximum(st["replenish_at"], now + hyper["replenish_delay"]),
+            st["replenish_at"],
+        )
+        # -- node-pool replenishment ---------------------------------------
+        deficit = st["target_nodes"] - st["n_running"] - st["n_provisioning"]
+        mask = (
+            (st["target_nodes"] > 0)
+            & (now >= st["replenish_at"])
+            & (deficit > 0)
+        )
+        j = jnp.arange(d_max, dtype=jnp.int64)
+        u_rep = ku(pool[:, None], tick_id, _TAG_REPLENISH + j[None, :])
+        headroom = (
+            st["capacity"]
+            - st["n_running"]
+            - st["n_provisioning"]
+            - st["margin"]
+        )
+        ok = (
+            (j[None, :] < headroom[:, None])
+            & (u_rep >= _FLAKE_P)
+            & (j[None, :] < deficit[:, None])
+        )
+        accepts = jnp.where(
+            mask, jnp.cumprod(ok.astype(jnp.int64), axis=1).sum(axis=1), 0
+        )
+        got = accepts > 0
+        st["n_provisioning"] = st["n_provisioning"] + jnp.where(mask, accepts, 0)
+        st["cohort_count"] = jnp.where(got, accepts, st["cohort_count"])
+        st["cohort_start"] = jnp.where(got, now, st["cohort_start"])
+        return st, (k_rec, uid0)
+
+    def step(
+        hyper, params, st, nows, tick_ids, l_dwell, l_noise,
+        frac_now, do_frac, probe_mask, do_submit,
+    ):
+        st, (k_rec, uid0) = lax.scan(
+            partial(tick_body, hyper, params), dict(st),
+            (nows, tick_ids, l_dwell, l_noise),
+        )
+        st = settle(hyper, st, frac_now, do_frac)
+        # -- batched admission (the SnS probe; the scoot leaves state as-is)
+        pool = params["pool_ix"]
+        active = probe_mask & do_submit
+        seq = st["submit_seq"]
+        u = _dev_keyed_uniform(
+            hyper["h0"], pool[:, None], seq[:, None],
+            _TAG_SUBMIT + jnp.arange(n, dtype=jnp.int64)[None, :],
+        )
+        okf = u >= _FLAKE_P
+        headroom = (
+            st["capacity"]
+            - st["n_running"]
+            - st["n_provisioning"]
+            - st["margin"]
+        )
+        acc = okf & ((jnp.cumsum(okf, axis=1) - 1) < headroom[:, None])
+        counts = jnp.where(active, acc.sum(axis=1).astype(jnp.int64), 0)
+        st["submit_seq"] = jnp.where(active, seq + 1, seq)
+        return st, counts, st["n_running"], k_rec, uid0
+
+    sharded = PS("pools")
+    rep = PS()
+    ticks_sharded = PS(None, "pools")
+    return jax.jit(
+        shard_map(
+            step,
+            mesh=mesh,
+            in_specs=(
+                rep, sharded, sharded, rep, rep, ticks_sharded, ticks_sharded,
+                rep, rep, sharded, rep,
+            ),
+            out_specs=(sharded, sharded, sharded, ticks_sharded, ticks_sharded),
+        )
+    )
+
+# --------------------------------------------------------------------------
+# Campaign driver (the engine="sharded" path of run_campaign)
+# --------------------------------------------------------------------------
+
+
+def run_sharded_campaign(
+    provider,
+    *,
+    pool_ids: Optional[Sequence[str]] = None,
+    duration: float = 24 * 3600.0,
+    interval: float = 180.0,
+    n_requests: int = 10,
+    node_pool_size: int = 10,
+    terminator_delay: float = 0.0,
+    on_cycle=None,
+    shards: Optional[int] = None,
+    pad_multiple: Optional[int] = None,
+) -> CampaignResult:
+    """§III-B campaign on the mesh-sharded engine (see module docstring).
+
+    ``provider`` is either a fresh :class:`SimulatedProvider` (its fleet,
+    seed and settings are adopted) or a prebuilt :class:`ShardedProvider`.
+    Results are bit-identical to ``run_campaign(engine="fleet")`` on the
+    same provider seed.  ``on_cycle`` fires with ``(cycle, time, S_t)``
+    after every cycle, exactly like the other engines, so
+    ``run_campaign_pipeline`` glue works unchanged.
+    """
+    if terminator_delay != 0.0:
+        raise NotImplementedError(
+            "engine='sharded' models the event-driven terminator only "
+            "(terminator_delay=0); use engine='fleet' or 'scalar' to study "
+            "slow-terminator probe leaks"
+        )
+    if isinstance(provider, ShardedProvider):
+        sp = provider
+    else:
+        sp = ShardedProvider(provider, shards=shards, pad_multiple=pad_multiple)
+    pool_ids = list(pool_ids) if pool_ids is not None else sp.pool_ids
+    sp.set_node_pools(pool_ids, node_pool_size)
+    # Let pools acquire their initial nodes before the first measurement
+    # (n_hint: share the compiled step with the probe cycles below).
+    sp.advance(sp.now + 3 * sp.tick, n_hint=n_requests)
+
+    n_cycles = int(duration // interval)
+    t0 = sp.now
+    idx = sp.pool_index(pool_ids)
+    times = np.zeros(n_cycles)
+    s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
+    running = np.zeros_like(s)
+    for c in range(n_cycles):
+        counts, run_t = sp.probe_cycle(t0 + c * interval, idx, n_requests)
+        times[c] = sp.now
+        s[:, c] = counts
+        running[:, c] = run_t
+        if on_cycle is not None:
+            on_cycle(c, times[c], s[:, c])
+
+    prices = np.array([sp.pool_config(pid).price_per_hour for pid in pool_ids])
+    node_cost = float((running.sum(axis=1) * (interval / 3600.0) * prices).sum())
+    return CampaignResult(
+        pool_ids=pool_ids,
+        times=times,
+        s=s,
+        running=running,
+        n=n_requests,
+        interval=interval,
+        interruptions=sp.interruptions.snapshot(),
+        probe_compute_cost=0.0,  # event-driven terminator: nothing leaks
+        node_pool_cost=node_cost,
+        api_calls=sp.api_calls,
+        engine="sharded",
+    )

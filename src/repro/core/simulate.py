@@ -402,11 +402,24 @@ def replay_batch(
         launch order (``sjf`` sorts each row internally).
       predictions: (B, T) or (T,) per-cycle labels, required for
         ``predict_ar``.
-      engine: "numpy" (the per-cycle vectorised oracle), "scan" (the
-        ``lax.scan`` closed form — the fast CPU path), "kernel" (the
-        chunked Pallas kernel), or "auto" (Pallas on TPU, scan
-        elsewhere).  All engines are bit-identical to :func:`replay`
-        row by row.
+      strategy: ``"always_run"`` | ``"sjf"`` (shortest-job-first sort of
+        each row's queue) | ``"predict_ar"`` (defer new launches while
+        the model predicts unavailability).
+      engine: which implementation of the replay contract runs the batch
+        — all are **bit-identical (atol=0)** to the scalar
+        :func:`replay` row by row:
+
+        * ``"numpy"`` — the vectorised per-cycle loop (the parity
+          oracle; also taken automatically for degenerate empty-queue /
+          empty-trace shapes);
+        * ``"scan"`` — the ``lax.scan`` closed form with windowed prefix
+          counts, the fast CPU path (float64 runs under a scoped
+          ``enable_x64``; auto row-sharded at fleet batch sizes);
+        * ``"kernel"`` — the chunked Pallas kernel (native on TPU at
+          float32; interpret mode elsewhere);
+        * ``"auto"`` (default) — Pallas on TPU for float32 inputs, scan
+          everywhere else (float64 contracts stay on the bit-identical
+          scan even on TPU).
 
     Returns stacked metrics ``{"lost_seconds", "idle_seconds",
     "completed", "total_queries", "makespan_seconds"}``, each of shape

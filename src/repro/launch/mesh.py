@@ -23,6 +23,7 @@ __all__ = [
     "make_explicit_mesh",
     "use_mesh",
     "make_production_mesh",
+    "make_pool_mesh",
     "data_axes_of",
     "mesh_axis_sizes",
 ]
@@ -60,6 +61,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_explicit_mesh(shape, axes)
+
+
+def make_pool_mesh(shards: int = 0):
+    """1-D ``("pools",)`` mesh for the sharded campaign engine
+    (``repro.core.sharded``): the pool axis split across ``shards``
+    devices (default: all visible devices).  Per-pool campaign state is
+    elementwise along this axis, so the mesh needs no second dimension."""
+    n = int(shards) if shards else len(jax.devices())
+    return make_explicit_mesh((n,), ("pools",))
 
 
 def data_axes_of(mesh) -> Tuple[str, ...]:

@@ -1,0 +1,75 @@
+"""Docs CI: examples compile, README snippets import, markdown links
+resolve.  Keeps the documented entry points from silently rotting."""
+
+import ast
+import glob
+import os
+import py_compile
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXAMPLES = sorted(glob.glob(os.path.join(REPO, "examples", "*.py")))
+MARKDOWN = sorted(
+    glob.glob(os.path.join(REPO, "*.md"))
+    + glob.glob(os.path.join(REPO, "docs", "*.md"))
+    + glob.glob(os.path.join(REPO, "benchmarks", "*.md"))
+)
+
+# [text](target) markdown links, excluding images; fenced code is stripped
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_PY_BLOCK = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+@pytest.mark.parametrize(
+    "path", EXAMPLES, ids=[os.path.basename(p) for p in EXAMPLES]
+)
+def test_example_compiles(path):
+    py_compile.compile(path, doraise=True)
+
+
+def _readme_blocks():
+    readme = os.path.join(REPO, "README.md")
+    with open(readme) as f:
+        return _PY_BLOCK.findall(f.read())
+
+
+def test_readme_has_python_snippets():
+    assert _readme_blocks(), "README.md lost its python quickstart snippets"
+
+
+@pytest.mark.parametrize("i, block", list(enumerate(_readme_blocks())))
+def test_readme_snippet_compiles_and_imports(i, block):
+    compile(block, f"README.md[snippet {i}]", "exec")
+    # execute only the snippet's import statements (AST, so multi-line
+    # parenthesized imports count too): renamed/removed symbols must fail
+    tree = ast.parse(block)
+    imports = ast.Module(
+        body=[
+            node for node in tree.body
+            if isinstance(node, (ast.Import, ast.ImportFrom))
+        ],
+        type_ignores=[],
+    )
+    exec(compile(imports, f"README.md[snippet {i} imports]", "exec"), {})
+
+
+@pytest.mark.parametrize(
+    "path", MARKDOWN, ids=[os.path.relpath(p, REPO) for p in MARKDOWN]
+)
+def test_markdown_relative_links_resolve(path):
+    with open(path) as f:
+        text = _FENCE.sub("", f.read())
+    broken = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(os.path.dirname(path), rel)):
+            broken.append(target)
+    assert not broken, f"broken relative links in {path}: {broken}"

@@ -1,0 +1,38 @@
+"""Smoke-run the documented example entry points (tiny shapes) so the
+quickstart paths in README.md cannot silently rot."""
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_example(name):
+    path = os.path.join(REPO, "examples", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"examples_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.parametrize("engine", ["fleet", "sharded"])
+def test_probe_campaign_smoke(engine, capsys):
+    mod = load_example("probe_campaign")
+    campaign = mod.main(["--pools", "6", "--hours", "2", "--engine", engine])
+    assert campaign.engine == engine
+    assert campaign.s.shape == (6, 40)
+    out = capsys.readouterr().out
+    assert "Table I" in out and "probe compute cost" in out
+
+
+def test_quickstart_smoke(capsys):
+    mod = load_example("quickstart")
+    mod.main(pools=6, hours=6.0, train_steps=1)
+    out = capsys.readouterr().out
+    assert "probed 6 pools" in out
+    assert "F1-macro" in out
+    assert "step 0: loss" in out

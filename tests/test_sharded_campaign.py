@@ -1,0 +1,188 @@
+"""Mesh-sharded campaign engine: bit-identity with the fleet engine,
+padding/masking, mesh plumbing, pipeline glue, and scope guards."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PoolConfig,
+    ShardedProvider,
+    SimulatedProvider,
+    compute_features,
+    default_fleet,
+    run_campaign,
+    run_campaign_pipeline,
+    run_sharded_campaign,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fresh(n_pools=10, seed=11, **kw):
+    return SimulatedProvider(default_fleet(n_pools, seed=seed), seed=seed + 1, **kw)
+
+
+def assert_campaigns_identical(ca, cb):
+    np.testing.assert_array_equal(ca.s, cb.s)
+    np.testing.assert_array_equal(ca.running, cb.running)
+    np.testing.assert_array_equal(ca.times, cb.times)
+    assert ca.interruptions == cb.interruptions
+    assert ca.api_calls == cb.api_calls
+    assert ca.probe_compute_cost == cb.probe_compute_cost
+    assert ca.node_pool_cost == cb.node_pool_cost
+
+
+class TestShardedParity:
+    """The acceptance anchor: engine='sharded' ≡ engine='fleet' bit for
+    bit — S_t, running_t, interruption logs, and cost accounting."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        ca = run_campaign(fresh(), duration=6 * 3600.0, engine="fleet")
+        cb = run_campaign(fresh(), duration=6 * 3600.0, engine="sharded")
+        return ca, cb
+
+    def test_bit_identical(self, pair):
+        ca, cb = pair
+        assert len(ca.interruptions) > 0  # the comparison must have teeth
+        assert_campaigns_identical(ca, cb)
+        assert cb.engine == "sharded"
+
+    def test_seed_sweep(self):
+        for seed in (0, 1, 2):
+            ca = run_campaign(fresh(7, seed), duration=2 * 3600.0, engine="fleet")
+            cb = run_campaign(fresh(7, seed), duration=2 * 3600.0, engine="sharded")
+            assert_campaigns_identical(ca, cb)
+
+    def test_pool_padding_is_invisible(self):
+        # pad the pool axis well past the fleet size: padded pools must
+        # not perturb a single bit of any real pool's row
+        ca = run_campaign(fresh(10, 3), duration=3 * 3600.0, engine="fleet")
+        cb = run_sharded_campaign(fresh(10, 3), duration=3 * 3600.0, pad_multiple=7)
+        assert_campaigns_identical(ca, cb)
+
+    def test_subset_pool_campaign(self):
+        pa, pb = fresh(6, 5), fresh(6, 5)
+        sub = pa.pool_ids[1:4]
+        ca = run_campaign(pa, pool_ids=sub, duration=2 * 3600.0, engine="fleet")
+        cb = run_campaign(pb, pool_ids=sub, duration=2 * 3600.0, engine="sharded")
+        assert_campaigns_identical(ca, cb)
+
+    def test_rate_limited_parity(self):
+        fleet = [
+            PoolConfig(instance_type=f"t{i}", region="r", base_capacity=30.0)
+            for i in range(8)
+        ]
+        pa = SimulatedProvider(fleet, seed=5, requests_per_minute_per_region=30)
+        pb = SimulatedProvider(fleet, seed=5, requests_per_minute_per_region=30)
+        ca = run_campaign(pa, duration=2 * 3600.0, engine="fleet")
+        cb = run_campaign(pb, duration=2 * 3600.0, engine="sharded")
+        assert (ca.s.sum(axis=1) == 0).any(), "expected starved pools"
+        assert_campaigns_identical(ca, cb)
+
+    def test_fractional_tick_intervals(self):
+        # interval not a multiple of the tick exercises the fractional
+        # settle; interval < tick exercises zero-tick cycles
+        for interval in (150.0, 45.0):
+            ca = run_campaign(
+                fresh(5, 9), duration=1800.0, interval=interval, engine="fleet"
+            )
+            cb = run_campaign(
+                fresh(5, 9), duration=1800.0, interval=interval, engine="sharded"
+            )
+            assert_campaigns_identical(ca, cb)
+
+
+class TestShardedPipelineGlue:
+    def test_campaign_pipeline_features_identical(self):
+        outs = {}
+        for engine in ("fleet", "sharded"):
+            result, proc = run_campaign_pipeline(
+                fresh(6, 17),
+                duration=4 * 3600.0,
+                engine=engine,
+                predict_fn=lambda x: x[:, 0],
+                window_minutes=30.0,
+            )
+            t = result.s.shape[1]
+            assert proc.update_ops == t
+            assert proc.predict_calls == t
+            outs[engine] = (result, proc)
+        ra, pa = outs["fleet"]
+        rb, pb = outs["sharded"]
+        np.testing.assert_array_equal(ra.s, rb.s)
+        np.testing.assert_array_equal(pa.table.features, pb.table.features)
+        np.testing.assert_array_equal(pa.table.predictions, pb.table.predictions)
+        # streamed features == offline replay of the campaign's S matrix
+        expect = compute_features(rb.s, rb.n, 30.0, rb.interval / 60.0)
+        w = pb.window_cycles
+        np.testing.assert_array_equal(
+            pb.table.features[:, pb.table._order()], expect[:, rb.s.shape[1] - w:, :]
+        )
+
+
+class TestShardedScope:
+    def test_terminator_delay_not_supported(self):
+        with pytest.raises(NotImplementedError):
+            run_campaign(
+                fresh(), duration=3600.0, engine="sharded", terminator_delay=30.0
+            )
+
+    def test_used_provider_rejected(self):
+        prov = fresh()
+        prov.advance(600.0)  # mid-flight ledgers are not shardable
+        with pytest.raises(ValueError):
+            run_campaign(prov, duration=3600.0, engine="sharded")
+
+    def test_slow_provisioning_rejected(self):
+        prov = fresh(4, provisioning_duration=120.0)  # > tick
+        with pytest.raises(NotImplementedError):
+            ShardedProvider(prov)
+
+    def test_node_pools_frozen_after_start(self):
+        sp = ShardedProvider(fresh(4))
+        sp.set_node_pools(sp.pool_ids, 5)
+        sp.advance(60.0)
+        with pytest.raises(RuntimeError):
+            sp.set_node_pools(sp.pool_ids, 7)
+
+    def test_unknown_engine_still_rejected(self):
+        with pytest.raises(ValueError):
+            run_campaign(fresh(2), duration=3600.0, engine="warp")
+
+
+class TestShardedMultiDevice:
+    """Real pool-axis sharding: 4 host-platform devices in a subprocess
+    (the main process must keep its single CPU device)."""
+
+    def test_four_way_mesh_parity(self):
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        from repro.core import SimulatedProvider, default_fleet, run_campaign
+
+        assert len(jax.devices()) == 4
+        def fresh():
+            return SimulatedProvider(default_fleet(10, seed=7), seed=8)
+        ca = run_campaign(fresh(), duration=4 * 3600.0, engine="fleet")
+        cb = run_campaign(fresh(), duration=4 * 3600.0, engine="sharded")
+        np.testing.assert_array_equal(ca.s, cb.s)
+        np.testing.assert_array_equal(ca.running, cb.running)
+        assert ca.interruptions == cb.interruptions
+        assert ca.api_calls == cb.api_calls
+        print("SHARDED_CAMPAIGN_OK")
+        """
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, env=env, timeout=900,
+        )
+        assert "SHARDED_CAMPAIGN_OK" in r.stdout, r.stdout + r.stderr
