@@ -1,10 +1,10 @@
 # Tier-1 verification — identical to what CI runs.
-#   make verify   : full test suite + pipeline/campaign/replay-throughput smokes
+#   make verify   : full test suite + pipeline/campaign/replay/serve-throughput smokes
 #   make test     : test suite only
 #   make docs     : docs checks only (examples compile, README snippets
 #                   import, markdown links resolve, example smoke runs)
 #   make bench    : full throughput benchmarks (assert >= 50x / >= 20x /
-#                   sharded >= 1x fleet / >= 3x)
+#                   sharded >= 1x fleet / >= 3x / serve >= 20x)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
@@ -15,6 +15,7 @@ verify: test
 	python benchmarks/pipeline_throughput.py --smoke
 	python benchmarks/campaign_throughput.py --smoke
 	python benchmarks/replay_throughput.py --smoke
+	python benchmarks/serve_throughput.py --smoke
 
 test:
 	python -m pytest -x -q
@@ -26,3 +27,4 @@ bench:
 	python benchmarks/pipeline_throughput.py
 	python benchmarks/campaign_throughput.py
 	python benchmarks/replay_throughput.py
+	python benchmarks/serve_throughput.py

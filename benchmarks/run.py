@@ -24,6 +24,7 @@ from . import (
     pipeline_throughput,
     replay_throughput,
     roofline_report,
+    serve_throughput,
     table1_agreement,
 )
 
@@ -56,6 +57,9 @@ BENCHES = [
                 f"scan/loop={r['speedup_vs_python_loop']}x "
                 f"parity={r['parity_atol0']} "
                 f"fig9_identical={r['fig9_simresults_identical']}")),
+    ("serve_throughput", serve_throughput.run,
+     lambda r: (f"fleet/scalar={r['speedup']}x "
+                f"parity={r['parity_identical']}")),
 ]
 
 

@@ -1,77 +1,131 @@
-"""Serving on spot pools with SnS-guided admission + migration.
+"""Streaming serving on spot pools: cycle-at-a-time fleet admission.
 
-A small LM serves batched requests while the pool's availability
-fluctuates.  The AdmissionController applies Predict-AR (§VI-E) to request
-admission: when the SnS predictor forecasts trouble, new requests queue
-instead of starting; in-flight decodes finish undisturbed.  When the
-current pool degrades, `plan_migration` picks the healthiest alternative
-by live SnS features.
+The measure → featurize → predict → **decide** loop of the paper, run
+online: a `CampaignPipelineStream` drives the collection campaign one
+cycle at a time (any engine — fleet, scalar, or mesh-sharded), each cycle
+yielding fleet-wide `(S_t, features, probs)` views; a
+`FleetAdmissionController` applies Predict-AR (§VI-E) to the probability
+column in one vector op — pools forecast to degrade defer NEW requests
+(drain-friendly) while in-flight decodes finish undisturbed — and
+`plan_migration_batch` picks the healthiest migration target from the
+same scores.  A `DatasetStreamer` rides the same stream, growing
+multi-horizon training data live: the loop from live campaign back to
+training data, with no offline trace replay.
 
 Run:  PYTHONPATH=src python examples/serve_spot.py
+          [--pools 8] [--engine fleet|scalar|sharded] [--no-lm]
 """
 
-import numpy as np
-import jax.numpy as jnp
+import argparse
 
-from repro.configs import get_config
+import numpy as np
+
 from repro.core import (
+    CampaignPipelineStream,
+    DatasetStreamer,
     SimulatedProvider,
+    batched_predict_fn,
     build_dataset,
-    compute_features,
     default_fleet,
     fit_predictor,
     run_campaign,
 )
-from repro.models import api
-from repro.serve import AdmissionController, generate, plan_migration
+from repro.serve import FleetAdmissionController, plan_migration_batch
 
 
-def main():
-    # -- control plane ----------------------------------------------------
-    fleet = default_fleet(8, seed=5)
-    provider = SimulatedProvider(fleet, seed=6)
-    campaign = run_campaign(provider, duration=12 * 3600.0)
-    ds = build_dataset(campaign, window_minutes=240, horizon_minutes=15)
-    model = fit_predictor("xgb", ds)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pools", type=int, default=8)
+    ap.add_argument("--train-hours", type=float, default=12.0,
+                    help="offline campaign used to fit the predictor")
+    ap.add_argument("--serve-hours", type=float, default=5.0,
+                    help="streamed serving window")
+    ap.add_argument("--engine", choices=("fleet", "scalar", "sharded"),
+                    default="fleet")
+    ap.add_argument("--model", default="xgb")
+    ap.add_argument("--window-minutes", type=float, default=240.0)
+    ap.add_argument("--horizon-minutes", type=float, default=15.0)
+    ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="requests per admitted cycle")
+    ap.add_argument("--no-lm", action="store_true",
+                    help="control-plane only: skip the LM data plane")
+    args = ap.parse_args(argv)
+
+    # -- control plane: fit the SnS predictor on an offline campaign ------
+    fleet = default_fleet(args.pools, seed=5)
+    campaign = run_campaign(
+        SimulatedProvider(fleet, seed=6), duration=args.train_hours * 3600.0
+    )
+    ds = build_dataset(campaign, window_minutes=args.window_minutes,
+                       horizon_minutes=args.horizon_minutes)
+    model = fit_predictor(args.model, ds)
     std = ds.standardizer
-    feats = compute_features(campaign.s, campaign.n, 240.0,
-                             campaign.interval / 60.0)
-
-    def p_stay(f):
-        x = std(f[None, :]) if std else f[None, :]
-        return float(model.predict_proba(x)[0])
+    raw = batched_predict_fn(model)
+    p_stay = (lambda x: raw(std(x))) if std is not None else raw
+    horizon_cycles = max(1, int(round(args.horizon_minutes * 60.0
+                                      / campaign.interval)))
 
     # -- data plane: a small serving model --------------------------------
-    cfg = get_config("qwen3-8b").scaled_down()
-    params = api.init_params(cfg, seed=0)
+    if not args.no_lm:
+        import jax.numpy as jnp
+
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.serve import generate
+
+        cfg = get_config("qwen3-8b").scaled_down()
+        params = api.init_params(cfg, seed=0)
     rng = np.random.default_rng(0)
 
-    current_pool = 0
-    ctl = AdmissionController(predictor=p_stay, horizon_cycles=5, threshold=0.5)
+    # -- streaming serve loop: ONE predict + ONE decide op per cycle ------
+    stream = CampaignPipelineStream(
+        SimulatedProvider(fleet, seed=7),     # live campaign, unseen seed
+        predict_fn=p_stay,
+        window_minutes=args.window_minutes,
+        duration=args.serve_hours * 3600.0,
+        engine=args.engine,
+    )
+    ctl = FleetAdmissionController(
+        args.pools, horizon_cycles=horizon_cycles, threshold=args.threshold
+    )
+    streamer = DatasetStreamer(campaign.n, tuple(sorted({1, horizon_cycles})))
+    current = 0                               # pool currently serving
     served = deferred = migrations = 0
-    for cycle in range(60, 160):          # a 5-hour serving window
-        f = feats[current_pool, cycle]
-        if ctl.on_cycle(cycle, f):
-            prompts = jnp.asarray(
-                rng.integers(0, cfg.vocab_size, (2, 12)), jnp.int32
-            )
-            out = generate(cfg, params, {"tokens": prompts}, max_new_tokens=4)
-            assert out.shape == (2, 4)
-            served += 2
+    for view in stream:
+        streamer.ingest(view)                 # grow training data live
+        admit = ctl.on_cycle(view.cycle, view.probs)
+        if admit[current]:
+            if not args.no_lm:
+                prompts = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (args.batch, 12)),
+                    jnp.int32,
+                )
+                out = generate(cfg, params, {"tokens": prompts},
+                               max_new_tokens=4)
+                assert out.shape == (args.batch, 4)
+            served += args.batch
         else:
-            deferred += 2
-            # degraded: consider migrating to the healthiest pool
-            pool_feats = {
-                str(p): feats[p, cycle] for p in range(len(campaign.pool_ids))
-            }
-            target = plan_migration(pool_feats, p_stay, current=str(current_pool))
+            deferred += args.batch
+            # degraded: migrate to the healthiest pool by live scores
+            target = plan_migration_batch(view.probs, current)
             if target is not None:
-                current_pool = int(target)
+                current = target
                 migrations += 1
-                ctl = AdmissionController(predictor=p_stay,
-                                          horizon_cycles=5, threshold=0.5)
+
+    result = stream.result()
     print(f"served {served} requests, deferred {deferred}, "
-          f"{migrations} pool migrations")
+          f"{migrations} pool migrations (engine={result.engine})")
+    x, y = streamer.matrices(horizon_cycles)
+    print(f"streamed dataset: X{x.shape} y{y.shape} at h={horizon_cycles} "
+          f"cycles ({int(y.sum())} positive labels)")
+    return {
+        "served": served,
+        "deferred": deferred,
+        "migrations": migrations,
+        "result": result,
+        "streamer": streamer,
+    }
 
 
 if __name__ == "__main__":

@@ -5,7 +5,9 @@
 # fleet/) are the data-plane substrates that consume these signals.
 
 from .collector import (
+    CampaignCycle,
     CampaignResult,
+    CampaignStream,
     DataLake,
     FleetCollector,
     SnSCollector,
@@ -13,7 +15,7 @@ from .collector import (
 )
 from .cointerrupt import fraction_within, proximities, proximity_cdf
 from .cost import CostReport, ServerlessPricing, cost_report
-from .dataset import Dataset, build_dataset
+from .dataset import Dataset, DatasetStreamer, build_dataset
 from .features import (
     FEATURE_NAMES,
     FleetFeatureState,
@@ -23,14 +25,16 @@ from .features import (
     update,
     update_batch,
 )
-from .labels import binary_availability, horizon_labels
+from .labels import HorizonLabelStream, binary_availability, horizon_labels
 from .lifecycle import RequestState, SpotRequest
 from .pipeline import (
+    CampaignPipelineStream,
     DataArchive,
     FeatureProcessor,
     FleetCycleResult,
     FleetFeatureProcessor,
     FleetWindowTable,
+    StreamCycleView,
     WindowTable,
     run_campaign_pipeline,
 )
@@ -62,16 +66,18 @@ from .simulate import (
 from .workloads import tpcds_profile
 
 __all__ = [
-    "CampaignResult", "DataLake", "FleetCollector", "SnSCollector", "run_campaign",
+    "CampaignCycle", "CampaignResult", "CampaignStream",
+    "DataLake", "FleetCollector", "SnSCollector", "run_campaign",
     "fraction_within", "proximities", "proximity_cdf",
     "CostReport", "ServerlessPricing", "cost_report",
-    "Dataset", "build_dataset",
+    "Dataset", "DatasetStreamer", "build_dataset",
     "FEATURE_NAMES", "compute_features", "init_state", "update",
     "FleetFeatureState", "init_fleet_state", "update_batch",
-    "binary_availability", "horizon_labels",
+    "HorizonLabelStream", "binary_availability", "horizon_labels",
     "RequestState", "SpotRequest",
     "DataArchive", "FeatureProcessor", "WindowTable",
     "FleetCycleResult", "FleetFeatureProcessor", "FleetWindowTable",
+    "CampaignPipelineStream", "StreamCycleView",
     "run_campaign_pipeline",
     "MODEL_REGISTRY", "SEQUENCE_MODELS", "evaluate", "fit_predictor", "make_model",
     "batched_predict_fn", "pointwise_predict_fn",

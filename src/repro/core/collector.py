@@ -60,6 +60,8 @@ __all__ = [
     "SnSCollector",
     "FleetCollector",
     "CampaignResult",
+    "CampaignCycle",
+    "CampaignStream",
     "run_campaign",
 ]
 
@@ -311,6 +313,219 @@ class CampaignResult:
 CycleHook = Callable[[int, float, np.ndarray], object]
 
 
+@dataclasses.dataclass
+class CampaignCycle:
+    """One completed collection cycle, as yielded by :class:`CampaignStream`.
+
+    ``s_t`` and ``running_t`` are **read-only** column views into the
+    stream's preallocated ``(pools, cycles)`` matrices — zero-copy per
+    cycle, and stable for the lifetime of the stream (campaign matrices
+    are written once per column, never overwritten).  They are marked
+    non-writeable because they alias the eventual ``CampaignResult``
+    matrices: a consumer that wants to scribble must copy.
+    """
+
+    cycle: int
+    time: float
+    s_t: np.ndarray        # (pools,) int64 view — SnS success counts
+    running_t: np.ndarray  # (pools,) int64 view — ground-truth node counts
+
+
+class CampaignStream:
+    """Resumable, cycle-at-a-time form of :func:`run_campaign`.
+
+    Owns the campaign setup (node pools declared, initial settle, collector
+    construction) and exposes the measure loop as a stepper: each
+    :meth:`step` advances the provider to the next collection timestamp,
+    runs exactly one probe cycle on the chosen engine, lands the outcome in
+    the preallocated ``S`` / ``running`` matrices, and returns a
+    :class:`CampaignCycle` view — ``None`` once all cycles have run.  The
+    stream is also iterable (``for cyc in stream``) and can be paused and
+    resumed between steps: provider state only moves inside :meth:`step`.
+
+    All three engines (``fleet`` / ``scalar`` / ``sharded``) run under the
+    same contract and produce **bit-identical** matrices, interruption
+    logs, and cost accounting; :func:`run_campaign` is a thin driver over
+    this class, so streamed and batch campaigns cannot diverge.
+
+    After exhaustion, :meth:`result` assembles the same
+    :class:`CampaignResult` the batch driver returns.
+    """
+
+    def __init__(
+        self,
+        provider,
+        *,
+        pool_ids: Optional[Sequence[str]] = None,
+        duration: float = 24 * 3600.0,
+        interval: float = 180.0,
+        n_requests: int = 10,
+        node_pool_size: int = 10,
+        terminator_delay: float = 0.0,
+        engine: str = "fleet",
+        retain_records: bool = True,
+        shards: Optional[int] = None,
+        pad_multiple: Optional[int] = None,
+    ):
+        if engine not in ("fleet", "scalar", "sharded"):
+            raise ValueError(
+                f"unknown engine {engine!r} (want 'fleet', 'scalar' or 'sharded')"
+            )
+        self.engine = engine
+        self.interval = float(interval)
+        self.n = int(n_requests)
+        self.n_cycles = int(duration // interval)
+        self._next = 0
+        self._result: Optional[CampaignResult] = None
+
+        if engine == "sharded":
+            if terminator_delay != 0.0:
+                raise NotImplementedError(
+                    "engine='sharded' models the event-driven terminator only "
+                    "(terminator_delay=0); use engine='fleet' or 'scalar' to "
+                    "study slow-terminator probe leaks"
+                )
+            from .sharded import ShardedProvider  # local: jax-dependent
+
+            if isinstance(provider, ShardedProvider):
+                sp = provider
+            else:
+                sp = ShardedProvider(
+                    provider, shards=shards, pad_multiple=pad_multiple
+                )
+            self.pool_ids = (
+                list(pool_ids) if pool_ids is not None else sp.pool_ids
+            )
+            sp.set_node_pools(self.pool_ids, node_pool_size)
+            # Let pools acquire their initial nodes before the first
+            # measurement (n_hint: share the compiled step with the probes).
+            sp.advance(sp.now + 3 * sp.tick, n_hint=self.n)
+            self.provider = sp
+            self._idx = sp.pool_index(self.pool_ids)
+            self._collector = None
+        else:
+            self.pool_ids = (
+                list(pool_ids) if pool_ids is not None else provider.pool_ids
+            )
+            for pid in self.pool_ids:
+                provider.set_node_pool(pid, node_pool_size)
+            # Let pools acquire their initial nodes before the first cycle.
+            provider.advance(provider.now + 3 * provider.tick)
+            self.provider = provider
+            if engine == "fleet":
+                self._collector = FleetCollector(
+                    provider,
+                    self.pool_ids,
+                    n_cycles=self.n_cycles,
+                    n_requests=self.n,
+                    interval=self.interval,
+                    terminator_delay=terminator_delay,
+                )
+            else:
+                self._collector = SnSCollector(
+                    provider,
+                    self.pool_ids,
+                    n_requests=self.n,
+                    interval=self.interval,
+                    terminator_delay=terminator_delay,
+                    retain_records=retain_records,
+                )
+        if engine == "fleet":
+            # the collector already owns the preallocated matrices — alias
+            self.times = self._collector.times
+            self.s = self._collector.s
+            self.running = self._collector.running
+        else:
+            self.times = np.zeros(self.n_cycles)
+            self.s = np.zeros((len(self.pool_ids), self.n_cycles), np.int64)
+            self.running = np.zeros_like(self.s)
+        self._t0 = self.provider.now
+
+    # -- stepping ------------------------------------------------------------
+
+    @property
+    def cycles_done(self) -> int:
+        """Completed cycles so far (also the next cycle index)."""
+        return self._next
+
+    @property
+    def done(self) -> bool:
+        return self._next >= self.n_cycles
+
+    def step(self) -> Optional[CampaignCycle]:
+        """Run ONE collection cycle; ``None`` once the campaign is over."""
+        c = self._next
+        if c >= self.n_cycles:
+            return None
+        self._next = c + 1
+        when = self._t0 + c * self.interval
+        if self.engine == "fleet":
+            self.provider.advance(when)
+            self._collector.run_cycle(c)
+        elif self.engine == "scalar":
+            self.provider.advance(when)
+            self.times[c] = self.provider.now
+            self.s[:, c] = self._collector.run_cycle(c)
+            for i, pid in enumerate(self.pool_ids):
+                self.running[i, c] = self.provider.running_count(pid)
+        else:  # sharded: advance + probe is ONE shard_map-ped device step
+            counts, run_t = self.provider.probe_cycle(when, self._idx, self.n)
+            self.times[c] = self.provider.now
+            self.s[:, c] = counts
+            self.running[:, c] = run_t
+        s_t = self.s[:, c]
+        s_t.flags.writeable = False
+        running_t = self.running[:, c]
+        running_t.flags.writeable = False
+        return CampaignCycle(cycle=c, time=float(self.times[c]),
+                             s_t=s_t, running_t=running_t)
+
+    def __iter__(self):
+        while True:
+            cyc = self.step()
+            if cyc is None:
+                return
+            yield cyc
+
+    # -- finalisation --------------------------------------------------------
+
+    def result(self) -> CampaignResult:
+        """The campaign's :class:`CampaignResult` (requires exhaustion —
+        identical to what :func:`run_campaign` returns)."""
+        if self._result is not None:
+            return self._result
+        if not self.done:
+            raise RuntimeError(
+                f"campaign stream not exhausted: {self._next} of "
+                f"{self.n_cycles} cycles consumed"
+            )
+        if self.engine == "sharded":
+            probe_cost = 0.0  # event-driven terminator: nothing leaks
+        else:
+            probe_cost = self._collector.probe_compute_cost()
+        # node-pool compute cost: integrate running counts over the campaign
+        prices = np.array(
+            [self.provider.pool_config(pid).price_per_hour for pid in self.pool_ids]
+        )
+        node_cost = float(
+            (self.running.sum(axis=1) * (self.interval / 3600.0) * prices).sum()
+        )
+        self._result = CampaignResult(
+            pool_ids=self.pool_ids,
+            times=self.times,
+            s=self.s,
+            running=self.running,
+            n=self.n,
+            interval=self.interval,
+            interruptions=self.provider.interruptions.snapshot(),
+            probe_compute_cost=probe_cost,
+            node_pool_cost=node_cost,
+            api_calls=self.provider.api_calls,
+            engine=self.engine,
+        )
+        return self._result
+
+
 def run_campaign(
     provider: SimulatedProvider,
     *,
@@ -362,87 +577,26 @@ def run_campaign(
         scale; aggregates stay exact).
       on_cycle: hook invoked after every collection cycle with
         ``(cycle, time, S_t)`` — the Data-Pipeline glue point used by
-        :func:`repro.core.pipeline.run_campaign_pipeline`.
+        :func:`repro.core.pipeline.run_campaign_pipeline`.  ``S_t`` is
+        the cycle's measurement (at the measurement timestamp, not any
+        post-terminator-delay clock), identical across engines.
+
+    This is a thin driver over :class:`CampaignStream` — use the stream
+    directly for cycle-at-a-time consumption (online serving, dataset
+    streaming); both paths are bit-identical by construction.
     """
-    if engine == "sharded":
-        from .sharded import run_sharded_campaign  # local: jax-dependent
-
-        return run_sharded_campaign(
-            provider,
-            pool_ids=pool_ids,
-            duration=duration,
-            interval=interval,
-            n_requests=n_requests,
-            node_pool_size=node_pool_size,
-            terminator_delay=terminator_delay,
-            on_cycle=on_cycle,
-        )
-    if engine not in ("fleet", "scalar"):
-        raise ValueError(
-            f"unknown engine {engine!r} (want 'fleet', 'scalar' or 'sharded')"
-        )
-    pool_ids = list(pool_ids) if pool_ids is not None else provider.pool_ids
-    for pid in pool_ids:
-        provider.set_node_pool(pid, node_pool_size)
-    # Let pools acquire their initial nodes before the first measurement.
-    provider.advance(provider.now + 3 * provider.tick)
-
-    n_cycles = int(duration // interval)
-    t0 = provider.now
-    if engine == "fleet":
-        collector = FleetCollector(
-            provider,
-            pool_ids,
-            n_cycles=n_cycles,
-            n_requests=n_requests,
-            interval=interval,
-            terminator_delay=terminator_delay,
-        )
-        for c in range(n_cycles):
-            provider.advance(t0 + c * interval)
-            s_t = collector.run_cycle(c)
-            if on_cycle is not None:
-                # the cycle's measurement timestamp, not the post-
-                # terminator-delay clock — identical to the scalar engine
-                on_cycle(c, collector.times[c], s_t)
-        times, s, running = collector.times, collector.s, collector.running
-        probe_cost = collector.probe_compute_cost()
-    else:
-        collector = SnSCollector(
-            provider,
-            pool_ids,
-            n_requests=n_requests,
-            interval=interval,
-            terminator_delay=terminator_delay,
-            retain_records=retain_records,
-        )
-        times = np.zeros(n_cycles)
-        s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
-        running = np.zeros_like(s)
-        for c in range(n_cycles):
-            provider.advance(t0 + c * interval)
-            times[c] = provider.now
-            s[:, c] = collector.run_cycle(c)
-            for i, pid in enumerate(pool_ids):
-                running[i, c] = provider.running_count(pid)
-            if on_cycle is not None:
-                on_cycle(c, times[c], s[:, c])
-        probe_cost = collector.probe_compute_cost()
-
-    # node-pool compute cost: integrate running counts over the campaign
-    prices = np.array([provider.pool_config(pid).price_per_hour for pid in pool_ids])
-    node_cost = float((running.sum(axis=1) * (interval / 3600.0) * prices).sum())
-
-    return CampaignResult(
+    stream = CampaignStream(
+        provider,
         pool_ids=pool_ids,
-        times=times,
-        s=s,
-        running=running,
-        n=n_requests,
+        duration=duration,
         interval=interval,
-        interruptions=provider.interruptions.snapshot(),
-        probe_compute_cost=probe_cost,
-        node_pool_cost=node_cost,
-        api_calls=provider.api_calls,
+        n_requests=n_requests,
+        node_pool_size=node_pool_size,
+        terminator_delay=terminator_delay,
         engine=engine,
+        retain_records=retain_records,
     )
+    for cyc in stream:
+        if on_cycle is not None:
+            on_cycle(cyc.cycle, cyc.time, cyc.s_t)
+    return stream.result()

@@ -24,9 +24,9 @@ import numpy as np
 
 from .collector import CampaignResult
 from .features import FEATURE_NAMES, compute_features
-from .labels import binary_availability, horizon_labels
+from .labels import HorizonLabelStream, binary_availability, horizon_labels
 
-__all__ = ["Dataset", "Standardizer", "build_dataset"]
+__all__ = ["Dataset", "Standardizer", "build_dataset", "DatasetStreamer"]
 
 
 @dataclasses.dataclass
@@ -83,10 +83,38 @@ def build_dataset(
     h = int(round(horizon_minutes / dt_minutes))
 
     feats = compute_features(result.s, result.n, window_minutes, dt_minutes)
-    feats = _select_features(feats, feature_set)          # (pools, T, F)
     avail = binary_availability(result.running, result.n)  # (pools, T)
     y = horizon_labels(avail, h)                           # (pools, T - h)
+    return _assemble_dataset(
+        feats,
+        y,
+        h,
+        feature_set=feature_set,
+        sequence_length=sequence_length,
+        split=split,
+        train_fraction=train_fraction,
+        seed=seed,
+        standardize=standardize,
+    )
 
+
+def _assemble_dataset(
+    feats: np.ndarray,
+    y: np.ndarray,
+    h: int,
+    *,
+    feature_set: Sequence[str] = FEATURE_NAMES,
+    sequence_length: Optional[int] = None,
+    split: str = "random",
+    train_fraction: float = 0.75,
+    seed: int = 0,
+    standardize: bool = True,
+) -> Dataset:
+    """Point/sequence extraction + split + standardization over prepared
+    ``(pools, T, F)`` features and ``(pools, T - h)`` labels — shared by
+    the offline :func:`build_dataset` and the streaming
+    :class:`DatasetStreamer` so their outputs cannot diverge."""
+    feats = _select_features(feats, feature_set)          # (pools, T, F)
     pools, t_total, n_feat = feats.shape
     t_lab = y.shape[-1]
 
@@ -150,3 +178,128 @@ def build_dataset(
         test_pools=pte,
         standardizer=std,
     )
+
+
+class DatasetStreamer:
+    """Multi-horizon ``(X, y)`` accumulation streamed from a live campaign.
+
+    The streaming counterpart of :func:`build_dataset`: instead of
+    replaying the finished campaign's ``S`` matrix through
+    ``compute_features``, it consumes each cycle as it lands in the
+    campaign pipeline — the per-cycle ``(pools, F)`` feature row from the
+    :class:`~repro.core.pipeline.FleetWindowTable` ring (grabbed at append
+    time, so the window table can evict freely) and the ground-truth
+    ``running_t`` column.  Labels are built **incrementally** through one
+    :class:`~repro.core.labels.HorizonLabelStream` per requested horizon:
+    a label is emitted the moment its future window closes, so no
+    availability trace is ever materialized.
+
+    Feed it :class:`~repro.core.pipeline.StreamCycleView` objects via
+    :meth:`ingest` (or raw columns via :meth:`on_cycle`); at any point —
+    including mid-campaign — :meth:`matrices` / :meth:`dataset` assemble
+    the supervised data collected so far.  :meth:`dataset` routes through
+    the same assembly code as :func:`build_dataset`, and the streamed
+    features/labels are bit-identical to the offline replay of the final
+    ``S`` / ``running`` matrices, so for a fully consumed campaign
+
+        ``streamer.dataset(h, ...) == build_dataset(result, ...)``
+
+    field for field at atol=0, on every campaign engine
+    (``tests/test_labels_dataset.py``).
+
+    Args:
+      n: requested pool size (the campaign's ``n_requests`` — the
+        availability threshold of §IV-A).
+      horizons_cycles: the prediction horizons, in collection cycles
+        (``horizon_minutes / dt``); ``0`` = current-availability labels.
+    """
+
+    def __init__(self, n: int, horizons_cycles: Sequence[int]):
+        self.n = int(n)
+        horizons = [int(h) for h in horizons_cycles]
+        if len(set(horizons)) != len(horizons):
+            raise ValueError(f"duplicate horizons in {horizons}")
+        self.horizons = tuple(horizons)
+        self._labelers = {h: HorizonLabelStream(h) for h in self.horizons}
+        self._feat_cols: list = []                    # per-cycle (pools, F)
+        self._label_cols = {h: [] for h in self.horizons}
+        self.cycles = 0
+
+    def on_cycle(
+        self, cycle: int, features: np.ndarray, running_t: np.ndarray
+    ) -> None:
+        """Ingest one cycle's feature row + ground-truth running counts."""
+        if cycle != self.cycles:
+            raise ValueError(
+                f"cycle {cycle} out of order: streamer is at {self.cycles} "
+                "(cycles must arrive contiguously from 0)"
+            )
+        # copy: `features` is typically a ring-slot view that the window
+        # table will overwrite once the ring wraps
+        self._feat_cols.append(np.array(features, dtype=np.float64))
+        avail_t = binary_availability(np.asarray(running_t), self.n)
+        for h, labeler in self._labelers.items():
+            y_col = labeler.push(avail_t)
+            if y_col is not None:
+                self._label_cols[h].append(y_col)
+        self.cycles += 1
+
+    def ingest(self, view) -> None:
+        """Ingest a :class:`~repro.core.pipeline.StreamCycleView`."""
+        self.on_cycle(view.cycle, view.features, view.running_t)
+
+    # -- assembly ------------------------------------------------------------
+
+    def features(self) -> np.ndarray:
+        """All streamed features so far, ``(pools, T, F)``."""
+        if not self._feat_cols:
+            raise ValueError("no cycles streamed yet")
+        return np.stack(self._feat_cols, axis=1)
+
+    def labels(self, horizon_cycles: int) -> np.ndarray:
+        """Finalized labels for one horizon so far, ``(pools, T - h)`` —
+        bit-identical to ``horizon_labels(avail, h)`` on the trace."""
+        h = int(horizon_cycles)
+        if h not in self._labelers:
+            raise ValueError(f"horizon {h} not tracked (have {self.horizons})")
+        cols = self._label_cols[h]
+        if not cols:
+            raise ValueError(
+                f"horizon {h} >= streamed length {self.cycles}: no label "
+                "window has closed yet"
+            )
+        return np.stack(cols, axis=1)
+
+    def matrices(self, horizon_cycles: int):
+        """Aligned point-wise ``(X, y)``: ``(pools, T - h, F)`` features and
+        ``(pools, T - h)`` labels, unsplit and unstandardized."""
+        y = self.labels(horizon_cycles)
+        x = self.features()[:, : y.shape[1], :]
+        return x, y
+
+    def dataset(
+        self,
+        horizon_cycles: int,
+        *,
+        feature_set: Sequence[str] = FEATURE_NAMES,
+        sequence_length: Optional[int] = None,
+        split: str = "random",
+        train_fraction: float = 0.75,
+        seed: int = 0,
+        standardize: bool = True,
+    ) -> Dataset:
+        """Assemble a :class:`Dataset` from the cycles streamed so far —
+        for a fully consumed campaign, bit-identical to
+        :func:`build_dataset` with ``horizon_minutes = h * dt``."""
+        h = int(horizon_cycles)
+        return _assemble_dataset(
+            self.features(),
+            self.labels(h),
+            h,
+            feature_set=feature_set,
+            sequence_length=sequence_length,
+            split=split,
+            train_fraction=train_fraction,
+            seed=seed,
+            standardize=standardize,
+        )

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["binary_availability", "horizon_labels"]
+__all__ = ["binary_availability", "horizon_labels", "HorizonLabelStream"]
 
 
 def binary_availability(running: np.ndarray, n: int) -> np.ndarray:
@@ -88,6 +88,59 @@ def horizon_labels(avail: np.ndarray, horizon_cycles: int) -> np.ndarray:
     # window [t, t+h-1]: suffix-min of its head block piece + prefix-min of
     # its tail block piece
     return np.minimum(suffix[..., :n_out], prefix[..., h - 1 : h - 1 + n_out])
+
+
+class HorizonLabelStream:
+    """Streaming form of :func:`horizon_labels` — one horizon, O(h) memory.
+
+    Push availability columns cycle by cycle (shape ``(pools,)`` — or any
+    shape, as long as it is the same every cycle); each push returns the
+    label column whose future window just closed, or ``None`` while that
+    window is still open.  After ``T`` pushes exactly ``T - h`` columns
+    have been emitted, and stacking them reproduces
+    ``horizon_labels(avail, h)`` **bit-identically**: the emitted column
+    at push ``t`` is ``y[t - h] = min(avail[t-h+1 : t+1])``, computed over
+    a ``(h, pools)`` ring of the last ``h`` columns — the campaign trace
+    itself is never materialized.
+
+    The int/bool minimum is exact, so streamed labels equal the offline
+    block-minimum form at atol=0 (``tests/test_labels_dataset.py``).
+    """
+
+    def __init__(self, horizon_cycles: int):
+        h = int(horizon_cycles)
+        if h < 0:
+            raise ValueError("horizon must be >= 0")
+        self.h = h
+        self.pushed = 0         # columns ingested so far (= T)
+        self.emitted = 0        # label columns returned so far (= T - h)
+        self._ring = None       # (h, *column_shape) ring of trailing avail
+        self._shape = None      # column shape pinned by the first push
+
+    def push(self, avail_t: np.ndarray):
+        """Ingest cycle ``t``'s availability column; return ``y[t - h]``
+        once it exists (``None`` during the first ``h`` pushes)."""
+        a = np.asarray(avail_t)
+        if self._shape is None:
+            self._shape = a.shape
+        elif a.shape != self._shape:
+            raise ValueError(
+                f"column shape {a.shape} != first push {self._shape}"
+            )
+        t = self.pushed
+        self.pushed += 1
+        if self.h == 0:
+            self.emitted += 1
+            return a.copy()
+        if self._ring is None:
+            self._ring = np.empty((self.h,) + a.shape, dtype=a.dtype)
+        self._ring[t % self.h] = a
+        if t < self.h:
+            return None  # the window (t-h, t] reaches before the trace start
+        # after pushing cycle t the ring holds avail[t-h+1 : t+1] — exactly
+        # the future window of cycle t - h
+        self.emitted += 1
+        return self._ring.min(axis=0)
 
 
 def _horizon_labels_stacked(avail: np.ndarray, horizon_cycles: int) -> np.ndarray:

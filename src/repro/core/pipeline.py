@@ -55,6 +55,8 @@ __all__ = [
     "FleetCycleResult",
     "FleetWindowTable",
     "FleetFeatureProcessor",
+    "StreamCycleView",
+    "CampaignPipelineStream",
     "run_campaign_pipeline",
 ]
 
@@ -357,8 +359,138 @@ class FleetFeatureProcessor:
 
 
 # --------------------------------------------------------------------------
-# Campaign → pipeline glue
+# Campaign → pipeline glue (streaming serve path)
 # --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamCycleView:
+    """One cycle of the streaming serve path — zero-copy, read-only views.
+
+    ``s_t`` / ``running_t`` are column views into the campaign stream's
+    preallocated matrices (stable for the stream's lifetime);
+    ``features`` / ``probs`` are slot views into the
+    :class:`FleetWindowTable` ring arrays, valid **until the ring wraps**
+    (``window_cycles`` cycles later) — copy them if you hold a view across
+    more than a window of cycles.  All four are marked non-writeable
+    (they alias live pipeline state — copy to scribble).  ``probs`` is
+    ``None`` when no predictor is attached or a sequence model's history
+    is still filling.
+    """
+
+    cycle: int
+    time: float
+    s_t: np.ndarray                  # (pools,) int64 — SnS success counts
+    running_t: np.ndarray            # (pools,) int64 — ground-truth nodes
+    features: np.ndarray             # (pools, F) float64 — (SR, UR, CUT)
+    probs: Optional[np.ndarray]      # (pools,) float64 — P(stays available)
+
+
+class CampaignPipelineStream:
+    """Resumable measure → featurize → predict stream (§V, online form).
+
+    The cycle-at-a-time refactor of :func:`run_campaign_pipeline`: wraps a
+    :class:`~repro.core.collector.CampaignStream` (any engine —
+    ``fleet`` / ``scalar`` / ``sharded``) and a
+    :class:`FleetFeatureProcessor`, so each :meth:`step` runs exactly one
+    collection cycle, one batched ``update_batch``, and at most one
+    batched ``predict_fn`` call for the whole fleet, then hands back a
+    :class:`StreamCycleView` of ``(S_t, features, probs)`` over the
+    preallocated campaign matrices and window-table ring arrays.
+
+    This is the serving glue point: feed ``view.probs`` to
+    :class:`repro.serve.FleetAdmissionController` /
+    :func:`repro.serve.plan_migration_batch` for per-cycle admission and
+    migration decisions, and ``view`` to
+    :class:`repro.core.dataset.DatasetStreamer` to grow training data
+    live.  Features, predictions and the final :meth:`result` are
+    bit-identical to the batch driver (:func:`run_campaign_pipeline`), by
+    construction: the batch driver just drains this stream.
+    """
+
+    def __init__(
+        self,
+        provider,
+        *,
+        processor: Optional[FleetFeatureProcessor] = None,
+        predict_fn: Optional[BatchPredictFn] = None,
+        window_minutes: float = 480.0,
+        sequence_length: Optional[int] = None,
+        **campaign_kwargs,
+    ):
+        from .collector import CampaignStream  # local: avoid import cycle
+
+        pool_ids = campaign_kwargs.pop("pool_ids", None)
+        pool_ids = list(pool_ids) if pool_ids is not None else provider.pool_ids
+        n_requests = campaign_kwargs.pop("n_requests", 10)
+        interval = campaign_kwargs.get("interval", 180.0)
+        if processor is None:
+            processor = FleetFeatureProcessor(
+                pool_ids,
+                n_requests=n_requests,
+                window_minutes=window_minutes,
+                dt_minutes=interval / 60.0,
+                predict_fn=predict_fn,
+                sequence_length=sequence_length,
+            )
+        self.processor = processor
+        self.campaign = CampaignStream(
+            provider,
+            pool_ids=pool_ids,
+            n_requests=n_requests,
+            **campaign_kwargs,
+        )
+
+    @property
+    def n_cycles(self) -> int:
+        return self.campaign.n_cycles
+
+    @property
+    def done(self) -> bool:
+        return self.campaign.done
+
+    def step(self) -> Optional[StreamCycleView]:
+        """Run one cycle end to end (measure → featurize → predict);
+        ``None`` once the campaign is over."""
+        cyc = self.campaign.step()
+        if cyc is None:
+            return None
+        res = self.processor.on_cycle(cyc.cycle, cyc.time, cyc.s_t)
+        table = self.processor.table
+        head = table.head
+        features = table.features[:, head]
+        features.flags.writeable = False  # aliases the ring — copy to scribble
+        probs = None
+        if res.predictions is not None:
+            probs = table.predictions[:, head]
+            probs.flags.writeable = False
+        return StreamCycleView(
+            cycle=cyc.cycle,
+            time=cyc.time,
+            s_t=cyc.s_t,
+            running_t=cyc.running_t,
+            features=features,
+            probs=probs,
+        )
+
+    def __iter__(self):
+        while True:
+            view = self.step()
+            if view is None:
+                return
+            yield view
+
+    def result(self):
+        """The finished campaign's ``CampaignResult`` (requires all
+        cycles consumed — see :meth:`CampaignStream.result`)."""
+        return self.campaign.result()
+
+    def run(self):
+        """Drain remaining cycles; returns ``(result, processor)`` exactly
+        like :func:`run_campaign_pipeline`."""
+        for _ in self:
+            pass
+        return self.result(), self.processor
 
 
 def run_campaign_pipeline(
@@ -372,12 +504,15 @@ def run_campaign_pipeline(
 ):
     """Stream a measurement campaign straight into the batched pipeline.
 
-    Drives :func:`repro.core.collector.run_campaign` (fleet engine by
-    default) and feeds every collection cycle's success-count vector into
-    a :class:`FleetFeatureProcessor` as it lands: one batched
-    ``update_batch`` and at most **one** ``predict_fn`` call per cycle for
-    the whole fleet — the measure → featurize → predict loop of §V with
-    no per-pool Python work between the layers.
+    Runs the whole campaign through a :class:`CampaignPipelineStream`
+    (fleet engine by default) and feeds every collection cycle's
+    success-count vector into a :class:`FleetFeatureProcessor` as it
+    lands: one batched ``update_batch`` and at most **one** ``predict_fn``
+    call per cycle for the whole fleet — the measure → featurize → predict
+    loop of §V with no per-pool Python work between the layers.  For
+    cycle-at-a-time consumption (serving admission, dataset streaming) use
+    :class:`CampaignPipelineStream` directly; this batch driver just
+    drains one.
 
     Campaign options (including ``engine``) pass through via
     ``campaign_kwargs``: with ``engine="sharded"`` the cycle's ``S_t``
@@ -390,26 +525,11 @@ def run_campaign_pipeline(
     one be built from the campaign's pool list and cadence.  Returns
     ``(CampaignResult, FleetFeatureProcessor)``.
     """
-    from .collector import run_campaign  # local: avoid import cycle
-
-    pool_ids = campaign_kwargs.pop("pool_ids", None)
-    pool_ids = list(pool_ids) if pool_ids is not None else provider.pool_ids
-    n_requests = campaign_kwargs.pop("n_requests", 10)
-    interval = campaign_kwargs.get("interval", 180.0)
-    if processor is None:
-        processor = FleetFeatureProcessor(
-            pool_ids,
-            n_requests=n_requests,
-            window_minutes=window_minutes,
-            dt_minutes=interval / 60.0,
-            predict_fn=predict_fn,
-            sequence_length=sequence_length,
-        )
-    result = run_campaign(
+    return CampaignPipelineStream(
         provider,
-        pool_ids=pool_ids,
-        n_requests=n_requests,
-        on_cycle=processor.on_cycle,
+        processor=processor,
+        predict_fn=predict_fn,
+        window_minutes=window_minutes,
+        sequence_length=sequence_length,
         **campaign_kwargs,
-    )
-    return result, processor
+    ).run()

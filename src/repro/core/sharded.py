@@ -618,49 +618,26 @@ def run_sharded_campaign(
     same provider seed.  ``on_cycle`` fires with ``(cycle, time, S_t)``
     after every cycle, exactly like the other engines, so
     ``run_campaign_pipeline`` glue works unchanged.
+
+    Thin driver over ``CampaignStream(engine="sharded")`` — the sharded
+    per-cycle logic lives in :meth:`ShardedProvider.probe_cycle` and the
+    stream, so batch and streamed campaigns cannot diverge.
     """
-    if terminator_delay != 0.0:
-        raise NotImplementedError(
-            "engine='sharded' models the event-driven terminator only "
-            "(terminator_delay=0); use engine='fleet' or 'scalar' to study "
-            "slow-terminator probe leaks"
-        )
-    if isinstance(provider, ShardedProvider):
-        sp = provider
-    else:
-        sp = ShardedProvider(provider, shards=shards, pad_multiple=pad_multiple)
-    pool_ids = list(pool_ids) if pool_ids is not None else sp.pool_ids
-    sp.set_node_pools(pool_ids, node_pool_size)
-    # Let pools acquire their initial nodes before the first measurement
-    # (n_hint: share the compiled step with the probe cycles below).
-    sp.advance(sp.now + 3 * sp.tick, n_hint=n_requests)
+    from .collector import CampaignStream  # local: avoid import cycle
 
-    n_cycles = int(duration // interval)
-    t0 = sp.now
-    idx = sp.pool_index(pool_ids)
-    times = np.zeros(n_cycles)
-    s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
-    running = np.zeros_like(s)
-    for c in range(n_cycles):
-        counts, run_t = sp.probe_cycle(t0 + c * interval, idx, n_requests)
-        times[c] = sp.now
-        s[:, c] = counts
-        running[:, c] = run_t
-        if on_cycle is not None:
-            on_cycle(c, times[c], s[:, c])
-
-    prices = np.array([sp.pool_config(pid).price_per_hour for pid in pool_ids])
-    node_cost = float((running.sum(axis=1) * (interval / 3600.0) * prices).sum())
-    return CampaignResult(
+    stream = CampaignStream(
+        provider,
         pool_ids=pool_ids,
-        times=times,
-        s=s,
-        running=running,
-        n=n_requests,
+        duration=duration,
         interval=interval,
-        interruptions=sp.interruptions.snapshot(),
-        probe_compute_cost=0.0,  # event-driven terminator: nothing leaks
-        node_pool_cost=node_cost,
-        api_calls=sp.api_calls,
+        n_requests=n_requests,
+        node_pool_size=node_pool_size,
+        terminator_delay=terminator_delay,
         engine="sharded",
+        shards=shards,
+        pad_multiple=pad_multiple,
     )
+    for cyc in stream:
+        if on_cycle is not None:
+            on_cycle(cyc.cycle, cyc.time, cyc.s_t)
+    return stream.result()

@@ -1,7 +1,18 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""Serving launcher: ``python -m repro.launch.serve``.
 
-Batched prefill + decode on a (reduced) config; demonstrates the public
-serving API end to end on CPU.
+Two entry points on the serving path:
+
+* ``--arch <id>`` — the LM data plane: batched prefill + decode on a
+  (reduced) config; demonstrates the public serving API end to end on
+  CPU.
+* ``--spot-pools N`` — the SnS control plane: drives a
+  :class:`repro.core.CampaignPipelineStream` cycle at a time and feeds
+  each cycle's fleet-wide availability probabilities straight into a
+  :class:`repro.serve.FleetAdmissionController` — the streaming
+  measure → featurize → predict → decide loop (§V + §VI-E Predict-AR) at
+  fleet scale, with per-cycle decisions/sec reported.
+
+Both can be combined in one invocation (control plane first).
 """
 
 import argparse
@@ -12,34 +23,114 @@ import numpy as np
 
 from repro.configs import arch_names, get_config
 from repro.models import api
-from repro.serve import generate
+from repro.serve import FleetAdmissionController, generate
+
+
+def serve_fleet(
+    pools: int = 64,
+    hours: float = 2.0,
+    *,
+    engine: str = "fleet",
+    threshold: float = 0.5,
+    horizon_cycles: int = 5,
+    window_minutes: float = 60.0,
+    seed: int = 0,
+) -> dict:
+    """Cycle-at-a-time fleet admission from the campaign pipeline stream.
+
+    One collection cycle = one batched feature update, ONE batched
+    predictor call, and ONE vectorised admission decision for the whole
+    fleet (SR is used as the availability score, so the loop runs without
+    a trained model — swap in ``repro.core.batched_predict_fn`` for a
+    fitted predictor, as ``examples/serve_spot.py`` does).
+    """
+    from repro.core import CampaignPipelineStream, SimulatedProvider, default_fleet
+
+    provider = SimulatedProvider(
+        default_fleet(pools, seed=seed),
+        seed=seed + 1,
+        requests_per_minute_per_region=10**9,
+    )
+    stream = CampaignPipelineStream(
+        provider,
+        predict_fn=lambda x: x[:, 0],  # p_stay := SR
+        window_minutes=window_minutes,
+        duration=hours * 3600.0,
+        engine=engine,
+    )
+    ctl = FleetAdmissionController(
+        pools, threshold=threshold, horizon_cycles=horizon_cycles
+    )
+    admitted = deferred = 0
+    t0 = time.perf_counter()
+    for view in stream:
+        admit = ctl.on_cycle(view.cycle, view.probs)
+        admitted += int(admit.sum())
+        deferred += pools - int(admit.sum())
+    wall = time.perf_counter() - t0
+    n_cycles = stream.n_cycles
+    out = {
+        "engine": engine,
+        "pools": pools,
+        "cycles": n_cycles,
+        "admitted": admitted,
+        "deferred": deferred,
+        "decisions_per_sec": pools * n_cycles / wall if wall > 0 else float("inf"),
+    }
+    print(
+        f"spot admission (engine={engine}): {pools} pools x {n_cycles} cycles"
+        f" in {wall:.2f}s — {out['decisions_per_sec']:,.0f} decisions/sec,"
+        f" {admitted} admitted / {deferred} deferred"
+    )
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=arch_names())
+    ap.add_argument("--arch", choices=arch_names(),
+                    help="LM data plane: run batched prefill + decode")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--spot-pools", type=int,
+                    help="SnS control plane: streaming fleet admission "
+                         "over this many pools")
+    ap.add_argument("--spot-hours", type=float, default=2.0)
+    ap.add_argument("--engine", choices=("fleet", "scalar", "sharded"),
+                    default="fleet")
+    ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--horizon-cycles", type=int, default=5)
     args = ap.parse_args()
+    if args.arch is None and args.spot_pools is None:
+        ap.error("nothing to do: pass --arch and/or --spot-pools")
 
-    cfg = get_config(args.arch).scaled_down()
-    params = api.init_params(cfg, seed=0)
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32,
-    )}
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.encoder_seq, cfg.d_model)),
-            jnp.float32,
+    if args.spot_pools is not None:
+        serve_fleet(
+            args.spot_pools,
+            args.spot_hours,
+            engine=args.engine,
+            threshold=args.threshold,
+            horizon_cycles=args.horizon_cycles,
         )
-    t0 = time.time()
-    out = generate(cfg, params, batch, max_new_tokens=args.max_new_tokens)
-    dt = time.time() - t0
-    print(f"{cfg.name}: generated {out.shape} in {dt:.1f}s")
-    print(np.asarray(out))
+
+    if args.arch is not None:
+        cfg = get_config(args.arch).scaled_down()
+        params = api.init_params(cfg, seed=0)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+            jnp.int32,
+        )}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.encoder_seq, cfg.d_model)),
+                jnp.float32,
+            )
+        t0 = time.time()
+        out = generate(cfg, params, batch, max_new_tokens=args.max_new_tokens)
+        dt = time.time() - t0
+        print(f"{cfg.name}: generated {out.shape} in {dt:.1f}s")
+        print(np.asarray(out))
 
 
 if __name__ == "__main__":

@@ -1,3 +1,15 @@
-from .engine import AdmissionController, generate, plan_migration
+from .engine import (
+    AdmissionController,
+    FleetAdmissionController,
+    generate,
+    plan_migration,
+    plan_migration_batch,
+)
 
-__all__ = ["AdmissionController", "generate", "plan_migration"]
+__all__ = [
+    "AdmissionController",
+    "FleetAdmissionController",
+    "generate",
+    "plan_migration",
+    "plan_migration_batch",
+]

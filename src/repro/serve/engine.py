@@ -1,19 +1,29 @@
 """Serving engine: batched prefill + decode with SnS-aware admission.
 
 ``generate`` is the plain engine (prefill once, decode N tokens).
-``AdmissionController`` applies the paper's Predict-AR policy to serving:
-consult the SnS predictor each collection cycle; when it forecasts that
-the pool will not stay available over the horizon, *defer admitting new
-requests* (drain-friendly) while letting in-flight decodes finish — the
-same leave-running-work-undisturbed semantics as §VI-E.  ``plan_migration``
-picks the healthiest alternative pool by current SnS features (SpotServe-
-style proactive migration, reduced to its scheduling decision).
+``FleetAdmissionController`` applies the paper's Predict-AR policy
+(§VI-E) to serving admission *at fleet scale*: consult the SnS predictor
+each collection cycle; for every pool it forecasts will not stay
+available over the horizon, *defer admitting new requests*
+(drain-friendly) while letting in-flight decodes finish — the same
+leave-running-work-undisturbed semantics as §VI-E, with the defer clocks
+of the whole fleet held in ``(pools,)`` arrays and every cycle decided in
+a constant number of vector ops.  ``AdmissionController`` is the
+paper-faithful one-pool view over it.  ``plan_migration_batch`` /
+``plan_migration`` pick the healthiest alternative pool by current SnS
+scores (SpotServe-style proactive migration, reduced to its scheduling
+decision) under one shared deterministic tie-break rule.
+
+The controllers consume the per-cycle ``probs`` column of a
+:class:`repro.core.pipeline.CampaignPipelineStream` view — the streaming
+measure → featurize → predict → **decide** path (see
+``examples/serve_spot.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +32,13 @@ import numpy as np
 from repro.models import api
 from repro.models.common import ModelConfig
 
-__all__ = ["generate", "AdmissionController", "plan_migration"]
+__all__ = [
+    "generate",
+    "AdmissionController",
+    "FleetAdmissionController",
+    "plan_migration",
+    "plan_migration_batch",
+]
 
 
 def generate(
@@ -59,24 +75,161 @@ def generate(
     return jnp.stack(outs, axis=1)
 
 
+class FleetAdmissionController:
+    """Predict-AR admission for the whole fleet — one vector op per cycle.
+
+    The fleet-scale form of the paper's Predict-AR policy: the per-pool
+    defer clocks live in one ``(pools,)`` int64 array and each collection
+    cycle is decided for every pool at once from the cycle's ``(pools,)``
+    availability-probability column (e.g. the ``probs`` view of a
+    :class:`repro.core.pipeline.CampaignPipelineStream` cycle — already
+    the product of the pipeline's single batched ``predict_proba`` call).
+
+    Decisions are **bit-identical** to running one scalar
+    :class:`AdmissionController` per pool (``tests/test_serve_stream.py``
+    asserts this property across seeds, thresholds and horizons):
+
+    * a pool inside its defer window is never admitted and its predictor
+      score is ignored (the scalar controller doesn't even call the
+      predictor there);
+    * otherwise, ``1 - p_stay >= threshold`` starts a new defer window of
+      ``horizon_cycles`` cycles; healthy pools are admitted.
+
+    ``threshold`` and ``horizon_cycles`` broadcast per pool, so a fleet
+    can mix risk appetites without per-pool Python objects.
+    """
+
+    def __init__(
+        self,
+        pools: int,
+        *,
+        horizon_cycles: Union[int, np.ndarray] = 5,
+        threshold: Union[float, np.ndarray] = 0.5,
+        predictor: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+    ):
+        self.pools = int(pools)
+        # broadcast_to yields read-only views — materialize writable copies
+        self.horizon_cycles = np.broadcast_to(
+            np.asarray(horizon_cycles, np.int64), (self.pools,)
+        ).copy()
+        self.threshold = np.broadcast_to(
+            np.asarray(threshold, np.float64), (self.pools,)
+        ).copy()
+        self.predictor = predictor
+        #: last cycle index (inclusive) each pool stays deferred through
+        self.defer_until = np.full(self.pools, -1, dtype=np.int64)
+
+    def on_cycle(
+        self,
+        cycle: int,
+        probs: Optional[np.ndarray] = None,
+        *,
+        features: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Decide the whole fleet for one cycle.
+
+        Pass the cycle's ``(pools,)`` ``P(stays available)`` column, or a
+        ``(pools, F)`` feature matrix to route through the controller's
+        batched ``predictor``.  Returns a ``(pools,)`` bool mask: True
+        where NEW requests may be admitted this cycle.
+        """
+        if probs is None:
+            if features is None:
+                raise ValueError("need probs or features")
+            if self.predictor is None:
+                raise ValueError("no predictor attached; pass probs")
+            probs = self.predictor(features)
+        probs = np.asarray(probs, dtype=np.float64)
+        if probs.shape != (self.pools,):
+            raise ValueError(f"probs shape {probs.shape} != ({self.pools},)")
+        deferred = cycle <= self.defer_until
+        risky = (1.0 - probs) >= self.threshold
+        start = ~deferred & risky
+        self.defer_until = np.where(
+            start, cycle + self.horizon_cycles, self.defer_until
+        )
+        return ~deferred & ~risky
+
+
 @dataclasses.dataclass
 class AdmissionController:
-    """Predict-AR for serving admission (one controller per pool)."""
+    """Predict-AR for serving admission (one controller per pool) — a thin
+    single-pool view over :class:`FleetAdmissionController`; the defer
+    arithmetic lives only in the fleet controller.  Each call pays a
+    small (length-1) numpy round-trip for that sharing: fine at per-pool
+    object scale, but hot fleet loops should hold ONE fleet controller
+    (`benchmarks/serve_throughput.py` measures the gap)."""
 
     predictor: Callable[[np.ndarray], float]   # features -> P(stays available)
     horizon_cycles: int = 5
     threshold: float = 0.5
     _defer_until: int = -1
 
+    def __post_init__(self):
+        self._fleet = FleetAdmissionController(
+            1, horizon_cycles=self.horizon_cycles, threshold=self.threshold
+        )
+        self._fleet.defer_until[0] = self._defer_until
+
     def on_cycle(self, cycle: int, features: np.ndarray) -> bool:
         """Returns True if NEW requests may be admitted this cycle."""
-        if cycle <= self._defer_until:
-            return False
-        p_stay = float(self.predictor(features))
-        if 1.0 - p_stay >= self.threshold:
-            self._defer_until = cycle + self.horizon_cycles
-            return False
-        return True
+        fleet = self._fleet
+        # the dataclass fields are public and mutable — honor live edits
+        # by writing them through to the fleet controller every cycle
+        fleet.threshold[0] = self.threshold
+        fleet.horizon_cycles[0] = self.horizon_cycles
+        deferred = cycle <= fleet.defer_until[0]
+        # a deferred pool's score is ignored — skip the predictor call
+        p_stay = 0.0 if deferred else float(self.predictor(features))
+        admit = bool(fleet.on_cycle(cycle, np.array([p_stay]))[0])
+        self._defer_until = int(fleet.defer_until[0])
+        return admit
+
+
+# Migration tie-break rule, shared by both planners: the target is the
+# highest-scoring pool, ties broken toward the FIRST pool in canonical
+# order — index order for the columnar planner, sorted(pool_id) order for
+# the dict planner.  np.argmax implements "first maximum" exactly.
+
+
+def plan_migration_batch(
+    scores: np.ndarray,
+    current: Union[int, np.ndarray],
+    *,
+    margin: float = 1e-9,
+):
+    """Columnar migration planning over the whole fleet at once.
+
+    Args:
+      scores: ``(pools,)`` availability scores for every candidate pool
+        (e.g. the ``probs`` column of a pipeline-stream cycle).
+      current: the currently occupied pool index, or an ``(k,)`` int array
+        of indices for ``k`` independent serving placements.
+      margin: minimum score improvement that justifies a migration.
+
+    Returns:
+      For a scalar ``current``: the target pool index, or ``None`` when
+      ``current`` is (within ``margin`` of) the best — same contract as
+      :func:`plan_migration`.  For an array: an ``(k,)`` int64 array with
+      ``-1`` meaning "stay put".
+
+    The target is ``argmax(scores)`` with ties broken toward the lowest
+    pool index — deterministic regardless of how the score vector was
+    assembled, and the same rule :func:`plan_migration` applies over
+    sorted pool ids.
+    """
+    scores = np.asarray(scores, dtype=np.float64)
+    if scores.ndim != 1 or scores.size == 0:
+        raise ValueError(f"scores must be a non-empty vector, got {scores.shape}")
+    best = int(np.argmax(scores))  # first maximum: the shared tie-break
+    cur = np.asarray(current)
+    scalar = cur.ndim == 0
+    cur_arr = np.atleast_1d(cur).astype(np.int64)
+    move = (cur_arr != best) & (scores[best] > scores[cur_arr] + margin)
+    targets = np.where(move, np.int64(best), np.int64(-1))
+    if scalar:
+        return int(targets[0]) if targets[0] >= 0 else None
+    return targets
 
 
 def plan_migration(
@@ -87,9 +240,13 @@ def plan_migration(
 ) -> Optional[str]:
     """Pick the best migration target when `current` looks unhealthy.
 
-    Returns None if `current` still scores best (no migration)."""
-    scores = {pid: float(predictor(f)) for pid, f in pool_features.items()}
-    best = max(scores, key=scores.get)
-    if best == current or scores[best] <= scores[current] + 1e-9:
-        return None
-    return best
+    Returns None if `current` still scores best (no migration).  Pools
+    are scored in ``sorted(pool_id)`` order and ties break toward the
+    first — the same explicit rule as :func:`plan_migration_batch`, so
+    the outcome never depends on dict insertion order."""
+    order = sorted(pool_features)
+    scores = np.array(
+        [float(predictor(pool_features[pid])) for pid in order]
+    )
+    target = plan_migration_batch(scores, order.index(current))
+    return None if target is None else order[target]

@@ -36,3 +36,22 @@ def test_quickstart_smoke(capsys):
     assert "probed 6 pools" in out
     assert "F1-macro" in out
     assert "step 0: loss" in out
+
+
+@pytest.mark.parametrize("engine", ["fleet", "sharded"])
+def test_serve_spot_smoke(engine, capsys):
+    """The streaming serve path end to end at tiny shapes; the fleet run
+    keeps the LM data plane, the sharded run is control-plane only."""
+    mod = load_example("serve_spot")
+    argv = ["--pools", "6", "--train-hours", "2", "--serve-hours", "1",
+            "--engine", engine]
+    if engine == "sharded":
+        argv.append("--no-lm")
+    out_dict = mod.main(argv)
+    n_cycles = out_dict["result"].s.shape[1]
+    assert out_dict["result"].engine == engine
+    assert out_dict["served"] + out_dict["deferred"] == 2 * n_cycles
+    x, y = out_dict["streamer"].matrices(5)
+    assert x.shape == (6, n_cycles - 5, 3) and y.shape == (6, n_cycles - 5)
+    out = capsys.readouterr().out
+    assert "served" in out and "streamed dataset" in out

@@ -1,11 +1,22 @@
-"""Binary availability labels, horizon shifting, dataset construction."""
+"""Binary availability labels, horizon shifting, dataset construction,
+and the streaming (label + dataset) forms' bit-identity with the offline
+builders."""
 
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import binary_availability, build_dataset, horizon_labels
+from repro.core import (
+    CampaignPipelineStream,
+    DatasetStreamer,
+    HorizonLabelStream,
+    SimulatedProvider,
+    binary_availability,
+    build_dataset,
+    default_fleet,
+    horizon_labels,
+)
 
 
 class TestLabels:
@@ -134,3 +145,159 @@ class TestDataset:
         pools_seq = np.unique(ds_seq.test_pools)
         pools_pt = np.unique(ds_pt.test_pools)
         np.testing.assert_array_equal(pools_seq, pools_pt)
+
+
+class TestHorizonLabelStream:
+    @given(
+        t=st.integers(2, 60),
+        h=st.integers(0, 12),
+        pools=st.integers(1, 4),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_streamed_equals_offline(self, t, h, pools, seed):
+        """Pushing a trace column by column emits exactly the offline
+        horizon_labels matrix, bit for bit."""
+        if h >= t:
+            return
+        rng = np.random.default_rng(seed)
+        avail = rng.integers(0, 2, size=(pools, t)).astype(np.int32)
+        stream = HorizonLabelStream(h)
+        cols = [y for c in range(t) if (y := stream.push(avail[:, c])) is not None]
+        assert stream.pushed == t and stream.emitted == t - h == len(cols)
+        np.testing.assert_array_equal(
+            np.stack(cols, axis=1), horizon_labels(avail, h)
+        )
+
+    def test_warmup_emits_nothing(self):
+        stream = HorizonLabelStream(3)
+        assert [stream.push(np.ones(2, np.int32)) for _ in range(3)] == [None] * 3
+
+    @pytest.mark.parametrize("h", [0, 2])
+    def test_column_shape_change_rejected(self, h):
+        stream = HorizonLabelStream(h)
+        stream.push(np.ones(3, np.int32))
+        with pytest.raises(ValueError):
+            stream.push(np.ones(4, np.int32))
+
+    def test_negative_horizon_rejected(self):
+        with pytest.raises(ValueError):
+            HorizonLabelStream(-1)
+
+
+def _streamed(engine, seed, *, pools=7, hours=4.0, window_minutes=30.0,
+              horizons=(0, 2, 10)):
+    """Drive a pipeline stream and a DatasetStreamer side by side; return
+    (CampaignResult, DatasetStreamer)."""
+    provider = SimulatedProvider(default_fleet(pools, seed=seed), seed=seed + 1)
+    stream = CampaignPipelineStream(
+        provider,
+        predict_fn=lambda x: x[:, 0],
+        window_minutes=window_minutes,
+        duration=hours * 3600.0,
+        engine=engine,
+    )
+    streamer = DatasetStreamer(10, horizons)
+    for view in stream:
+        streamer.ingest(view)
+    return stream.result(), streamer
+
+
+class TestDatasetStreamer:
+    """Streamed (X, y) ≡ offline build_dataset on the final S matrix —
+    atol=0, across horizons, engines, splits, and sequence models."""
+
+    #: window_minutes=30 → a 10-cycle ring over an 80-cycle campaign: the
+    #: FleetWindowTable evicts 70 cycles while the streamer keeps them all
+    WINDOW = 30.0
+
+    @staticmethod
+    def assert_dataset_identical(got, want):
+        np.testing.assert_array_equal(got.x_train, want.x_train)
+        np.testing.assert_array_equal(got.y_train, want.y_train)
+        np.testing.assert_array_equal(got.x_test, want.x_test)
+        np.testing.assert_array_equal(got.y_test, want.y_test)
+        np.testing.assert_array_equal(got.train_pools, want.train_pools)
+        np.testing.assert_array_equal(got.test_pools, want.test_pools)
+        assert got.feature_names == want.feature_names
+        assert got.horizon_cycles == want.horizon_cycles
+        if want.standardizer is None:
+            assert got.standardizer is None
+        else:
+            np.testing.assert_array_equal(
+                got.standardizer.mean, want.standardizer.mean
+            )
+            np.testing.assert_array_equal(
+                got.standardizer.std, want.standardizer.std
+            )
+
+    @pytest.mark.parametrize("engine", ["fleet", "sharded"])
+    def test_bit_identical_to_build_dataset(self, engine):
+        result, streamer = _streamed(engine, seed=31, window_minutes=self.WINDOW)
+        dt = result.interval / 60.0
+        assert result.s.shape[1] > 10  # the ring evicted most of the trace
+        for h in (0, 2, 10):  # ≥ 2 horizons incl. the degenerate h=0
+            got = streamer.dataset(h, seed=3)
+            want = build_dataset(
+                result, window_minutes=self.WINDOW, horizon_minutes=h * dt,
+                seed=3,
+            )
+            self.assert_dataset_identical(got, want)
+
+    def test_pool_split_and_feature_subset(self):
+        result, streamer = _streamed("fleet", seed=37, window_minutes=self.WINDOW)
+        dt = result.interval / 60.0
+        got = streamer.dataset(
+            2, split="pool", feature_set=("SR", "CUT"), seed=9,
+            standardize=False,
+        )
+        want = build_dataset(
+            result, window_minutes=self.WINDOW, horizon_minutes=2 * dt,
+            split="pool", feature_set=("SR", "CUT"), seed=9,
+            standardize=False,
+        )
+        self.assert_dataset_identical(got, want)
+
+    def test_ragged_start_sequence_dataset(self):
+        """sequence_length=L drops the ragged first L-1 cycles — streamed
+        trailing windows must equal the offline ones exactly."""
+        result, streamer = _streamed("fleet", seed=41, window_minutes=self.WINDOW)
+        dt = result.interval / 60.0
+        got = streamer.dataset(2, sequence_length=6, seed=5)
+        want = build_dataset(
+            result, window_minutes=self.WINDOW, horizon_minutes=2 * dt,
+            sequence_length=6, seed=5,
+        )
+        assert got.x_train.ndim == 3 and got.x_train.shape[1:] == (6, 3)
+        self.assert_dataset_identical(got, want)
+
+    def test_matrices_alignment(self):
+        result, streamer = _streamed("fleet", seed=43, horizons=(3,))
+        x, y = streamer.matrices(3)
+        t = result.s.shape[1]
+        assert x.shape == (7, t - 3, 3) and y.shape == (7, t - 3)
+        # features are the streamed (not re-derived) feature rows
+        np.testing.assert_array_equal(x, streamer.features()[:, : t - 3])
+
+    def test_out_of_order_and_unknown_horizon_rejected(self):
+        streamer = DatasetStreamer(10, (1,))
+        streamer.on_cycle(0, np.zeros((2, 3)), np.full(2, 10))
+        with pytest.raises(ValueError):
+            streamer.on_cycle(2, np.zeros((2, 3)), np.full(2, 10))
+        with pytest.raises(ValueError):
+            streamer.labels(4)
+        with pytest.raises(ValueError):  # h=1 window hasn't closed yet
+            streamer.labels(1)
+        with pytest.raises(ValueError):
+            DatasetStreamer(10, (1, 1))
+
+    def test_streamed_features_survive_ring_eviction(self):
+        """The streamer copies each ring-slot view at ingest time; rows the
+        window table has long evicted must still be in the dataset."""
+        result, streamer = _streamed("fleet", seed=47, window_minutes=self.WINDOW)
+        from repro.core import compute_features
+
+        want = compute_features(
+            result.s, result.n, self.WINDOW, result.interval / 60.0
+        )
+        np.testing.assert_array_equal(streamer.features(), want)

@@ -1,0 +1,298 @@
+"""The streaming serve path: CampaignStream / CampaignPipelineStream
+bit-identity with the batch drivers, the fleet-vectorised Predict-AR
+decision layer, and the deterministic migration tie-break."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CampaignPipelineStream,
+    CampaignStream,
+    SimulatedProvider,
+    default_fleet,
+    run_campaign,
+    run_campaign_pipeline,
+)
+from repro.serve import (
+    AdmissionController,
+    FleetAdmissionController,
+    plan_migration,
+    plan_migration_batch,
+)
+
+ENGINES = ("scalar", "fleet", "sharded")
+
+
+def fresh(n_pools=10, seed=11, **kw):
+    return SimulatedProvider(default_fleet(n_pools, seed=seed), seed=seed + 1, **kw)
+
+
+class TestCampaignStream:
+    """run_campaign is a thin driver over CampaignStream — the streamed
+    and batch paths must be bit-identical on every engine."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_stream_equals_batch(self, engine):
+        batch = run_campaign(fresh(), duration=2 * 3600.0, engine=engine)
+        stream = CampaignStream(fresh(), duration=2 * 3600.0, engine=engine)
+        cycles = list(stream)
+        got = stream.result()
+        assert len(cycles) == stream.n_cycles == batch.s.shape[1]
+        np.testing.assert_array_equal(batch.s, got.s)
+        np.testing.assert_array_equal(batch.running, got.running)
+        np.testing.assert_array_equal(batch.times, got.times)
+        assert batch.interruptions == got.interruptions
+        assert batch.api_calls == got.api_calls
+        assert batch.probe_compute_cost == got.probe_compute_cost
+        assert batch.node_pool_cost == got.node_pool_cost
+        assert got.engine == engine
+
+    def test_cycle_views_alias_matrices(self):
+        stream = CampaignStream(fresh(4), duration=1800.0)
+        cyc = stream.step()
+        # zero-copy contract: per-cycle columns are views, not copies
+        assert np.shares_memory(cyc.s_t, stream.s)
+        assert np.shares_memory(cyc.running_t, stream.running)
+        np.testing.assert_array_equal(cyc.s_t, stream.s[:, 0])
+        # ...but read-only: a mutating on_cycle hook must not be able to
+        # corrupt the eventual CampaignResult matrices through them
+        with pytest.raises(ValueError):
+            cyc.s_t[0] = 99
+        with pytest.raises(ValueError):
+            cyc.running_t[0] = 99
+        assert stream.s.flags.writeable  # the stream itself still writes
+
+    def test_resumable_and_exhaustion(self):
+        stream = CampaignStream(fresh(4), duration=3600.0)
+        n = stream.n_cycles
+        first = [stream.step() for _ in range(2)]  # pause after 2 cycles...
+        assert [c.cycle for c in first] == [0, 1]
+        assert stream.cycles_done == 2 and not stream.done
+        with pytest.raises(RuntimeError):
+            stream.result()  # partial stream has no CampaignResult yet
+        rest = list(stream)  # ...then resume to exhaustion
+        assert [c.cycle for c in rest] == list(range(2, n))
+        assert stream.done and stream.step() is None
+        assert stream.result().s.shape == (4, n)
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(ValueError):
+            CampaignStream(fresh(3), engine="warp")
+
+    def test_sharded_terminator_delay_rejected(self):
+        with pytest.raises(NotImplementedError):
+            CampaignStream(fresh(3), engine="sharded", terminator_delay=30.0)
+
+
+class TestCampaignPipelineStream:
+    """Streamed measure→featurize→predict ≡ run_campaign_pipeline."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_stream_equals_batch_pipeline(self, engine):
+        kw = dict(
+            duration=2 * 3600.0,
+            predict_fn=lambda x: x[:, 0],
+            window_minutes=30.0,
+            engine=engine,
+        )
+        batch_result, batch_proc = run_campaign_pipeline(fresh(6, 17), **kw)
+        stream = CampaignPipelineStream(fresh(6, 17), **kw)
+        seen = 0
+        for view in stream:
+            assert view.probs is not None
+            seen += 1
+        result, proc = stream.result(), stream.processor
+        assert seen == stream.n_cycles
+        np.testing.assert_array_equal(batch_result.s, result.s)
+        np.testing.assert_array_equal(batch_result.running, result.running)
+        assert batch_result.interruptions == result.interruptions
+        np.testing.assert_array_equal(
+            batch_proc.table.features, proc.table.features
+        )
+        np.testing.assert_array_equal(
+            batch_proc.table.predictions, proc.table.predictions
+        )
+        assert proc.update_ops == proc.predict_calls == stream.n_cycles
+
+    def test_views_are_ring_slots(self):
+        stream = CampaignPipelineStream(
+            fresh(5), duration=1800.0, predict_fn=lambda x: x[:, 0],
+            window_minutes=30.0,
+        )
+        view = stream.step()
+        table = stream.processor.table
+        assert np.shares_memory(view.features, table.features)
+        assert np.shares_memory(view.probs, table.predictions)
+        np.testing.assert_array_equal(view.features, table.features[:, table.head])
+        with pytest.raises(ValueError):  # ring-slot views are read-only
+            view.features[0, 0] = 99.0
+        assert table.features.flags.writeable  # the ring itself still writes
+
+    def test_run_drains_remaining(self):
+        kw = dict(duration=3600.0, window_minutes=30.0)
+        stream = CampaignPipelineStream(fresh(4, 23), **kw)
+        stream.step()  # consume one cycle by hand, then hand off
+        result, proc = stream.run()
+        want, _ = run_campaign_pipeline(fresh(4, 23), **kw)
+        np.testing.assert_array_equal(want.s, result.s)
+        assert proc.update_ops == result.s.shape[1]
+
+    def test_no_predictor_yields_none_probs(self):
+        stream = CampaignPipelineStream(fresh(3), duration=1800.0)
+        view = stream.step()
+        assert view.probs is None and view.features.shape == (3, 3)
+
+
+class TestFleetAdmission:
+    """A loop of scalar AdmissionControllers ≡ one FleetAdmissionController
+    — decisions AND defer clocks, cycle for cycle."""
+
+    @staticmethod
+    def _compare(probs, thresholds, horizons):
+        cycles, pools = probs.shape
+        ctls = [
+            AdmissionController(
+                predictor=lambda f: float(f[0]),
+                horizon_cycles=int(horizons[p]),
+                threshold=float(thresholds[p]),
+            )
+            for p in range(pools)
+        ]
+        fleet = FleetAdmissionController(
+            pools, horizon_cycles=horizons, threshold=thresholds
+        )
+        for c in range(cycles):
+            want = np.array(
+                [ctls[p].on_cycle(c, probs[c, p : p + 1]) for p in range(pools)]
+            )
+            got = fleet.on_cycle(c, probs[c])
+            np.testing.assert_array_equal(want, got)
+            np.testing.assert_array_equal(
+                np.array([ctl._defer_until for ctl in ctls]), fleet.defer_until
+            )
+
+    @given(
+        seed=st.integers(0, 10_000),
+        pools=st.integers(1, 8),
+        cycles=st.integers(1, 40),
+        threshold=st.floats(0.05, 0.95),
+        horizon=st.integers(1, 8),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_scalar_loop_equals_fleet(self, seed, pools, cycles, threshold, horizon):
+        rng = np.random.default_rng(seed)
+        probs = rng.random((cycles, pools))
+        self._compare(
+            probs,
+            np.full(pools, threshold),
+            np.full(pools, horizon, dtype=np.int64),
+        )
+
+    @given(seed=st.integers(0, 10_000), pools=st.integers(2, 8))
+    @settings(max_examples=15, deadline=None)
+    def test_heterogeneous_thresholds_and_horizons(self, seed, pools):
+        rng = np.random.default_rng(seed)
+        self._compare(
+            rng.random((30, pools)),
+            rng.uniform(0.05, 0.95, pools),
+            rng.integers(1, 8, pools),
+        )
+
+    def test_deferred_pool_skips_predictor(self):
+        calls = []
+
+        def pred(f):
+            calls.append(float(f[0]))
+            return float(f[0])
+
+        ctl = AdmissionController(predictor=pred, horizon_cycles=3, threshold=0.5)
+        assert not ctl.on_cycle(0, np.array([0.1]))  # risky -> defer through 3
+        assert not ctl.on_cycle(1, np.array([0.9]))  # deferred: no predict
+        assert calls == [0.1]
+
+    def test_fleet_controller_with_batched_predictor(self):
+        feats = np.array([[0.9, 0, 0], [0.1, 0, 0]])
+        ctl = FleetAdmissionController(
+            2, threshold=0.5, predictor=lambda x: x[:, 0]
+        )
+        np.testing.assert_array_equal(
+            ctl.on_cycle(0, features=feats), [True, False]
+        )
+        with pytest.raises(ValueError):
+            ctl.on_cycle(1)  # neither probs nor features
+
+    def test_shape_mismatch_rejected(self):
+        ctl = FleetAdmissionController(3)
+        with pytest.raises(ValueError):
+            ctl.on_cycle(0, np.zeros(4))
+
+    def test_scalar_field_edits_are_honored(self):
+        """The dataclass fields are public — post-construction edits must
+        reach the decision (live-read behavior, as before the fleet-view
+        refactor)."""
+        ctl = AdmissionController(
+            predictor=lambda f: float(f[0]), horizon_cycles=5, threshold=0.9
+        )
+        assert ctl.on_cycle(0, np.array([0.5]))      # 1-p=0.5 < 0.9: admit
+        ctl.threshold = 0.3
+        ctl.horizon_cycles = 2
+        assert not ctl.on_cycle(1, np.array([0.5]))  # now risky -> defer
+        assert not ctl.on_cycle(3, np.array([0.9]))  # deferred through 1+2
+        assert ctl.on_cycle(4, np.array([0.9]))
+
+
+class TestServeLauncher:
+    def test_serve_fleet_smoke(self, capsys):
+        """`python -m repro.launch.serve --spot-pools N` path at tiny
+        shapes: the launcher drives the stream + fleet controller."""
+        from repro.launch.serve import serve_fleet
+
+        out = serve_fleet(5, 0.5, engine="fleet", seed=3)
+        assert out["pools"] == 5 and out["cycles"] == 10
+        assert out["admitted"] + out["deferred"] == 50
+        assert "decisions/sec" in capsys.readouterr().out
+
+
+class TestMigrationPlanners:
+    def test_scalar_tie_break_ignores_insertion_order(self):
+        pred = lambda f: float(f[0])  # noqa: E731
+        tied = {"b": np.array([0.5]), "a": np.array([0.5]), "c": np.array([0.1])}
+        # ties break toward sorted(pool_id) order, however the dict was built
+        assert plan_migration(tied, pred, current="c") == "a"
+        reordered = {k: tied[k] for k in ("a", "c", "b")}
+        assert plan_migration(reordered, pred, current="c") == "a"
+
+    def test_scalar_no_move_cases(self):
+        pred = lambda f: float(f[0])  # noqa: E731
+        feats = {"a": np.array([0.1]), "b": np.array([0.9]), "c": np.array([0.5])}
+        assert plan_migration(feats, pred, current="a") == "b"
+        assert plan_migration(feats, pred, current="b") is None
+
+    def test_batch_matches_scalar_rule(self):
+        rng = np.random.default_rng(7)
+        for _ in range(50):
+            scores = rng.choice([0.1, 0.3, 0.5, 0.9], size=6)  # force ties
+            feats = {f"p{i}": np.array([s]) for i, s in enumerate(scores)}
+            pred = lambda f: float(f[0])  # noqa: E731
+            for cur in range(6):
+                want = plan_migration(feats, pred, current=f"p{cur}")
+                got = plan_migration_batch(scores, cur)
+                assert (want is None) == (got is None)
+                if want is not None:
+                    assert want == f"p{got}"
+
+    def test_batch_vectorised_currents(self):
+        scores = np.array([0.2, 0.9, 0.3])
+        np.testing.assert_array_equal(
+            plan_migration_batch(scores, np.array([0, 1, 2])), [1, -1, 1]
+        )
+
+    def test_batch_margin_blocks_marginal_moves(self):
+        assert plan_migration_batch(np.array([0.5, 0.5 + 1e-12]), 0) is None
+        assert plan_migration_batch(np.array([0.5, 0.6]), 0) == 1
+
+    def test_batch_rejects_bad_scores(self):
+        with pytest.raises(ValueError):
+            plan_migration_batch(np.zeros((2, 2)), 0)
