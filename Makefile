@@ -1,10 +1,11 @@
 # Tier-1 verification — identical to what CI runs.
 #   make verify   : full test suite + pipeline/campaign/replay/serve-throughput smokes
-#   make test     : test suite only
+#   make test     : test suite only (includes the bounded-host-memory
+#                   property tests in tests/test_memory.py)
 #   make docs     : docs checks only (examples compile, README snippets
 #                   import, markdown links resolve, example smoke runs)
 #   make bench    : full throughput benchmarks (assert >= 50x / >= 20x /
-#                   sharded >= 1x fleet / >= 3x / serve >= 20x)
+#                   sharded >= 0.5x fleet / >= 3x / serve >= 20x)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH

@@ -47,10 +47,13 @@ from .predictor import (
     make_model,
     pointwise_predict_fn,
 )
+from .ledger import CohortLedger, InstanceLedger, ProbeLedger, RunningInstance
 from .provider import (
     InterruptionEvent,
     InterruptionLog,
+    LedgerStats,
     PoolConfig,
+    ProbeCostMeter,
     RateLimitError,
     SimulatedProvider,
     default_fleet,
@@ -81,7 +84,9 @@ __all__ = [
     "run_campaign_pipeline",
     "MODEL_REGISTRY", "SEQUENCE_MODELS", "evaluate", "fit_predictor", "make_model",
     "batched_predict_fn", "pointwise_predict_fn",
-    "InterruptionEvent", "InterruptionLog", "PoolConfig", "RateLimitError",
+    "CohortLedger", "InstanceLedger", "ProbeLedger", "RunningInstance",
+    "InterruptionEvent", "InterruptionLog", "LedgerStats", "PoolConfig",
+    "ProbeCostMeter", "RateLimitError",
     "SimulatedProvider", "default_fleet",
     "ShardedProvider", "run_sharded_campaign",
     "SimResult", "replay", "replay_batch", "run_strategies",

@@ -52,7 +52,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from .lifecycle import RequestState, SpotRequest
-from .provider import RateLimitError, SimulatedProvider
+from .provider import ProbeCostMeter, RateLimitError, SimulatedProvider
 
 __all__ = [
     "ProbeRecord",
@@ -76,16 +76,28 @@ class ProbeRecord:
     cycle: int
 
 
+#: rows per DataLake column block — the hot-path retention unit
+_LAKE_BLOCK = 4096
+
+
 class DataLake:
     """Append-only store of probe outcomes with per-pool aggregation.
 
-    Outcomes are kept in columnar buffers (interned pool codes, cycles,
-    accept flags, timestamps) so aggregation is a vectorized
-    ``np.add.at`` scatter rather than an O(records) Python loop.  Per-row
-    :class:`ProbeRecord` objects are only materialized when
-    ``retain_records=True`` (the default); switch it off to cap hot-path
-    retention at fleet scale — the columnar aggregate stays exact either
-    way.
+    Outcomes land in a fixed-size columnar block (interned pool codes,
+    cycles, accept flags, timestamps), so aggregation is a vectorized
+    ``np.add.at`` scatter rather than an O(records) Python loop.  What
+    happens when the block fills depends on ``retain_records``:
+
+    * ``True`` (the default) — the full block is archived and per-row
+      :class:`ProbeRecord` objects are kept: the raw probe log grows with
+      the campaign, as a data lake should.
+    * ``False`` — the block is *folded* into a running
+      ``(pool, cycle)`` success aggregate and reused: hot-path retention
+      is genuinely bounded (one block plus the aggregate — no per-probe
+      growth, which the old per-append Python lists never delivered).
+
+    ``success_counts`` / ``__len__`` / ``append`` semantics are identical
+    either way, and the aggregate is exact.
     """
 
     def __init__(self, *, retain_records: bool = True):
@@ -93,10 +105,15 @@ class DataLake:
         self.records: List[ProbeRecord] = []
         self._pool_code: Dict[str, int] = {}
         self._code_name: List[str] = []
-        self._pcode: List[int] = []
-        self._cycle: List[int] = []
-        self._accepted: List[bool] = []
-        self._time: List[float] = []
+        self._pcode = np.empty(_LAKE_BLOCK, dtype=np.int64)
+        self._cycle = np.empty(_LAKE_BLOCK, dtype=np.int64)
+        self._accepted = np.empty(_LAKE_BLOCK, dtype=bool)
+        self._time = np.empty(_LAKE_BLOCK, dtype=np.float64)
+        self._fill = 0
+        self._count = 0  # rows ever added (monotonic)
+        self._blocks: List[tuple] = []          # archived full blocks
+        self._agg = np.zeros((0, 0), dtype=np.int64)  # folded accept counts
+        self._agg_neg: Dict[tuple, int] = {}    # folded negative-cycle rows
 
     def add(self, time: float, pool_id: str, accepted: bool, cycle: int) -> None:
         """Record one probe outcome (columnar hot path)."""
@@ -104,10 +121,15 @@ class DataLake:
         if code is None:
             code = self._pool_code[pool_id] = len(self._code_name)
             self._code_name.append(pool_id)
-        self._pcode.append(code)
-        self._cycle.append(cycle)
-        self._accepted.append(accepted)
-        self._time.append(time)
+        i = self._fill
+        self._pcode[i] = code
+        self._cycle[i] = cycle
+        self._accepted[i] = accepted
+        self._time[i] = time
+        self._fill = i + 1
+        self._count += 1
+        if self._fill == _LAKE_BLOCK:
+            self._flush_block()
         if self.retain_records:
             self.records.append(ProbeRecord(time, pool_id, accepted, cycle))
 
@@ -115,26 +137,98 @@ class DataLake:
         self.add(rec.time, rec.pool_id, rec.accepted, rec.cycle)
 
     def __len__(self) -> int:
-        return len(self._pcode)
+        return self._count
+
+    @property
+    def nbytes(self) -> int:
+        """Columnar buffer bytes (current block + archive + aggregate)."""
+        block = (
+            self._pcode.nbytes + self._cycle.nbytes
+            + self._accepted.nbytes + self._time.nbytes
+        )
+        arch = sum(sum(col.nbytes for col in blk) for blk in self._blocks)
+        return block + arch + self._agg.nbytes
+
+    def _flush_block(self) -> None:
+        n = self._fill
+        if self.retain_records:
+            self._blocks.append(
+                (
+                    self._pcode[:n].copy(), self._cycle[:n].copy(),
+                    self._accepted[:n].copy(), self._time[:n].copy(),
+                )
+            )
+        else:
+            self._fold(self._pcode[:n], self._cycle[:n], self._accepted[:n])
+        self._fill = 0
+
+    def _fold(self, pcode: np.ndarray, cycle: np.ndarray, acc: np.ndarray) -> None:
+        """Fold one block's accepts into the bounded running aggregate."""
+        m = acc.astype(bool)
+        pcode, cycle = pcode[m], cycle[m]
+        neg = cycle < 0
+        if neg.any():
+            # negative cycles wrap at query time (a scalar-engine quirk);
+            # too rare to earn array storage
+            for c, cy in zip(pcode[neg], cycle[neg]):
+                key = (int(c), int(cy))
+                self._agg_neg[key] = self._agg_neg.get(key, 0) + 1
+            pcode, cycle = pcode[~neg], cycle[~neg]
+        if pcode.size == 0:
+            return
+        need_r = int(pcode.max()) + 1
+        need_c = int(cycle.max()) + 1
+        r, c = self._agg.shape
+        if need_r > r or need_c > c:
+            nr, nc = max(r, 1), max(c, 64)
+            while nr < need_r:
+                nr *= 2
+            while nc < need_c:
+                nc *= 2
+            grown = np.zeros((nr, nc), dtype=np.int64)
+            grown[:r, :c] = self._agg
+            self._agg = grown
+        np.add.at(self._agg, (pcode, cycle), 1)
 
     def success_counts(self, pool_ids: Sequence[str], n_cycles: int) -> np.ndarray:
         """Aggregate to ``S[pool, cycle]`` success-count matrix.
 
         Unknown pool ids and cycles ≥ ``n_cycles`` are dropped, matching
         the historical per-record loop (negative cycles wrap, as Python
-        indexing did).
+        indexing did) — exact whether rows live in archived blocks, the
+        current block, or the folded aggregate.
         """
         s = np.zeros((len(pool_ids), n_cycles), dtype=np.int64)
-        if not self._pcode:
+        if self._count == 0:
             return s
         index = {p: i for i, p in enumerate(pool_ids)}
         code_row = np.array(
             [index.get(name, -1) for name in self._code_name], dtype=np.int64
         )
-        row = code_row[np.asarray(self._pcode, dtype=np.int64)]
-        cyc = np.asarray(self._cycle, dtype=np.int64)
-        keep = np.asarray(self._accepted, dtype=bool) & (row >= 0) & (cyc < n_cycles)
-        np.add.at(s, (row[keep], cyc[keep]), 1)
+
+        def scatter(pcode, cyc, acc):
+            row = code_row[pcode]
+            keep = acc.astype(bool) & (row >= 0) & (cyc < n_cycles)
+            np.add.at(s, (row[keep], cyc[keep]), 1)
+
+        for pcode, cyc, acc, _time in self._blocks:
+            scatter(pcode, cyc, acc)
+        scatter(
+            self._pcode[: self._fill],
+            self._cycle[: self._fill],
+            self._accepted[: self._fill],
+        )
+        if self._agg.size:
+            r, c = self._agg.shape
+            rows = code_row[: min(r, len(code_row))]
+            known = rows >= 0
+            cmax = min(c, n_cycles)
+            # code → row is injective, so fancy-index add is safe
+            s[rows[known], :cmax] += self._agg[: len(rows)][known, :cmax]
+        for (code, cy), v in self._agg_neg.items():
+            row = int(code_row[code]) if code < len(code_row) else -1
+            if row >= 0 and cy < n_cycles:
+                s[row, cy] += v  # negative: wraps (IndexError past -n_cycles)
         return s
 
 
@@ -269,9 +363,9 @@ class FleetCollector:
         self.s = np.zeros((len(self.pool_ids), self.n_cycles), dtype=np.int64)
         self.running = np.zeros_like(self.s)
         self.times = np.zeros(self.n_cycles)
-        # scope cost accounting to this campaign: leaked-probe instances
+        # scope cost accounting to this campaign: leaked-probe rows
         # already on the provider's ledger belong to earlier collectors
-        self._ledger_start = provider.probe_ledger_len()
+        self._meter = ProbeCostMeter(provider)
 
     def run_cycle(self, cycle: int) -> np.ndarray:
         """One collection cycle: batched probe + ground-truth readout."""
@@ -289,8 +383,9 @@ class FleetCollector:
 
     def probe_compute_cost(self) -> float:
         """$ billed to leaked probe instances (provider-side ledger,
-        scoped to probes submitted since this collector was created)."""
-        return float(self.provider.probe_instance_cost(since=self._ledger_start))
+        scoped via a monotonic-cursor meter to probes submitted since
+        this collector was created)."""
+        return self._meter.total()
 
 
 @dataclasses.dataclass

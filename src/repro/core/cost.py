@@ -22,10 +22,17 @@ probing, at 3.33× finer temporal resolution (3 min vs 10 min).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from .collector import CampaignResult
+from .provider import LedgerStats, ProbeCostMeter  # noqa: F401  (re-export)
 
-__all__ = ["ServerlessPricing", "CostReport", "cost_report"]
+__all__ = [
+    "ServerlessPricing",
+    "CostReport",
+    "ProbeCostMeter",
+    "cost_report",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +62,10 @@ class CostReport:
     continuous: float           # $ running the node pools
     periodic: float             # $ Wu et al. estimate (continuous / 100)
     resolution_ratio: float     # SnS cadence vs periodic probing cadence
+    #: host-side ledger footprint at report time (set when a provider is
+    #: passed to :func:`cost_report`) — the near-zero *dollar* cost claim
+    #: and the bounded *memory* cost of collecting it, side by side
+    host_ledger: Optional[LedgerStats] = None
 
     @property
     def sns_total(self) -> float:
@@ -75,6 +86,7 @@ def cost_report(
     pricing: ServerlessPricing = ServerlessPricing(),
     periodic_reduction: float = 100.0,
     periodic_interval: float = 600.0,
+    provider=None,
 ) -> CostReport:
     """Itemized cost comparison for one campaign (Fig. 5).
 
@@ -82,6 +94,11 @@ def cost_report(
     no per-record iteration: ``api_calls`` is the exact number of probe
     requests submitted (rate-limited cycles submit fewer than
     ``pools × cycles × N``).
+
+    Pass the campaign's ``provider`` (any engine) to also attach its
+    host-side :class:`~repro.core.provider.LedgerStats` as
+    ``host_ledger`` — the memory half of the "near-zero collection cost"
+    claim.
     """
     pools, cycles = result.s.shape
     n_requests = result.n
@@ -115,4 +132,5 @@ def cost_report(
         continuous=continuous,
         periodic=periodic,
         resolution_ratio=periodic_interval / result.interval,
+        host_ledger=provider.ledger_stats() if provider is not None else None,
     )

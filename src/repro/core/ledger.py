@@ -1,0 +1,509 @@
+"""Columnar (struct-of-arrays) provider ledgers — the host-memory core.
+
+A SpotLake-class campaign (10^4–10^6 pools, multi-day) cannot afford one
+Python object per instance or one list append per event: the host side
+must stay **flat in cycles and bounded by the live fleet**.  This module
+holds the three event-driven ledgers behind
+:class:`~repro.core.provider.SimulatedProvider`, rebuilt in the same
+style as :class:`~repro.core.provider.InterruptionLog` (PR 3): growable
+parallel numpy columns with chunked (amortised doubling) growth, lazy
+dataclass views instead of stored objects, and vectorized sweep /
+settle / cost reads instead of per-instance Python loops.
+
+* :class:`InstanceLedger` — RUNNING instances.  FIFO reclamation is a
+  **uid-range** operation (the same contract the sharded engine's
+  ``head_uid``/``next_uid`` device columns use): per-pool live instances
+  are the uids ``[head_uid[p], next_uid[p])`` minus a (normally empty)
+  per-pool terminated-uid exception set, so a reclamation sweep advances
+  ``head_uid`` in O(1) and never walks a deque.  Dead rows are compacted
+  away once they outnumber live rows, so the ledger's footprint is
+  bounded by the *live* fleet, not by campaign length.
+* :class:`ProbeLedger` — probes that leaked into RUNNING (slow-terminator
+  studies; empty on the event-driven default path).  Append-only with a
+  **monotonic cursor** (`cursor`): cost queries bill explicit
+  ``[since, until)`` cursor ranges, so campaign-scoped accounting stays
+  exact no matter how the ledger is stored or compacted — raw list
+  indices (the pre-cursor bug) are gone.
+* :class:`CohortLedger` — requests accepted together and still
+  provisioning.  Rows are dropped at settle, so the pending set is
+  bounded by in-flight cohorts; scalar-API cohorts keep their
+  ``SpotRequest`` views in side tables keyed by cohort id, touched only
+  when objects actually exist.
+
+Everything here is engine-agnostic bookkeeping: the fleet and scalar
+engines share these ledgers directly, and the sharded engine mirrors the
+uid-range contract on device (``repro.core.sharded``), which is what
+keeps interruption logs and cost accounting bit-identical across all
+three.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+__all__ = [
+    "RunningInstance",
+    "InstanceLedger",
+    "ProbeLedger",
+    "CohortLedger",
+    "CohortBatch",
+    "grouped_uid0",
+]
+
+
+def grouped_uid0(pools: np.ndarray, counts: np.ndarray, next_uid: np.ndarray) -> np.ndarray:
+    """Per-row starting uid for a settle batch.
+
+    Row ``r`` (a cohort of ``counts[r]`` instances in pool ``pools[r]``)
+    gets ``next_uid[pools[r]]`` plus the number of same-pool instances in
+    *earlier* rows of the batch — exactly the uids a row-by-row settle
+    loop would hand out.  ``next_uid`` is not modified (callers advance it
+    with ``np.add.at``).
+    """
+    m = len(pools)
+    if m == 0:
+        return np.empty(0, dtype=np.int64)
+    order = np.argsort(pools, kind="stable")
+    sp, sc = pools[order], counts[order]
+    excl = np.cumsum(sc) - sc                      # exclusive cumsum overall
+    starts = np.r_[0, np.nonzero(sp[1:] != sp[:-1])[0] + 1]
+    lens = np.diff(np.r_[starts, m])
+    off = excl - np.repeat(excl[starts], lens)     # exclusive cumsum per pool
+    uid0 = np.empty(m, dtype=np.int64)
+    uid0[order] = next_uid[sp] + off
+    return uid0
+
+
+class _Columns:
+    """Chunked-growth parallel columns (amortised-doubling, like
+    :class:`~repro.core.provider.InterruptionLog`)."""
+
+    _COLS: Tuple[Tuple[str, type], ...] = ()
+
+    def __init__(self, capacity: int = 256):
+        for name, dtype in self._COLS:
+            setattr(self, name, np.empty(capacity, dtype=dtype))
+        self._n = 0
+
+    def _grow_to(self, need: int) -> None:
+        cap = len(getattr(self, self._COLS[0][0]))
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        for name, _ in self._COLS:
+            old = getattr(self, name)
+            new = np.empty(cap, dtype=old.dtype)
+            new[: self._n] = old[: self._n]
+            setattr(self, name, new)
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def nbytes(self) -> int:
+        """Allocated column bytes (capacity, not just filled rows)."""
+        return sum(getattr(self, name).nbytes for name, _ in self._COLS)
+
+
+# --------------------------------------------------------------------------
+# Running instances
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunningInstance:
+    """Lazy scalar view of one live ledger row (materialised on demand,
+    like :class:`~repro.core.provider.InterruptionEvent`)."""
+
+    pool: int
+    uid: int
+    start: float
+    probe: bool
+
+
+class InstanceLedger(_Columns):
+    """Struct-of-arrays ledger of RUNNING instances.
+
+    Columns: ``pool`` / ``uid`` / ``start`` / ``end`` / ``probe``.  Live
+    rows have ``end == +inf`` *and* ``uid >= head_uid[pool]`` — a
+    reclamation sweep kills its k oldest instances by advancing
+    ``head_uid`` alone (O(1)); only out-of-band ``terminate()`` calls
+    (scalar object API) write ``end`` on an individual row.  Dead rows
+    are lazily compacted, keeping the footprint bounded by live
+    instances.
+    """
+
+    _COLS = (
+        ("pool", np.int64),
+        ("uid", np.int64),
+        ("start", np.float64),
+        ("end", np.float64),
+        ("probe", np.bool_),
+    )
+
+    def __init__(self, n_pools: int, capacity: int = 256):
+        super().__init__(capacity)
+        self.head_uid = np.zeros(n_pools, dtype=np.int64)
+        self._dead = 0
+        # uids terminated out of FIFO order, per pool (scalar API only;
+        # normally empty — the fast uid-range paths check `if not ...`)
+        self._term_uids: Dict[int, Set[int]] = {}
+
+    # -- write path --------------------------------------------------------
+
+    def append_blocks(
+        self,
+        pools: np.ndarray,
+        uid0: np.ndarray,
+        counts: np.ndarray,
+        start: float,
+        probe: np.ndarray,
+    ) -> None:
+        """Append one settle batch: ``counts[r]`` instances of pool
+        ``pools[r]`` with uids ``uid0[r] + 0..counts[r]-1``, all entering
+        RUNNING at ``start``."""
+        k = int(counts.sum())
+        if k == 0:
+            return
+        self._grow_to(self._n + k)
+        sl = slice(self._n, self._n + k)
+        reps = np.repeat(np.arange(len(pools)), counts)
+        within = np.arange(k) - np.repeat(np.cumsum(counts) - counts, counts)
+        self.pool[sl] = pools[reps]
+        self.uid[sl] = uid0[reps] + within
+        self.start[sl] = start
+        self.end[sl] = np.inf
+        self.probe[sl] = probe[reps]
+        self._n += k
+
+    def pop_oldest(self, p: int, k: int) -> np.ndarray:
+        """Remove the ``k`` oldest live instances of pool ``p`` (a
+        reclamation sweep) and return their uids, ascending.  O(1) via
+        the head-uid advance unless out-of-order terminations exist."""
+        term = self._term_uids.get(p)
+        head = int(self.head_uid[p])
+        if not term:
+            uids = head + np.arange(k, dtype=np.int64)
+            self.head_uid[p] = head + k
+        else:
+            sel = (
+                (self.pool[: self._n] == p)
+                & (self.uid[: self._n] >= head)
+                & np.isinf(self.end[: self._n])
+            )
+            uids = np.sort(self.uid[: self._n][sel])[:k]  # row order == uid order
+            new_head = int(uids[-1]) + 1
+            self.head_uid[p] = new_head
+            term.difference_update(u for u in tuple(term) if u < new_head)
+            if not term:
+                del self._term_uids[p]
+        self._dead += k
+        self._maybe_compact()
+        return uids
+
+    def mark_terminated(self, p: int, uid: int, end: float) -> None:
+        """Out-of-FIFO-order removal (scalar ``terminate`` API)."""
+        sel = (self.pool[: self._n] == p) & (self.uid[: self._n] == uid)
+        rows = np.nonzero(sel)[0]
+        if rows.size:
+            self.end[rows[-1]] = end
+            self._term_uids.setdefault(p, set()).add(int(uid))
+            self._dead += 1
+
+    # -- read path ---------------------------------------------------------
+
+    def live_mask(self) -> np.ndarray:
+        n = self._n
+        return np.isinf(self.end[:n]) & (self.uid[:n] >= self.head_uid[self.pool[:n]])
+
+    @property
+    def live_rows(self) -> int:
+        return int(self.live_mask().sum())
+
+    def live_counts(self) -> np.ndarray:
+        """(pools,) live-instance counts (cross-checks ``n_running``)."""
+        out = np.zeros(len(self.head_uid), dtype=np.int64)
+        m = self.live_mask()
+        np.add.at(out, self.pool[: self._n][m], 1)
+        return out
+
+    def pool_live(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(uids, starts) of pool ``p``'s live instances, oldest first."""
+        m = self.live_mask() & (self.pool[: self._n] == p)
+        return self.uid[: self._n][m], self.start[: self._n][m]
+
+    def running_seconds(self, now: float) -> np.ndarray:
+        """(pools,) summed RUNNING-seconds of live instances at ``now`` —
+        the vectorized core of ``running_cost`` (one scatter-add, no
+        per-instance Python)."""
+        out = np.zeros(len(self.head_uid), dtype=np.float64)
+        m = self.live_mask()
+        np.add.at(
+            out,
+            self.pool[: self._n][m],
+            np.maximum(now - self.start[: self._n][m], 0.0),
+        )
+        return out
+
+    def live(self, p: Optional[int] = None) -> Iterator[RunningInstance]:
+        """Lazy object view of live rows (oldest-first per pool)."""
+        m = self.live_mask()
+        if p is not None:
+            m &= self.pool[: self._n] == p
+        for i in np.nonzero(m)[0]:
+            yield RunningInstance(
+                int(self.pool[i]), int(self.uid[i]),
+                float(self.start[i]), bool(self.probe[i]),
+            )
+
+    # -- compaction --------------------------------------------------------
+
+    def _maybe_compact(self) -> None:
+        if self._dead > 64 and self._dead * 2 > self._n:
+            self.compact()
+
+    def compact(self) -> None:
+        """Drop dead rows (order-preserving, so per-pool rows stay in uid
+        order)."""
+        m = self.live_mask()
+        k = int(m.sum())
+        for name, _ in self._COLS:
+            col = getattr(self, name)
+            col[:k] = col[: self._n][m]
+        self._n = k
+        self._dead = 0
+
+    @property
+    def nbytes(self) -> int:
+        return super().nbytes + self.head_uid.nbytes
+
+
+# --------------------------------------------------------------------------
+# Leaked probes
+# --------------------------------------------------------------------------
+
+
+class ProbeLedger(_Columns):
+    """Append-only columnar ledger of probes that leaked into RUNNING.
+
+    Empty whenever the event-driven terminator runs (the default and the
+    million-pool path); populated only by slow-terminator studies.  The
+    **cursor** is the monotonic count of rows ever appended — campaign
+    accounting captures a cursor at start and bills the explicit
+    ``[since, until)`` range, which stays valid regardless of how rows
+    are stored (the raw-list-index marker this replaces silently
+    mis-billed under any ledger reorganisation).
+    """
+
+    _COLS = (
+        ("pool", np.int64),
+        ("uid", np.int64),
+        ("start", np.float64),
+        ("end", np.float64),
+    )
+
+    def __init__(self, capacity: int = 64):
+        super().__init__(capacity)
+        self.live_count = 0
+
+    @property
+    def cursor(self) -> int:
+        """Monotonic ledger cursor (rows ever appended)."""
+        return self._n
+
+    def append_blocks(
+        self, pools: np.ndarray, uid0: np.ndarray, counts: np.ndarray, start: float
+    ) -> None:
+        k = int(counts.sum())
+        if k == 0:
+            return
+        self._grow_to(self._n + k)
+        sl = slice(self._n, self._n + k)
+        reps = np.repeat(np.arange(len(pools)), counts)
+        within = np.arange(k) - np.repeat(np.cumsum(counts) - counts, counts)
+        self.pool[sl] = pools[reps]
+        self.uid[sl] = uid0[reps] + within
+        self.start[sl] = start
+        self.end[sl] = np.inf
+        self._n += k
+        self.live_count += k
+
+    def mark_ended(self, p: int, uids: np.ndarray, times: np.ndarray) -> None:
+        """Record end-of-billing for pool ``p`` rows with the given uids
+        (``uids`` ascending; ``times`` aligned).  Vectorized; callers
+        skip the call entirely while ``live_count == 0``."""
+        n = self._n
+        cand = (self.pool[:n] == p) & np.isinf(self.end[:n])
+        rows = np.nonzero(cand)[0]
+        if rows.size == 0:
+            return
+        pos = np.searchsorted(uids, self.uid[rows])
+        hit = (pos < len(uids)) & (uids[np.minimum(pos, len(uids) - 1)] == self.uid[rows])
+        rows = rows[hit]
+        self.end[rows] = times[pos[hit]]
+        self.live_count -= int(rows.size)
+
+    def cost(
+        self,
+        prices_per_hour: np.ndarray,
+        now: float,
+        since: int = 0,
+        until: Optional[int] = None,
+    ) -> float:
+        """Dollars billed to rows in cursor range ``[since, until)``,
+        live rows billed through ``now``.  Raises ``ValueError`` on a
+        stale or foreign cursor."""
+        until = self._n if until is None else until
+        if not 0 <= since <= until <= self._n:
+            raise ValueError(
+                f"stale probe-ledger cursor: [since={since}, until={until}) "
+                f"outside [0, {self._n}] — cursors come from "
+                "probe_ledger_len() on this provider"
+            )
+        sl = slice(since, until)
+        end = np.where(np.isinf(self.end[sl]), now, self.end[sl])
+        seconds = np.maximum(end - self.start[sl], 0.0)
+        return float((seconds * prices_per_hour[self.pool[sl]]).sum()) / 3600.0
+
+
+# --------------------------------------------------------------------------
+# Provisioning cohorts
+# --------------------------------------------------------------------------
+
+
+class CohortBatch:
+    """Opaque handle for one held batched submission (``hold=True``):
+    just the cohort ids, cancellable in one vector op."""
+
+    __slots__ = ("ids",)
+
+    def __init__(self, ids: np.ndarray):
+        self.ids = ids
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+
+class CohortLedger(_Columns):
+    """Pending provisioning cohorts as parallel columns.
+
+    Rows live only while provisioning: the settle pass removes due and
+    fully-cancelled rows, so the ledger is bounded by in-flight cohorts
+    (≤ pools, with ``provisioning_duration <= tick``).  Cohort ids are
+    monotonic and never reused; id → row lookups go through a small dict
+    rebuilt at each compaction.
+    """
+
+    _COLS = (
+        ("pool", np.int64),
+        ("start", np.float64),
+        ("count", np.int64),
+        ("probe", np.bool_),
+        ("cid", np.int64),
+    )
+
+    def __init__(self, capacity: int = 256):
+        super().__init__(capacity)
+        self._next_id = 0
+        self._row: Dict[int, int] = {}
+
+    # -- append ------------------------------------------------------------
+
+    def append_batch(
+        self,
+        pools: np.ndarray,
+        start: float,
+        counts: np.ndarray,
+        probe: bool = False,
+    ) -> np.ndarray:
+        """Append one cohort per (pool, count) pair; returns their ids."""
+        m = len(pools)
+        if m == 0:
+            return np.empty(0, dtype=np.int64)
+        self._grow_to(self._n + m)
+        sl = slice(self._n, self._n + m)
+        ids = np.arange(self._next_id, self._next_id + m, dtype=np.int64)
+        self.pool[sl] = pools
+        self.start[sl] = start
+        self.count[sl] = counts
+        self.probe[sl] = probe
+        self.cid[sl] = ids
+        for j, i in enumerate(ids):
+            self._row[int(i)] = self._n + j
+        self._n += m
+        self._next_id += m
+        return ids
+
+    def append(self, pool: int, start: float, count: int, probe: bool) -> int:
+        return int(
+            self.append_batch(
+                np.array([pool], dtype=np.int64), start,
+                np.array([count], dtype=np.int64), probe,
+            )[0]
+        )
+
+    # -- mutation ----------------------------------------------------------
+
+    def peek_count(self, cid: int) -> Optional[int]:
+        row = self._row.get(cid)
+        return None if row is None else int(self.count[row])
+
+    def dec_count(self, cid: int) -> int:
+        """Cancel one member of a pending cohort; returns the pool index."""
+        row = self._row[cid]
+        self.count[row] -= 1
+        return int(self.pool[row])
+
+    def cancel_ids(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Zero every still-pending cohort in ``ids``; returns the
+        ``(pools, counts)`` that were actually cancelled (settled or
+        already-cancelled ids are skipped, like cancelling a RUNNING
+        request)."""
+        rows = np.array(
+            [self._row[i] for i in map(int, ids) if i in self._row], dtype=np.int64
+        )
+        if rows.size == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+        rows = rows[self.count[rows] > 0]
+        pools, counts = self.pool[rows].copy(), self.count[rows].copy()
+        self.count[rows] = 0
+        return pools, counts
+
+    # -- settle ------------------------------------------------------------
+
+    def settle_due(self, now: float, provisioning_duration: float):
+        """Split off cohorts whose provisioning completed.
+
+        Returns ``None`` when nothing is due and nothing needs dropping;
+        otherwise ``(pools, counts, probes, ids, dropped_ids)`` for the
+        due rows (ledger row order — the uid-assignment order) and the
+        ids of cancelled rows dropped alongside.  Due and dropped rows
+        are removed; pending rows keep their relative order.
+        """
+        n = self._n
+        if n == 0:
+            return None
+        elapsed = now - self.start[:n] >= provisioning_duration
+        due = elapsed & (self.count[:n] > 0)
+        drop = elapsed & (self.count[:n] <= 0)
+        if not (due.any() or drop.any()):
+            return None
+        out = (
+            self.pool[:n][due].copy(),
+            self.count[:n][due].copy(),
+            self.probe[:n][due].copy(),
+            self.cid[:n][due].copy(),
+            self.cid[:n][drop].copy(),
+        )
+        keep = ~(due | drop)
+        k = int(keep.sum())
+        for name, _ in self._COLS:
+            col = getattr(self, name)
+            col[:k] = col[:n][keep]
+        self._n = k
+        self._row = {int(c): r for r, c in enumerate(self.cid[:k])}
+        return out

@@ -234,6 +234,20 @@ class FleetWindowTable:
         """Evicted rows across the fleet (pools × evicted cycles)."""
         return self.archived_cycles * self.pools
 
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held by the ring buffers plus any archived blocks.
+
+        With ``archive_evicted=False`` (the streaming-serve default) this
+        is flat in cycles — bounded by ``pools × window_cycles`` — which
+        the bounded-memory tests assert; archived blocks grow with the
+        campaign by design."""
+        ring = (
+            self.s.nbytes + self.features.nbytes + self.predictions.nbytes
+            + self.cycles.nbytes + self.times.nbytes
+        )
+        return ring + sum(b.nbytes for b in self._archive_blocks)
+
     def _order(self) -> np.ndarray:
         """Ring slots in chronological order (oldest -> newest)."""
         w, c = self.window_cycles, self.count
@@ -448,6 +462,14 @@ class CampaignPipelineStream:
     @property
     def done(self) -> bool:
         return self.campaign.done
+
+    @property
+    def host_buffer_nbytes(self) -> int:
+        """Bytes held by the window-table ring (see
+        :meth:`FleetWindowTable.nbytes`) — the stream-side piece of the
+        bounded-memory contract.  The campaign matrices themselves are
+        preallocated at ``pools × cycles`` (they are the output)."""
+        return self.processor.table.nbytes
 
     def step(self) -> Optional[StreamCycleView]:
         """Run one cycle end to end (measure → featurize → predict);

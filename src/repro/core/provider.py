@@ -36,8 +36,15 @@ advances every pool at once.  Randomness is *counter-based* per pool
 trajectories — the parity anchor for the fleet campaign engine.
 
 Per-*instance* bookkeeping (ground-truth node pools, leaked probes) is
-event-driven, not per-tick: instances exist as small FIFO entries touched
-only on provisioning-settle / reclaim / terminate, never on the hot path.
+event-driven, not per-tick, and columnar: instances, provisioning
+cohorts, and leaked probes live in struct-of-arrays ledgers
+(:mod:`repro.core.ledger`) touched only on provisioning-settle / reclaim
+/ terminate — never on the hot path, never one Python object per
+instance.  FIFO reclamation is a per-pool ``head_uid`` advance (the same
+uid-range contract the sharded engine keeps on device), cost reads are
+vectorized column scans, and campaign-scoped probe accounting uses
+monotonic ledger cursors (:class:`ProbeCostMeter`), so host memory stays
+bounded by the live fleet on multi-day 10^5–10^6-pool campaigns.
 
 The provider is deliberately *interface-first* (`submit_spot_request` /
 `cancel` / node-pool maintenance) so the SnS collector code is portable to
@@ -49,10 +56,18 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .ledger import (
+    CohortBatch,
+    CohortLedger,
+    InstanceLedger,
+    ProbeLedger,
+    RunningInstance,
+    grouped_uid0,
+)
 from .lifecycle import RequestState, SpotRequest
 from .rng import (
     keyed_exponential,
@@ -65,6 +80,8 @@ __all__ = [
     "PoolConfig",
     "InterruptionEvent",
     "InterruptionLog",
+    "LedgerStats",
+    "ProbeCostMeter",
     "RateLimitError",
     "SimulatedProvider",
     "default_fleet",
@@ -263,27 +280,60 @@ def reclaim_sweep_delays(seed: int, pool: int, tick: int, k: int) -> np.ndarray:
     )
 
 
-@dataclasses.dataclass
-class _Instance:
-    """One RUNNING instance — FIFO ledger entry, touched only on events."""
-
-    uid: int                  # per-pool instance sequence number
-    pool: int                 # pool index
-    start: float              # entered RUNNING (billing starts)
-    end: Optional[float] = None
-    probe: bool = False       # leaked SnS probe (for cost accounting)
-    obj: Optional[SpotRequest] = None   # scalar-API view, if any
-
-
-@dataclasses.dataclass
 class _Cohort:
-    """Requests accepted together, provisioning since ``start``."""
+    """Scalar-API view of one pending cohort — a thin handle over a
+    :class:`~repro.core.ledger.CohortLedger` row (the row itself is pure
+    columns; only the scalar object path ever creates one of these, so
+    the fleet hot path stays object-free)."""
 
-    pool: int
-    start: float
-    count: int
-    probe: bool = False
-    requests: Optional[List[SpotRequest]] = None  # scalar-API views
+    __slots__ = ("_ledger", "cid", "pool", "probe", "requests", "_final")
+
+    def __init__(
+        self,
+        ledger: CohortLedger,
+        cid: int,
+        pool: int,
+        probe: bool,
+        requests: List[SpotRequest],
+    ):
+        self._ledger = ledger
+        self.cid = cid
+        self.pool = pool
+        self.probe = probe
+        self.requests = requests
+        self._final: Optional[int] = None  # -1 settled / 0 cancelled-out
+
+    @property
+    def count(self) -> int:
+        """Pending member count; ``-1`` once settled to RUNNING (matching
+        the historical settled marker), ``0`` once fully cancelled."""
+        if self._final is not None:
+            return self._final
+        c = self._ledger.peek_count(self.cid)
+        return -1 if c is None else c
+
+    def cancel_one(self, request: SpotRequest) -> None:
+        self.requests.remove(request)
+        self._ledger.dec_count(self.cid)
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerStats:
+    """Snapshot of the provider's host-side ledger footprint.
+
+    The bounded-memory contract for long campaigns: with the event-driven
+    terminator, every field here is bounded by the *live* fleet (pools ×
+    node-pool size), not by campaign length — only the interruption log
+    (a campaign output) grows with events.
+    """
+
+    instance_rows: int         # ledger rows (live + not-yet-compacted dead)
+    instance_live: int         # currently RUNNING instances
+    cohort_rows: int           # in-flight provisioning cohorts
+    probe_rows: int            # leaked-probe ledger cursor (rows ever)
+    probe_live: int            # leaked probes still billing
+    interruption_events: int
+    nbytes: int                # instance + cohort + probe column bytes
 
 
 # --------------------------------------------------------------------------
@@ -362,11 +412,16 @@ class SimulatedProvider:
         u0 = keyed_uniform(self._seed, self._idx, 0, _TAG_DWELL)
         self.regime_until = keyed_exponential(self._dwell[:, STABLE], u0)
 
-        # -- event-driven per-instance bookkeeping ------------------------
-        self._instances: List[Deque[_Instance]] = [deque() for _ in range(P)]
-        self._cohorts: List[_Cohort] = []
+        # -- event-driven per-instance bookkeeping (columnar ledgers) ------
+        self._ledger = InstanceLedger(P)
+        self._cohort_ledger = CohortLedger()
+        self._probe_ledger = ProbeLedger()
+        # scalar-object API side tables — empty unless SpotRequest views
+        # exist, so the fleet hot path never touches them
+        self._cohort_handles: Dict[int, _Cohort] = {}
         self._req_cohort: Dict[int, _Cohort] = {}
-        self._probe_instances: List[_Instance] = []
+        self._uid_objs: Dict[Tuple[int, int], SpotRequest] = {}
+        self._obj_uids: Dict[int, Tuple[int, int]] = {}
         self.interruptions = InterruptionLog(self.pool_ids)
         self._provision_listeners: List[Callable[[SpotRequest], None]] = []
 
@@ -440,7 +495,11 @@ class SimulatedProvider:
         out: List[SpotRequest] = []
         accepted: List[SpotRequest] = []
         k = int(accept.sum())
-        cohort = _Cohort(p, self.now, k, probe=True, requests=[]) if k else None
+        cohort = None
+        if k:
+            cid = self._cohort_ledger.append(p, self.now, k, probe=True)
+            cohort = _Cohort(self._cohort_ledger, cid, p, True, [])
+            self._cohort_handles[cid] = cohort
         for r in range(n):
             req = SpotRequest(pool_id=pool_id, submit_time=self.now)
             if accept[r]:
@@ -452,7 +511,6 @@ class SimulatedProvider:
                 req.transition(RequestState.REJECTED, self.now)
             out.append(req)
         if cohort is not None:
-            self._cohorts.append(cohort)
             self.n_provisioning[p] += k
         for req in accepted:
             for cb in self._provision_listeners:
@@ -469,26 +527,27 @@ class SimulatedProvider:
         default ``hold=False`` the accepted requests are cancelled on
         provisioning acceptance (the event-driven SnS scoot), leaving
         provider state untouched; ``hold=True`` instead leaves them
-        provisioning and returns ``(counts, cohorts)`` so the caller can
-        :meth:`cancel_cohorts` later (the slow-terminator model).  Pools
-        whose region budget is exhausted count 0 (rate-limited cycles
-        record total failure, as in the scalar path).
+        provisioning and returns ``(counts, cohorts)`` — an opaque
+        :class:`~repro.core.ledger.CohortBatch` handle — so the caller
+        can :meth:`cancel_cohorts` later (the slow-terminator model).
+        Pools whose region budget is exhausted count 0 (rate-limited
+        cycles record total failure, as in the scalar path).
         """
         pool_idx = np.asarray(pool_idx, dtype=np.int64)
         counts = np.zeros(len(pool_idx), dtype=np.int64)
         admitted = self._charge_rate_limit_batch(pool_idx, n)
-        cohorts: List[_Cohort] = []
+        ids = np.empty(0, dtype=np.int64)
         if admitted.any():
             sub = pool_idx[admitted]
             counts[admitted] = self._accept_mask(sub, n).sum(axis=1)
             if hold:
-                for p, k in zip(sub, counts[admitted]):
-                    if k > 0:
-                        ch = _Cohort(int(p), self.now, int(k), probe=True)
-                        cohorts.append(ch)
-                        self._cohorts.append(ch)
-                self.n_provisioning[sub] += counts[admitted]
-        return (counts, cohorts) if hold else counts
+                ca = counts[admitted]
+                nz = ca > 0
+                ids = self._cohort_ledger.append_batch(
+                    sub[nz], self.now, ca[nz], probe=True
+                )
+                self.n_provisioning[sub] += ca
+        return (counts, CohortBatch(ids)) if hold else counts
 
     def cancel(self, request: SpotRequest) -> None:
         """Cancel a PROVISIONING request (the scoot)."""
@@ -496,32 +555,41 @@ class SimulatedProvider:
             request.transition(RequestState.CANCELLED, self.now)
             cohort = self._req_cohort.pop(request.request_id, None)
             if cohort is not None:
-                cohort.count -= 1
-                cohort.requests.remove(request)
+                cohort.cancel_one(request)
                 self.n_provisioning[cohort.pool] -= 1
         # cancelling REJECTED/terminal requests is a no-op, like real APIs
 
-    def cancel_cohorts(self, cohorts: Sequence[_Cohort]) -> None:
+    def cancel_cohorts(self, cohorts) -> None:
         """Cancel still-provisioning members of held request batches
         (the fleet-path equivalent of flushing delayed per-request
-        cancels; cohorts that already settled to RUNNING — marked
-        ``count == -1`` by the settle pass — are left alone, like
-        cancelling a RUNNING request in the real APIs)."""
-        for ch in cohorts:
-            if ch.count > 0:
-                self.n_provisioning[ch.pool] -= ch.count
-                ch.count = 0
+        cancels): one vectorized ledger op.  Accepts the
+        :class:`~repro.core.ledger.CohortBatch` returned by
+        ``submit_spot_requests(hold=True)`` or a sequence of scalar-API
+        cohort handles.  Cohorts that already settled to RUNNING are
+        left alone, like cancelling a RUNNING request in the real APIs."""
+        if isinstance(cohorts, CohortBatch):
+            ids = cohorts.ids
+        else:
+            ids = np.array([ch.cid for ch in cohorts], dtype=np.int64)
+        pools, counts = self._cohort_ledger.cancel_ids(ids)
+        if pools.size:
+            np.add.at(self.n_provisioning, pools, -counts)
 
     def terminate(self, request: SpotRequest) -> None:
         if request.state is RequestState.RUNNING:
             request.transition(RequestState.TERMINATED, self.now)
-            p = self._pool_index[request.pool_id]
-            for inst in self._instances[p]:
-                if inst.obj is request:
-                    inst.end = self.now
-                    self._instances[p].remove(inst)
-                    self.n_running[p] -= 1
-                    break
+            loc = self._obj_uids.pop(request.request_id, None)
+            if loc is not None:
+                p, uid = loc
+                self._uid_objs.pop(loc, None)
+                self._ledger.mark_terminated(p, uid, self.now)
+                if self._probe_ledger.live_count:
+                    self._probe_ledger.mark_ended(
+                        p,
+                        np.array([uid], dtype=np.int64),
+                        np.array([self.now]),
+                    )
+                self.n_running[p] -= 1
 
     def set_node_pool(self, pool_id: str, n_nodes: int) -> None:
         """Declare a ground-truth node pool that tries to keep ``n_nodes``
@@ -540,29 +608,67 @@ class SimulatedProvider:
         return self.n_running[np.asarray(pool_idx, dtype=np.int64)]
 
     def running_cost(self, pool_id: str, now: Optional[float] = None) -> float:
-        """Total compute cost billed so far for RUNNING time in this pool."""
+        """Total compute cost billed so far for RUNNING time in this pool
+        — a vectorized column read over the live-instance ledger (the old
+        per-instance Python sum degraded to O(instances) per call)."""
         now = self.now if now is None else now
         p = self._pool_index[pool_id]
+        _, starts = self._ledger.pool_live(p)
         price = self.price_per_hour[p] / 3600.0
-        return sum(max(0.0, now - inst.start) * price for inst in self._instances[p])
+        return float(np.maximum(now - starts, 0.0).sum() * price)
+
+    def running_costs(self, now: Optional[float] = None) -> np.ndarray:
+        """(pools,) compute dollars billed to currently-RUNNING time —
+        one scatter-add over the whole instance ledger, for fleet-wide
+        accounting without a per-pool loop."""
+        now = self.now if now is None else now
+        return self._ledger.running_seconds(now) * self.price_per_hour / 3600.0
+
+    def running_instances(self, pool_id: str) -> Iterator[RunningInstance]:
+        """Lazy per-object view of this pool's live instances (oldest
+        first) — materialised on demand from the columnar ledger, the way
+        ``InterruptionLog`` serves ``InterruptionEvent``."""
+        return self._ledger.live(self._pool_index[pool_id])
 
     def probe_ledger_len(self) -> int:
-        """Current length of the leaked-probe ledger (a scope marker for
-        per-campaign cost accounting)."""
-        return len(self._probe_instances)
+        """Monotonic cursor into the leaked-probe ledger (rows ever
+        appended).  Capture it before a campaign and pass it as
+        ``since=`` to :meth:`probe_instance_cost` to scope accounting;
+        unlike the raw list index this replaces, the cursor stays valid
+        however the ledger is stored or compacted."""
+        return self._probe_ledger.cursor
 
     def probe_instance_cost(
-        self, now: Optional[float] = None, *, since: int = 0
+        self,
+        now: Optional[float] = None,
+        *,
+        since: int = 0,
+        until: Optional[int] = None,
     ) -> float:
         """Compute dollars billed to probe requests that leaked into
-        RUNNING (≈ 0 by design: only a slow terminator leaks).  ``since``
-        restricts the sum to ledger entries added after that marker."""
+        RUNNING (≈ 0 by design: only a slow terminator leaks), restricted
+        to the ledger cursor range ``[since, until)`` — cursors come from
+        :meth:`probe_ledger_len`.  Disjoint segments sum to the whole;
+        a stale or foreign cursor raises ``ValueError``."""
         now = self.now if now is None else now
-        total = 0.0
-        for inst in self._probe_instances[since:]:
-            end = now if inst.end is None else inst.end
-            total += max(0.0, end - inst.start) * self.price_per_hour[inst.pool]
-        return total / 3600.0
+        return self._probe_ledger.cost(self.price_per_hour, now, since, until)
+
+    def ledger_stats(self) -> LedgerStats:
+        """Host-side ledger footprint (see :class:`LedgerStats`) — the
+        observable the bounded-memory tests and benchmarks watch."""
+        return LedgerStats(
+            instance_rows=len(self._ledger),
+            instance_live=int(self.n_running.sum()),
+            cohort_rows=len(self._cohort_ledger),
+            probe_rows=self._probe_ledger.cursor,
+            probe_live=self._probe_ledger.live_count,
+            interruption_events=len(self.interruptions),
+            nbytes=(
+                self._ledger.nbytes
+                + self._cohort_ledger.nbytes
+                + self._probe_ledger.nbytes
+            ),
+        )
 
     def advance(self, to_time: float) -> None:
         """Advance simulation clock, stepping the whole fleet each tick."""
@@ -682,21 +788,23 @@ class SimulatedProvider:
         slower uniform tail (independent follow-up sweeps).  Calibrated to
         >85 % of proximities < 1 min and ≈93 % < 3 min.
         """
-        fifo = self._instances[p]
-        k = min(k, len(fifo))
+        k = min(k, int(self.n_running[p]))
         if k == 0:
             return
         tick = self._tick_count
         delay = reclaim_sweep_delays(self._seed, p, tick, k)
-        uids = np.empty(k, dtype=np.int64)
         times = self.now + delay[:k]
-        for j in range(k):
-            inst = fifo.popleft()  # oldest first: sweeps reclaim in order
-            t = float(times[j])
-            inst.end = t
-            if inst.obj is not None:
-                inst.obj.transition(RequestState.INTERRUPTED, t)
-            uids[j] = inst.uid
+        # oldest first: sweeps reclaim in order — an O(1) head-uid advance
+        # on the columnar ledger (uids ascending == FIFO order)
+        uids = self._ledger.pop_oldest(p, k)
+        if self._uid_objs:
+            for j, u in enumerate(uids):
+                obj = self._uid_objs.pop((p, int(u)), None)
+                if obj is not None:
+                    self._obj_uids.pop(obj.request_id, None)
+                    obj.transition(RequestState.INTERRUPTED, float(times[j]))
+        if self._probe_ledger.live_count:
+            self._probe_ledger.mark_ended(p, uids, times)
         self.interruptions.append_sweep(p, uids, times)
         self.n_running[p] -= k
         # A sweep that actually reclaimed nodes means the pool has zero
@@ -738,41 +846,50 @@ class SimulatedProvider:
         ok = (j[None, :] < headroom[:, None]) & (u >= _FLAKE_P) & (j[None, :] < d[:, None])
         accepts = np.where(ok.all(axis=1), dmax, np.argmax(~ok, axis=1))
         got = accepts > 0
-        for p, c in zip(mp[got], accepts[got]):
-            self._cohorts.append(_Cohort(int(p), self.now, int(c)))
+        if got.any():
+            self._cohort_ledger.append_batch(
+                mp[got], self.now, accepts[got].astype(np.int64)
+            )
         self.n_provisioning[mp] += accepts
 
     def _settle_provisioning(self) -> None:
         """Provisioning completes after `provisioning_duration`: cohorts
-        not cancelled by then transition to RUNNING (and start billing)."""
-        if not self._cohorts:
+        not cancelled by then transition to RUNNING (and start billing).
+
+        One vectorized pass over the cohort ledger — uid assignment, the
+        running/provisioning count updates, and the instance/probe ledger
+        appends are all column ops; per-object work happens only for rows
+        that carry scalar-API ``SpotRequest`` views."""
+        batch = self._cohort_ledger.settle_due(self.now, self.provisioning_duration)
+        if batch is None:
             return
-        pending: List[_Cohort] = []
-        for ch in self._cohorts:
-            if self.now - ch.start < self.provisioning_duration:
-                pending.append(ch)
-                continue
-            if ch.count <= 0:
-                continue  # fully cancelled while provisioning
-            p, k = ch.pool, ch.count
-            ch.count = -1  # settled marker: no longer cancellable
-            self.n_provisioning[p] -= k
-            self.n_running[p] += k
-            uid0 = int(self._instance_seq[p])
-            self._instance_seq[p] += k
-            objs = ch.requests if ch.requests is not None else []
-            for i in range(k):
-                obj = objs[i] if i < len(objs) else None
-                inst = _Instance(
-                    uid=uid0 + i, pool=p, start=self.now, probe=ch.probe, obj=obj
-                )
-                self._instances[p].append(inst)
-                if obj is not None:
+        pools, counts, probes, ids, dropped = batch
+        for cid in dropped:  # fully-cancelled rows: finalise any handles
+            h = self._cohort_handles.pop(int(cid), None)
+            if h is not None:
+                h._final = 0
+        if len(pools) == 0:
+            return
+        uid0 = grouped_uid0(pools, counts, self._instance_seq)
+        np.add.at(self._instance_seq, pools, counts)
+        np.add.at(self.n_provisioning, pools, -counts)
+        np.add.at(self.n_running, pools, counts)
+        self._ledger.append_blocks(pools, uid0, counts, self.now, probes)
+        if probes.any():
+            m = probes.astype(bool)
+            self._probe_ledger.append_blocks(pools[m], uid0[m], counts[m], self.now)
+        if self._cohort_handles:
+            for r, cid in enumerate(ids):
+                h = self._cohort_handles.pop(int(cid), None)
+                if h is None:
+                    continue
+                h._final = -1  # settled marker: no longer cancellable
+                p, u0 = int(pools[r]), int(uid0[r])
+                for i, obj in enumerate(h.requests):
                     obj.transition(RequestState.RUNNING, self.now)
                     self._req_cohort.pop(obj.request_id, None)
-                if ch.probe:
-                    self._probe_instances.append(inst)
-        self._cohorts = pending
+                    self._uid_objs[(p, u0 + i)] = obj
+                    self._obj_uids[obj.request_id] = (p, u0 + i)
 
     # -- rate limiting -----------------------------------------------------
 
@@ -813,6 +930,37 @@ class SimulatedProvider:
                 self._rate_sum[rc] += k * n
                 self.api_calls += k * n
         return admitted
+
+
+class ProbeCostMeter:
+    """Campaign-scoped probe-cost accounting over monotonic ledger cursors.
+
+    Captures the provider's probe-ledger cursor at construction;
+    :meth:`total` bills exactly the leaked-probe rows appended since then
+    (and, after :meth:`freeze`, before the frozen end cursor), so two
+    campaigns on one provider never double-bill each other — disjoint
+    meters sum to the whole ledger's cost.
+    """
+
+    __slots__ = ("provider", "since", "until")
+
+    def __init__(self, provider: SimulatedProvider):
+        self.provider = provider
+        self.since = provider.probe_ledger_len()
+        self.until: Optional[int] = None
+
+    def freeze(self) -> int:
+        """Pin the end cursor (rows appended later are someone else's)."""
+        if self.until is None:
+            self.until = self.provider.probe_ledger_len()
+        return self.until
+
+    def total(self, now: Optional[float] = None) -> float:
+        return float(
+            self.provider.probe_instance_cost(
+                now, since=self.since, until=self.until
+            )
+        )
 
 
 # --------------------------------------------------------------------------

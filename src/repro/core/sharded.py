@@ -271,6 +271,24 @@ class ShardedProvider:
     def pool_config(self, pool_id: str) -> PoolConfig:
         return self._host.pool_config(pool_id)
 
+    def ledger_stats(self):
+        """Host-side ledger footprint (see
+        :class:`~repro.core.provider.LedgerStats`).  During a sharded
+        campaign the per-instance state lives as ``head_uid``/``next_uid``
+        uid ranges inside the device state, so the host's instance /
+        cohort / probe ledgers stay *empty* — the bounded-memory tests
+        assert exactly that."""
+        return self._host.ledger_stats()
+
+    def probe_ledger_len(self) -> int:
+        """Monotonic probe-ledger cursor (always 0-length here: the
+        sharded engine models only the event-driven terminator, which
+        never leaks probes)."""
+        return self._host.probe_ledger_len()
+
+    def probe_instance_cost(self, now=None, *, since: int = 0, until=None) -> float:
+        return self._host.probe_instance_cost(now, since=since, until=until)
+
     def set_node_pools(self, pool_ids: Sequence[str], n_nodes: int) -> None:
         """Batch ``set_node_pool``: declare ground-truth node pools for
         every listed pool at once (pre-campaign only)."""

@@ -234,6 +234,41 @@ class TestDataLake:
             on.success_counts(["a", "b"], 3), off.success_counts(["a", "b"], 3)
         )
 
+    def test_block_boundary_exactness(self, rng):
+        # cross the internal column-block boundary in both retention
+        # modes: archived blocks, the folded aggregate, and the partial
+        # block must all contribute exactly once
+        from repro.core.collector import _LAKE_BLOCK
+
+        pools = [f"p{i}" for i in range(5)]
+        recs = [
+            ProbeRecord(
+                float(t),
+                rng.choice(pools + ["ghost"]),
+                bool(rng.random() < 0.6),
+                int(rng.integers(-2, 12)),   # negative cycles wrap
+            )
+            for t in range(2 * _LAKE_BLOCK + 100)
+        ]
+        on, off = DataLake(), DataLake(retain_records=False)
+        for rec in recs:
+            on.append(rec)
+            off.append(rec)
+        assert len(on) == len(off) == len(recs)
+        assert len(off.records) == 0
+        expect = self.reference_counts(recs, pools, 10)
+        np.testing.assert_array_equal(on.success_counts(pools, 10), expect)
+        np.testing.assert_array_equal(off.success_counts(pools, 10), expect)
+        # bounded mode holds one block + aggregate; archive mode grows
+        assert off.nbytes < on.nbytes
+
+    def test_negative_cycle_wraps_like_python_indexing(self):
+        lake = DataLake(retain_records=False)
+        lake.add(0.0, "a", True, -1)
+        lake._flush_block()  # force the negative row through the fold path
+        got = lake.success_counts(["a"], 3)
+        np.testing.assert_array_equal(got, [[0, 0, 1]])
+
     def test_collector_retention_off_keeps_cost_accounting(self):
         pa, pb = twin_providers(4, seed=13, provisioning_duration=8.0)
         ca = run_campaign(

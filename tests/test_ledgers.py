@@ -1,0 +1,209 @@
+"""Columnar provider ledgers: uid-range FIFO semantics, monotonic probe
+cursors, vectorized cost reads, lazy object views, cohort batches."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PoolConfig,
+    SimulatedProvider,
+    default_fleet,
+    run_campaign,
+)
+from repro.core.ledger import grouped_uid0
+from repro.core.lifecycle import RequestState
+
+
+def make_provider(n_pools=2, seed=0, **kw):
+    cfgs = [
+        PoolConfig(instance_type=f"t{i}", region="r", base_capacity=30.0)
+        for i in range(n_pools)
+    ]
+    return SimulatedProvider(cfgs, seed=seed, **kw)
+
+
+def leaky_fleet_provider(seed=1):
+    """A provider where held probe cohorts leak into RUNNING."""
+    return SimulatedProvider(
+        default_fleet(4, seed=seed), seed=seed + 1, provisioning_duration=8.0
+    )
+
+
+def leak_once(prov):
+    """Submit a held probe batch and let it leak; returns leaked count."""
+    idx = prov.pool_index(prov.pool_ids)
+    counts, cohorts = prov.submit_spot_requests(idx, n=10, hold=True)
+    prov.advance(prov.now + 30.0)     # > provisioning_duration: leak
+    prov.cancel_cohorts(cohorts)      # too late — already RUNNING
+    return int(counts.sum())
+
+
+class TestProbeCursor:
+    """The `since=` marker bugfix: explicit monotonic cursors."""
+
+    def test_disjoint_segments_sum_to_whole(self):
+        prov = leaky_fleet_provider()
+        c0 = prov.probe_ledger_len()
+        leak_once(prov)
+        c1 = prov.probe_ledger_len()
+        leak_once(prov)
+        c2 = prov.probe_ledger_len()
+        assert c0 < c1 < c2  # cursors are monotonic row counts
+        prov.advance(prov.now + 600.0)
+        now = prov.now
+        seg_a = prov.probe_instance_cost(now, since=c0, until=c1)
+        seg_b = prov.probe_instance_cost(now, since=c1)
+        whole = prov.probe_instance_cost(now, since=c0)
+        assert seg_a > 0.0 and seg_b > 0.0
+        assert seg_a + seg_b == pytest.approx(whole, rel=1e-12)
+
+    def test_stale_cursor_raises(self):
+        prov = leaky_fleet_provider()
+        leak_once(prov)
+        end = prov.probe_ledger_len()
+        with pytest.raises(ValueError):
+            prov.probe_instance_cost(since=end + 1)
+        with pytest.raises(ValueError):
+            prov.probe_instance_cost(since=-1)
+        with pytest.raises(ValueError):
+            prov.probe_instance_cost(since=2, until=1)
+        with pytest.raises(ValueError):
+            prov.probe_instance_cost(until=end + 1)
+
+    def test_meter_scopes_and_freezes(self):
+        from repro.core import ProbeCostMeter
+
+        prov = leaky_fleet_provider()
+        leak_once(prov)              # pre-existing leak: not ours
+        meter = ProbeCostMeter(prov)
+        leak_once(prov)              # ours
+        meter.freeze()
+        leak_once(prov)              # someone else's
+        prov.advance(prov.now + 600.0)
+        now = prov.now
+        ours = meter.total(now)
+        before = prov.probe_instance_cost(now, until=meter.since)
+        after = prov.probe_instance_cost(now, since=meter.until)
+        whole = prov.probe_instance_cost(now)
+        assert ours > 0.0 and before > 0.0 and after > 0.0
+        assert before + ours + after == pytest.approx(whole, rel=1e-12)
+
+
+class TestRunningCost:
+    """The O(instances) `running_cost` loop, vectorized."""
+
+    @pytest.fixture(scope="class")
+    def seeded_provider(self):
+        # a campaign with interruptions mid-window leaves a ledger mixing
+        # live rows, reclaimed uid ranges, and fresh replenishments
+        prov = SimulatedProvider(default_fleet(8, seed=31), seed=32)
+        res = run_campaign(prov, duration=6 * 3600.0, engine="fleet")
+        assert len(res.interruptions) > 0
+        return prov
+
+    def old_loop(self, prov, pool_id, now):
+        # the historical per-instance Python sum, kept as the oracle,
+        # driven through the lazy RunningInstance view
+        price = prov.pool_config(pool_id).price_per_hour / 3600.0
+        return sum(
+            max(0.0, now - inst.start) * price
+            for inst in prov.running_instances(pool_id)
+        )
+
+    def test_parity_with_old_loop(self, seeded_provider):
+        prov = seeded_provider
+        now = prov.now + 123.0
+        for pid in prov.pool_ids:
+            np.testing.assert_allclose(
+                prov.running_cost(pid, now), self.old_loop(prov, pid, now),
+                rtol=1e-12,
+            )
+
+    def test_fleet_read_matches_per_pool(self, seeded_provider):
+        prov = seeded_provider
+        fleet = prov.running_costs()
+        per_pool = [prov.running_cost(pid) for pid in prov.pool_ids]
+        np.testing.assert_allclose(fleet, per_pool, rtol=1e-12)
+        assert fleet.sum() > 0.0
+
+    def test_live_view_matches_counts(self, seeded_provider):
+        prov = seeded_provider
+        np.testing.assert_array_equal(
+            prov._ledger.live_counts(), prov.n_running
+        )
+        for i, pid in enumerate(prov.pool_ids):
+            insts = list(prov.running_instances(pid))
+            assert len(insts) == prov.n_running[i]
+            uids = [inst.uid for inst in insts]
+            assert uids == sorted(uids)  # FIFO == uid ascending
+
+
+class TestUidRangeFifo:
+    def test_grouped_uid0_matches_loop(self, rng):
+        next_uid = rng.integers(0, 100, size=5).astype(np.int64)
+        pools = rng.integers(0, 5, size=12).astype(np.int64)
+        counts = rng.integers(1, 4, size=12).astype(np.int64)
+        got = grouped_uid0(pools, counts, next_uid)
+        seq = next_uid.copy()
+        for r in range(len(pools)):
+            assert got[r] == seq[pools[r]], r
+            seq[pools[r]] += counts[r]
+        assert grouped_uid0(
+            np.empty(0, np.int64), np.empty(0, np.int64), next_uid
+        ).size == 0
+
+    def test_terminate_mid_ledger_skips_uid_on_reclaim(self):
+        # out-of-FIFO-order terminate() must not let the dead uid be
+        # "reclaimed": the sweep skips it and takes the next-oldest
+        prov = make_provider(1, seed=3)
+        pid = prov.pool_ids[0]
+        reqs = [r for r in prov.submit_spot_request(pid, n=6)
+                if r.state is RequestState.PROVISIONING]
+        prov.advance(60.0)  # settle to RUNNING
+        assert all(r.state is RequestState.RUNNING for r in reqs)
+        victim = reqs[2]
+        prov.terminate(victim)
+        n_before = int(prov.n_running[0])
+        assert n_before == len(reqs) - 1
+        prov._reclaim(0, n_before)  # sweep everything that is left
+        _, uids, _ = prov.interruptions.columns
+        assert 2 not in uids.tolist()  # the terminated uid never re-dies
+        assert len(uids) == n_before
+        assert prov.n_running[0] == 0
+        assert prov._ledger.live_counts()[0] == 0
+        interrupted = [r for r in reqs if r.state is RequestState.INTERRUPTED]
+        assert len(interrupted) == n_before
+        assert victim.state is RequestState.TERMINATED
+
+    def test_cohort_batch_cancel_is_idempotent(self):
+        prov = make_provider(2, seed=4)
+        idx = prov.pool_index(prov.pool_ids)
+        counts, cohorts = prov.submit_spot_requests(idx, n=5, hold=True)
+        assert prov.n_provisioning.sum() == counts.sum() > 0
+        prov.cancel_cohorts(cohorts)
+        prov.cancel_cohorts(cohorts)  # double-cancel must not go negative
+        assert prov.n_provisioning.sum() == 0
+        prov.advance(600.0)
+        assert prov.running_counts().sum() == 0
+
+
+class TestLedgerStats:
+    def test_stats_reflect_campaign(self):
+        prov = SimulatedProvider(default_fleet(6, seed=41), seed=42)
+        run_campaign(prov, duration=2 * 3600.0, engine="fleet")
+        st = prov.ledger_stats()
+        assert st.instance_live == int(prov.n_running.sum()) > 0
+        assert st.instance_rows >= st.instance_live
+        assert st.probe_rows == 0 == st.probe_live  # event-driven: no leaks
+        assert st.interruption_events == len(prov.interruptions)
+        assert st.nbytes > 0
+
+    def test_cost_report_attaches_host_ledger(self):
+        from repro.core import cost_report
+
+        prov = SimulatedProvider(default_fleet(4, seed=43), seed=44)
+        res = run_campaign(prov, duration=3600.0, engine="fleet")
+        rep = cost_report(res, provider=prov)
+        assert rep.host_ledger is not None
+        assert rep.host_ledger.instance_live == int(prov.n_running.sum())
+        assert cost_report(res).host_ledger is None

@@ -1,0 +1,117 @@
+"""Bounded-memory property tests — the million-pool-path contract.
+
+A long campaign (≥512 pools × ≥256 cycles, ``retain_records=False``) must
+leave the provider's host-side ledgers bounded by the *live fleet*
+(O(pools)), never by campaign length (O(pools × cycles)): ledger byte
+sizes must be flat across the campaign's second half on all three
+engines, and the scalar engine's full object path must fit a fixed
+``tracemalloc`` peak budget.
+"""
+
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import CampaignPipelineStream, CampaignStream, SimulatedProvider, default_fleet
+
+POOLS = 512
+CYCLES = 256
+N_REQ = 2          # scalar-engine runtime knob; bounds don't depend on it
+INTERVAL = 180.0
+DURATION = CYCLES * INTERVAL
+
+#: ledger budget: bytes per pool, independent of CYCLES — live instances
+#: (node_pool_size=10), compaction slack, capacity doubling, cohorts
+LEDGER_BUDGET = 64 * 1024 + 8192 * POOLS
+
+
+def fresh(seed=51):
+    return SimulatedProvider(default_fleet(POOLS, seed=seed), seed=seed + 1)
+
+
+def run_checkpointed(provider, engine, **kw):
+    """Drive a campaign cycle-at-a-time, snapshotting ledger bytes."""
+    stream = CampaignStream(
+        provider, duration=DURATION, interval=INTERVAL, n_requests=N_REQ,
+        engine=engine, **kw,
+    )
+    checkpoints = {}
+    for cyc in stream:
+        if (cyc.cycle + 1) % 64 == 0:
+            checkpoints[cyc.cycle + 1] = stream.provider.ledger_stats()
+    return stream, checkpoints
+
+
+def assert_ledgers_flat(checkpoints):
+    sizes = {c: st.nbytes for c, st in sorted(checkpoints.items())}
+    mid, end = sizes[CYCLES // 2], sizes[CYCLES]
+    # flat across the second half (one capacity doubling of slack), and
+    # bounded by pools — a pools×cycles ledger would blow straight past
+    assert end <= 2 * mid, sizes
+    assert end <= LEDGER_BUDGET, sizes
+    st = checkpoints[CYCLES]
+    assert st.instance_rows <= 8 * max(st.instance_live, 1), st
+
+
+class TestLedgersBoundedByPools:
+    def test_fleet_engine(self):
+        stream, checkpoints = run_checkpointed(fresh(51), "fleet")
+        assert_ledgers_flat(checkpoints)
+        st = checkpoints[CYCLES]
+        # node pools near target (some mid-crunch pools run a deficit)
+        assert 0 < st.instance_live <= POOLS * 10
+        assert st.probe_rows == 0               # event-driven: no leaks
+        assert len(stream.result().interruptions) > 0
+
+    def test_scalar_engine_with_tracemalloc_budget(self):
+        provider = fresh(53)
+        tracemalloc.start()
+        try:
+            base, _ = tracemalloc.get_traced_memory()
+            stream, checkpoints = run_checkpointed(
+                provider, "scalar", retain_records=False
+            )
+            _, peak = tracemalloc.get_traced_memory()
+        finally:
+            tracemalloc.stop()
+        assert_ledgers_flat(checkpoints)
+        # the whole scalar campaign — SpotRequest churn, DataLake,
+        # ledgers, output matrices — inside a fixed peak budget
+        assert peak - base < 16 * 1024 * 1024, (base, peak)
+        lake = stream._collector.lake
+        assert len(lake.records) == 0
+        assert len(lake) > 0
+        # lake buffers: one fixed block + the folded (pool, cycle)
+        # aggregate — no per-probe growth (old: 4 lists × len(lake))
+        assert lake.nbytes <= 256 * 1024 + 16 * POOLS * 2 * CYCLES
+        assert not stream._collector.probe_requests
+
+    def test_sharded_engine_keeps_host_ledgers_empty(self):
+        stream, checkpoints = run_checkpointed(fresh(55), "sharded")
+        assert_ledgers_flat(checkpoints)
+        st = checkpoints[CYCLES]
+        # per-instance state is device-resident uid ranges — the host
+        # instance/cohort/probe ledgers never gain a row
+        assert st.instance_rows == 0
+        assert st.cohort_rows == 0
+        assert st.probe_rows == 0
+        assert len(stream.result().interruptions) > 0
+
+
+class TestStreamBuffersFlat:
+    def test_window_table_ring_is_flat(self):
+        pipe = CampaignPipelineStream(
+            fresh(57),
+            duration=DURATION / 4,      # 64 cycles is plenty for a ring
+            interval=INTERVAL,
+            n_requests=N_REQ,
+            engine="fleet",
+            window_minutes=16 * INTERVAL / 60.0,
+        )
+        sizes = set()
+        for view in pipe:
+            if view.cycle >= 16:        # past warm-up: ring fully allocated
+                sizes.add(pipe.host_buffer_nbytes)
+        assert len(sizes) == 1          # exactly flat once the ring wraps
+        assert pipe.processor.table.archived > 0
