@@ -5,12 +5,16 @@
 #   make docs     : docs checks only (examples compile, README snippets
 #                   import, markdown links resolve, example smoke runs)
 #   make bench    : full throughput benchmarks (assert >= 50x / >= 20x /
-#                   sharded >= 0.5x fleet / >= 3x / serve >= 20x)
+#                   sharded best-size >= 1x fleet / >= 3x / serve >= 20x)
+#   make bench-multidev : campaign + replay full benches with the
+#                   1/2/4-virtual-device scaling curves recorded in the
+#                   BENCH_*.json entries (spawns XLA virtual-device
+#                   subprocesses; curves are recorded, not asserted)
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify test docs bench
+.PHONY: verify test docs bench bench-multidev
 
 verify: test
 	python benchmarks/pipeline_throughput.py --smoke
@@ -29,3 +33,7 @@ bench:
 	python benchmarks/campaign_throughput.py
 	python benchmarks/replay_throughput.py
 	python benchmarks/serve_throughput.py
+
+bench-multidev:
+	python benchmarks/campaign_throughput.py --multidev
+	python benchmarks/replay_throughput.py --multidev

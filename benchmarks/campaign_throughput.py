@@ -12,11 +12,13 @@ engines on the same fleet:
    admission call per cycle for the whole fleet, matrices in place of
    objects;
 3. ``sharded`` — the mesh-sharded JAX engine (`repro.core.sharded`):
-   pool state device-sharded over a 1-D ``("pools",)`` mesh, one
-   ``shard_map``-ped jitted step per cycle.  Measured after a short
-   warm-up campaign so the one-time XLA compile (cached process-wide
-   across campaigns) is excluded — the steady-state rate is what a
-   long campaign sees.
+   pool state device-resident and device-sharded over a 1-D
+   ``("pools",)`` mesh, one donated ``shard_map``-ped jitted step per
+   cycle with a single stacked host fetch; interruption events and
+   probe costs are materialised in batches at campaign boundaries.
+   Measured after a short warm-up campaign so the one-time XLA compile
+   (cached process-wide across campaigns) is excluded — the
+   steady-state rate is what a long campaign sees.
 
 Because all engines ride the provider's counter-based per-pool RNG
 streams, the benchmark also *asserts* the parity anchor: identical
@@ -26,15 +28,25 @@ three engines.
 Usage:
     PYTHONPATH=src python benchmarks/campaign_throughput.py [--smoke]
         [--pools 4096] [--cycles 16] [--engine all|scalar|fleet|sharded]
-        [--pools-large 65536]
+        [--pools-large 65536] [--multidev]
 
-The full run asserts (at 4096 pools x 16 cycles on CPU) that the fleet
-engine clears >= 20x the scalar engine and the sharded engine >= 0.5x
-the fleet engine on a single device (a conservative floor — the
-columnar-ledger provider sped up the numpy fleet baseline; sharded's
-value is multi-device scaling), and appends a perf record (with the
-device count, so multi-device trajectories accumulate in the same file)
-to ``BENCH_campaign.json``.  ``--smoke`` only checks plumbing + parity.
+The full run asserts (16 cycles on CPU) that the fleet engine clears
+>= 20x the scalar engine at the top pool count, and that the sharded
+engine's best measured size clears >= 1x the fleet engine on a single
+device (device-resident stepping removed the per-cycle host round-trips;
+the crossover sits near ~1k pools on one CPU core — below it the jitted
+step beats numpy's per-cycle Python overhead, above it numpy's masked
+sparse updates win on a single device and the sharded payoff is the
+device axis; the top-size ratio keeps a 0.5x regression guard), and
+appends a perf record (with the device count, so multi-device
+trajectories accumulate in the same file) to ``BENCH_campaign.json``.
+``--multidev`` additionally records a ``sharded_scaling`` curve — the
+sharded engine re-benched in subprocesses at 1/2/4 virtual host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set
+before jax first initialises).  Virtual devices share the same physical
+cores, so the curve measures sharding overhead and mesh plumbing, not
+parallel speedup; it is recorded, never asserted.  ``--smoke`` only
+checks plumbing + parity.
 
 The full run also records a ``large_fleet`` scaling entry at
 ``--pools-large`` (default 65536) pools on the fleet engine: throughput,
@@ -48,6 +60,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -56,11 +71,17 @@ import numpy as np
 N_REQ = 10
 INTERVAL = 180.0
 REQUIRED_SPEEDUP = 20.0           # fleet vs scalar
-# sharded vs fleet, 1-device CPU floor.  The columnar-ledger provider
-# raised the fleet (numpy) baseline ~1.5x, so parity-on-one-device is no
-# longer guaranteed on a small container; sharded's payoff is scaling
-# with devices (every record carries `devices`, tracking the trajectory)
-REQUIRED_SHARDED_SPEEDUP = 0.5
+# sharded vs fleet, 1-device CPU floors.  Device-resident stepping
+# (donated buffers, one stacked fetch per cycle, batched event
+# materialisation) restored sharded >= fleet in its dispatch-bound
+# regime (<= ~1k pools on one core: measured 1.1-1.3x at 256-512
+# pools); wider single-device fleets stay numpy-favorable (masked
+# sparse regime/replenish updates vs the step's dense draws), so the
+# top size keeps a regression guard while the best measured size must
+# clear parity.  Records carry `devices` so multi-device trajectories
+# accumulate in the same file.
+REQUIRED_SHARDED_SPEEDUP = 1.0        # best measured size
+MIN_SHARDED_SPEEDUP_AT_SCALE = 0.5    # top (largest) measured size
 ENGINES = ("scalar", "fleet", "sharded")
 
 
@@ -77,7 +98,13 @@ def _provider(pools: int, seed: int = 0):
 
 
 def bench_engine(engine: str, pools: int, cycles: int) -> float:
-    """pool-cycles/sec for one engine (fresh provider, same seed)."""
+    """pool-cycles/sec for one engine (fresh provider, same seed).
+
+    The vectorized engines take the best of three runs — their campaigns
+    are sub-second, so noise on a small shared container would otherwise
+    dominate the sharded-vs-fleet ratios the floors assert; the scalar
+    engine is orders of magnitude slower and runs once.
+    """
     from repro.core import run_campaign
 
     if engine == "sharded":
@@ -90,17 +117,53 @@ def bench_engine(engine: str, pools: int, cycles: int) -> float:
             n_requests=N_REQ,
             engine=engine,
         )
-    provider = _provider(pools)
-    t0 = time.perf_counter()
-    run_campaign(
-        provider,
-        duration=cycles * INTERVAL,
-        interval=INTERVAL,
-        n_requests=N_REQ,
-        engine=engine,
-        retain_records=False,
-    )
-    return pools * cycles / (time.perf_counter() - t0)
+    best = float("inf")
+    for _ in range(1 if engine == "scalar" else 3):
+        provider = _provider(pools)
+        t0 = time.perf_counter()
+        run_campaign(
+            provider,
+            duration=cycles * INTERVAL,
+            interval=INTERVAL,
+            n_requests=N_REQ,
+            engine=engine,
+            retain_records=False,
+        )
+        best = min(best, time.perf_counter() - t0)
+    return pools * cycles / best
+
+
+def bench_multidev_curve(
+    pools: int, cycles: int, devices=(1, 2, 4)
+) -> dict:
+    """Sharded-engine pool-cycles/sec at 1/2/4 virtual host devices.
+
+    Each point runs in a subprocess because the XLA virtual-device flag
+    must be set before jax first initialises.  The child is this same
+    script with ``--sharded-rate-only``, which prints one number (the
+    warmed steady-state rate from :func:`bench_engine`).
+    """
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    curve = {}
+    for n in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [
+                sys.executable, os.path.abspath(__file__),
+                "--sharded-rate-only",
+                "--pools", str(pools), "--cycles", str(cycles),
+            ],
+            capture_output=True, text=True, timeout=1800, env=env,
+        )
+        assert proc.returncode == 0, proc.stderr
+        curve[str(n)] = round(float(proc.stdout.strip().splitlines()[-1]))
+    return {
+        "pools": pools,
+        "cycles": cycles,
+        "pool_cycles_per_sec": curve,
+    }
 
 
 def bench_large_fleet(pools: int, cycles: int) -> dict:
@@ -177,6 +240,7 @@ def run(
     smoke: bool = False,
     engine: str = "all",
     pools_large: int = 65536,
+    multidev: bool = False,
 ) -> dict:
     import jax
 
@@ -184,7 +248,9 @@ def run(
     if smoke:
         pools, cycles = min(pools, 256), min(cycles, 8)
         pools_large = min(pools_large, 512)
-    sizes = sorted({min(1024, pools), pools})
+    # 512 is the dispatch-bound size the sharded >= 1x fleet floor pins;
+    # the top size tracks the at-scale trajectory
+    sizes = sorted({min(512, pools), min(1024, pools), pools})
 
     per_size = {}
     for p in sizes:
@@ -210,17 +276,32 @@ def run(
     result["large_fleet"] = bench_large_fleet(
         pools_large, min(cycles, 16) if not smoke else 4
     )
+    if multidev:
+        result["sharded_scaling"] = bench_multidev_curve(pools, cycles)
     top = per_size[pools]
     if "speedup" in top:
         result["speedup"] = top["speedup"]
+    sharded_ratios = [
+        e["speedup_sharded_vs_fleet"]
+        for e in per_size.values()
+        if "speedup_sharded_vs_fleet" in e
+    ]
     if "speedup_sharded_vs_fleet" in top:
         result["speedup_sharded_vs_fleet"] = top["speedup_sharded_vs_fleet"]
+    if sharded_ratios:
+        result["speedup_sharded_vs_fleet_best"] = max(sharded_ratios)
     if not smoke:
         if "speedup" in result:
             assert result["speedup"] >= REQUIRED_SPEEDUP, result
+        if sharded_ratios:
+            assert (
+                result["speedup_sharded_vs_fleet_best"]
+                >= REQUIRED_SHARDED_SPEEDUP
+            ), result
         if "speedup_sharded_vs_fleet" in result:
             assert (
-                result["speedup_sharded_vs_fleet"] >= REQUIRED_SHARDED_SPEEDUP
+                result["speedup_sharded_vs_fleet"]
+                >= MIN_SHARDED_SPEEDUP_AT_SCALE
             ), result
         assert result["large_fleet"]["ledger_flat_in_cycles"], result
         rec = dict(result, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
@@ -239,10 +320,19 @@ def main():
                     help="small shapes; skip the speedup assertions")
     ap.add_argument("--pools-large", type=int, default=65536,
                     help="fleet size for the large_fleet scaling entry")
+    ap.add_argument("--multidev", action="store_true",
+                    help="also record the 1/2/4-virtual-device sharded "
+                         "scaling curve (spawns subprocesses)")
+    ap.add_argument("--sharded-rate-only", action="store_true",
+                    help=argparse.SUPPRESS)  # bench_multidev_curve child
     args = ap.parse_args()
+    if args.sharded_rate_only:
+        print(bench_engine("sharded", args.pools, args.cycles))
+        return
     result = run(
         pools=args.pools, cycles=args.cycles, smoke=args.smoke,
         engine=args.engine, pools_large=args.pools_large,
+        multidev=args.multidev,
     )
     print(json.dumps(result, indent=1))
 

@@ -8,8 +8,10 @@ traces, all three strategies) flowing through:
 2. ``numpy-batch``  — ``replay_batch(engine="numpy")``, the vectorised
                       per-cycle loop (the parity oracle / baseline);
 3. ``scan``         — ``replay_batch(engine="scan")``: the ``lax.scan``
-                      closed form, auto row-sharded across a small
-                      thread pool at fleet batch sizes;
+                      closed form; with more than one visible device
+                      the trace axis is ``shard_map``-ped over a 1-D
+                      ``("traces",)`` mesh (one jitted device call,
+                      bit-identical to the unsharded scan);
 4. ``kernel``       — the chunked Pallas kernel (native on TPU; on CPU
                       the production path is the bit-identical scan, so
                       the kernel is parity-checked in interpret mode on
@@ -29,16 +31,25 @@ Also verifies the acceptance properties end-to-end:
 
 Usage:
     PYTHONPATH=src python benchmarks/replay_throughput.py [--smoke]
-        [--traces 8192] [--cycles 160] [--repeats 3]
+        [--traces 8192] [--cycles 160] [--repeats 3] [--multidev]
 
 Each full run appends one JSON record to ``BENCH_replay.json`` (perf
-trajectory across PRs).
+trajectory across PRs).  Records carry ``devices`` (the visible device
+count the scan ran on); ``--multidev`` additionally records a
+``scan_scaling`` curve — the scan sweep re-benched in subprocesses at
+1/2/4 virtual host devices (the XLA virtual-device flag must be set
+before jax first initialises).  Virtual devices share the same physical
+cores, so the curve measures mesh plumbing overhead, not parallel
+speedup; it is recorded, never asserted.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -100,6 +111,44 @@ def bench_python_loop(avail, dur, pred, rows: int) -> float:
     return rows * len(STRATEGIES) / (time.perf_counter() - t0)
 
 
+def bench_scan_rate(traces: int, cycles: int, repeats: int) -> float:
+    """traces/sec of one warmed scan sweep (the ``--scan-rate-only``
+    child body for :func:`bench_multidev_curve`)."""
+    avail, dur, pred = _workload(traces, cycles)
+    _sweep(avail, dur, pred, "scan")              # warm the jit caches
+    best = _best(lambda: _sweep(avail, dur, pred, "scan"), max(repeats, 3))
+    return traces * len(STRATEGIES) / best
+
+
+def bench_multidev_curve(
+    traces: int, cycles: int, repeats: int, devices=(1, 2, 4)
+) -> dict:
+    """Scan-sweep traces/sec at 1/2/4 virtual host devices, each point a
+    subprocess (the XLA virtual-device flag is init-time only)."""
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    curve = {}
+    for n in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [
+                sys.executable, os.path.abspath(__file__),
+                "--scan-rate-only",
+                "--traces", str(traces), "--cycles", str(cycles),
+                "--repeats", str(repeats),
+            ],
+            capture_output=True, text=True, timeout=1800, env=env,
+        )
+        assert proc.returncode == 0, proc.stderr
+        curve[str(n)] = round(float(proc.stdout.strip().splitlines()[-1]), 1)
+    return {
+        "traces": traces,
+        "cycles": cycles,
+        "traces_per_sec": curve,
+    }
+
+
 def check_parity(avail, dur, pred) -> bool:
     """numpy ≡ scan ≡ kernel, atol=0, incl. ragged kernel padding.
 
@@ -142,7 +191,9 @@ def check_fig9_identity() -> bool:
 
 
 def run(traces: int = 8192, cycles: int = 160, smoke: bool = False,
-        repeats: int = 3) -> dict:
+        repeats: int = 3, multidev: bool = False) -> dict:
+    import jax
+
     if smoke:
         traces, cycles = min(traces, 512), min(cycles, 48)
     avail, dur, pred = _workload(traces, cycles)
@@ -165,6 +216,7 @@ def run(traces: int = 8192, cycles: int = 160, smoke: bool = False,
         "traces": traces,
         "cycles": cycles,
         "queries": dur.shape[1],
+        "devices": len(jax.devices()),
         "traces_per_sec": {
             "python_loop": round(loop_rate, 1),
             "numpy_batch": round(numpy_rate, 1),
@@ -177,6 +229,10 @@ def run(traces: int = 8192, cycles: int = 160, smoke: bool = False,
         "fig9_simresults_identical": fig9_identical,
         "smoke": smoke,
     }
+    if multidev and not smoke:
+        result["scan_scaling"] = bench_multidev_curve(
+            traces, cycles, repeats
+        )
     if not smoke:
         assert speedup >= REQUIRED_SPEEDUP, result
         _append_record(result)
@@ -196,9 +252,17 @@ def main():
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes; parity checks only, no assertion")
+    ap.add_argument("--multidev", action="store_true",
+                    help="also record the 1/2/4-virtual-device scan "
+                         "scaling curve (spawns subprocesses)")
+    ap.add_argument("--scan-rate-only", action="store_true",
+                    help=argparse.SUPPRESS)  # bench_multidev_curve child
     args = ap.parse_args()
+    if args.scan_rate_only:
+        print(bench_scan_rate(args.traces, args.cycles, args.repeats))
+        return
     result = run(traces=args.traces, cycles=args.cycles, smoke=args.smoke,
-                 repeats=args.repeats)
+                 repeats=args.repeats, multidev=args.multidev)
     print(json.dumps(result, indent=1))
 
 

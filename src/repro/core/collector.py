@@ -470,16 +470,11 @@ class CampaignStream:
         self.interval = float(interval)
         self.n = int(n_requests)
         self.n_cycles = int(duration // interval)
+        self.terminator_delay = float(terminator_delay)
         self._next = 0
         self._result: Optional[CampaignResult] = None
 
         if engine == "sharded":
-            if terminator_delay != 0.0:
-                raise NotImplementedError(
-                    "engine='sharded' models the event-driven terminator only "
-                    "(terminator_delay=0); use engine='fleet' or 'scalar' to "
-                    "study slow-terminator probe leaks"
-                )
             from .sharded import ShardedProvider  # local: jax-dependent
 
             if isinstance(provider, ShardedProvider):
@@ -498,6 +493,9 @@ class CampaignStream:
             self.provider = sp
             self._idx = sp.pool_index(self.pool_ids)
             self._collector = None
+            # scope leaked-probe cost to this campaign, like the fleet
+            # collector does (rows appended earlier belong to others)
+            self._meter = ProbeCostMeter(sp)
         else:
             self.pool_ids = (
                 list(pool_ids) if pool_ids is not None else provider.pool_ids
@@ -563,9 +561,12 @@ class CampaignStream:
             self.s[:, c] = self._collector.run_cycle(c)
             for i, pid in enumerate(self.pool_ids):
                 self.running[i, c] = self.provider.running_count(pid)
-        else:  # sharded: advance + probe is ONE shard_map-ped device step
-            counts, run_t = self.provider.probe_cycle(when, self._idx, self.n)
-            self.times[c] = self.provider.now
+        else:  # sharded: advance + probe in shard_map-ped device steps
+            counts, run_t = self.provider.probe_cycle(
+                when, self._idx, self.n, self.terminator_delay
+            )
+            # the measurement timestamp, not the post-terminator-delay clock
+            self.times[c] = self.provider.probe_time
             self.s[:, c] = counts
             self.running[:, c] = run_t
         s_t = self.s[:, c]
@@ -595,7 +596,9 @@ class CampaignStream:
                 f"{self.n_cycles} cycles consumed"
             )
         if self.engine == "sharded":
-            probe_cost = 0.0  # event-driven terminator: nothing leaks
+            # flushes deferred leak records; 0 for the event-driven
+            # terminator, which never leaks
+            probe_cost = self._meter.total()
         else:
             probe_cost = self._collector.probe_compute_cost()
         # node-pool compute cost: integrate running counts over the campaign
@@ -658,7 +661,7 @@ def run_campaign(
           (:mod:`repro.core.sharded`): per-pool state lives device-
           sharded on a 1-D ``("pools",)`` mesh and each cycle is one
           ``shard_map``-ped step — the 10^5–10^6-pool scale path.
-          Requires a *fresh* provider and ``terminator_delay == 0``.
+          Requires a *fresh* provider.
       terminator_delay: seconds the Request Terminator lags behind
         provisioning acceptance.  ``0`` (default) models the paper's
         event-driven terminator: accepted probes are cancelled while
@@ -666,7 +669,7 @@ def run_campaign(
         slow/polling terminator — probes that finish provisioning within
         the delay leak into RUNNING and show up in
         ``probe_compute_cost`` (the failure mode §V's design
-        eliminates).  Supported by ``"scalar"`` and ``"fleet"``.
+        eliminates).  Supported by all three engines.
       retain_records: keep per-probe ``ProbeRecord`` objects /
         ``SpotRequest`` views on the scalar engine (switch off at fleet
         scale; aggregates stay exact).

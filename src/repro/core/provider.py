@@ -86,6 +86,7 @@ __all__ = [
     "SimulatedProvider",
     "default_fleet",
     "reclaim_sweep_delays",
+    "reclaim_sweep_delays_batch",
 ]
 
 
@@ -196,6 +197,21 @@ class InterruptionLog:
         self._time[sl] = times
         self._n += k
 
+    def append_events(self, pools, uids, times) -> None:
+        """Bulk append of many sweeps' events at once (``pools`` aligned
+        per event) — the sharded engine's deferred-flush path, equivalent
+        to the :meth:`append_sweep` calls the numpy engines make."""
+        pools = np.asarray(pools, dtype=np.int64)
+        uids = np.asarray(uids, dtype=np.int64)
+        times = np.asarray(times, dtype=np.float64)
+        k = len(uids)
+        self._grow_to(self._n + k)
+        sl = slice(self._n, self._n + k)
+        self._pool[sl] = pools
+        self._uid[sl] = uids
+        self._time[sl] = times
+        self._n += k
+
     # -- columnar read path ------------------------------------------------
 
     @property
@@ -271,6 +287,35 @@ def reclaim_sweep_delays(seed: int, pool: int, tick: int, k: int) -> np.ndarray:
     timestamps bit-identical across engines.
     """
     i = np.arange(k)
+    um = keyed_uniform(seed, pool, tick, _TAG_RECLAIM + 2 * i)
+    ud = keyed_uniform(seed, pool, tick, _TAG_RECLAIM + 2 * i + 1)
+    return np.where(
+        (i == 0) | (um < 0.86),
+        keyed_exponential(16.0, ud),
+        keyed_uniform_between(60.0, 600.0, ud),
+    )
+
+
+def reclaim_sweep_delays_batch(seed: int, pools, ticks, ks) -> np.ndarray:
+    """Vectorized :func:`reclaim_sweep_delays` over many sweeps at once.
+
+    ``pools``/``ticks``/``ks`` are aligned per-sweep arrays; the result is
+    the flat concatenation of ``reclaim_sweep_delays(seed, p, t, k)`` for
+    each sweep, bit-identical to the per-sweep calls (``keyed_uniform`` is
+    elementwise in its key columns).  The sharded engine's deferred event
+    flush uses this to materialize a whole campaign's interruption
+    timestamps in one pass.
+    """
+    pools = np.asarray(pools, dtype=np.int64)
+    ticks = np.asarray(ticks, dtype=np.int64)
+    ks = np.asarray(ks, dtype=np.int64)
+    total = int(ks.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.float64)
+    reps = np.repeat(np.arange(len(ks)), ks)
+    i = np.arange(total) - np.repeat(np.cumsum(ks) - ks, ks)
+    pool = pools[reps]
+    tick = ticks[reps]
     um = keyed_uniform(seed, pool, tick, _TAG_RECLAIM + 2 * i)
     ud = keyed_uniform(seed, pool, tick, _TAG_RECLAIM + 2 * i + 1)
     return np.where(

@@ -37,20 +37,37 @@ Three properties make that possible:
   are masked out of every output) is therefore the only sharding-visible
   change — asserted in ``tests/test_sharded_campaign.py``.
 
-Event-granular bookkeeping stays off-device: reclamation *timestamps*
-(which only feed the interruption log, never the dynamics) are computed
-host-side from the step's ``(tick, pool, count, uid-start)`` outputs via
-:func:`repro.core.provider.reclaim_sweep_delays` — the same function the
-numpy engine calls — and per-region rate limiting (a tiny
-O(regions) sliding-window check with sequential semantics) runs on the
-host before the admission step, exactly as ``submit_spot_requests`` does.
+Device-resident stepping
+------------------------
 
-Scope: the sharded engine models the paper's *event-driven* terminator
-(``terminator_delay == 0``, the design point that makes probing free);
-the slow-terminator leak pathology stays on the ``fleet`` / ``scalar``
-engines.  It also requires ``provisioning_duration <= tick`` (the
-default: 8 s vs 60 s), which guarantees at most one in-flight
-replenishment cohort per pool.
+The per-pool state is committed to the devices once, before the first
+step, and then **stays there for the whole campaign**: each jitted step
+*donates* the incoming state buffers (``donate_argnums``) and hands back
+the updated ones, so a cycle allocates nothing on the steady path and
+the host never round-trips the fleet.  Per cycle exactly one transfer
+crosses the boundary — the stacked ``(2, pools)`` observation
+``[S_t, running_t]``.  Event-granular bookkeeping is *deferred*: the
+step's reclamation outputs (``(tick, pool, count, uid-start)``) and any
+leaked-probe cohort markers stay on device in a pending queue and are
+materialized in bulk — via :func:`repro.core.provider.
+reclaim_sweep_delays_batch` and ``InterruptionLog.append_events`` —
+only when the interruption log or cost ledgers are actually read
+(campaign result, stream checkpoint, ``ledger_stats``), or when the
+queue exceeds ``event_flush_entries``.  The flush replays ledger
+mutations in the numpy engines' order (probe-cohort rows in cycle order,
+sweeps chronologically), so logs and cost sums stay bit-identical.
+
+Slow-terminator probes (``terminator_delay > 0``) ride the same step:
+the probe cohort of a cycle is a device-resident ``(pools,)`` slot
+(``probe_count`` / ``probe_start``) that settles against the same
+provisioning rule as replenishment cohorts; cohorts that outlive the
+delay leak into RUNNING exactly as on the fleet engine, and the
+host-side leaked-uid ledger (:class:`repro.core.ledger.ProbeLedger`)
+is reconstructed at flush time from the settle's uid assignments.
+
+The engine requires ``provisioning_duration <= tick`` (the default: 8 s
+vs 60 s), which guarantees at most one in-flight replenishment cohort
+and one probe cohort per pool.
 """
 
 from __future__ import annotations
@@ -78,7 +95,7 @@ from .provider import (
     TIGHT,
     PoolConfig,
     SimulatedProvider,
-    reclaim_sweep_delays,
+    reclaim_sweep_delays_batch,
 )
 from .rng import keyed_uniform
 
@@ -137,9 +154,12 @@ def _dev_unif_between(lo, hi, u):
 
 
 #: compiled cycle steps, shared across ShardedProvider instances: keyed on
-#: (mesh, padded_pools, d_max, n_requests); per-provider scalars (seed
-#: hash, provisioning duration, margin decay, replenish delay) are step
-#: *inputs*, so back-to-back campaigns never recompile.
+#: (mesh, padded_pools, d_max, n_requests, kind); per-provider scalars
+#: (seed hash, provisioning duration, margin decay, replenish delay) are
+#: step *inputs*, so back-to-back campaigns never recompile.  ``kind``
+#: selects the cycle shape: "scoot" (event-driven probe / plain advance),
+#: "hold" (slow-terminator probe: admission leaves the cohort pending),
+#: "cancel" (advance by the terminator delay, then cancel what's left).
 _STEP_CACHE = {}
 
 
@@ -157,14 +177,18 @@ class ShardedProvider:
     :class:`PoolConfig` plus the same keyword settings.  All per-pool
     state lives in ``(padded_pools,)`` arrays sharded across a 1-D
     ``("pools",)`` mesh (built via the version-compat helpers in
-    :mod:`repro.launch.mesh`); one collection cycle —
-    dynamics ticks + fractional settle + batched admission — is a single
-    jitted ``shard_map`` call with no host round-trips inside.
+    :mod:`repro.launch.mesh`) and stays device-resident across cycles —
+    each jitted ``shard_map`` step donates the previous state buffers;
+    one collection cycle is a single device call with a single
+    ``(2, pools)`` observation transfer back.
 
     ``shards`` picks the mesh size (default: all visible devices);
     ``pad_multiple`` additionally pads the pool axis to a multiple of the
     given value, which lets single-device tests exercise the padding +
     masking path the multi-device mesh relies on.
+    ``event_flush_entries`` bounds the deferred interruption-event queue
+    (device-side ``(tick, pool)`` reclamation outputs) before a forced
+    host flush — the knob trades host transfers for queue memory.
     """
 
     def __init__(
@@ -173,6 +197,7 @@ class ShardedProvider:
         *,
         shards: Optional[int] = None,
         pad_multiple: Optional[int] = None,
+        event_flush_entries: int = 1 << 22,
         **provider_kwargs,
     ):
         if isinstance(pools, SimulatedProvider):
@@ -201,10 +226,13 @@ class ShardedProvider:
         self.provisioning_duration = host.provisioning_duration
         self.replenish_delay = host.replenish_delay
         self.now = 0.0
+        self.probe_time = 0.0
         self._tick_count = 0
         self._seed = host._seed
         self.n_pools = host.n_pools
-        self.interruptions = host.interruptions
+        self.event_flush_entries = int(event_flush_entries)
+        self._pending: list = []      # deferred device-side event outputs
+        self._pending_entries = 0
 
         import jax
 
@@ -251,9 +279,13 @@ class ShardedProvider:
             "next_uid": np.zeros(Pp, dtype=np.int64),
             "cohort_count": np.zeros(Pp, dtype=np.int64),
             "cohort_start": np.zeros(Pp, dtype=np.float64),
+            # slow-terminator probe cohort slot (one per pool, like the
+            # replenishment cohort): pending count + submission time
+            "probe_count": np.zeros(Pp, dtype=np.int64),
+            "probe_start": np.zeros(Pp, dtype=np.float64),
         }
         self._started = False
-        self._steps = {}  # n_requests -> jitted shard_map step
+        self._steps = {}  # (n_requests, kind) -> jitted shard_map step
 
     # -- config / bookkeeping passthrough ----------------------------------
 
@@ -265,6 +297,14 @@ class ShardedProvider:
     def api_calls(self) -> int:
         return self._host.api_calls
 
+    @property
+    def interruptions(self):
+        """The provider's interruption log — reading it materializes any
+        deferred device-side reclamation events first, so snapshots taken
+        mid-campaign are exact up to the last completed step."""
+        self._flush_events()
+        return self._host.interruptions
+
     def pool_index(self, pool_ids: Sequence[str]) -> np.ndarray:
         return self._host.pool_index(pool_ids)
 
@@ -273,20 +313,24 @@ class ShardedProvider:
 
     def ledger_stats(self):
         """Host-side ledger footprint (see
-        :class:`~repro.core.provider.LedgerStats`).  During a sharded
-        campaign the per-instance state lives as ``head_uid``/``next_uid``
-        uid ranges inside the device state, so the host's instance /
-        cohort / probe ledgers stay *empty* — the bounded-memory tests
-        assert exactly that."""
+        :class:`~repro.core.provider.LedgerStats`), after flushing any
+        deferred events.  During a sharded campaign the per-instance state
+        lives as ``head_uid``/``next_uid`` uid ranges inside the device
+        state, so the host's instance / cohort ledgers stay *empty* — the
+        bounded-memory tests assert exactly that; only leaked probes
+        (``terminator_delay > 0``) materialize probe-ledger rows."""
+        self._flush_events()
         return self._host.ledger_stats()
 
     def probe_ledger_len(self) -> int:
-        """Monotonic probe-ledger cursor (always 0-length here: the
-        sharded engine models only the event-driven terminator, which
-        never leaks probes)."""
+        """Monotonic probe-ledger cursor (rows ever appended), after
+        flushing deferred leak records — 0 for the event-driven
+        terminator, which never leaks probes."""
+        self._flush_events()
         return self._host.probe_ledger_len()
 
     def probe_instance_cost(self, now=None, *, since: int = 0, until=None) -> float:
+        self._flush_events()
         return self._host.probe_instance_cost(now, since=since, until=until)
 
     def set_node_pools(self, pool_ids: Sequence[str], n_nodes: int) -> None:
@@ -300,16 +344,19 @@ class ShardedProvider:
 
     # -- device step construction ------------------------------------------
 
-    def _get_step(self, n: int):
-        if n in self._steps:
-            return self._steps[n]
+    def _get_step(self, n: int, kind: str):
+        # the cancel step has no admission code, so its compilation is
+        # independent of n — collapse the cache key
+        n = 0 if kind == "cancel" else int(n)
+        if (n, kind) in self._steps:
+            return self._steps[(n, kind)]
         d_max = max(int(np.asarray(self._state["target_nodes"]).max()), 1)
-        key = (self.mesh, self.padded_pools, d_max, int(n))
+        key = (self.mesh, self.padded_pools, d_max, n, kind)
         fn = _STEP_CACHE.get(key)
         if fn is None:
-            fn = _build_step(self.mesh, d_max, int(n))
+            fn = _build_step(self.mesh, d_max, n, kind)
             _STEP_CACHE[key] = fn
-        self._steps[n] = fn
+        self._steps[(n, kind)] = fn
         return fn
 
     # -- campaign-facing API ------------------------------------------------
@@ -319,21 +366,72 @@ class ShardedProvider:
         one device call — the sharded ``SimulatedProvider.advance``.
         ``n_hint`` lets callers reuse the compiled step of an upcoming
         ``probe_cycle(n=n_hint)`` instead of building a second one."""
-        self._run(to_time, None, n_hint)
+        self._run(to_time, None, n_hint, "scoot")
 
-    def probe_cycle(self, to_time: float, pool_idx: np.ndarray, n: int):
+    def probe_cycle(
+        self,
+        to_time: float,
+        pool_idx: np.ndarray,
+        n: int,
+        terminator_delay: float = 0.0,
+    ):
         """Advance to ``to_time`` and probe ``pool_idx`` with ``n``
-        concurrent requests each, all in one ``shard_map``-ped step.
+        concurrent requests each, all in ``shard_map``-ped steps.
 
-        Returns ``(S_t, running_t)`` for ``pool_idx`` (host arrays).
+        With ``terminator_delay == 0`` (the event-driven terminator) the
+        cycle is one device call; a positive delay runs the fleet
+        engine's hold → advance-by-delay → cancel sequence as two calls,
+        with the probe cohorts living in the device state between them.
+        Probes that finish provisioning within the delay leak into
+        RUNNING and are recorded on the host leaked-uid ledger (at the
+        next event flush), exactly as on the fleet engine.
+
+        Returns ``(S_t, running_t)`` for ``pool_idx`` (host arrays);
+        ``self.probe_time`` carries the measurement timestamp (the
+        admission time, not the post-delay clock).
         """
-        counts, running = self._run(to_time, np.asarray(pool_idx, np.int64), n)
-        return counts, running
+        pool_idx = np.asarray(pool_idx, dtype=np.int64)
+        P = self.n_pools
+        if terminator_delay <= 0.0:
+            obs, _ = self._run(to_time, pool_idx, n, "scoot")
+            self.probe_time = self.now
+            obs = np.asarray(obs)
+            return obs[0, :P][pool_idx], obs[1, :P][pool_idx]
+        obs_h, _ = self._run(to_time, pool_idx, n, "hold")
+        self.probe_time = self.now
+        counts = np.asarray(obs_h)[0, :P]
+        obs_c, puid0 = self._run(
+            to_time + float(terminator_delay), None, n, "cancel"
+        )
+        # leaked cohorts: probes settle at the first provisioning-settle
+        # point >= submission + provisioning_duration (same float
+        # comparisons the device step just made on the same schedule)
+        settle_at = next(
+            (s for s in self._last_settles if s - to_time
+             >= self.provisioning_duration),
+            None,
+        )
+        sel = counts[pool_idx]
+        nz = sel > 0
+        if settle_at is not None and nz.any():
+            # puid0 stays an unfetched device array until the flush
+            self._pending.append(
+                ("probe", settle_at, pool_idx[nz], sel[nz], puid0)
+            )
+            self._pending_entries += int(nz.sum())
+        running = np.asarray(obs_c)[1, :P]
+        return sel, running[pool_idx]
 
-    def _run(self, to_time: float, pool_idx: Optional[np.ndarray], n: int):
+    def _run(
+        self,
+        to_time: float,
+        pool_idx: Optional[np.ndarray],
+        n: int,
+        kind: str,
+    ):
         if to_time < self.now:
             raise ValueError("time moves forward only")
-        P, Pp = self.n_pools, self.padded_pools
+        Pp = self.padded_pools
         # -- tick schedule: mirror advance()'s accumulate-by-addition loop
         now = self.now
         nows, tick_ids = [], []
@@ -349,6 +447,9 @@ class ShardedProvider:
         n_ticks = len(nows)
         nows_a = np.asarray(nows, dtype=np.float64)
         ticks_a = np.asarray(tick_ids, dtype=np.int64)
+        # provisioning-settle points of this call, in order (the probe
+        # leak bookkeeping replays them host-side)
+        self._last_settles = nows + ([to_time] if do_frac else [])
         # -- host log1p tables for the two exponential/normal draw sites
         if n_ticks:
             pool_row = np.arange(Pp)[None, :]
@@ -362,54 +463,93 @@ class ShardedProvider:
             l_dwell = np.zeros((0, Pp))
             l_noise = np.zeros((0, Pp))
         # -- host-side rate limiting (sequential per-region semantics)
+        self._host.now = now  # host clock tracks the device clock
         probe_mask = np.zeros(Pp, dtype=bool)
         do_submit = pool_idx is not None
         if do_submit:
-            self._host.now = now  # measurement timestamp for the window
             admitted = self._host._charge_rate_limit_batch(pool_idx, n)
             probe_mask[pool_idx[admitted]] = True
 
         from jax.experimental import enable_x64
 
         with enable_x64():
-            fn = self._get_step(n)
+            fn = self._get_step(n, kind)
             if not self._started:
                 self._commit_to_devices()
-            st, counts, running, k_rec, uid0 = fn(
+            st, obs, k_rec, uid0, puid0 = fn(
                 self._hyper, self._params, self._state, nows_a, ticks_a,
                 l_dwell, l_noise, np.float64(frac_now), np.bool_(do_frac),
-                probe_mask, np.bool_(do_submit),
+                probe_mask, np.bool_(do_submit), np.float64(now),
             )
         self._state = st
         self.now = now
-        # -- interruption log: sweeps in tick order, pools ascending — the
-        # same append order as the numpy engines; timestamps via the shared
-        # reclaim_sweep_delays draw (bit-identical by construction)
+        self._host.now = now
+        # -- reclamation sweeps stay on device: queue the (tick, pool,
+        # count, uid-start) outputs unfetched; timestamps + log rows are
+        # materialized in bulk at the next flush
         if n_ticks:
-            k_rec = np.asarray(k_rec)
-            if k_rec.any():
-                uid0 = np.asarray(uid0)
-                for i in range(n_ticks):
-                    hits = np.nonzero(k_rec[i, :P])[0]
-                    for p in hits:
-                        k = int(k_rec[i, p])
-                        delay = reclaim_sweep_delays(
-                            self._seed, int(p), int(ticks_a[i]), k
-                        )
-                        self.interruptions.append_sweep(
-                            int(p),
-                            uid0[i, p] + np.arange(k, dtype=np.int64),
-                            nows_a[i] + delay[:k],
-                        )
-        if not do_submit:
-            return None, None
-        counts = np.asarray(counts)[:P]
-        running = np.asarray(running)[:P]
-        return counts[pool_idx], running[pool_idx]
+            self._pending.append(("ticks", nows_a, ticks_a, k_rec, uid0))
+            self._pending_entries += n_ticks * Pp
+            if self._pending_entries >= self.event_flush_entries:
+                self._flush_events()
+        return obs, puid0
+
+    def _flush_events(self) -> None:
+        """Materialize the deferred event queue into the host ledgers.
+
+        Replays the numpy engines' ledger-mutation order: leaked-probe
+        cohort rows first, in cycle (append) order — their uids never
+        collide with earlier sweeps, because uid streams are strictly
+        increasing per pool — then reclamation sweeps chronologically
+        ((cycle, tick, pool) ascending), each marking any live leaked
+        probes it reclaimed before logging its interruption events.  Same
+        rows in the same order means the float cost sums and log
+        snapshots are bit-identical to ``engine="fleet"``.
+        """
+        pending, self._pending = self._pending, []
+        self._pending_entries = 0
+        if not pending:
+            return
+        P = self.n_pools
+        probe_ledger = self._host._probe_ledger
+        for rec in pending:
+            if rec[0] != "probe":
+                continue
+            _, settle_at, pools, counts, puid0 = rec
+            pu = np.asarray(puid0)[:P]
+            probe_ledger.append_blocks(pools, pu[pools], counts, settle_at)
+        log = self._host.interruptions
+        for rec in pending:
+            if rec[0] != "ticks":
+                continue
+            _, nows_a, ticks_a, k_rec_d, uid0_d = rec
+            k_rec = np.asarray(k_rec_d)[:, :P]
+            if not k_rec.any():
+                continue
+            uid0 = np.asarray(uid0_d)[:, :P]
+            ti, pp = np.nonzero(k_rec)  # row-major == (tick, pool) asc
+            ks = k_rec[ti, pp]
+            delays = reclaim_sweep_delays_batch(
+                self._seed, pp, ticks_a[ti], ks
+            )
+            reps = np.repeat(np.arange(len(ks)), ks)
+            within = np.arange(int(ks.sum())) - np.repeat(
+                np.cumsum(ks) - ks, ks
+            )
+            uids = uid0[ti, pp][reps] + within
+            times = nows_a[ti][reps] + delays
+            if probe_ledger.live_count:
+                off = np.concatenate(([0], np.cumsum(ks)))
+                for j in range(len(ks)):
+                    sl = slice(int(off[j]), int(off[j + 1]))
+                    probe_ledger.mark_ended(int(pp[j]), uids[sl], times[sl])
+            log.append_events(pp[reps], uids, times)
 
     def _commit_to_devices(self) -> None:
         """Shard the initial state/params across the mesh once, before the
-        first step (avoids an uncommitted->committed retrace later)."""
+        first step (avoids an uncommitted->committed retrace later).  From
+        here on the state lives on the devices: every step donates these
+        buffers and returns their successors."""
         import jax
         from jax.sharding import NamedSharding
         from jax.sharding import PartitionSpec as PS
@@ -427,16 +567,22 @@ class ShardedProvider:
         self._state = jax.device_put(self._state, sharded)
         self._started = True
 
-def _build_step(mesh, d_max: int, n: int):
-    """Compile the one-cycle device step for ``(mesh, d_max, n)``.
+def _build_step(mesh, d_max: int, n: int, kind: str):
+    """Compile the one-cycle device step for ``(mesh, d_max, n, kind)``.
 
-    The returned function is ``jit(shard_map(step))`` over the 1-D
-    ``("pools",)`` mesh: a ``lax.scan`` over the cycle's dynamics ticks
-    (settle -> regime -> capacity -> margin decay -> reclaim ->
-    replenish, mirroring ``SimulatedProvider._step_fleet`` op for op),
-    the optional fractional-advance settle, and the batched ``n``-request
-    admission.  Per-provider scalars arrive via the ``hyper`` input dict
-    so one compilation serves every provider with the same shapes.
+    The returned function is ``jit(shard_map(step), donate_argnums)``
+    over the 1-D ``("pools",)`` mesh: a ``lax.scan`` over the cycle's
+    dynamics ticks (settle -> regime -> capacity -> margin decay ->
+    reclaim -> replenish, mirroring ``SimulatedProvider._step_fleet`` op
+    for op), the optional fractional-advance settle, and the cycle tail
+    selected by ``kind`` — the batched ``n``-request admission for
+    ``"scoot"`` (event-driven probe: state untouched) and ``"hold"``
+    (slow terminator: the accepted cohort stays provisioning in the
+    per-pool probe slot), or the pending-probe cancellation for
+    ``"cancel"``.  The state argument is donated, so a campaign's state
+    buffers live on device end to end.  Per-provider scalars arrive via
+    the ``hyper`` input dict so one compilation serves every provider
+    with the same shapes.
     """
     import jax
     import jax.numpy as jnp
@@ -445,25 +591,41 @@ def _build_step(mesh, d_max: int, n: int):
 
     from ..models.common import shard_map
 
-    def settle(hyper, st, now, enabled):
+    def settle(hyper, st, puid0, now, enabled):
         # provisioning completes after `provisioning_duration`; cohorts
-        # still pending then transition to RUNNING (uids at the tail)
-        due = enabled & (st["cohort_count"] > 0) & (
+        # still pending then transition to RUNNING (uids at the tail).
+        # Replenishment cohorts and held probe cohorts settle under the
+        # same rule; when both settle at once the earlier-appended cohort
+        # takes the lower uid block (ledger row order — ties go to the
+        # replenishment cohort, appended during the tick that precedes
+        # the fractional-time probe submission).
+        rep_due = enabled & (st["cohort_count"] > 0) & (
             now - st["cohort_start"] >= hyper["pd"]
         )
-        k = jnp.where(due, st["cohort_count"], 0)
+        pr_due = enabled & (st["probe_count"] > 0) & (
+            now - st["probe_start"] >= hyper["pd"]
+        )
+        k_rep = jnp.where(rep_due, st["cohort_count"], 0)
+        k_pr = jnp.where(pr_due, st["probe_count"], 0)
+        pr_first = pr_due & (st["probe_start"] < st["cohort_start"])
+        puid0 = jnp.where(
+            pr_due, st["next_uid"] + jnp.where(pr_first, 0, k_rep), puid0
+        )
+        k = k_rep + k_pr
         st["n_provisioning"] = st["n_provisioning"] - k
         st["n_running"] = st["n_running"] + k
         st["next_uid"] = st["next_uid"] + k
-        st["cohort_count"] = jnp.where(due, 0, st["cohort_count"])
-        return st
+        st["cohort_count"] = jnp.where(rep_due, 0, st["cohort_count"])
+        st["probe_count"] = jnp.where(pr_due, 0, st["probe_count"])
+        return st, puid0
 
-    def tick_body(hyper, params, st, xs):
+    def tick_body(hyper, params, carry, xs):
         now, tick_id, l_dwell, l_noise = xs
+        st, puid0 = carry
         ku = partial(_dev_keyed_uniform, hyper["h0"])
         st = dict(st)
         pool = params["pool_ix"]
-        st = settle(hyper, st, now, jnp.bool_(True))
+        st, puid0 = settle(hyper, st, puid0, now, jnp.bool_(True))
         # -- regime transitions (mirrors _step_fleet line for line) --------
         due = now >= st["regime_until"]
         u = ku(pool, tick_id, _TAG_NEXT_REGIME)
@@ -564,36 +726,50 @@ def _build_step(mesh, d_max: int, n: int):
         st["n_provisioning"] = st["n_provisioning"] + jnp.where(mask, accepts, 0)
         st["cohort_count"] = jnp.where(got, accepts, st["cohort_count"])
         st["cohort_start"] = jnp.where(got, now, st["cohort_start"])
-        return st, (k_rec, uid0)
+        return (st, puid0), (k_rec, uid0)
 
     def step(
         hyper, params, st, nows, tick_ids, l_dwell, l_noise,
-        frac_now, do_frac, probe_mask, do_submit,
+        frac_now, do_frac, probe_mask, do_submit, sub_now,
     ):
-        st, (k_rec, uid0) = lax.scan(
-            partial(tick_body, hyper, params), dict(st),
+        puid0 = jnp.full_like(st["next_uid"], -1)
+        (st, puid0), (k_rec, uid0) = lax.scan(
+            partial(tick_body, hyper, params), (dict(st), puid0),
             (nows, tick_ids, l_dwell, l_noise),
         )
-        st = settle(hyper, st, frac_now, do_frac)
-        # -- batched admission (the SnS probe; the scoot leaves state as-is)
+        st, puid0 = settle(hyper, st, puid0, frac_now, do_frac)
         pool = params["pool_ix"]
-        active = probe_mask & do_submit
-        seq = st["submit_seq"]
-        u = _dev_keyed_uniform(
-            hyper["h0"], pool[:, None], seq[:, None],
-            _TAG_SUBMIT + jnp.arange(n, dtype=jnp.int64)[None, :],
-        )
-        okf = u >= _FLAKE_P
-        headroom = (
-            st["capacity"]
-            - st["n_running"]
-            - st["n_provisioning"]
-            - st["margin"]
-        )
-        acc = okf & ((jnp.cumsum(okf, axis=1) - 1) < headroom[:, None])
-        counts = jnp.where(active, acc.sum(axis=1).astype(jnp.int64), 0)
-        st["submit_seq"] = jnp.where(active, seq + 1, seq)
-        return st, counts, st["n_running"], k_rec, uid0
+        if kind == "cancel":
+            # the fleet engine's cancel_cohorts: pending (unsettled)
+            # probes stop provisioning; settled ones already leaked
+            st["n_provisioning"] = st["n_provisioning"] - st["probe_count"]
+            st["probe_count"] = jnp.zeros_like(st["probe_count"])
+            counts = jnp.zeros_like(st["n_running"])
+        else:
+            # -- batched admission (the SnS probe; the scoot leaves state
+            # untouched, the hold keeps the cohort provisioning)
+            active = probe_mask & do_submit
+            seq = st["submit_seq"]
+            u = _dev_keyed_uniform(
+                hyper["h0"], pool[:, None], seq[:, None],
+                _TAG_SUBMIT + jnp.arange(n, dtype=jnp.int64)[None, :],
+            )
+            okf = u >= _FLAKE_P
+            headroom = (
+                st["capacity"]
+                - st["n_running"]
+                - st["n_provisioning"]
+                - st["margin"]
+            )
+            acc = okf & ((jnp.cumsum(okf, axis=1) - 1) < headroom[:, None])
+            counts = jnp.where(active, acc.sum(axis=1).astype(jnp.int64), 0)
+            st["submit_seq"] = jnp.where(active, seq + 1, seq)
+            if kind == "hold":
+                st["n_provisioning"] = st["n_provisioning"] + counts
+                st["probe_count"] = jnp.where(active, counts, st["probe_count"])
+                st["probe_start"] = jnp.where(active, sub_now, st["probe_start"])
+        obs = jnp.stack([counts, st["n_running"]])
+        return st, obs, k_rec, uid0, puid0
 
     sharded = PS("pools")
     rep = PS()
@@ -604,10 +780,13 @@ def _build_step(mesh, d_max: int, n: int):
             mesh=mesh,
             in_specs=(
                 rep, sharded, sharded, rep, rep, ticks_sharded, ticks_sharded,
-                rep, rep, sharded, rep,
+                rep, rep, sharded, rep, rep,
             ),
-            out_specs=(sharded, sharded, sharded, ticks_sharded, ticks_sharded),
-        )
+            out_specs=(
+                sharded, ticks_sharded, ticks_sharded, ticks_sharded, sharded
+            ),
+        ),
+        donate_argnums=(2,),
     )
 
 # --------------------------------------------------------------------------

@@ -393,6 +393,7 @@ def replay_batch(
     predictions: Optional[np.ndarray] = None,
     horizon_cycles: int = 1,
     engine: str = "auto",
+    shards=None,
 ) -> Dict[str, np.ndarray]:
     """Replay a stack of traces with one strategy (thin dispatcher).
 
@@ -420,6 +421,10 @@ def replay_batch(
         * ``"auto"`` (default) — Pallas on TPU for float32 inputs, scan
           everywhere else (float64 contracts stay on the bit-identical
           scan even on TPU).
+      shards: trace-axis mesh size for the scan backend — ``None`` /
+        ``"auto"`` shards across all visible devices (single device:
+        plain unsharded scan), an int pins the mesh size.  Ignored by
+        the numpy oracle and the Pallas kernel.
 
     Returns stacked metrics ``{"lost_seconds", "idle_seconds",
     "completed", "total_queries", "makespan_seconds"}``, each of shape
@@ -441,6 +446,7 @@ def replay_batch(
     return replay_scan_op(
         avail, dur, cum, pred_zero,
         dt=dt, horizon_cycles=horizon_cycles, backend=backend,
+        shards=shards,
     )
 
 

@@ -6,10 +6,12 @@ durations, their prefix sums, and the "predicted unavailable" mask) and
 runs the closed-form replay on the selected backend:
 
 * ``"jnp"``    — the ``lax.scan`` reference (the fast CPU path).  Rows
-  are embarrassingly parallel, so large batches optionally split across
-  a small thread pool (``shards``) — each shard is an independent jitted
-  call over a row slice, and the concatenated result is bit-identical to
-  the unsharded run by construction.
+  are embarrassingly parallel, so with more than one visible device the
+  batch axis is ``shard_map``-ped over a 1-D ``("traces",)`` mesh
+  (``repro.launch.mesh.make_trace_mesh``) — one jitted device call, zero
+  cross-device collectives, bit-identical to the unsharded scan by
+  construction (rows are padded up to a shard multiple with inert
+  all-unavailable rows and sliced off).
 * ``"pallas"`` — the chunked Pallas kernel (interpret mode off-TPU).
   Handles ragged shapes by padding cycles (``avail = 0`` beyond the real
   trace, masked inert inside the kernel) and rows (sliced off).
@@ -22,18 +24,16 @@ this module never flips global JAX precision.
 from __future__ import annotations
 
 import contextlib
-import os
-import threading
 from typing import Dict, Optional
 
 import numpy as np
 
 __all__ = ["replay_scan_op"]
 
-_AUTO_SHARD_MIN_ROWS = 8192
-
-#: shard shapes whose jit cache is already populated (see replay_scan_op)
-_WARM_SHAPES = set()
+#: jitted shard_map scans, keyed on (shards, use_pred, window, unroll) —
+#: shapes and the queue length are traced, so one entry serves every
+#: workload on the same mesh
+_MESH_CACHE = {}
 
 
 def _x64_if(dtype):
@@ -44,36 +44,41 @@ def _x64_if(dtype):
     return contextlib.nullcontext()
 
 
-def _auto_shards(rows: int) -> int:
-    if rows < _AUTO_SHARD_MIN_ROWS:
-        return 1
-    return min(2, os.cpu_count() or 1)
+def _mesh_scan(n_shards: int, use_pred: bool, window: int, unroll: int):
+    """The trace-sharded scan: ``jit(shard_map(replay_scan_ref))`` over a
+    1-D ``("traces",)`` mesh, built once per (shards, static-config)."""
+    key = (n_shards, use_pred, window, unroll)
+    fn = _MESH_CACHE.get(key)
+    if fn is None:
+        import jax
+        from jax.sharding import PartitionSpec as PS
 
-
-def _run_scan_shard(avail, predz, cum_pad, dt, horizon_cycles, q, use_pred,
-                    window, unroll, out, idx, errors=None):
-    try:
-        import jax.numpy as jnp
-
+        from ...launch.mesh import make_trace_mesh
+        from ...models.common import shard_map
         from .ref import replay_scan_ref
 
-        with _x64_if(cum_pad.dtype):
-            res = replay_scan_ref(
-                jnp.asarray(avail.T),
-                jnp.asarray(predz.T),
-                jnp.asarray(cum_pad),
-                dt,
-                horizon_cycles,
-                q=q,
-                use_pred=use_pred,
-                window=window,
-                unroll=unroll,
+        mesh = make_trace_mesh(n_shards)
+
+        def run(avail_t, predz_t, cum_pad, dt, horizon_cycles, q):
+            return replay_scan_ref(
+                avail_t, predz_t, cum_pad, dt, horizon_cycles,
+                q=q, use_pred=use_pred, window=window, unroll=unroll,
             )
-            out[idx] = {k: np.asarray(v) for k, v in res.items()}
-    except BaseException as exc:     # worker threads: surface after join
-        if errors is None:
-            raise
-        errors[idx] = exc
+
+        traces = PS("traces")
+        fn = jax.jit(
+            shard_map(
+                run,
+                mesh=mesh,
+                in_specs=(
+                    PS(None, "traces"), PS(None, "traces"), traces,
+                    PS(), PS(), PS(),
+                ),
+                out_specs=traces,
+            )
+        )
+        _MESH_CACHE[key] = fn
+    return fn
 
 
 def replay_scan_op(
@@ -91,7 +96,13 @@ def replay_scan_op(
     unroll: int = 1,
     shards=None,
 ) -> Dict[str, np.ndarray]:
-    """Scan-form replay; returns the ``replay_batch`` metric dict."""
+    """Scan-form replay; returns the ``replay_batch`` metric dict.
+
+    ``shards`` controls the trace-axis mesh on the scan backend:
+    ``None`` / ``"auto"`` shards across all visible devices (single
+    device: plain unsharded scan), an int pins the mesh size (must not
+    exceed the visible device count).
+    """
     import jax
 
     if backend == "auto":
@@ -115,49 +126,56 @@ def replay_scan_op(
     )
 
     if backend == "jnp":
+        import jax.numpy as jnp
+
+        from .ref import replay_scan_ref
+
         pad = np.full((B, window + 1), np.inf, dtype=cum.dtype)
         cum_pad = np.concatenate([cum, pad], axis=1)
-        n_shards = _auto_shards(B) if shards in (None, "auto") else int(shards)
-        n_shards = max(1, min(n_shards, B))
-        bounds = [
-            (i * B // n_shards, (i + 1) * B // n_shards)
-            for i in range(n_shards)
-        ]
-        out = [None] * n_shards
-        keys = {
-            (hi - lo, T, Q, use_pred, window, unroll, np.dtype(cum.dtype))
-            for lo, hi in bounds
-        }
-        if n_shards == 1 or not keys <= _WARM_SHAPES:
-            # first sighting of a shard shape compiles; run serially so the
-            # jit cache is populated exactly once per shape
-            for i, (lo, hi) in enumerate(bounds):
-                _run_scan_shard(avail[lo:hi], predz[lo:hi], cum_pad[lo:hi],
-                                dt, horizon_cycles, Q, use_pred, window,
-                                unroll, out, i)
-            _WARM_SHAPES.update(keys)
+        n_dev = len(jax.devices())
+        if shards in (None, "auto"):
+            n_shards = min(n_dev, B) if n_dev > 1 else 1
         else:
-            errors = [None] * n_shards
-            threads = [
-                threading.Thread(
-                    target=_run_scan_shard,
-                    args=(avail[lo:hi], predz[lo:hi], cum_pad[lo:hi], dt,
-                          horizon_cycles, Q, use_pred, window, unroll, out, i,
-                          errors),
+            n_shards = int(shards)
+            if n_shards < 1:
+                raise ValueError(f"shards must be >= 1, got {shards}")
+            if n_shards > n_dev:
+                raise ValueError(
+                    f"shards={n_shards} exceeds the {n_dev} visible "
+                    "device(s) — the trace mesh is one shard per device"
                 )
-                for i, (lo, hi) in enumerate(bounds)
-            ]
-            for t in threads:
-                t.start()
-            for t in threads:
-                t.join()
-            for exc in errors:
-                if exc is not None:
-                    raise exc
-        res = {
-            k: np.concatenate([o[k] for o in out]) if n_shards > 1 else out[0][k]
-            for k in out[0]
-        }
+            n_shards = min(n_shards, B)
+        with _x64_if(cum.dtype):
+            if n_shards == 1:
+                res = replay_scan_ref(
+                    jnp.asarray(avail.T), jnp.asarray(predz.T),
+                    jnp.asarray(cum_pad), dt, horizon_cycles,
+                    q=Q, use_pred=use_pred, window=window, unroll=unroll,
+                )
+                res = {k: np.asarray(v) for k, v in res.items()}
+            else:
+                # pad the trace axis up to a shard multiple with inert
+                # rows (never available -> the scan body never acts on
+                # them), then slice the padding back off
+                pad_b = (-B) % n_shards
+                if pad_b:
+                    avail = np.concatenate(
+                        [avail, np.zeros((pad_b, T), dtype=bool)]
+                    )
+                    predz = np.concatenate(
+                        [predz, np.zeros((pad_b, T), dtype=bool)]
+                    )
+                    cum_pad = np.concatenate(
+                        [cum_pad,
+                         np.full((pad_b, cum_pad.shape[1]), np.inf,
+                                 dtype=cum_pad.dtype)]
+                    )
+                fn = _mesh_scan(n_shards, use_pred, window, unroll)
+                res = fn(
+                    jnp.asarray(avail.T), jnp.asarray(predz.T),
+                    jnp.asarray(cum_pad), dt, horizon_cycles, Q,
+                )
+                res = {k: np.asarray(v)[:B] for k, v in res.items()}
     else:
         import jax.numpy as jnp
 

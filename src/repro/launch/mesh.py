@@ -24,6 +24,7 @@ __all__ = [
     "use_mesh",
     "make_production_mesh",
     "make_pool_mesh",
+    "make_trace_mesh",
     "data_axes_of",
     "mesh_axis_sizes",
 ]
@@ -70,6 +71,15 @@ def make_pool_mesh(shards: int = 0):
     elementwise along this axis, so the mesh needs no second dimension."""
     n = int(shards) if shards else len(jax.devices())
     return make_explicit_mesh((n,), ("pools",))
+
+
+def make_trace_mesh(shards: int = 0):
+    """1-D ``("traces",)`` mesh for the mesh-sharded replay scan
+    (``repro.kernels.replay_scan.ops``): the trace/row axis split across
+    ``shards`` devices (default: all visible devices).  Replay rows are
+    independent, so the scan needs no cross-device collectives."""
+    n = int(shards) if shards else len(jax.devices())
+    return make_explicit_mesh((n,), ("traces",))
 
 
 def data_axes_of(mesh) -> Tuple[str, ...]:

@@ -1,10 +1,16 @@
 """Scan-form replay: cross-engine parity, contract edges, event log.
 
 The load-bearing property: scalar :func:`replay`, the numpy per-cycle
-oracle, the ``lax.scan`` reference, and the chunked Pallas kernel all
-implement the same closed-form replay contract and must agree **exactly**
-(atol=0) on all five metrics, row by row, for every strategy.
+oracle, the ``lax.scan`` reference (unsharded or mesh-sharded over the
+trace axis), and the chunked Pallas kernel all implement the same
+closed-form replay contract and must agree **exactly** (atol=0) on all
+five metrics, row by row, for every strategy.
 """
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -18,6 +24,8 @@ METRICS = (
     "lost_seconds", "idle_seconds", "completed", "total_queries",
     "makespan_seconds",
 )
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: fixed shape pool so the property test reuses jit caches across examples
 SHAPES = ((5, 24, 6), (3, 37, 9), (4, 30, 21))
@@ -221,3 +229,97 @@ class TestInterruptionLog:
         fast = np.sort(proximities(log))
         slow = np.sort(proximities(list(log)))
         np.testing.assert_allclose(fast, slow)
+
+
+class TestMeshShardedReplay:
+    """The trace-axis ``shard_map`` path of the scan backend.
+
+    Single-device runs only ever see ``n_shards == 1`` (the plain scan),
+    so real mesh coverage needs virtual devices — the XLA host-platform
+    flag must be set before jax first initialises, hence the subprocess.
+    The invariant under test: sharding the trace axis is invisible —
+    every metric bit-identical to both the unsharded scan and the numpy
+    per-cycle oracle, including ragged shard sizes (inert-row padding)
+    and the B < shards clamp.
+    """
+
+    def test_shards_one_is_plain_scan(self):
+        avail, dur, pred = _workload((5, 24, 6), seed=2)
+        kw = dict(strategy="predict_ar", predictions=pred, horizon_cycles=2)
+        a = replay_batch(avail, dur, engine="scan", **kw)
+        b = replay_batch(avail, dur, engine="scan", shards=1, **kw)
+        _assert_batches_equal(a, b, "shards=1")
+
+    def test_shards_exceeding_devices_raises(self):
+        avail, dur, pred = _workload((4, 20, 5), seed=4)
+        with pytest.raises(ValueError, match="visible"):
+            replay_batch(
+                avail, dur, engine="scan", shards=4096,
+                predictions=pred, horizon_cycles=1,
+            )
+
+    def test_shards_invalid_raises(self):
+        avail, dur, _ = _workload((4, 20, 5), seed=4)
+        with pytest.raises(ValueError, match=">= 1"):
+            replay_batch(avail, dur, engine="scan", shards=0)
+
+    def test_four_way_mesh_parity(self):
+        """4-virtual-device subprocess: mesh-sharded scan == unsharded
+        scan == numpy oracle, bit for bit, on ragged (13 rows over 4
+        shards), B < shards (2 rows), and evenly divisible shapes."""
+        code = textwrap.dedent(
+            """
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import numpy as np
+            import jax
+            assert len(jax.devices()) == 4, jax.devices()
+
+            from repro.core import replay_batch
+
+            def workload(shape, seed):
+                b, t, q = shape
+                rng = np.random.default_rng(seed)
+                avail = (rng.random((b, t)) < 0.75).astype(int)
+                dur = rng.uniform(0.5, 700.0, size=(b, q))
+                dur[:, : q // 3] = rng.choice(
+                    [180.0, 90.0, 45.0, 360.0], size=(b, q // 3))
+                pred = (rng.random((b, t)) > 0.3).astype(int)
+                return avail, dur, pred
+
+            METRICS = ("lost_seconds", "idle_seconds", "completed",
+                       "total_queries", "makespan_seconds")
+            # (rows, cycles, queries): ragged 13 % 4 != 0, B < shards,
+            # and an even split
+            for shape, strategy, h in (
+                ((13, 50, 9), "predict_ar", 2),
+                ((2, 30, 4), "sjf", 1),
+                ((64, 200, 17), "always_run", 1),
+            ):
+                avail, dur, pred = workload(shape, seed=sum(shape))
+                kw = dict(strategy=strategy, predictions=pred,
+                          horizon_cycles=h)
+                oracle = replay_batch(avail, dur, engine="numpy", **kw)
+                plain = replay_batch(avail, dur, engine="scan",
+                                     shards=1, **kw)
+                auto = replay_batch(avail, dur, engine="scan", **kw)
+                pinned = replay_batch(avail, dur, engine="scan",
+                                      shards=4, **kw)
+                for got, tag in ((plain, "plain"), (auto, "auto"),
+                                 (pinned, "shards=4")):
+                    for k in METRICS:
+                        np.testing.assert_array_equal(
+                            oracle[k], got[k],
+                            err_msg=f"{shape} {strategy} {tag} {k}")
+            print("MESH_REPLAY_OK")
+            """
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        proc = subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True, text=True, timeout=900, env=env,
+        )
+        assert proc.returncode == 0, proc.stderr
+        assert "MESH_REPLAY_OK" in proc.stdout

@@ -81,9 +81,17 @@ class TestCampaignStream:
         with pytest.raises(ValueError):
             CampaignStream(fresh(3), engine="warp")
 
-    def test_sharded_terminator_delay_rejected(self):
-        with pytest.raises(NotImplementedError):
-            CampaignStream(fresh(3), engine="sharded", terminator_delay=30.0)
+    def test_sharded_terminator_delay_streams(self):
+        # slow terminators are now first-class on the sharded engine:
+        # streamed sharded ≡ streamed fleet, leaks included
+        kw = dict(duration=2 * 3600.0, terminator_delay=30.0)
+        fleet = CampaignStream(fresh(3), engine="fleet", **kw)
+        sharded = CampaignStream(fresh(3), engine="sharded", **kw)
+        list(fleet), list(sharded)
+        a, b = fleet.result(), sharded.result()
+        np.testing.assert_array_equal(a.s, b.s)
+        np.testing.assert_array_equal(a.running, b.running)
+        assert a.interruptions == b.interruptions
 
 
 class TestCampaignPipelineStream:

@@ -126,13 +126,94 @@ class TestShardedPipelineGlue:
         )
 
 
-class TestShardedScope:
-    def test_terminator_delay_not_supported(self):
-        with pytest.raises(NotImplementedError):
-            run_campaign(
-                fresh(), duration=3600.0, engine="sharded", terminator_delay=30.0
-            )
+class TestShardedTerminatorDelay:
+    """Slow-terminator probe cohorts on the sharded engine: device-resident
+    (pools,) cohort slots + the host leaked-uid ledger, bit-identical to
+    the fleet engine's hold -> advance -> cancel sequence."""
 
+    def leak_pair(self, delay, seed=21, hours=2):
+        kw = dict(
+            duration=hours * 3600.0,
+            n_requests=10,
+            terminator_delay=delay,
+        )
+        mk = lambda: fresh(6, seed, provisioning_duration=8.0)
+        ca = run_campaign(mk(), engine="fleet", **kw)
+        cb = run_campaign(mk(), engine="sharded", **kw)
+        return ca, cb
+
+    def test_leaking_delay_bit_identical(self):
+        # delay > provisioning_duration: probes leak into RUNNING, bill,
+        # and get reclaimed alongside node-pool instances
+        ca, cb = self.leak_pair(30.0)
+        assert ca.probe_compute_cost > 0
+        assert_campaigns_identical(ca, cb)
+
+    def test_non_leaking_delay_bit_identical(self):
+        # 0 < delay < provisioning_duration: cohorts are cancelled while
+        # still provisioning — the hold/cancel path with zero leaks
+        ca, cb = self.leak_pair(5.0)
+        assert ca.probe_compute_cost == 0.0 == cb.probe_compute_cost
+        assert_campaigns_identical(ca, cb)
+
+    def test_multi_tick_delay_bit_identical(self):
+        # delay spanning multiple dynamics ticks: leaked probes live
+        # through reclamation sweeps inside the delay window
+        ca, cb = self.leak_pair(120.0, seed=33)
+        assert ca.probe_compute_cost > 0
+        assert_campaigns_identical(ca, cb)
+
+    def test_probe_ledger_rows_match_fleet(self):
+        kw = dict(duration=2 * 3600.0, n_requests=10, terminator_delay=30.0)
+        pa = fresh(6, 21, provisioning_duration=8.0)
+        pb = fresh(6, 21, provisioning_duration=8.0)
+        from repro.core import CampaignStream
+
+        sa = CampaignStream(pa, engine="fleet", **kw)
+        sb = CampaignStream(pb, engine="sharded", **kw)
+        for _ in sa:
+            pass
+        for _ in sb:
+            pass
+        assert sa.result().probe_compute_cost == sb.result().probe_compute_cost
+        assert pa.probe_ledger_len() == sb.provider.probe_ledger_len() > 0
+        # disjoint cursor segments must sum to the whole on both engines
+        mid = pa.probe_ledger_len() // 2
+        for prov in (pa, sb.provider):
+            whole = prov.probe_instance_cost()
+            split = prov.probe_instance_cost(
+                until=mid
+            ) + prov.probe_instance_cost(since=mid)
+            assert whole == pytest.approx(split, rel=1e-12)
+
+
+class TestBatchedSweepDelays:
+    def test_batch_matches_scalar_sweeps(self):
+        from repro.core.provider import (
+            reclaim_sweep_delays,
+            reclaim_sweep_delays_batch,
+        )
+
+        pools = np.array([3, 0, 7, 3], dtype=np.int64)
+        ticks = np.array([11, 11, 29, 54], dtype=np.int64)
+        ks = np.array([4, 1, 9, 2], dtype=np.int64)
+        got = reclaim_sweep_delays_batch(123, pools, ticks, ks)
+        want = np.concatenate(
+            [
+                reclaim_sweep_delays(123, int(p), int(t), int(k))
+                for p, t, k in zip(pools, ticks, ks)
+            ]
+        )
+        np.testing.assert_array_equal(got, want)
+
+    def test_empty_batch(self):
+        from repro.core.provider import reclaim_sweep_delays_batch
+
+        out = reclaim_sweep_delays_batch(1, [], [], [])
+        assert out.shape == (0,)
+
+
+class TestShardedScope:
     def test_used_provider_rejected(self):
         prov = fresh()
         prov.advance(600.0)  # mid-flight ledgers are not shardable
@@ -186,3 +267,38 @@ class TestShardedMultiDevice:
             capture_output=True, text=True, env=env, timeout=900,
         )
         assert "SHARDED_CAMPAIGN_OK" in r.stdout, r.stdout + r.stderr
+
+    def test_four_way_mesh_terminator_leak_accounting(self):
+        # probe cohorts + leaked-uid accounting across a real 4-device
+        # pool mesh: bit-identical matrices, logs, and probe cost
+        code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        from repro.core import SimulatedProvider, default_fleet, run_campaign
+
+        assert len(jax.devices()) == 4
+        def fresh():
+            return SimulatedProvider(
+                default_fleet(10, seed=21), seed=22, provisioning_duration=8.0
+            )
+        kw = dict(duration=2 * 3600.0, n_requests=10, terminator_delay=30.0)
+        ca = run_campaign(fresh(), engine="fleet", **kw)
+        cb = run_campaign(fresh(), engine="sharded", **kw)
+        assert ca.probe_compute_cost > 0
+        assert ca.probe_compute_cost == cb.probe_compute_cost
+        np.testing.assert_array_equal(ca.s, cb.s)
+        np.testing.assert_array_equal(ca.running, cb.running)
+        np.testing.assert_array_equal(ca.times, cb.times)
+        assert ca.interruptions == cb.interruptions
+        assert ca.api_calls == cb.api_calls
+        print("SHARDED_LEAK_OK")
+        """
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, env=env, timeout=900,
+        )
+        assert "SHARDED_LEAK_OK" in r.stdout, r.stdout + r.stderr
