@@ -1,5 +1,7 @@
 # Tier-1 verification — identical to what CI runs.
-#   make verify   : full test suite + pipeline/campaign/replay/serve-throughput smokes
+#   make verify   : full test suite + pipeline/campaign/replay/serve-throughput
+#                   smokes + the chaos smoke (fault-plan matrix, 3-way
+#                   engine parity + clean kill/restore resume)
 #   make test     : test suite only (includes the bounded-host-memory
 #                   property tests in tests/test_memory.py)
 #   make docs     : docs checks only (examples compile, README snippets
@@ -21,6 +23,7 @@ verify: test
 	python benchmarks/campaign_throughput.py --smoke
 	python benchmarks/replay_throughput.py --smoke
 	python benchmarks/serve_throughput.py --smoke
+	python benchmarks/chaos_smoke.py --smoke
 
 test:
 	python -m pytest -x -q

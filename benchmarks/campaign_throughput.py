@@ -48,6 +48,12 @@ cores, so the curve measures sharding overhead and mesh plumbing, not
 parallel speedup; it is recorded, never asserted.  ``--smoke`` only
 checks plumbing + parity.
 
+The full run additionally guards the chaos substrate's faults-off cost:
+the fleet rate must clear 97% of the minimum fleet rate over recent
+recorded non-smoke runs at the same pool count
+(``faults_off_vs_floor``), and a ``chaos_fleet`` entry records the fleet
+rate with an active FaultPlan + retry policy (recorded, not asserted).
+
 The full run also records a ``large_fleet`` scaling entry at
 ``--pools-large`` (default 65536) pools on the fleet engine: throughput,
 ``host_mem_mb`` (peak-RSS delta over the campaign), end-of-campaign
@@ -208,6 +214,77 @@ def bench_large_fleet(pools: int, cycles: int) -> dict:
     }
 
 
+def faults_off_floor_ratio(fleet_rate: float, pools: int):
+    """Faults-off throughput vs the recorded historical floor.
+
+    The chaos substrate (fault hooks, retry control plane, outcome
+    matrices) must be free when disabled: the ``fault_plan=None`` path is
+    compiled/evaluated without any fault work.  Guarded by comparing this
+    run's fleet rate against the *minimum* fleet rate over the last
+    non-smoke ``BENCH_campaign.json`` records at the same pool count —
+    the recorded throughput floor (min-of-history absorbs run-to-run
+    container noise; a real chaos-plumbing regression drops below the
+    floor of every prior run).  Returns the ratio, or None with no
+    history.
+    """
+    path = Path.cwd() / "BENCH_campaign.json"
+    if not path.exists():
+        return None
+    floors = []
+    for line in path.read_text().splitlines():
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if rec.get("smoke"):
+            continue
+        rate = (
+            rec.get("per_pools", {})
+            .get(str(pools), {})
+            .get("pool_cycles_per_sec", {})
+            .get("fleet")
+        )
+        if rate:
+            floors.append(rate)
+    if not floors:
+        return None
+    return fleet_rate / min(floors[-8:])
+
+
+def bench_chaos_overhead(pools: int, cycles: int) -> dict:
+    """Fleet rate with an active FaultPlan + retry policy (recorded, not
+    asserted — chaos campaigns pay for fault evaluation by design)."""
+    from repro.core import (
+        FaultPlan,
+        RetryPolicy,
+        ThrottleBursts,
+        run_campaign,
+    )
+
+    plan = FaultPlan(
+        seed=11,
+        throttle=ThrottleBursts(p=0.2, epoch=1800.0, mean_duration=300.0),
+        request_error_p=0.02,
+        timeout_p=0.02,
+    )
+    best = float("inf")
+    for _ in range(3):
+        provider = _provider(pools)
+        t0 = time.perf_counter()
+        run_campaign(
+            provider,
+            duration=cycles * INTERVAL,
+            interval=INTERVAL,
+            n_requests=N_REQ,
+            engine="fleet",
+            retain_records=False,
+            fault_plan=plan,
+            retry_policy=RetryPolicy(seed=5),
+        )
+        best = min(best, time.perf_counter() - t0)
+    return {"pools": pools, "pool_cycles_per_sec": round(pools * cycles / best)}
+
+
 def check_parity(pools: int = 256, cycles: int = 8) -> bool:
     """All engines bit-for-bit identical on shared RNG streams."""
     from repro.core import run_campaign
@@ -276,6 +353,15 @@ def run(
     result["large_fleet"] = bench_large_fleet(
         pools_large, min(cycles, 16) if not smoke else 4
     )
+    if "fleet" in engines:
+        ratio = faults_off_floor_ratio(
+            per_size[pools]["pool_cycles_per_sec"]["fleet"], pools
+        )
+        if ratio is not None:
+            result["faults_off_vs_floor"] = round(ratio, 3)
+        result["chaos_fleet"] = bench_chaos_overhead(
+            min(pools, 1024), cycles
+        )
     if multidev:
         result["sharded_scaling"] = bench_multidev_curve(pools, cycles)
     top = per_size[pools]
@@ -304,6 +390,10 @@ def run(
                 >= MIN_SHARDED_SPEEDUP_AT_SCALE
             ), result
         assert result["large_fleet"]["ledger_flat_in_cycles"], result
+        if "faults_off_vs_floor" in result:
+            # chaos substrate must be free when disabled: >= 97% of the
+            # recorded pre-chaos throughput floor
+            assert result["faults_off_vs_floor"] >= 0.97, result
         rec = dict(result, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
         with open(Path.cwd() / "BENCH_campaign.json", "a") as f:
             f.write(json.dumps(rec) + "\n")

@@ -1,0 +1,148 @@
+"""Chaos smoke — fixed-seed fault-plan matrix, all engines, bit-parity.
+
+The CI tripwire for the fault-injection substrate: runs a small campaign
+under a matrix of deterministic fault plans (throttle bursts, blackout
+windows, per-request transient errors, provisioning timeouts, and their
+composition — with and without the retry/backoff control plane) through
+all three collection engines and asserts
+
+* **three-way bit-parity** — scalar ≡ fleet ≡ sharded (atol=0) on
+  ``S_t`` / ``running_t`` / outcome codes / per-request error counts /
+  interruption logs / cost / ``api_calls`` / ``fault_api_calls``;
+* **clean resume** — kill-at-cycle-k + ``state_dict``/``restore`` into a
+  fresh stream + drain reproduces the uninterrupted run bit-identically
+  on every engine (through pickled checkpoint bytes).
+
+Usage:
+    PYTHONPATH=src python benchmarks/chaos_smoke.py [--smoke]
+        [--pools 8] [--cycles 20]
+
+``--smoke`` trims the plan matrix to one composite plan per family —
+the shape ``make verify`` runs.  Always asserts; prints a JSON summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pickle
+import time
+
+import numpy as np
+
+INTERVAL = 180.0
+
+
+def _plans(smoke: bool):
+    from repro.core import BlackoutWindows, FaultPlan, ThrottleBursts
+
+    throttle = ThrottleBursts(p=0.5, epoch=900.0, mean_duration=400.0)
+    blackout = BlackoutWindows(p=0.3, epoch=1800.0, mean_duration=600.0)
+    composite = FaultPlan(
+        seed=11, throttle=throttle, blackout=blackout,
+        request_error_p=0.05, timeout_p=0.1,
+    )
+    if smoke:
+        return {"composite": composite}
+    return {
+        "throttle": FaultPlan(seed=7, throttle=throttle),
+        "blackout": FaultPlan(seed=7, blackout=blackout),
+        "errors": FaultPlan(seed=7, request_error_p=0.08),
+        "timeouts": FaultPlan(seed=7, timeout_p=0.15),
+        "composite": composite,
+        "composite_alt_seed": FaultPlan(
+            seed=23, throttle=throttle, blackout=blackout,
+            request_error_p=0.05, timeout_p=0.1,
+        ),
+    }
+
+
+def _stream(engine, pools, cycles, plan, retry, seed=3):
+    from repro.core import RetryPolicy, SimulatedProvider, default_fleet
+    from repro.core.collector import CampaignStream
+
+    prov = SimulatedProvider(default_fleet(pools, seed=seed), seed=seed)
+    return CampaignStream(
+        prov,
+        duration=cycles * INTERVAL,
+        interval=INTERVAL,
+        engine=engine,
+        fault_plan=plan,
+        retry_policy=RetryPolicy(seed=5) if retry else None,
+    )
+
+
+def _drain(stream):
+    while stream.step() is not None:
+        pass
+    return stream.result()
+
+
+def _assert_identical(name, ra, rb):
+    np.testing.assert_array_equal(ra.s, rb.s, err_msg=name)
+    np.testing.assert_array_equal(ra.running, rb.running, err_msg=name)
+    np.testing.assert_array_equal(ra.codes, rb.codes, err_msg=name)
+    np.testing.assert_array_equal(ra.errors, rb.errors, err_msg=name)
+    assert ra.interruptions == rb.interruptions, name
+    assert ra.api_calls == rb.api_calls, name
+    assert ra.fault_api_calls == rb.fault_api_calls, name
+    assert ra.probe_compute_cost == rb.probe_compute_cost, name
+    assert ra.node_pool_cost == rb.node_pool_cost, name
+
+
+def run(pools: int = 8, cycles: int = 20, smoke: bool = False) -> dict:
+    from repro.core import describe_codes
+
+    engines = ("scalar", "fleet", "sharded")
+    summary = {}
+    for plan_name, plan in _plans(smoke).items():
+        for retry in (False, True):
+            case = f"{plan_name}{'+retry' if retry else ''}"
+            results = {
+                e: _drain(_stream(e, pools, cycles, plan, retry))
+                for e in engines
+            }
+            ref = results["fleet"]
+            for e in ("scalar", "sharded"):
+                _assert_identical(f"{case}: fleet vs {e}", ref, results[e])
+
+            # clean resume on every engine at a mid-campaign boundary
+            k = cycles // 2
+            for e in engines:
+                interrupted = _stream(e, pools, cycles, plan, retry)
+                for _ in range(k):
+                    interrupted.step()
+                blob = pickle.dumps(interrupted.state_dict())
+                resumed = _stream(e, pools, cycles, plan, retry)
+                resumed.restore(pickle.loads(blob))
+                _assert_identical(
+                    f"{case}: {e} resume@{k}", ref, _drain(resumed)
+                )
+
+            summary[case] = describe_codes(ref.codes)
+            summary[case]["fault_api_calls"] = ref.fault_api_calls
+    return {
+        "pools": pools,
+        "cycles": cycles,
+        "engines": list(engines),
+        "parity_and_resume_identical": True,
+        "cases": summary,
+        "smoke": smoke,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pools", type=int, default=8)
+    ap.add_argument("--cycles", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one composite plan instead of the full matrix")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    result = run(pools=args.pools, cycles=args.cycles, smoke=args.smoke)
+    result["seconds"] = round(time.perf_counter() - t0, 1)
+    print(json.dumps(result, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,22 @@ from .collector import (
 from .cointerrupt import fraction_within, proximities, proximity_cdf
 from .cost import CostReport, ServerlessPricing, cost_report
 from .dataset import Dataset, DatasetStreamer, build_dataset
+from .faults import (
+    BILLED_FAULT_CODES,
+    OUTCOME_BLACKOUT,
+    OUTCOME_CAPACITY,
+    OUTCOME_DEFERRED,
+    OUTCOME_ERROR,
+    OUTCOME_NAMES,
+    OUTCOME_OK,
+    OUTCOME_RATE_LIMITED,
+    OUTCOME_THROTTLED,
+    OUTCOME_TIMEOUT,
+    BlackoutWindows,
+    FaultPlan,
+    ThrottleBursts,
+    describe_codes,
+)
 from .features import (
     FEATURE_NAMES,
     FleetFeatureState,
@@ -48,6 +64,7 @@ from .predictor import (
     pointwise_predict_fn,
 )
 from .ledger import CohortLedger, InstanceLedger, ProbeLedger, RunningInstance
+from .retry import RetryController, RetryPolicy, backoff_delays, base_backoff
 from .provider import (
     InterruptionEvent,
     InterruptionLog,
@@ -74,6 +91,11 @@ __all__ = [
     "fraction_within", "proximities", "proximity_cdf",
     "CostReport", "ServerlessPricing", "cost_report",
     "Dataset", "DatasetStreamer", "build_dataset",
+    "FaultPlan", "ThrottleBursts", "BlackoutWindows", "describe_codes",
+    "OUTCOME_NAMES", "OUTCOME_OK", "OUTCOME_CAPACITY", "OUTCOME_RATE_LIMITED",
+    "OUTCOME_THROTTLED", "OUTCOME_ERROR", "OUTCOME_TIMEOUT",
+    "OUTCOME_BLACKOUT", "OUTCOME_DEFERRED", "BILLED_FAULT_CODES",
+    "RetryPolicy", "RetryController", "base_backoff", "backoff_delays",
     "FEATURE_NAMES", "compute_features", "init_state", "update",
     "FleetFeatureState", "init_fleet_state", "update_batch",
     "HorizonLabelStream", "binary_availability", "horizon_labels",

@@ -51,8 +51,18 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .faults import (
+    OUTCOME_CAPACITY,
+    OUTCOME_DEFERRED,
+    OUTCOME_ERROR,
+    OUTCOME_NAMES,
+    OUTCOME_OK,
+    OUTCOME_RATE_LIMITED,
+    FaultPlan,
+)
 from .lifecycle import RequestState, SpotRequest
 from .provider import ProbeCostMeter, RateLimitError, SimulatedProvider
+from .retry import RetryController, RetryPolicy
 
 __all__ = [
     "ProbeRecord",
@@ -68,12 +78,19 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class ProbeRecord:
-    """Outcome of one SnS probe, as stored in the Data Lake (§V)."""
+    """Outcome of one SnS probe, as stored in the Data Lake (§V).
+
+    ``outcome`` distinguishes *why* a probe was not accepted: capacity
+    rejection (``OUTCOME_CAPACITY`` — real §V data), injected transient
+    error (``OUTCOME_ERROR``), or a whole-call fault code — so
+    fault-rejected probes are never folded into capacity rejections.
+    """
 
     time: float
     pool_id: str
     accepted: bool
     cycle: int
+    outcome: int = OUTCOME_OK
 
 
 #: rows per DataLake column block — the hot-path retention unit
@@ -109,14 +126,32 @@ class DataLake:
         self._cycle = np.empty(_LAKE_BLOCK, dtype=np.int64)
         self._accepted = np.empty(_LAKE_BLOCK, dtype=bool)
         self._time = np.empty(_LAKE_BLOCK, dtype=np.float64)
+        self._outcome = np.empty(_LAKE_BLOCK, dtype=np.uint8)
         self._fill = 0
         self._count = 0  # rows ever added (monotonic)
         self._blocks: List[tuple] = []          # archived full blocks
         self._agg = np.zeros((0, 0), dtype=np.int64)  # folded accept counts
         self._agg_neg: Dict[tuple, int] = {}    # folded negative-cycle rows
+        # folded per-pool outcome-code histogram (pools, n_codes)
+        self._agg_out = np.zeros((0, len(OUTCOME_NAMES)), dtype=np.int64)
 
-    def add(self, time: float, pool_id: str, accepted: bool, cycle: int) -> None:
-        """Record one probe outcome (columnar hot path)."""
+    def add(
+        self,
+        time: float,
+        pool_id: str,
+        accepted: bool,
+        cycle: int,
+        outcome: Optional[int] = None,
+    ) -> None:
+        """Record one probe outcome (columnar hot path).
+
+        ``outcome`` defaults to ``OUTCOME_OK`` for accepted probes and
+        ``OUTCOME_CAPACITY`` for rejections — callers that know better
+        (fault injection) pass the explicit ``OUTCOME_*`` code so the
+        lake never folds faults into capacity rejections.
+        """
+        if outcome is None:
+            outcome = OUTCOME_OK if accepted else OUTCOME_CAPACITY
         code = self._pool_code.get(pool_id)
         if code is None:
             code = self._pool_code[pool_id] = len(self._code_name)
@@ -126,15 +161,18 @@ class DataLake:
         self._cycle[i] = cycle
         self._accepted[i] = accepted
         self._time[i] = time
+        self._outcome[i] = outcome
         self._fill = i + 1
         self._count += 1
         if self._fill == _LAKE_BLOCK:
             self._flush_block()
         if self.retain_records:
-            self.records.append(ProbeRecord(time, pool_id, accepted, cycle))
+            self.records.append(
+                ProbeRecord(time, pool_id, accepted, cycle, int(outcome))
+            )
 
     def append(self, rec: ProbeRecord) -> None:
-        self.add(rec.time, rec.pool_id, rec.accepted, rec.cycle)
+        self.add(rec.time, rec.pool_id, rec.accepted, rec.cycle, rec.outcome)
 
     def __len__(self) -> int:
         return self._count
@@ -145,9 +183,10 @@ class DataLake:
         block = (
             self._pcode.nbytes + self._cycle.nbytes
             + self._accepted.nbytes + self._time.nbytes
+            + self._outcome.nbytes
         )
         arch = sum(sum(col.nbytes for col in blk) for blk in self._blocks)
-        return block + arch + self._agg.nbytes
+        return block + arch + self._agg.nbytes + self._agg_out.nbytes
 
     def _flush_block(self) -> None:
         n = self._fill
@@ -156,14 +195,40 @@ class DataLake:
                 (
                     self._pcode[:n].copy(), self._cycle[:n].copy(),
                     self._accepted[:n].copy(), self._time[:n].copy(),
+                    self._outcome[:n].copy(),
                 )
             )
         else:
-            self._fold(self._pcode[:n], self._cycle[:n], self._accepted[:n])
+            self._fold(
+                self._pcode[:n], self._cycle[:n],
+                self._accepted[:n], self._outcome[:n],
+            )
         self._fill = 0
 
-    def _fold(self, pcode: np.ndarray, cycle: np.ndarray, acc: np.ndarray) -> None:
+    def _fold_outcomes(self, pcode: np.ndarray, outcome: np.ndarray) -> None:
+        """Fold one block's outcome codes into the bounded per-pool histogram."""
+        if pcode.size == 0:
+            return
+        need_r = int(pcode.max()) + 1
+        r = self._agg_out.shape[0]
+        if need_r > r:
+            nr = max(r, 1)
+            while nr < need_r:
+                nr *= 2
+            grown = np.zeros((nr, len(OUTCOME_NAMES)), dtype=np.int64)
+            grown[:r] = self._agg_out
+            self._agg_out = grown
+        np.add.at(self._agg_out, (pcode, outcome.astype(np.int64)), 1)
+
+    def _fold(
+        self,
+        pcode: np.ndarray,
+        cycle: np.ndarray,
+        acc: np.ndarray,
+        outcome: np.ndarray,
+    ) -> None:
         """Fold one block's accepts into the bounded running aggregate."""
+        self._fold_outcomes(pcode, outcome)
         m = acc.astype(bool)
         pcode, cycle = pcode[m], cycle[m]
         neg = cycle < 0
@@ -211,7 +276,7 @@ class DataLake:
             keep = acc.astype(bool) & (row >= 0) & (cyc < n_cycles)
             np.add.at(s, (row[keep], cyc[keep]), 1)
 
-        for pcode, cyc, acc, _time in self._blocks:
+        for pcode, cyc, acc, _time, _out in self._blocks:
             scatter(pcode, cyc, acc)
         scatter(
             self._pcode[: self._fill],
@@ -231,6 +296,79 @@ class DataLake:
                 s[row, cy] += v  # negative: wraps (IndexError past -n_cycles)
         return s
 
+    def outcome_counts(self, pool_ids: Sequence[str]) -> np.ndarray:
+        """Per-pool outcome-code histogram ``(pools, n_codes)``.
+
+        Columns follow :data:`~repro.core.faults.OUTCOME_NAMES`, so
+        ``outcome_counts(ids)[:, OUTCOME_THROTTLED]`` is the throttled-call
+        count per pool — fault-rejected probes stay distinguishable from
+        capacity rejections in the interruption analysis (§V data lake).
+        Exact whether rows live in archived blocks, the current block, or
+        the folded aggregate.
+        """
+        out = np.zeros((len(pool_ids), len(OUTCOME_NAMES)), dtype=np.int64)
+        if self._count == 0:
+            return out
+        index = {p: i for i, p in enumerate(pool_ids)}
+        code_row = np.array(
+            [index.get(name, -1) for name in self._code_name], dtype=np.int64
+        )
+
+        def scatter(pcode, outcome):
+            row = code_row[pcode]
+            keep = row >= 0
+            np.add.at(out, (row[keep], outcome[keep].astype(np.int64)), 1)
+
+        for pcode, _cyc, _acc, _time, outcome in self._blocks:
+            scatter(pcode, outcome)
+        scatter(self._pcode[: self._fill], self._outcome[: self._fill])
+        if self._agg_out.size:
+            r = self._agg_out.shape[0]
+            rows = code_row[: min(r, len(code_row))]
+            known = rows >= 0
+            out[rows[known]] += self._agg_out[: len(rows)][known]
+        return out
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Crash-consistent snapshot (plain numpy/python containers)."""
+        n = self._fill
+        return {
+            "retain_records": self.retain_records,
+            "code_name": list(self._code_name),
+            "block": (
+                self._pcode[:n].copy(), self._cycle[:n].copy(),
+                self._accepted[:n].copy(), self._time[:n].copy(),
+                self._outcome[:n].copy(),
+            ),
+            "count": self._count,
+            "blocks": [tuple(col.copy() for col in blk) for blk in self._blocks],
+            "agg": self._agg.copy(),
+            "agg_neg": dict(self._agg_neg),
+            "agg_out": self._agg_out.copy(),
+            "records": [dataclasses.astuple(r) for r in self.records],
+        }
+
+    def restore(self, sd: dict) -> None:
+        self.retain_records = sd["retain_records"]
+        self._code_name = list(sd["code_name"])
+        self._pool_code = {name: i for i, name in enumerate(self._code_name)}
+        pcode, cyc, acc, time, outcome = sd["block"]
+        n = len(pcode)
+        self._pcode[:n] = pcode
+        self._cycle[:n] = cyc
+        self._accepted[:n] = acc
+        self._time[:n] = time
+        self._outcome[:n] = outcome
+        self._fill = n
+        self._count = sd["count"]
+        self._blocks = [tuple(col.copy() for col in blk) for blk in sd["blocks"]]
+        self._agg = sd["agg"].copy()
+        self._agg_neg = dict(sd["agg_neg"])
+        self._agg_out = sd["agg_out"].copy()
+        self.records = [ProbeRecord(*t) for t in sd["records"]]
+
 
 class SnSCollector:
     """Invoker + parallel requester + event-driven terminator (scalar
@@ -245,6 +383,7 @@ class SnSCollector:
         interval: float = 180.0,
         terminator_delay: float = 0.0,
         retain_records: bool = True,
+        strict_rate_limit: bool = False,
     ):
         self.provider = provider
         self.pool_ids = list(pool_ids)
@@ -252,6 +391,11 @@ class SnSCollector:
         self.interval = float(interval)
         self.terminator_delay = float(terminator_delay)
         self.retain_records = retain_records
+        # strict=True restores the historical raise-on-rate-limit call
+        # style; either way a rate-limited pool counts 0 and records
+        # nothing — the exact admit-what-fits observable of the fleet
+        # path (asserted by the starvation-parity regression test)
+        self.strict_rate_limit = bool(strict_rate_limit)
         self.lake = DataLake(retain_records=retain_records)
         self.probe_requests: List[SpotRequest] = []
         self._pending_cancel: List[SpotRequest] = []
@@ -285,31 +429,86 @@ class SnSCollector:
 
     def probe_pool(self, pool_id: str, cycle: int) -> int:
         """Submit N concurrent requests to one pool; return S_t."""
+        s, _code, _nerr = self._probe_pool_ex(pool_id, cycle, OUTCOME_OK)
+        return s
+
+    def _probe_pool_ex(self, pool_id: str, cycle: int, fault_code: int):
+        """Probe one pool under a whole-call fault code.
+
+        Returns ``(successes, resolved_code, n_errors)``.  A faulted call
+        is still billed (rate budget + API call) but never reaches
+        admission; if the region budget is exhausted the rate limiter
+        wins — nothing is charged, nothing is recorded (the historical
+        rate-limited observable), and the code resolves to
+        ``OUTCOME_RATE_LIMITED``.
+        """
+        prov = self.provider
+        if fault_code != OUTCOME_OK:
+            if not prov.charge_api_fault(pool_id, n=self.n):
+                return 0, OUTCOME_RATE_LIMITED, 0
+            for _ in range(self.n):
+                self.lake.add(prov.now, pool_id, False, cycle, int(fault_code))
+            return 0, int(fault_code), 0
         successes = 0
         self._probing = True
         try:
-            reqs = self.provider.submit_spot_request(pool_id, n=self.n)
+            reqs = prov.submit_spot_request(
+                pool_id, n=self.n, strict=self.strict_rate_limit
+            )
         except RateLimitError:
             reqs = []  # rate-limited cycle records total failure
         finally:
             self._probing = False
+        if not reqs:
+            return 0, OUTCOME_RATE_LIMITED, 0
         keep_all = self.retain_records
-        for req in reqs:
+        err = prov.last_request_errors
+        n_errors = 0
+        for r, req in enumerate(reqs):
             accepted = req.state is not RequestState.REJECTED
             if accepted:
                 successes += 1
-            self.lake.add(self.provider.now, pool_id, accepted, cycle)
+                outcome = OUTCOME_OK
+            elif err.size and err[r]:
+                outcome = OUTCOME_ERROR
+                n_errors += 1
+            else:
+                outcome = OUTCOME_CAPACITY
+            self.lake.add(prov.now, pool_id, accepted, cycle, outcome)
             if keep_all or req.state is RequestState.PROVISIONING:
                 self.probe_requests.append(req)
-        return successes
+        return successes, OUTCOME_OK, n_errors
 
     # -- RequestInvoker -----------------------------------------------------
 
-    def run_cycle(self, cycle: int) -> np.ndarray:
-        """One collection cycle across all pools; returns S_t per pool."""
+    def run_cycle(
+        self,
+        cycle: int,
+        fault_codes: Optional[np.ndarray] = None,
+        attempt: Optional[np.ndarray] = None,
+        codes_out: Optional[np.ndarray] = None,
+        errors_out: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """One collection cycle across all pools; returns S_t per pool.
+
+        ``fault_codes`` carries per-pool whole-call ``OUTCOME_*`` codes
+        (from :meth:`FaultPlan.call_codes`); ``attempt`` masks pools the
+        retry control plane deferred this cycle (no API call, no lake
+        record — ``OUTCOME_DEFERRED``).  ``codes_out`` / ``errors_out``
+        receive the resolved per-pool codes and transient-error counts.
+        """
         s = np.zeros(len(self.pool_ids), dtype=np.int64)
         for i, pool_id in enumerate(self.pool_ids):
-            s[i] = self.probe_pool(pool_id, cycle)
+            if attempt is not None and not attempt[i]:
+                if codes_out is not None:
+                    codes_out[i] = OUTCOME_DEFERRED
+                continue
+            fc = OUTCOME_OK if fault_codes is None else int(fault_codes[i])
+            s[i], code, nerr = self._probe_pool_ex(pool_id, cycle, fc)
+            if codes_out is not None:
+                codes_out[i] = code
+            if errors_out is not None:
+                errors_out[i] = nerr
         if self.terminator_delay > 0.0:
             # slow terminator: cancels land only after the delay has passed
             self.provider.advance(self.provider.now + self.terminator_delay)
@@ -363,20 +562,59 @@ class FleetCollector:
         self.s = np.zeros((len(self.pool_ids), self.n_cycles), dtype=np.int64)
         self.running = np.zeros_like(self.s)
         self.times = np.zeros(self.n_cycles)
+        # per-cycle resolved outcome codes + injected-error counts
+        self.codes = np.zeros((len(self.pool_ids), self.n_cycles), dtype=np.uint8)
+        self.errors = np.zeros_like(self.s)
         # scope cost accounting to this campaign: leaked-probe rows
         # already on the provider's ledger belong to earlier collectors
         self._meter = ProbeCostMeter(provider)
 
-    def run_cycle(self, cycle: int) -> np.ndarray:
-        """One collection cycle: batched probe + ground-truth readout."""
+    def run_cycle(
+        self,
+        cycle: int,
+        fault_codes: Optional[np.ndarray] = None,
+        attempt: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """One collection cycle: batched probe + ground-truth readout.
+
+        ``fault_codes`` / ``attempt`` mirror the scalar collector: codes
+        mark whole-call faults (billed, no admission), the attempt mask
+        drops retry-deferred pools from the batch entirely (no API call,
+        ``OUTCOME_DEFERRED`` in the codes matrix).
+        """
         prov = self.provider
         self.times[cycle] = prov.now
-        if self.terminator_delay <= 0.0:
-            s = prov.submit_spot_requests(self.idx, n=self.n)
+        codes_col = self.codes[:, cycle]
+        errs_col = self.errors[:, cycle]
+        if attempt is None:
+            idx, fc = self.idx, fault_codes
+            codes_out, errs_out = codes_col, errs_col
         else:
-            s, cohorts = prov.submit_spot_requests(self.idx, n=self.n, hold=True)
+            sel = np.nonzero(attempt)[0]
+            codes_col[:] = OUTCOME_DEFERRED
+            idx = self.idx[sel]
+            fc = None if fault_codes is None else fault_codes[sel]
+            codes_out = np.zeros(len(sel), dtype=np.uint8)
+            errs_out = np.zeros(len(sel), dtype=np.int64)
+        if self.terminator_delay <= 0.0:
+            sub = prov.submit_spot_requests(
+                idx, n=self.n,
+                fault_codes=fc, codes_out=codes_out, errors_out=errs_out,
+            )
+        else:
+            sub, cohorts = prov.submit_spot_requests(
+                idx, n=self.n, hold=True,
+                fault_codes=fc, codes_out=codes_out, errors_out=errs_out,
+            )
             prov.advance(prov.now + self.terminator_delay)
             prov.cancel_cohorts(cohorts)  # leaked cohorts already RUNNING
+        if attempt is None:
+            s = sub
+        else:
+            s = np.zeros(len(self.pool_ids), dtype=np.int64)
+            s[sel] = sub
+            codes_col[sel] = codes_out
+            errs_col[sel] = errs_out
         self.s[:, cycle] = s
         self.running[:, cycle] = prov.running_counts(self.idx)
         return s
@@ -401,6 +639,10 @@ class CampaignResult:
     node_pool_cost: float      # $ billed to ground-truth running nodes
     api_calls: int
     engine: str = "scalar"     # which collector engine produced this
+    codes: Optional[np.ndarray] = None   # (pools, T) uint8 OUTCOME_* codes
+    errors: Optional[np.ndarray] = None  # (pools, T) injected-error counts
+    valid: Optional[np.ndarray] = None   # (pools, T) bool: codes == OK
+    fault_api_calls: int = 0   # API calls consumed by whole-call faults
 
 
 #: per-cycle hook: (cycle index, timestamp, S_t vector) — the Data
@@ -424,6 +666,19 @@ class CampaignCycle:
     time: float
     s_t: np.ndarray        # (pools,) int64 view — SnS success counts
     running_t: np.ndarray  # (pools,) int64 view — ground-truth node counts
+    codes_t: Optional[np.ndarray] = None   # (pools,) uint8 OUTCOME_* view
+    errors_t: Optional[np.ndarray] = None  # (pools,) injected-error counts
+
+    @property
+    def valid_t(self) -> Optional[np.ndarray]:
+        """Pools whose ``s_t`` is live data this cycle (``codes == OK``).
+
+        ``None`` when the stream runs without fault injection or retry
+        control — every observation is valid, as before.
+        """
+        if self.codes_t is None:
+            return None
+        return self.codes_t == OUTCOME_OK
 
 
 class CampaignStream:
@@ -461,6 +716,8 @@ class CampaignStream:
         retain_records: bool = True,
         shards: Optional[int] = None,
         pad_multiple: Optional[int] = None,
+        fault_plan: Optional[FaultPlan] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         if engine not in ("fleet", "scalar", "sharded"):
             raise ValueError(
@@ -471,6 +728,7 @@ class CampaignStream:
         self.n = int(n_requests)
         self.n_cycles = int(duration // interval)
         self.terminator_delay = float(terminator_delay)
+        self.fault_plan = fault_plan
         self._next = 0
         self._result: Optional[CampaignResult] = None
 
@@ -486,6 +744,10 @@ class CampaignStream:
             self.pool_ids = (
                 list(pool_ids) if pool_ids is not None else sp.pool_ids
             )
+            if fault_plan is not None:
+                # before the first advance: the initial settle must see the
+                # same blackout gating (and hyper) as the other engines
+                sp.set_fault_plan(fault_plan)
             sp.set_node_pools(self.pool_ids, node_pool_size)
             # Let pools acquire their initial nodes before the first
             # measurement (n_hint: share the compiled step with the probes).
@@ -500,11 +762,14 @@ class CampaignStream:
             self.pool_ids = (
                 list(pool_ids) if pool_ids is not None else provider.pool_ids
             )
+            if fault_plan is not None:
+                provider.set_fault_plan(fault_plan)
             for pid in self.pool_ids:
                 provider.set_node_pool(pid, node_pool_size)
             # Let pools acquire their initial nodes before the first cycle.
             provider.advance(provider.now + 3 * provider.tick)
             self.provider = provider
+            self._idx = provider.pool_index(self.pool_ids)
             if engine == "fleet":
                 self._collector = FleetCollector(
                     provider,
@@ -528,10 +793,26 @@ class CampaignStream:
             self.times = self._collector.times
             self.s = self._collector.s
             self.running = self._collector.running
+            self.codes = self._collector.codes
+            self.errors = self._collector.errors
         else:
             self.times = np.zeros(self.n_cycles)
             self.s = np.zeros((len(self.pool_ids), self.n_cycles), np.int64)
             self.running = np.zeros_like(self.s)
+            self.codes = np.zeros(
+                (len(self.pool_ids), self.n_cycles), dtype=np.uint8
+            )
+            self.errors = np.zeros_like(self.s)
+        self._ctrl = (
+            None
+            if retry_policy is None
+            else RetryController(
+                len(self.pool_ids),
+                retry_policy,
+                region_code=self.provider.region_code[self._idx],
+                n_requests=self.n,
+            )
+        )
         self._t0 = self.provider.now
 
     # -- stepping ------------------------------------------------------------
@@ -552,29 +833,79 @@ class CampaignStream:
             return None
         self._next = c + 1
         when = self._t0 + c * self.interval
+        plan = self.fault_plan
+        ctrl = self._ctrl
+        chaos = plan is not None or ctrl is not None
+        attempt = codes = None
+        if chaos:
+            # Whole-call faults and retry gating are evaluated host-side
+            # ONCE per cycle, identically for every engine — so the clock
+            # must sit at the measurement timestamp first.  The sharded
+            # engine's subsequent probe_cycle(when) then adds zero ticks.
+            if self.engine == "sharded":
+                self.provider.advance(when, n_hint=self.n)
+            else:
+                self.provider.advance(when)
+            if ctrl is not None:
+                attempt = ctrl.attempt_mask(
+                    c, region_budget=self.provider.rate_budget()
+                )
+            if plan is not None:
+                codes = plan.call_codes(
+                    self.provider.now, c, self._idx, self.provider.region_code
+                )
         if self.engine == "fleet":
-            self.provider.advance(when)
-            self._collector.run_cycle(c)
+            if not chaos:
+                self.provider.advance(when)
+            self._collector.run_cycle(c, fault_codes=codes, attempt=attempt)
         elif self.engine == "scalar":
-            self.provider.advance(when)
+            if not chaos:
+                self.provider.advance(when)
             self.times[c] = self.provider.now
-            self.s[:, c] = self._collector.run_cycle(c)
+            self.s[:, c] = self._collector.run_cycle(
+                c,
+                fault_codes=codes,
+                attempt=attempt,
+                codes_out=self.codes[:, c],
+                errors_out=self.errors[:, c],
+            )
             for i, pid in enumerate(self.pool_ids):
                 self.running[i, c] = self.provider.running_count(pid)
         else:  # sharded: advance + probe in shard_map-ped device steps
             counts, run_t = self.provider.probe_cycle(
-                when, self._idx, self.n, self.terminator_delay
+                when,
+                self._idx,
+                self.n,
+                self.terminator_delay,
+                fault_codes=codes,
+                attempt=attempt,
+                codes_out=self.codes[:, c] if chaos else None,
+                errors_out=self.errors[:, c] if chaos else None,
             )
             # the measurement timestamp, not the post-terminator-delay clock
             self.times[c] = self.provider.probe_time
             self.s[:, c] = counts
             self.running[:, c] = run_t
+        if ctrl is not None:
+            att = (
+                attempt
+                if attempt is not None
+                else np.ones(len(self.pool_ids), dtype=bool)
+            )
+            ctrl.observe(c, att, self.codes[:, c])
         s_t = self.s[:, c]
         s_t.flags.writeable = False
         running_t = self.running[:, c]
         running_t.flags.writeable = False
+        codes_t = errors_t = None
+        if chaos:
+            codes_t = self.codes[:, c]
+            codes_t.flags.writeable = False
+            errors_t = self.errors[:, c]
+            errors_t.flags.writeable = False
         return CampaignCycle(cycle=c, time=float(self.times[c]),
-                             s_t=s_t, running_t=running_t)
+                             s_t=s_t, running_t=running_t,
+                             codes_t=codes_t, errors_t=errors_t)
 
     def __iter__(self):
         while True:
@@ -608,6 +939,7 @@ class CampaignStream:
         node_cost = float(
             (self.running.sum(axis=1) * (self.interval / 3600.0) * prices).sum()
         )
+        chaos = self.fault_plan is not None or self._ctrl is not None
         self._result = CampaignResult(
             pool_ids=self.pool_ids,
             times=self.times,
@@ -620,8 +952,79 @@ class CampaignStream:
             node_pool_cost=node_cost,
             api_calls=self.provider.api_calls,
             engine=self.engine,
+            codes=self.codes if chaos else None,
+            errors=self.errors if chaos else None,
+            valid=(self.codes == OUTCOME_OK) if chaos else None,
+            fault_api_calls=self.provider.fault_api_calls,
         )
         return self._result
+
+    # -- crash-consistent checkpoints ----------------------------------------
+
+    def state_dict(self) -> dict:
+        """Crash-consistent campaign snapshot at a cycle boundary.
+
+        Captures provider state (ledgers, RNG counters, rate windows),
+        campaign matrices, the retry control plane, and the probe-cost
+        meter cursor — everything needed so that *restore + drain* is
+        bit-identical to an uninterrupted run on every engine.  Sharded
+        device state is flushed and fetched to host at the boundary.
+        Only call between :meth:`step` calls (the stream never holds
+        in-flight state across steps).
+        """
+        sd = {
+            "engine": self.engine,
+            "next": self._next,
+            "t0": self._t0,
+            "times": self.times.copy(),
+            "s": self.s.copy(),
+            "running": self.running.copy(),
+            "codes": self.codes.copy(),
+            "errors": self.errors.copy(),
+            "provider": self.provider.state_dict(),
+            "retry": None if self._ctrl is None else self._ctrl.state_dict(),
+        }
+        if self.engine == "sharded":
+            sd["meter"] = {"since": self._meter.since, "until": self._meter.until}
+        else:
+            if self.engine == "fleet":
+                m = self._collector._meter
+                sd["meter"] = {"since": m.since, "until": m.until}
+            else:
+                sd["lake"] = self._collector.lake.state_dict()
+        return sd
+
+    def restore(self, sd: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot onto a freshly
+        constructed, identically configured stream (same provider seed
+        and campaign parameters)."""
+        if sd["engine"] != self.engine:
+            raise ValueError(
+                f"checkpoint is for engine {sd['engine']!r}, not {self.engine!r}"
+            )
+        self._next = sd["next"]
+        self._t0 = sd["t0"]
+        self.times[:] = sd["times"]
+        self.s[:] = sd["s"]
+        self.running[:] = sd["running"]
+        self.codes[:] = sd["codes"]
+        self.errors[:] = sd["errors"]
+        self.provider.restore(sd["provider"])
+        if sd["retry"] is not None:
+            self._ctrl.restore(sd["retry"])
+        if self.engine == "sharded":
+            self._meter.since = sd["meter"]["since"]
+            self._meter.until = sd["meter"]["until"]
+        elif self.engine == "fleet":
+            self._collector._meter.since = sd["meter"]["since"]
+            self._collector._meter.until = sd["meter"]["until"]
+        else:
+            self._collector.lake.restore(sd["lake"])
+            # scoot probe requests never bill (no run_started) — the
+            # object log is not part of the crash-consistent surface
+            self._collector.probe_requests = []
+            self._collector._pending_cancel = []
+        self._result = None
 
 
 def run_campaign(
@@ -636,6 +1039,8 @@ def run_campaign(
     engine: str = "fleet",
     retain_records: bool = True,
     on_cycle: Optional[CycleHook] = None,
+    fault_plan: Optional[FaultPlan] = None,
+    retry_policy: Optional[RetryPolicy] = None,
 ) -> CampaignResult:
     """Run a §III-B style campaign: node pools + SnS probing side by side.
 
@@ -678,6 +1083,16 @@ def run_campaign(
         :func:`repro.core.pipeline.run_campaign_pipeline`.  ``S_t`` is
         the cycle's measurement (at the measurement timestamp, not any
         post-terminator-delay clock), identical across engines.
+      fault_plan: optional deterministic :class:`FaultPlan` — throttle
+        bursts, blackouts, timeouts, transient request errors.  All
+        engines inject *identical* faults (pure functions of the plan
+        seed), so the bit-identity contract holds under chaos too; the
+        result gains ``codes`` / ``errors`` / ``valid`` matrices and
+        ``fault_api_calls``.
+      retry_policy: optional :class:`RetryPolicy` — per-pool capped
+        exponential backoff with deterministic jitter, a per-region
+        token bucket, and per-pool circuit breakers; deferred cycles
+        surface as ``OUTCOME_DEFERRED`` (no API charge).
 
     This is a thin driver over :class:`CampaignStream` — use the stream
     directly for cycle-at-a-time consumption (online serving, dataset
@@ -693,6 +1108,8 @@ def run_campaign(
         terminator_delay=terminator_delay,
         engine=engine,
         retain_records=retain_records,
+        fault_plan=fault_plan,
+        retry_policy=retry_policy,
     )
     for cyc in stream:
         if on_cycle is not None:

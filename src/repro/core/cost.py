@@ -66,6 +66,12 @@ class CostReport:
     #: passed to :func:`cost_report`) — the near-zero *dollar* cost claim
     #: and the bounded *memory* cost of collecting it, side by side
     host_ledger: Optional[LedgerStats] = None
+    #: API calls that hit an injected fault (throttle/timeout/blackout)
+    #: instead of returning a capacity verdict.  Faulted calls still bill
+    #: — they are INCLUDED in the ``api_calls`` the serverless total is
+    #: built from; this field breaks out how much of the spend bought no
+    #: signal (chaos campaigns only; 0 on fault-free runs).
+    fault_api_calls: int = 0
 
     @property
     def sns_total(self) -> float:
@@ -133,4 +139,5 @@ def cost_report(
         periodic=periodic,
         resolution_ratio=periodic_interval / result.interval,
         host_ledger=provider.ledger_stats() if provider is not None else None,
+        fault_api_calls=int(getattr(result, "fault_api_calls", 0)),
     )

@@ -1,0 +1,290 @@
+"""Deterministic fault-injection substrate for the campaign control plane.
+
+Real spot-probing campaigns run against a flaky control plane: API
+throttle bursts, transient request errors, provisioning timeouts, and
+zone-wide blackout windows.  This module models those fault processes as
+pure functions of ``(fault_seed, region/pool, time/cycle)`` using the
+same counter-based SplitMix64 streams as the provider itself
+(:mod:`repro.core.rng`), so the scalar, fleet, and sharded engines all
+inject *identical* faults and stay bit-identical (atol=0) to each other.
+
+Fault taxonomy / outcome codes
+------------------------------
+
+Every pool-cycle of a campaign resolves to exactly one outcome code:
+
+====================  ===  =========================================
+code                  val  meaning
+====================  ===  =========================================
+``OUTCOME_OK``          0  probe submitted, counts are live data
+``OUTCOME_CAPACITY``    1  (reserved) rejected on capacity — folded
+                           into the success *count*, not a call fault
+``OUTCOME_RATE_LIMITED``2  provider rate limiter refused the call
+                           (no API charge, existing semantics)
+``OUTCOME_THROTTLED``   3  region-wide API throttle burst (API billed)
+``OUTCOME_ERROR``       4  (reserved for per-request transient errors;
+                           surfaced via the ``errors`` matrix)
+``OUTCOME_TIMEOUT``     5  provisioning/API timeout (API billed)
+``OUTCOME_BLACKOUT``    6  AZ blackout window (API billed)
+``OUTCOME_DEFERRED``    7  retry/breaker control plane skipped the
+                           call (no API charge)
+====================  ===  =========================================
+
+Whole-call faults (throttle / timeout / blackout) are evaluated
+host-side once per cycle via :meth:`FaultPlan.call_codes`; per-request
+transient errors are drawn inside the provider's admission mask (and
+its device twin) from the same ``(fault_seed, pool, submit_seq)``
+stream.  Blackout windows additionally gate background replenishment
+via :meth:`FaultPlan.blackout_mask`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .rng import keyed_exponential, keyed_uniform
+
+# Outcome codes (uint8).  Keep stable: they are persisted in DataLake
+# blocks and campaign ``codes`` matrices.
+OUTCOME_OK = 0
+OUTCOME_CAPACITY = 1
+OUTCOME_RATE_LIMITED = 2
+OUTCOME_THROTTLED = 3
+OUTCOME_ERROR = 4
+OUTCOME_TIMEOUT = 5
+OUTCOME_BLACKOUT = 6
+OUTCOME_DEFERRED = 7
+
+OUTCOME_NAMES = (
+    "ok",
+    "capacity",
+    "rate_limited",
+    "throttled",
+    "error",
+    "timeout",
+    "blackout",
+    "deferred",
+)
+
+#: Codes that bill an API call even though no requests were submitted.
+BILLED_FAULT_CODES = (OUTCOME_THROTTLED, OUTCOME_TIMEOUT, OUTCOME_BLACKOUT)
+
+# RNG tags — disjoint from every provider tag (provider.py stays below
+# 30_000_000).  All draws use the *plan's* seed, never the provider's,
+# so fault streams can never collide with capacity/noise streams.
+_TAG_THROTTLE_GATE = 30_000_000
+_TAG_THROTTLE_START = 30_000_001
+_TAG_THROTTLE_DUR = 30_000_002
+_TAG_BLACKOUT_GATE = 30_000_010
+_TAG_BLACKOUT_START = 30_000_011
+_TAG_BLACKOUT_DUR = 30_000_012
+_TAG_TIMEOUT = 30_000_020
+#: Base tag for per-request transient-error draws: request ``j`` of a
+#: submission batch draws at ``_TAG_REQUEST_ERROR + j``.  Mirrored on
+#: the sharded device step — keep in sync with ``core.sharded``.
+_TAG_REQUEST_ERROR = 31_000_000
+
+
+@dataclass(frozen=True)
+class ThrottleBursts:
+    """Region-wide API throttle bursts.
+
+    Time is cut into fixed epochs; each (region, epoch) draws one gate
+    ``u < p``.  A gated epoch contains a single burst starting at a
+    uniform offset with an exponential duration capped at the epoch
+    length, so a burst never spans more than two epochs and activity at
+    time ``t`` only needs epochs ``k`` and ``k - 1``.
+    """
+
+    p: float = 0.05
+    epoch: float = 3600.0
+    mean_duration: float = 300.0
+
+
+@dataclass(frozen=True)
+class BlackoutWindows:
+    """AZ/region blackout windows — same epoch process, wider and rarer.
+
+    During a blackout the control plane rejects whole calls *and* the
+    provider's background replenishment is suppressed for pools in the
+    region (see ``SimulatedProvider.set_fault_plan``).
+    """
+
+    p: float = 0.01
+    epoch: float = 6 * 3600.0
+    mean_duration: float = 1800.0
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Composable deterministic fault processes for one campaign.
+
+    All processes are pure functions of ``seed`` — two engines given
+    the same plan see bit-identical faults.  ``request_error_p`` and
+    ``timeout_p`` are per-request / per-pool-cycle Bernoulli rates;
+    ``throttle`` / ``blackout`` are region-level window processes.
+    """
+
+    seed: int = 0
+    throttle: Optional[ThrottleBursts] = None
+    blackout: Optional[BlackoutWindows] = None
+    request_error_p: float = 0.0
+    timeout_p: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= float(self.request_error_p) < 1.0:
+            raise ValueError("request_error_p must be in [0, 1)")
+        if not 0.0 <= float(self.timeout_p) < 1.0:
+            raise ValueError("timeout_p must be in [0, 1)")
+
+    # -- region window processes -------------------------------------
+
+    def _window_active(self, spec, region_codes, times, tags):
+        """Bool activity matrix ``(len(times), n_regions)`` for a window spec."""
+        tag_gate, tag_start, tag_dur = tags
+        t = np.asarray(times, dtype=np.float64).reshape(-1, 1, 1)
+        rc = np.asarray(region_codes, dtype=np.int64).reshape(1, -1, 1)
+        k = np.floor(t / spec.epoch).astype(np.int64)
+        kk = np.concatenate([k - 1, k], axis=2)  # (T, R, 2)
+        u_gate = keyed_uniform(self.seed, rc, kk, tag_gate)
+        u_start = keyed_uniform(self.seed, rc, kk, tag_start)
+        u_dur = keyed_uniform(self.seed, rc, kk, tag_dur)
+        start = kk * spec.epoch + u_start * spec.epoch
+        dur = np.minimum(keyed_exponential(spec.mean_duration, u_dur), spec.epoch)
+        active = (u_gate < spec.p) & (start <= t) & (t < start + dur)
+        return active.any(axis=2)
+
+    def throttled_regions(self, region_codes, times):
+        """``(T, R)`` bool — which regions are throttle-bursting at ``times``."""
+        if self.throttle is None:
+            return np.zeros(
+                (np.size(times), np.size(region_codes)), dtype=bool
+            )
+        return self._window_active(
+            self.throttle,
+            region_codes,
+            times,
+            (_TAG_THROTTLE_GATE, _TAG_THROTTLE_START, _TAG_THROTTLE_DUR),
+        )
+
+    def blacked_out_regions(self, region_codes, times):
+        """``(T, R)`` bool — which regions are blacked out at ``times``."""
+        if self.blackout is None:
+            return np.zeros(
+                (np.size(times), np.size(region_codes)), dtype=bool
+            )
+        return self._window_active(
+            self.blackout,
+            region_codes,
+            times,
+            (_TAG_BLACKOUT_GATE, _TAG_BLACKOUT_START, _TAG_BLACKOUT_DUR),
+        )
+
+    # -- per-cycle whole-call evaluation -----------------------------
+
+    def call_codes(self, now, cycle, pool_idx, region_code):
+        """Whole-call outcome codes for one probe cycle.
+
+        Parameters
+        ----------
+        now : float
+            Provider wall-clock at submission time.
+        cycle : int
+            Campaign cycle index (the timeout draw's counter).
+        pool_idx : (P,) int array
+            Pool indices being probed this cycle.
+        region_code : (n_pools,) int array
+            The provider's pool → region-code map.
+
+        Returns
+        -------
+        (P,) uint8 array of ``OUTCOME_*`` codes; ``OUTCOME_OK`` where no
+        whole-call fault fires.  Severity order (strongest wins):
+        blackout > throttle > timeout.
+        """
+        pool_idx = np.asarray(pool_idx, dtype=np.int64)
+        codes = np.zeros(pool_idx.shape[0], dtype=np.uint8)
+        if self.timeout_p > 0.0:
+            u = keyed_uniform(self.seed, pool_idx, int(cycle), _TAG_TIMEOUT)
+            codes[u < self.timeout_p] = OUTCOME_TIMEOUT
+        rc = np.asarray(region_code, dtype=np.int64)
+        uniq = np.unique(rc[pool_idx])
+        if self.throttle is not None:
+            hot = self.throttled_regions(uniq, [float(now)])[0]
+            hot_regions = uniq[hot]
+            if hot_regions.size:
+                codes[np.isin(rc[pool_idx], hot_regions)] = OUTCOME_THROTTLED
+        if self.blackout is not None:
+            dark = self.blacked_out_regions(uniq, [float(now)])[0]
+            dark_regions = uniq[dark]
+            if dark_regions.size:
+                codes[np.isin(rc[pool_idx], dark_regions)] = OUTCOME_BLACKOUT
+        return codes
+
+    def blackout_mask(self, times, region_code):
+        """``(T, n_pools)`` bool — pools whose replenishment is suppressed.
+
+        Evaluated host-side for the tick times of a provider advance and
+        fed to both the numpy ``_replenish_batch`` gate and the sharded
+        device step, so all engines suppress the exact same ticks.
+        """
+        rc = np.asarray(region_code, dtype=np.int64)
+        times = np.asarray(times, dtype=np.float64).reshape(-1)
+        if self.blackout is None or times.size == 0:
+            return np.zeros((times.size, rc.size), dtype=bool)
+        uniq, inv = np.unique(rc, return_inverse=True)
+        dark = self.blacked_out_regions(uniq, times)  # (T, R)
+        return dark[:, inv]
+
+    # -- per-request transient errors --------------------------------
+
+    def request_errors(self, pool_idx, seq, n):
+        """``(P, n)`` bool — transient per-request errors for one batch.
+
+        Drawn from ``(seed, pool, submit_seq)`` exactly like the
+        provider's flake draws, so every engine sees identical errors
+        regardless of which pools it batches together.
+        """
+        if self.request_error_p <= 0.0:
+            return np.zeros((np.size(pool_idx), n), dtype=bool)
+        pool_idx = np.asarray(pool_idx, dtype=np.int64)
+        seq = np.asarray(seq, dtype=np.int64)
+        u = keyed_uniform(
+            self.seed,
+            pool_idx[:, None],
+            seq[:, None],
+            _TAG_REQUEST_ERROR + np.arange(n)[None, :],
+        )
+        return u < self.request_error_p
+
+
+def describe_codes(codes) -> dict:
+    """Histogram of outcome codes as ``{name: count}`` (diagnostics)."""
+    codes = np.asarray(codes, dtype=np.uint8).reshape(-1)
+    counts = np.bincount(codes, minlength=len(OUTCOME_NAMES))
+    return {
+        name: int(counts[i])
+        for i, name in enumerate(OUTCOME_NAMES)
+        if counts[i]
+    }
+
+
+__all__ = [
+    "OUTCOME_OK",
+    "OUTCOME_CAPACITY",
+    "OUTCOME_RATE_LIMITED",
+    "OUTCOME_THROTTLED",
+    "OUTCOME_ERROR",
+    "OUTCOME_TIMEOUT",
+    "OUTCOME_BLACKOUT",
+    "OUTCOME_DEFERRED",
+    "OUTCOME_NAMES",
+    "BILLED_FAULT_CODES",
+    "ThrottleBursts",
+    "BlackoutWindows",
+    "FaultPlan",
+    "describe_codes",
+]

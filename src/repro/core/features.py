@@ -147,6 +147,8 @@ class FleetFeatureState:
     cut: np.ndarray = None        # (pools,) float64 — CUT_t per pool
     p_window: np.ndarray = None   # (pools, w + 1) int64 ring buffer of P
     head: int = 0                 # ring index of P[t]
+    staleness: np.ndarray = None  # (pools,) int64 — cycles since valid data
+    last_feats: np.ndarray = None  # (pools, 3) — carried-forward features
 
     def __post_init__(self):
         if self.p_t is None:
@@ -155,6 +157,10 @@ class FleetFeatureState:
             self.cut = np.zeros(self.pools, dtype=np.float64)
         if self.p_window is None:
             self.p_window = np.zeros((self.pools, self.w + 1), dtype=np.int64)
+        if self.staleness is None:
+            self.staleness = np.zeros(self.pools, dtype=np.int64)
+        if self.last_feats is None:
+            self.last_feats = np.zeros((self.pools, 3), dtype=np.float64)
 
 
 def init_fleet_state(
@@ -169,7 +175,7 @@ def init_fleet_state(
 
 
 def update_batch(
-    state: FleetFeatureState, s_t: np.ndarray
+    state: FleetFeatureState, s_t: np.ndarray, valid: np.ndarray = None
 ) -> Tuple[FleetFeatureState, np.ndarray]:
     """Algorithm 1 for one cycle across the whole fleet at once.
 
@@ -178,11 +184,29 @@ def update_batch(
     feature matrix ordered ``(SR, UR, CUT)`` — bit-identical to applying
     the scalar :func:`update` to each pool independently.  Interpreter
     work per cycle is a constant number of vector ops (no per-pool loop).
+
+    ``valid`` (optional ``(pools,)`` bool) marks which entries of ``s_t``
+    are live measurements — the graceful-degradation hook for faulted /
+    throttled / retry-deferred collection cycles.  Invalid pools ingest
+    nothing: their ``P`` and ``CUT`` state is untouched, their feature
+    row is the last valid one carried forward, and ``state.staleness``
+    counts the consecutive invalid cycles (0 where valid) so consumers
+    (e.g. the serve admission controller) can treat stale pools
+    conservatively.  ``valid=None`` is exactly the historical all-valid
+    behaviour.
     """
     n, w, dt = state.n, state.w, state.dt
     s_t = np.asarray(s_t)
     if s_t.shape != (state.pools,):
         raise ValueError(f"s_t shape {s_t.shape} != (pools,) = ({state.pools},)")
+    if valid is not None:
+        valid = np.asarray(valid, dtype=bool)
+        if valid.shape != (state.pools,):
+            raise ValueError(
+                f"valid shape {valid.shape} != (pools,) = ({state.pools},)"
+            )
+        # masked entries may carry fault sentinels — validate live ones only
+        s_t = np.where(valid, s_t, 0)
     ok = (s_t >= 0) & (s_t <= n)  # NaN fails both comparisons
     if not ok.all():
         raise ValueError(f"S_t={s_t[~ok][0]} out of range [0, {n}]")
@@ -196,7 +220,10 @@ def update_batch(
 
     sr = s_t / n
 
-    state.p_t += n - s_t
+    if valid is None:
+        state.p_t += n - s_t
+    else:
+        state.p_t += np.where(valid, n - s_t, 0)
     state.head = (state.head + 1) % (w + 1)
     state.p_window[:, state.head] = state.p_t
 
@@ -208,10 +235,21 @@ def update_batch(
 
     if t == 1:
         state.cut[:] = 0.0
-    else:
+    elif valid is None:
         state.cut = np.where(s_t == n, 0.0, state.cut + dt)
+    else:
+        state.cut = np.where(
+            valid, np.where(s_t == n, 0.0, state.cut + dt), state.cut
+        )
 
-    return state, np.stack([sr, ur, state.cut], axis=-1)
+    feats = np.stack([sr, ur, state.cut], axis=-1)
+    if valid is None:
+        state.staleness[:] = 0
+    else:
+        feats = np.where(valid[:, None], feats, state.last_feats)
+        state.staleness = np.where(valid, 0, state.staleness + 1)
+    state.last_feats = feats
+    return state, feats
 
 
 def compute_features(

@@ -108,6 +108,18 @@ class _Columns:
         """Allocated column bytes (capacity, not just filled rows)."""
         return sum(getattr(self, name).nbytes for name, _ in self._COLS)
 
+    # -- checkpointing (subclasses extend with their side state) -----------
+
+    def state_dict(self) -> dict:
+        return {name: getattr(self, name)[: self._n].copy() for name, _ in self._COLS}
+
+    def restore(self, sd: dict) -> None:
+        n = len(sd[self._COLS[0][0]])
+        self._grow_to(n)
+        for name, _ in self._COLS:
+            getattr(self, name)[:n] = sd[name]
+        self._n = n
+
 
 # --------------------------------------------------------------------------
 # Running instances
@@ -281,6 +293,19 @@ class InstanceLedger(_Columns):
     def nbytes(self) -> int:
         return super().nbytes + self.head_uid.nbytes
 
+    def state_dict(self) -> dict:
+        sd = super().state_dict()
+        sd["head_uid"] = self.head_uid.copy()
+        sd["dead"] = self._dead
+        sd["term_uids"] = {p: sorted(s) for p, s in self._term_uids.items()}
+        return sd
+
+    def restore(self, sd: dict) -> None:
+        super().restore(sd)
+        self.head_uid[:] = sd["head_uid"]
+        self._dead = int(sd["dead"])
+        self._term_uids = {int(p): set(s) for p, s in sd["term_uids"].items()}
+
 
 # --------------------------------------------------------------------------
 # Leaked probes
@@ -346,6 +371,15 @@ class ProbeLedger(_Columns):
         rows = rows[hit]
         self.end[rows] = times[pos[hit]]
         self.live_count -= int(rows.size)
+
+    def state_dict(self) -> dict:
+        sd = super().state_dict()
+        sd["live_count"] = self.live_count
+        return sd
+
+    def restore(self, sd: dict) -> None:
+        super().restore(sd)
+        self.live_count = int(sd["live_count"])
 
     def cost(
         self,
@@ -472,6 +506,18 @@ class CohortLedger(_Columns):
         pools, counts = self.pool[rows].copy(), self.count[rows].copy()
         self.count[rows] = 0
         return pools, counts
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        sd = super().state_dict()
+        sd["next_id"] = self._next_id
+        return sd
+
+    def restore(self, sd: dict) -> None:
+        super().restore(sd)
+        self._next_id = int(sd["next_id"])
+        self._row = {int(c): r for r, c in enumerate(self.cid[: self._n])}
 
     # -- settle ------------------------------------------------------------
 

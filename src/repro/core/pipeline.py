@@ -172,6 +172,9 @@ class FleetCycleResult:
     s_t: np.ndarray                      # (pools,) int
     features: np.ndarray                 # (pools, 3) float64 — (SR, UR, CUT)
     predictions: Optional[np.ndarray]    # (pools,) float or None
+    #: (pools,) int64 — consecutive invalid (faulted/deferred) cycles per
+    #: pool; None when the cycle ran without a validity mask
+    staleness: Optional[np.ndarray] = None
 
 
 class FleetWindowTable:
@@ -264,6 +267,34 @@ class FleetWindowTable:
             raise ValueError(f"only {self.count} cycles in window, need {length}")
         return self.features[:, self._order()[-length:]]
 
+    def state_dict(self) -> dict:
+        """Snapshot the ring arrays + archive for crash-consistent
+        checkpointing (plain numpy/python values, picklable)."""
+        return {
+            "s": self.s.copy(),
+            "features": self.features.copy(),
+            "predictions": self.predictions.copy(),
+            "cycles": self.cycles.copy(),
+            "times": self.times.copy(),
+            "head": self.head,
+            "count": self.count,
+            "archived_cycles": self.archived_cycles,
+            "archive_blocks": [b.copy() for b in self._archive_blocks],
+        }
+
+    def restore(self, sd: dict) -> None:
+        """Inverse of :meth:`state_dict` onto an identically-configured
+        table."""
+        self.s[:] = sd["s"]
+        self.features[:] = sd["features"]
+        self.predictions[:] = sd["predictions"]
+        self.cycles[:] = sd["cycles"]
+        self.times[:] = sd["times"]
+        self.head = int(sd["head"])
+        self.count = int(sd["count"])
+        self.archived_cycles = int(sd["archived_cycles"])
+        self._archive_blocks = [np.asarray(b).copy() for b in sd["archive_blocks"]]
+
     def latest(self) -> FleetCycleResult:
         if self.count == 0:
             raise ValueError("window table is empty")
@@ -334,10 +365,22 @@ class FleetFeatureProcessor:
         self.update_ops = 0     # batched state updates (1 per cycle)
         self.predict_calls = 0  # predictor invocations (<= 1 per cycle)
 
-    def on_cycle(self, cycle: int, time: float, s: Sequence[int]) -> FleetCycleResult:
-        """Ingest one collection cycle's success-count vector for the fleet."""
+    def on_cycle(
+        self,
+        cycle: int,
+        time: float,
+        s: Sequence[int],
+        valid: Optional[np.ndarray] = None,
+    ) -> FleetCycleResult:
+        """Ingest one collection cycle's success-count vector for the fleet.
+
+        ``valid`` (optional ``(pools,)`` bool) marks live measurements —
+        invalid pools (faulted / throttled / retry-deferred cycles) carry
+        their last features forward and accrue staleness (see
+        :func:`~repro.core.features.update_batch`).
+        """
         s_t = np.array(s)  # copy: the result must not alias a caller buffer
-        self.state, feats = update_batch(self.state, s_t)
+        self.state, feats = update_batch(self.state, s_t, valid)
         self.update_ops += 1  # one batched O(pools)-element / O(1)-op update
 
         # Commit the row before predicting: a failing predictor then leaves
@@ -363,13 +406,46 @@ class FleetFeatureProcessor:
                     )
                 self.table.predictions[:, self.table.head] = preds
         return FleetCycleResult(
-            cycle=cycle, time=time, s_t=s_t, features=feats, predictions=preds
+            cycle=cycle, time=time, s_t=s_t, features=feats, predictions=preds,
+            staleness=None if valid is None else self.state.staleness.copy(),
         )
 
     def feature_matrix(self, pool_id: Union[str, int]) -> np.ndarray:
         """(rows, 3) in-window features for one pool, oldest first."""
         idx = pool_id if isinstance(pool_id, int) else self.pool_index[pool_id]
         return self.table.feature_matrix(idx)
+
+    def state_dict(self) -> dict:
+        """Snapshot the stacked Algorithm-1 state + window table (plain
+        numpy/python values) for crash-consistent checkpointing."""
+        st = self.state
+        return {
+            "t": st.t,
+            "p_t": st.p_t.copy(),
+            "cut": np.asarray(st.cut).copy(),
+            "p_window": st.p_window.copy(),
+            "head": st.head,
+            "staleness": st.staleness.copy(),
+            "last_feats": np.asarray(st.last_feats).copy(),
+            "table": self.table.state_dict(),
+            "update_ops": self.update_ops,
+            "predict_calls": self.predict_calls,
+        }
+
+    def restore(self, sd: dict) -> None:
+        """Inverse of :meth:`state_dict` onto an identically-configured
+        processor (same pools / n / window / dt / predictor)."""
+        st = self.state
+        st.t = int(sd["t"])
+        st.p_t[:] = sd["p_t"]
+        st.cut = np.asarray(sd["cut"]).copy()
+        st.p_window[:] = sd["p_window"]
+        st.head = int(sd["head"])
+        st.staleness = np.asarray(sd["staleness"]).copy()
+        st.last_feats = np.asarray(sd["last_feats"]).copy()
+        self.table.restore(sd["table"])
+        self.update_ops = int(sd["update_ops"])
+        self.predict_calls = int(sd["predict_calls"])
 
 
 # --------------------------------------------------------------------------
@@ -398,6 +474,9 @@ class StreamCycleView:
     running_t: np.ndarray            # (pools,) int64 — ground-truth nodes
     features: np.ndarray             # (pools, F) float64 — (SR, UR, CUT)
     probs: Optional[np.ndarray]      # (pools,) float64 — P(stays available)
+    #: (pools,) int64 — consecutive invalid cycles per pool (graceful
+    #: degradation under faults); None when the campaign runs fault-free
+    staleness: Optional[np.ndarray] = None
 
 
 class CampaignPipelineStream:
@@ -477,7 +556,7 @@ class CampaignPipelineStream:
         cyc = self.campaign.step()
         if cyc is None:
             return None
-        res = self.processor.on_cycle(cyc.cycle, cyc.time, cyc.s_t)
+        res = self.processor.on_cycle(cyc.cycle, cyc.time, cyc.s_t, cyc.valid_t)
         table = self.processor.table
         head = table.head
         features = table.features[:, head]
@@ -493,6 +572,7 @@ class CampaignPipelineStream:
             running_t=cyc.running_t,
             features=features,
             probs=probs,
+            staleness=res.staleness,
         )
 
     def __iter__(self):
@@ -501,6 +581,24 @@ class CampaignPipelineStream:
             if view is None:
                 return
             yield view
+
+    def state_dict(self) -> dict:
+        """Crash-consistent snapshot of the whole measure → featurize →
+        predict stream: the campaign engine state (provider ledgers, RNG
+        cursors, retry/breaker state — see
+        :meth:`CampaignStream.state_dict`) plus the pipeline's feature
+        state and window table.  Restoring onto a freshly-constructed,
+        identically-configured stream and draining it reproduces the
+        uninterrupted run bit-identically."""
+        return {
+            "campaign": self.campaign.state_dict(),
+            "processor": self.processor.state_dict(),
+        }
+
+    def restore(self, sd: dict) -> None:
+        """Inverse of :meth:`state_dict`; see there."""
+        self.campaign.restore(sd["campaign"])
+        self.processor.restore(sd["processor"])
 
     def result(self):
         """The finished campaign's ``CampaignResult`` (requires all

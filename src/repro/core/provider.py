@@ -60,6 +60,11 @@ from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tu
 
 import numpy as np
 
+from .faults import (
+    OUTCOME_OK,
+    OUTCOME_RATE_LIMITED,
+    FaultPlan,
+)
 from .ledger import (
     CohortBatch,
     CohortLedger,
@@ -231,6 +236,20 @@ class InterruptionLog:
         out.append_sweep(0, uid, time)      # bulk copy, then fix pools
         out._pool[: self._n] = pool
         return out
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        pool, uid, time = self.columns
+        return {"pool": pool.copy(), "uid": uid.copy(), "time": time.copy()}
+
+    def restore(self, sd: dict) -> None:
+        n = len(sd["uid"])
+        self._grow_to(n)
+        self._n = n
+        self._pool[:n] = sd["pool"]
+        self._uid[:n] = sd["uid"]
+        self._time[:n] = sd["time"]
 
     # -- lazy InterruptionEvent sequence view ------------------------------
 
@@ -476,6 +495,14 @@ class SimulatedProvider:
         ]
         self._rate_sum = np.zeros(len(regions), dtype=np.int64)
         self.api_calls = 0
+        #: API calls billed to whole-call control-plane faults (throttle /
+        #: timeout / blackout cycles still charge the caller).  A subset of
+        #: :attr:`api_calls`, surfaced separately in ``cost_report``.
+        self.fault_api_calls = 0
+        self._fault_plan: Optional[FaultPlan] = None
+        # per-call scratch: transient-error pattern of the last scalar
+        # submission batch (the scalar collector reads it for outcome codes)
+        self.last_request_errors = np.zeros(0, dtype=bool)
 
     # -- public API -------------------------------------------------------
 
@@ -496,11 +523,74 @@ class SimulatedProvider:
         the batched fleet path models the terminator explicitly."""
         self._provision_listeners.append(callback)
 
+    # -- fault injection ---------------------------------------------------
+
+    @property
+    def fault_plan(self) -> Optional[FaultPlan]:
+        return self._fault_plan
+
+    def set_fault_plan(self, plan: Optional[FaultPlan]) -> None:
+        """Attach (or clear) a deterministic :class:`FaultPlan`.
+
+        Per-request transient errors are drawn inside the admission mask
+        from ``(plan.seed, pool, submit_seq)``; blackout windows suppress
+        node-pool replenishment; whole-call faults are evaluated by the
+        collection layer via :meth:`FaultPlan.call_codes` and billed
+        through :meth:`charge_api_fault` / ``submit_spot_requests``'s
+        ``fault_codes``.  With ``plan=None`` (the default) every code
+        path is bit-identical to the fault-free provider.
+        """
+        self._fault_plan = plan
+
+    @property
+    def region_code(self) -> np.ndarray:
+        """(pools,) int64 region codes (read-only view for fault/retry)."""
+        return self._region_code
+
+    @property
+    def n_regions(self) -> int:
+        return len(self._region_names)
+
+    def rate_budget(self) -> np.ndarray:
+        """(regions,) remaining request budget in the sliding 60 s window.
+
+        The same numbers ``_charge_rate_limit_batch`` enforces — the
+        retry control plane's token bucket pre-gates attempts against
+        this so the limiter itself never has to refuse a call.
+        """
+        out = np.empty(len(self._region_names), dtype=np.int64)
+        for rc in range(len(self._region_names)):
+            self._prune_rate_window(rc)
+            out[rc] = self.rate_limit - self._rate_sum[rc]
+        return out
+
+    def charge_api_fault(self, pool_id: str, *, n: int = 1) -> bool:
+        """Bill one whole-call faulted probe (scalar path).
+
+        A throttled/timed-out/blacked-out call still consumes rate
+        budget and bills API calls — it just never reaches admission.
+        Returns ``False`` (charging nothing) when the region budget is
+        exhausted, mirroring the batch path where rate-limiting wins
+        over the fault code.
+        """
+        rc = int(self._region_code[self._pool_index[pool_id]])
+        self._prune_rate_window(rc)
+        if self._rate_sum[rc] + n > self.rate_limit:
+            return False
+        self._rate_window[rc].append((self.now, n))
+        self._rate_sum[rc] += n
+        self.api_calls += n
+        self.fault_api_calls += n
+        return True
+
     # -- admission core (shared by both APIs) ------------------------------
 
-    def _accept_mask(self, pool_idx: np.ndarray, n: int) -> np.ndarray:
-        """(K, n) accept pattern for one concurrent batch of ``n`` requests
-        per pool; consumes one submission sequence number per pool.
+    def _accept_mask(
+        self, pool_idx: np.ndarray, n: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(K, n) ``(accept, errored)`` patterns for one concurrent batch
+        of ``n`` requests per pool; consumes one submission sequence
+        number per pool.
 
         Two-phase concurrency semantics: all ``n`` requests of a pool pass
         the capacity check together, each accepted request consuming one
@@ -515,7 +605,16 @@ class SimulatedProvider:
             seq[:, None],
             _TAG_SUBMIT + np.arange(n)[None, :],
         )
-        ok = u >= _FLAKE_P
+        plan = self._fault_plan
+        if plan is not None and plan.request_error_p > 0.0:
+            # injected transient request errors: drawn from the *plan's*
+            # stream keyed on the same (pool, submit_seq), so every engine
+            # sees identical errors; errored requests fail outright and
+            # never consume admission headroom
+            err = plan.request_errors(pool_idx, seq, n)
+        else:
+            err = np.zeros((len(pool_idx), n), dtype=bool)
+        ok = (u >= _FLAKE_P) & ~err
         headroom = (
             self.capacity[pool_idx]
             - self.n_running[pool_idx]
@@ -524,19 +623,34 @@ class SimulatedProvider:
         )
         # request r is admitted iff it passes the flake draw and the
         # headroom left after the accepts before it is still positive
-        return ok & ((np.cumsum(ok, axis=1) - 1) < headroom[:, None])
+        return ok & ((np.cumsum(ok, axis=1) - 1) < headroom[:, None]), err
 
-    def submit_spot_request(self, pool_id: str, *, n: int = 1) -> List[SpotRequest]:
+    def submit_spot_request(
+        self, pool_id: str, *, n: int = 1, strict: bool = True
+    ) -> List[SpotRequest]:
         """Submit ``n`` *concurrent* spot requests (scalar object API).
 
         Provisioning lifecycle events fire after the whole batch has passed
         the capacity check, so an event-driven canceller cannot free
-        capacity mid-batch.  Raises :class:`RateLimitError` when the
-        region's request budget is exhausted (nothing is charged).
+        capacity mid-batch.  When the region's request budget is exhausted
+        nothing is charged and, with ``strict=True`` (the historical
+        behaviour), :class:`RateLimitError` is raised; ``strict=False``
+        instead returns ``[]`` — the admit-what-fits semantics of the
+        batched fleet path, where a rate-limited pool simply counts 0.
+        Transient-error injection (``FaultPlan.request_error_p``) surfaces
+        per request in :attr:`last_request_errors`.
         """
         p = self._pool_index[pool_id]
-        self._charge_rate_limit(int(self._region_code[p]), n)
-        accept = self._accept_mask(np.array([p]), n)[0]
+        rc = int(self._region_code[p])
+        if not strict:
+            self._prune_rate_window(rc)
+            if self._rate_sum[rc] + n > self.rate_limit:
+                self.last_request_errors = np.zeros(0, dtype=bool)
+                return []
+        self._charge_rate_limit(rc, n)
+        accept, err = self._accept_mask(np.array([p]), n)
+        accept = accept[0]
+        self.last_request_errors = err[0].copy()
         out: List[SpotRequest] = []
         accepted: List[SpotRequest] = []
         k = int(accept.sum())
@@ -563,7 +677,14 @@ class SimulatedProvider:
         return out
 
     def submit_spot_requests(
-        self, pool_idx: np.ndarray, *, n: int = 1, hold: bool = False
+        self,
+        pool_idx: np.ndarray,
+        *,
+        n: int = 1,
+        hold: bool = False,
+        fault_codes: Optional[np.ndarray] = None,
+        codes_out: Optional[np.ndarray] = None,
+        errors_out: Optional[np.ndarray] = None,
     ):
         """Batched admission: ``n`` concurrent requests against *every*
         pool in ``pool_idx`` in one vector op (the fleet probing path).
@@ -577,16 +698,40 @@ class SimulatedProvider:
         can :meth:`cancel_cohorts` later (the slow-terminator model).
         Pools whose region budget is exhausted count 0 (rate-limited
         cycles record total failure, as in the scalar path).
+
+        Fault hooks: ``fault_codes`` (per-pool ``OUTCOME_*`` codes from
+        :meth:`FaultPlan.call_codes`) marks pools whose call fails whole
+        — they are still rate-charged and billed (``fault_api_calls``)
+        but never reach admission and do not consume a submission
+        sequence number.  ``codes_out`` / ``errors_out`` are optional
+        preallocated per-pool outputs for the resolved outcome codes and
+        injected-transient-error counts.
         """
         pool_idx = np.asarray(pool_idx, dtype=np.int64)
         counts = np.zeros(len(pool_idx), dtype=np.int64)
         admitted = self._charge_rate_limit_batch(pool_idx, n)
+        if fault_codes is None:
+            faulted = None
+            live = admitted
+        else:
+            fault_codes = np.asarray(fault_codes, dtype=np.uint8)
+            faulted = fault_codes != OUTCOME_OK
+            live = admitted & ~faulted
+            self.fault_api_calls += int((admitted & faulted).sum()) * n
+        if codes_out is not None:
+            codes_out[:] = OUTCOME_OK
+            if faulted is not None:
+                codes_out[faulted] = fault_codes[faulted]
+            codes_out[~admitted] = OUTCOME_RATE_LIMITED
         ids = np.empty(0, dtype=np.int64)
-        if admitted.any():
-            sub = pool_idx[admitted]
-            counts[admitted] = self._accept_mask(sub, n).sum(axis=1)
+        if live.any():
+            sub = pool_idx[live]
+            accept, err = self._accept_mask(sub, n)
+            counts[live] = accept.sum(axis=1)
+            if errors_out is not None:
+                errors_out[live] = err.sum(axis=1)
             if hold:
-                ca = counts[admitted]
+                ca = counts[live]
                 nz = ca > 0
                 ids = self._cohort_ledger.append_batch(
                     sub[nz], self.now, ca[nz], probe=True
@@ -870,6 +1015,12 @@ class SimulatedProvider:
         at the first failed admission (retry next tick)."""
         deficit = self.target_nodes - self.n_running - self.n_provisioning
         mask = (self.target_nodes > 0) & (self.now >= self.replenish_at) & (deficit > 0)
+        plan = self._fault_plan
+        if plan is not None and plan.blackout is not None and mask.any():
+            # AZ blackout suppresses the control plane wholesale: node
+            # pools cannot replenish while their region is dark (the
+            # sharded engine applies the same host-precomputed mask)
+            mask &= ~plan.blackout_mask([self.now], self._region_code)[0]
         if not mask.any():
             return
         mp = self._idx[mask]
@@ -975,6 +1126,78 @@ class SimulatedProvider:
                 self._rate_sum[rc] += k * n
                 self.api_calls += k * n
         return admitted
+
+    # -- crash-consistent checkpointing ------------------------------------
+
+    def state_dict(self) -> dict:
+        """Snapshot of the full dynamic provider state as plain
+        numpy/python containers (pickleable).
+
+        Restoring this dict into a freshly-constructed provider with the
+        same configs/seed/knobs reproduces the uninterrupted trajectory
+        bit-identically — every RNG draw is a pure function of the
+        counters captured here.  Live scalar-API ``SpotRequest`` views
+        cannot be snapshotted (they hold Python object identity), so
+        slow-terminator scalar campaigns must checkpoint between probe
+        batches or not at all.
+        """
+        if self._uid_objs or self._req_cohort:
+            raise NotImplementedError(
+                "cannot checkpoint while scalar-API SpotRequest views are "
+                "live (slow-terminator scalar campaigns); checkpoint at a "
+                "cycle boundary with terminator_delay=0 instead"
+            )
+        return {
+            "now": float(self.now),
+            "tick_count": int(self._tick_count),
+            "capacity": self.capacity.copy(),
+            "regime": self.regime.copy(),
+            "regime_until": self.regime_until.copy(),
+            "admission_margin": self.admission_margin.copy(),
+            "n_running": self.n_running.copy(),
+            "n_provisioning": self.n_provisioning.copy(),
+            "target_nodes": self.target_nodes.copy(),
+            "replenish_at": self.replenish_at.copy(),
+            "submit_seq": self._submit_seq.copy(),
+            "instance_seq": self._instance_seq.copy(),
+            "api_calls": int(self.api_calls),
+            "fault_api_calls": int(self.fault_api_calls),
+            "rate_window": [list(w) for w in self._rate_window],
+            "rate_sum": self._rate_sum.copy(),
+            "ledger": self._ledger.state_dict(),
+            "cohorts": self._cohort_ledger.state_dict(),
+            "probes": self._probe_ledger.state_dict(),
+            "interruptions": self.interruptions.state_dict(),
+        }
+
+    def restore(self, sd: dict) -> None:
+        """Overwrite this provider's dynamic state from a
+        :meth:`state_dict` snapshot (configs/seed/knobs must match the
+        snapshotting provider — they are not stored)."""
+        self.now = float(sd["now"])
+        self._tick_count = int(sd["tick_count"])
+        self.capacity[:] = sd["capacity"]
+        self.regime[:] = sd["regime"]
+        self.regime_until[:] = sd["regime_until"]
+        self.admission_margin[:] = sd["admission_margin"]
+        self.n_running[:] = sd["n_running"]
+        self.n_provisioning[:] = sd["n_provisioning"]
+        self.target_nodes[:] = sd["target_nodes"]
+        self.replenish_at[:] = sd["replenish_at"]
+        self._submit_seq[:] = sd["submit_seq"]
+        self._instance_seq[:] = sd["instance_seq"]
+        self.api_calls = int(sd["api_calls"])
+        self.fault_api_calls = int(sd["fault_api_calls"])
+        self._rate_window = [deque(map(tuple, w)) for w in sd["rate_window"]]
+        self._rate_sum[:] = sd["rate_sum"]
+        self._ledger.restore(sd["ledger"])
+        self._cohort_ledger.restore(sd["cohorts"])
+        self._probe_ledger.restore(sd["probes"])
+        self.interruptions.restore(sd["interruptions"])
+        self._cohort_handles.clear()
+        self._req_cohort.clear()
+        self._uid_objs.clear()
+        self._obj_uids.clear()
 
 
 class ProbeCostMeter:

@@ -1,0 +1,202 @@
+"""Vectorised retry/backoff control plane for campaign collection.
+
+One ``RetryController`` instance fronts a whole fleet: every operation
+is a single ``(pools,)`` array op per cycle, matching the serve layer's
+defer-clock idiom (``FleetAdmissionController``).  Three mechanisms
+compose:
+
+* **Capped exponential backoff** — after each whole-call control-plane
+  fault a pool's next attempt is pushed out by
+  ``min(base * 2**(streak-1), max)`` cycles plus a *deterministic*
+  jitter drawn from the SplitMix64 stream ``(policy.seed, pool,
+  cycle)``, so scalar/fleet/sharded engines compute identical
+  schedules.
+* **Per-region token bucket** — ``attempt_mask`` optionally pre-gates
+  attempts against the provider's live rate budget (the same budget
+  ``_charge_rate_limit_batch`` enforces), admitting the first
+  ``budget // n_requests`` eligible pools per region in pool order so
+  the limiter itself never has to refuse a call.
+* **Per-pool circuit breaker** — ``breaker_threshold`` consecutive
+  faults open the breaker; after ``breaker_cooldown_cycles`` it goes
+  half-open and admits a single probe cycle, closing on success and
+  re-opening on fault.
+
+Pools suppressed by the controller surface as ``OUTCOME_DEFERRED``
+cycles (no API charge) and masked observations downstream.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .faults import BILLED_FAULT_CODES
+from .rng import keyed_uniform
+
+# Breaker states (int8).
+BREAKER_CLOSED = 0
+BREAKER_OPEN = 1
+BREAKER_HALF_OPEN = 2
+
+# RNG tag for backoff jitter — disjoint from provider (< 30M) and
+# fault (30M–31M) tag ranges.
+_TAG_RETRY_JITTER = 32_000_000
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Deterministic backoff/breaker policy shared by all engines."""
+
+    seed: int = 0
+    base_delay_cycles: int = 1
+    max_delay_cycles: int = 8
+    jitter: float = 0.5
+    breaker_threshold: int = 4
+    breaker_cooldown_cycles: int = 6
+
+    def __post_init__(self) -> None:
+        if self.base_delay_cycles < 1:
+            raise ValueError("base_delay_cycles must be >= 1")
+        if self.max_delay_cycles < self.base_delay_cycles:
+            raise ValueError("max_delay_cycles must be >= base_delay_cycles")
+        if not 0.0 <= float(self.jitter) <= 1.0:
+            raise ValueError("jitter must be in [0, 1]")
+        if self.breaker_threshold < 1:
+            raise ValueError("breaker_threshold must be >= 1")
+        if self.breaker_cooldown_cycles < 1:
+            raise ValueError("breaker_cooldown_cycles must be >= 1")
+
+
+def base_backoff(policy: RetryPolicy, streaks):
+    """Un-jittered backoff (cycles) — monotone in streak, capped at max.
+
+    ``streaks`` counts *consecutive* faults (>= 1).  Exposed separately
+    so the monotonicity/cap properties are directly testable.
+    """
+    streaks = np.asarray(streaks, dtype=np.int64)
+    exp = np.clip(streaks - 1, 0, 32)
+    raw = np.left_shift(np.int64(policy.base_delay_cycles), exp)
+    return np.minimum(raw, np.int64(policy.max_delay_cycles))
+
+
+def backoff_delays(policy: RetryPolicy, streaks, pool_idx, cycle):
+    """Backoff + deterministic jitter for pools that just faulted.
+
+    The jitter term is ``floor(u * (jitter * delay + 1))`` with
+    ``u = keyed_uniform(policy.seed, pool, cycle, jitter_tag)`` — pure
+    in its inputs, so identical across engines, and strictly below
+    ``jitter * delay + 1`` so the effective delay stays within
+    ``[delay, delay * (1 + jitter) + 1)``.
+    """
+    delay = base_backoff(policy, streaks)
+    u = keyed_uniform(
+        policy.seed, np.asarray(pool_idx, dtype=np.int64), int(cycle), _TAG_RETRY_JITTER
+    )
+    extra = np.floor(u * (policy.jitter * delay + 1.0)).astype(np.int64)
+    return delay + extra
+
+
+class RetryController:
+    """Per-pool retry clocks + circuit breakers as flat arrays."""
+
+    def __init__(self, n_pools, policy=None, *, region_code=None, n_requests=1):
+        self.pools = int(n_pools)
+        self.policy = policy if policy is not None else RetryPolicy()
+        self.fail_streak = np.zeros(self.pools, dtype=np.int64)
+        self.retry_at = np.zeros(self.pools, dtype=np.int64)
+        self.breaker = np.zeros(self.pools, dtype=np.int8)
+        self.opened_at = np.full(self.pools, -1, dtype=np.int64)
+        self._region_code = (
+            None if region_code is None else np.asarray(region_code, dtype=np.int64)
+        )
+        self._n = int(n_requests)
+
+    # -- per-cycle API -------------------------------------------------
+
+    def attempt_mask(self, cycle, *, region_budget=None):
+        """(pools,) bool — which pools may call the API this cycle.
+
+        Transitions OPEN breakers whose cooldown elapsed to HALF_OPEN
+        (their single probe attempt).  When ``region_budget`` (an array
+        of remaining calls per region code) is given, attempts are
+        token-bucket pre-gated: only the first ``budget // n_requests``
+        eligible pools per region (in pool order) attempt, mirroring
+        ``_charge_rate_limit_batch``'s admission order exactly.
+        """
+        cycle = int(cycle)
+        pol = self.policy
+        due_half = (self.breaker == BREAKER_OPEN) & (
+            cycle >= self.opened_at + pol.breaker_cooldown_cycles
+        )
+        self.breaker[due_half] = BREAKER_HALF_OPEN
+        mask = (cycle >= self.retry_at) & (self.breaker != BREAKER_OPEN)
+        if region_budget is not None and self._region_code is not None:
+            budget = np.asarray(region_budget, dtype=np.int64)
+            for rc in np.unique(self._region_code):
+                sel = np.nonzero(mask & (self._region_code == rc))[0]
+                cap = max(0, int(budget[rc]) // max(self._n, 1))
+                if sel.size > cap:
+                    mask[sel[cap:]] = False
+        return mask
+
+    def observe(self, cycle, attempted, codes):
+        """Fold one cycle's outcome codes into clocks and breakers.
+
+        ``attempted`` is the mask returned by :meth:`attempt_mask` (or a
+        subset); ``codes`` the per-pool ``OUTCOME_*`` codes.  Only
+        whole-call control-plane faults (throttle/timeout/blackout)
+        count against the breaker — capacity rejections and per-request
+        errors are data, not control-plane failures.
+        """
+        cycle = int(cycle)
+        attempted = np.asarray(attempted, dtype=bool)
+        codes = np.asarray(codes, dtype=np.uint8)
+        faulted = attempted & np.isin(codes, np.array(BILLED_FAULT_CODES, np.uint8))
+        ok = attempted & ~faulted
+
+        self.fail_streak[ok] = 0
+        self.retry_at[ok] = cycle + 1
+        self.breaker[ok & (self.breaker == BREAKER_HALF_OPEN)] = BREAKER_CLOSED
+
+        if faulted.any():
+            self.fail_streak[faulted] += 1
+            idx = np.nonzero(faulted)[0]
+            delays = backoff_delays(self.policy, self.fail_streak[idx], idx, cycle)
+            self.retry_at[idx] = cycle + delays
+            reopen = faulted & (self.breaker == BREAKER_HALF_OPEN)
+            trip = (
+                faulted
+                & (self.breaker == BREAKER_CLOSED)
+                & (self.fail_streak >= self.policy.breaker_threshold)
+            )
+            tripped = reopen | trip
+            self.breaker[tripped] = BREAKER_OPEN
+            self.opened_at[tripped] = cycle
+
+    # -- checkpointing -------------------------------------------------
+
+    def state_dict(self):
+        return {
+            "fail_streak": self.fail_streak.copy(),
+            "retry_at": self.retry_at.copy(),
+            "breaker": self.breaker.copy(),
+            "opened_at": self.opened_at.copy(),
+        }
+
+    def restore(self, sd):
+        self.fail_streak[:] = sd["fail_streak"]
+        self.retry_at[:] = sd["retry_at"]
+        self.breaker[:] = sd["breaker"]
+        self.opened_at[:] = sd["opened_at"]
+
+
+__all__ = [
+    "BREAKER_CLOSED",
+    "BREAKER_OPEN",
+    "BREAKER_HALF_OPEN",
+    "RetryPolicy",
+    "RetryController",
+    "base_backoff",
+    "backoff_delays",
+]

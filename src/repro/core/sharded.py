@@ -79,6 +79,13 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from .collector import CampaignResult
+from .faults import (
+    _TAG_REQUEST_ERROR,
+    OUTCOME_DEFERRED,
+    OUTCOME_OK,
+    OUTCOME_RATE_LIMITED,
+    FaultPlan,
+)
 from .provider import (
     _FLAKE_P,
     _TAG_DEGRADE_BUMP,
@@ -285,7 +292,9 @@ class ShardedProvider:
             "probe_start": np.zeros(Pp, dtype=np.float64),
         }
         self._started = False
-        self._steps = {}  # (n_requests, kind) -> jitted shard_map step
+        self._steps = {}  # (n_requests, kind, faults) -> jitted shard_map step
+        self._fault_plan: Optional[FaultPlan] = None
+        self._last_codes = np.zeros(0, dtype=np.uint8)
 
     # -- config / bookkeeping passthrough ----------------------------------
 
@@ -296,6 +305,32 @@ class ShardedProvider:
     @property
     def api_calls(self) -> int:
         return self._host.api_calls
+
+    @property
+    def fault_api_calls(self) -> int:
+        return self._host.fault_api_calls
+
+    @property
+    def region_code(self) -> np.ndarray:
+        return self._host.region_code
+
+    def rate_budget(self) -> np.ndarray:
+        return self._host.rate_budget()
+
+    @property
+    def fault_plan(self) -> Optional[FaultPlan]:
+        return self._fault_plan
+
+    def set_fault_plan(self, plan: Optional[FaultPlan]) -> None:
+        """Attach a deterministic :class:`FaultPlan` (pre-campaign only:
+        the plan's seed and error rate are baked into the device hyper
+        dict at commit time)."""
+        if self._started:
+            raise RuntimeError(
+                "fault plan must be set before the first device step"
+            )
+        self._fault_plan = plan
+        self._host.set_fault_plan(plan)
 
     @property
     def interruptions(self):
@@ -348,15 +383,19 @@ class ShardedProvider:
         # the cancel step has no admission code, so its compilation is
         # independent of n — collapse the cache key
         n = 0 if kind == "cancel" else int(n)
-        if (n, kind) in self._steps:
-            return self._steps[(n, kind)]
+        # `faults` is a *static* flag: the faults-off compiled step is
+        # byte-for-byte today's computation (no error draws, no blackout
+        # gate), so chaos support costs the fault-free path nothing
+        faults = self._fault_plan is not None
+        if (n, kind, faults) in self._steps:
+            return self._steps[(n, kind, faults)]
         d_max = max(int(np.asarray(self._state["target_nodes"]).max()), 1)
-        key = (self.mesh, self.padded_pools, d_max, n, kind)
+        key = (self.mesh, self.padded_pools, d_max, n, kind, faults)
         fn = _STEP_CACHE.get(key)
         if fn is None:
-            fn = _build_step(self.mesh, d_max, n, kind)
+            fn = _build_step(self.mesh, d_max, n, kind, faults)
             _STEP_CACHE[key] = fn
-        self._steps[(n, kind)] = fn
+        self._steps[(n, kind, faults)] = fn
         return fn
 
     # -- campaign-facing API ------------------------------------------------
@@ -374,6 +413,11 @@ class ShardedProvider:
         pool_idx: np.ndarray,
         n: int,
         terminator_delay: float = 0.0,
+        *,
+        fault_codes: Optional[np.ndarray] = None,
+        attempt: Optional[np.ndarray] = None,
+        codes_out: Optional[np.ndarray] = None,
+        errors_out: Optional[np.ndarray] = None,
     ):
         """Advance to ``to_time`` and probe ``pool_idx`` with ``n``
         concurrent requests each, all in ``shard_map``-ped steps.
@@ -386,20 +430,57 @@ class ShardedProvider:
         RUNNING and are recorded on the host leaked-uid ledger (at the
         next event flush), exactly as on the fleet engine.
 
+        ``fault_codes`` / ``attempt`` / ``codes_out`` / ``errors_out``
+        mirror the numpy collectors: whole-call faults are billed
+        host-side and excluded from admission; retry-deferred pools are
+        dropped from the batch (``OUTCOME_DEFERRED``, no API call).
+
         Returns ``(S_t, running_t)`` for ``pool_idx`` (host arrays);
         ``self.probe_time`` carries the measurement timestamp (the
         admission time, not the post-delay clock).
         """
         pool_idx = np.asarray(pool_idx, dtype=np.int64)
         P = self.n_pools
-        if terminator_delay <= 0.0:
-            obs, _ = self._run(to_time, pool_idx, n, "scoot")
-            self.probe_time = self.now
+        if attempt is None:
+            sel_ix = None
+            run_idx, fc = pool_idx, fault_codes
+        else:
+            sel_ix = np.nonzero(np.asarray(attempt, dtype=bool))[0]
+            run_idx = pool_idx[sel_ix]
+            fc = None if fault_codes is None else fault_codes[sel_ix]
+
+        def unpack(obs):
             obs = np.asarray(obs)
-            return obs[0, :P][pool_idx], obs[1, :P][pool_idx]
-        obs_h, _ = self._run(to_time, pool_idx, n, "hold")
+            counts_all, running_all = obs[0, :P], obs[1, :P]
+            err_all = obs[2, :P] if obs.shape[0] > 2 else None
+            if codes_out is not None:
+                if sel_ix is None:
+                    codes_out[:] = self._last_codes
+                else:
+                    codes_out[:] = OUTCOME_DEFERRED
+                    codes_out[sel_ix] = self._last_codes
+            if errors_out is not None:
+                errors_out[:] = 0
+                if err_all is not None:
+                    if sel_ix is None:
+                        errors_out[:] = err_all[pool_idx]
+                    else:
+                        errors_out[sel_ix] = err_all[run_idx]
+            if sel_ix is None:
+                s = counts_all[pool_idx]
+            else:
+                s = np.zeros(len(pool_idx), dtype=np.int64)
+                s[sel_ix] = counts_all[run_idx]
+            return s, counts_all, running_all
+
+        if terminator_delay <= 0.0:
+            obs, _ = self._run(to_time, run_idx, n, "scoot", fault_codes=fc)
+            self.probe_time = self.now
+            s, _counts, running = unpack(obs)
+            return s, running[pool_idx]
+        obs_h, _ = self._run(to_time, run_idx, n, "hold", fault_codes=fc)
         self.probe_time = self.now
-        counts = np.asarray(obs_h)[0, :P]
+        s, counts, _running = unpack(obs_h)
         obs_c, puid0 = self._run(
             to_time + float(terminator_delay), None, n, "cancel"
         )
@@ -411,16 +492,15 @@ class ShardedProvider:
              >= self.provisioning_duration),
             None,
         )
-        sel = counts[pool_idx]
-        nz = sel > 0
-        if settle_at is not None and nz.any():
+        nz_idx = run_idx[counts[run_idx] > 0]
+        if settle_at is not None and nz_idx.size:
             # puid0 stays an unfetched device array until the flush
             self._pending.append(
-                ("probe", settle_at, pool_idx[nz], sel[nz], puid0)
+                ("probe", settle_at, nz_idx, counts[nz_idx], puid0)
             )
-            self._pending_entries += int(nz.sum())
+            self._pending_entries += int(nz_idx.size)
         running = np.asarray(obs_c)[1, :P]
-        return sel, running[pool_idx]
+        return s, running[pool_idx]
 
     def _run(
         self,
@@ -428,6 +508,7 @@ class ShardedProvider:
         pool_idx: Optional[np.ndarray],
         n: int,
         kind: str,
+        fault_codes: Optional[np.ndarray] = None,
     ):
         if to_time < self.now:
             raise ValueError("time moves forward only")
@@ -462,13 +543,40 @@ class ShardedProvider:
         else:
             l_dwell = np.zeros((0, Pp))
             l_noise = np.zeros((0, Pp))
+        # -- host-side blackout gating of replenishment: same pure window
+        # function `_replenish_batch` consults, evaluated at the same
+        # tick times, fed to the device step as a (ticks, Pp) mask
+        plan = self._fault_plan
+        if plan is not None:
+            blk = np.zeros((n_ticks, Pp), dtype=bool)
+            if plan.blackout is not None and n_ticks:
+                blk[:, : self.n_pools] = plan.blackout_mask(
+                    nows_a, self._host.region_code
+                )
+            blk_arg = (blk,)
+        else:
+            # the faults-off compiled step takes no blackout input at all
+            # (trailing optional arg), so the fault substrate adds zero
+            # host allocation / transfer / fetch to the fault-free path
+            blk_arg = ()
         # -- host-side rate limiting (sequential per-region semantics)
         self._host.now = now  # host clock tracks the device clock
         probe_mask = np.zeros(Pp, dtype=bool)
         do_submit = pool_idx is not None
         if do_submit:
             admitted = self._host._charge_rate_limit_batch(pool_idx, n)
-            probe_mask[pool_idx[admitted]] = True
+            codes = np.zeros(len(pool_idx), dtype=np.uint8)
+            if fault_codes is None:
+                live = admitted
+            else:
+                fault_codes = np.asarray(fault_codes, dtype=np.uint8)
+                faulted = fault_codes != OUTCOME_OK
+                live = admitted & ~faulted
+                self._host.fault_api_calls += int((admitted & faulted).sum()) * n
+                codes[faulted] = fault_codes[faulted]
+            codes[~admitted] = OUTCOME_RATE_LIMITED  # rate limiting wins
+            self._last_codes = codes
+            probe_mask[pool_idx[live]] = True
 
         from jax.experimental import enable_x64
 
@@ -478,8 +586,9 @@ class ShardedProvider:
                 self._commit_to_devices()
             st, obs, k_rec, uid0, puid0 = fn(
                 self._hyper, self._params, self._state, nows_a, ticks_a,
-                l_dwell, l_noise, np.float64(frac_now), np.bool_(do_frac),
-                probe_mask, np.bool_(do_submit), np.float64(now),
+                l_dwell, l_noise, np.float64(frac_now),
+                np.bool_(do_frac), probe_mask, np.bool_(do_submit),
+                np.float64(now), *blk_arg,
             )
         self._state = st
         self.now = now
@@ -554,10 +663,20 @@ class ShardedProvider:
         from jax.sharding import NamedSharding
         from jax.sharding import PartitionSpec as PS
 
+        plan = self._fault_plan
+        fseed = plan.seed if plan is not None else 0
         with np.errstate(over="ignore"):  # uint64 wraparound is the hash
             h0 = _U64(self._seed & 0xFFFFFFFFFFFFFFFF) * _GOLDEN
+            fh0 = _U64(fseed & 0xFFFFFFFFFFFFFFFF) * _GOLDEN
         self._hyper = {
             "h0": h0,
+            # fault-plan hash + transient-error rate: always present so
+            # the hyper pytree shape is static; DCE'd by the faults-off
+            # compiled step
+            "fh0": fh0,
+            "err_p": np.float64(
+                plan.request_error_p if plan is not None else 0.0
+            ),
             "pd": np.float64(self.provisioning_duration),
             "decay": np.float64(self._host._margin_decay),
             "replenish_delay": np.float64(self.replenish_delay),
@@ -567,7 +686,39 @@ class ShardedProvider:
         self._state = jax.device_put(self._state, sharded)
         self._started = True
 
-def _build_step(mesh, d_max: int, n: int, kind: str):
+    # -- crash-consistent checkpoints ---------------------------------------
+
+    def state_dict(self) -> dict:
+        """Snapshot at a step boundary: deferred events are flushed, the
+        device-resident state is fetched to host, and the host provider
+        (ledgers, rate windows, RNG counters) is captured — plain numpy
+        containers, picklable."""
+        self._flush_events()
+        return {
+            "now": self.now,
+            "probe_time": self.probe_time,
+            "tick_count": self._tick_count,
+            "state": {
+                k: np.asarray(v).copy() for k, v in self._state.items()
+            },
+            "host": self._host.state_dict(),
+        }
+
+    def restore(self, sd: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot onto a freshly
+        constructed, identically configured provider.  The state is
+        re-committed to the devices on the next step."""
+        self._host.restore(sd["host"])
+        self.now = float(sd["now"])
+        self.probe_time = float(sd["probe_time"])
+        self._tick_count = int(sd["tick_count"])
+        self._state = {k: v.copy() for k, v in sd["state"].items()}
+        self._pending = []
+        self._pending_entries = 0
+        self._started = False  # device_put again on the next _run
+
+
+def _build_step(mesh, d_max: int, n: int, kind: str, faults: bool):
     """Compile the one-cycle device step for ``(mesh, d_max, n, kind)``.
 
     The returned function is ``jit(shard_map(step), donate_argnums)``
@@ -620,7 +771,10 @@ def _build_step(mesh, d_max: int, n: int, kind: str):
         return st, puid0
 
     def tick_body(hyper, params, carry, xs):
-        now, tick_id, l_dwell, l_noise = xs
+        if faults:
+            now, tick_id, l_dwell, l_noise, blk_t = xs
+        else:
+            now, tick_id, l_dwell, l_noise = xs
         st, puid0 = carry
         ku = partial(_dev_keyed_uniform, hyper["h0"])
         st = dict(st)
@@ -706,6 +860,10 @@ def _build_step(mesh, d_max: int, n: int, kind: str):
             & (now >= st["replenish_at"])
             & (deficit > 0)
         )
+        if faults:
+            # blackout windows suppress replenishment (host-evaluated
+            # mask — same gate `_replenish_batch` applies at this tick)
+            mask = mask & ~blk_t
         j = jnp.arange(d_max, dtype=jnp.int64)
         u_rep = ku(pool[:, None], tick_id, _TAG_REPLENISH + j[None, :])
         headroom = (
@@ -730,15 +888,18 @@ def _build_step(mesh, d_max: int, n: int, kind: str):
 
     def step(
         hyper, params, st, nows, tick_ids, l_dwell, l_noise,
-        frac_now, do_frac, probe_mask, do_submit, sub_now,
+        frac_now, do_frac, probe_mask, do_submit, sub_now, blk=None,
     ):
         puid0 = jnp.full_like(st["next_uid"], -1)
+        xs = (nows, tick_ids, l_dwell, l_noise)
+        if faults:
+            xs = xs + (blk,)
         (st, puid0), (k_rec, uid0) = lax.scan(
-            partial(tick_body, hyper, params), (dict(st), puid0),
-            (nows, tick_ids, l_dwell, l_noise),
+            partial(tick_body, hyper, params), (dict(st), puid0), xs,
         )
         st, puid0 = settle(hyper, st, puid0, frac_now, do_frac)
         pool = params["pool_ix"]
+        err_counts = jnp.zeros_like(st["n_running"])
         if kind == "cancel":
             # the fleet engine's cancel_cohorts: pending (unsettled)
             # probes stop provisioning; settled ones already leaked
@@ -755,6 +916,20 @@ def _build_step(mesh, d_max: int, n: int, kind: str):
                 _TAG_SUBMIT + jnp.arange(n, dtype=jnp.int64)[None, :],
             )
             okf = u >= _FLAKE_P
+            if faults:
+                # device twin of FaultPlan.request_errors: same keys
+                # (fault seed, pool, submit_seq, error tag + j), so every
+                # engine rejects the exact same requests
+                u_err = _dev_keyed_uniform(
+                    hyper["fh0"], pool[:, None], seq[:, None],
+                    _TAG_REQUEST_ERROR
+                    + jnp.arange(n, dtype=jnp.int64)[None, :],
+                )
+                errm = u_err < hyper["err_p"]
+                okf = okf & ~errm
+                err_counts = jnp.where(
+                    active, errm.sum(axis=1).astype(jnp.int64), 0
+                )
             headroom = (
                 st["capacity"]
                 - st["n_running"]
@@ -768,7 +943,12 @@ def _build_step(mesh, d_max: int, n: int, kind: str):
                 st["n_provisioning"] = st["n_provisioning"] + counts
                 st["probe_count"] = jnp.where(active, counts, st["probe_count"])
                 st["probe_start"] = jnp.where(active, sub_now, st["probe_start"])
-        obs = jnp.stack([counts, st["n_running"]])
+        # faults-off obs is the pre-chaos 2-row fetch (counts, running);
+        # the error row only exists when the plan can produce errors
+        obs = jnp.stack(
+            [counts, st["n_running"], err_counts] if faults
+            else [counts, st["n_running"]]
+        )
         return st, obs, k_rec, uid0, puid0
 
     sharded = PS("pools")
@@ -781,7 +961,7 @@ def _build_step(mesh, d_max: int, n: int, kind: str):
             in_specs=(
                 rep, sharded, sharded, rep, rep, ticks_sharded, ticks_sharded,
                 rep, rep, sharded, rep, rep,
-            ),
+            ) + ((ticks_sharded,) if faults else ()),
             out_specs=(
                 sharded, ticks_sharded, ticks_sharded, ticks_sharded, sharded
             ),
@@ -806,6 +986,8 @@ def run_sharded_campaign(
     on_cycle=None,
     shards: Optional[int] = None,
     pad_multiple: Optional[int] = None,
+    fault_plan=None,
+    retry_policy=None,
 ) -> CampaignResult:
     """§III-B campaign on the mesh-sharded engine (see module docstring).
 
@@ -833,6 +1015,8 @@ def run_sharded_campaign(
         engine="sharded",
         shards=shards,
         pad_multiple=pad_multiple,
+        fault_plan=fault_plan,
+        retry_policy=retry_policy,
     )
     for cyc in stream:
         if on_cycle is not None:

@@ -125,6 +125,8 @@ class FleetAdmissionController:
         probs: Optional[np.ndarray] = None,
         *,
         features: Optional[np.ndarray] = None,
+        staleness: Optional[np.ndarray] = None,
+        max_staleness: int = 0,
     ) -> np.ndarray:
         """Decide the whole fleet for one cycle.
 
@@ -132,6 +134,14 @@ class FleetAdmissionController:
         ``(pools, F)`` feature matrix to route through the controller's
         batched ``predictor``.  Returns a ``(pools,)`` bool mask: True
         where NEW requests may be admitted this cycle.
+
+        ``staleness`` (optional ``(pools,)`` int — e.g. the pipeline's
+        :attr:`~repro.core.pipeline.StreamCycleView.staleness` under
+        faults) enables conservative degradation: pools whose features are
+        more than ``max_staleness`` cycles stale are never admitted this
+        cycle, regardless of their (carried-forward) score.  Defer clocks
+        still advance normally, so a stale-but-risky pool serves its defer
+        window like any other.
         """
         if probs is None:
             if features is None:
@@ -148,7 +158,15 @@ class FleetAdmissionController:
         self.defer_until = np.where(
             start, cycle + self.horizon_cycles, self.defer_until
         )
-        return ~deferred & ~risky
+        admit = ~deferred & ~risky
+        if staleness is not None:
+            stale = np.asarray(staleness, dtype=np.int64)
+            if stale.shape != (self.pools,):
+                raise ValueError(
+                    f"staleness shape {stale.shape} != ({self.pools},)"
+                )
+            admit = admit & ~(stale > int(max_staleness))
+        return admit
 
 
 @dataclasses.dataclass

@@ -1,0 +1,221 @@
+"""Crash-consistent campaign checkpoints: kill at cycle k, restore into a
+fresh identically-configured stream, drain — bit-identical to the
+uninterrupted run on every engine, with and without chaos."""
+
+import pickle
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    FaultPlan,
+    RetryPolicy,
+    SimulatedProvider,
+    ThrottleBursts,
+    default_fleet,
+)
+from repro.core.collector import CampaignStream
+from repro.core.pipeline import CampaignPipelineStream
+
+ENGINES = ("fleet", "scalar", "sharded")
+
+CHAOS = dict(
+    fault_plan=FaultPlan(
+        seed=11,
+        throttle=ThrottleBursts(p=0.5, epoch=900.0, mean_duration=400.0),
+        request_error_p=0.05,
+        timeout_p=0.1,
+    ),
+    retry_policy=RetryPolicy(seed=5),
+)
+
+
+def mk_stream(engine, chaos=False, **kw):
+    prov = SimulatedProvider(default_fleet(6, seed=3), seed=3)
+    kw.setdefault("duration", 3600.0)
+    if chaos:
+        kw.update(CHAOS)
+    return CampaignStream(prov, engine=engine, **kw)
+
+
+def assert_results_identical(ra, rb):
+    np.testing.assert_array_equal(ra.s, rb.s)
+    np.testing.assert_array_equal(ra.running, rb.running)
+    np.testing.assert_array_equal(ra.times, rb.times)
+    assert ra.interruptions == rb.interruptions
+    assert ra.api_calls == rb.api_calls
+    assert ra.fault_api_calls == rb.fault_api_calls
+    assert ra.probe_compute_cost == rb.probe_compute_cost
+    assert ra.node_pool_cost == rb.node_pool_cost
+    if ra.codes is None:
+        assert rb.codes is None
+    else:
+        np.testing.assert_array_equal(ra.codes, rb.codes)
+        np.testing.assert_array_equal(ra.errors, rb.errors)
+
+
+def kill_restore_drain(engine, k, chaos, **kw):
+    ref = mk_stream(engine, chaos, **kw)
+    while ref.step() is not None:
+        pass
+    interrupted = mk_stream(engine, chaos, **kw)
+    for _ in range(k):
+        interrupted.step()
+    # a checkpoint must survive serialization — the crash-consistency
+    # contract is over the persisted bytes, not live object graphs
+    blob = pickle.dumps(interrupted.state_dict())
+    del interrupted
+    resumed = mk_stream(engine, chaos, **kw)
+    resumed.restore(pickle.loads(blob))
+    while resumed.step() is not None:
+        pass
+    assert_results_identical(ref.result(), resumed.result())
+
+
+class TestKillRestoreDrain:
+    """Acceptance (b), all engines × {clean, chaos} at a fixed boundary."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_clean(self, engine):
+        kill_restore_drain(engine, k=7, chaos=False)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_chaos(self, engine):
+        kill_restore_drain(engine, k=7, chaos=True)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_boundary_cycles(self, engine):
+        # kill before the first step and after the last one
+        kill_restore_drain(engine, k=0, chaos=True, duration=1800.0)
+        kill_restore_drain(engine, k=10, chaos=True, duration=1800.0)
+
+    @settings(max_examples=6)
+    @given(
+        engine=st.sampled_from(ENGINES),
+        k=st.integers(min_value=0, max_value=20),
+        chaos=st.booleans(),
+    )
+    def test_randomized_boundaries(self, engine, k, chaos):
+        kill_restore_drain(engine, k=k, chaos=chaos)
+
+    def test_terminator_delay_pending_cancels(self):
+        # the slow-terminator scoot path holds pending cancels across
+        # cycles — the snapshot must reproduce them
+        for engine in ("fleet", "sharded"):
+            kill_restore_drain(engine, k=5, chaos=True, terminator_delay=30.0)
+
+    def test_engine_mismatch_rejected(self):
+        sd = mk_stream("fleet").state_dict()
+        with pytest.raises(ValueError):
+            mk_stream("scalar").restore(sd)
+
+
+class TestPipelineCheckpoint:
+    """The full measure → featurize → predict stream restores too."""
+
+    def _mk(self, engine="fleet"):
+        prov = SimulatedProvider(default_fleet(6, seed=3), seed=3)
+        return CampaignPipelineStream(
+            prov,
+            duration=3600.0,
+            engine=engine,
+            predict_fn=lambda X: 1.0 - 0.5 * X[:, 0],
+            **CHAOS,
+        )
+
+    def test_kill_restore_views_and_tables(self):
+        ref = self._mk()
+        ref_views = [
+            (v.features.copy(), None if v.probs is None else v.probs.copy(),
+             None if v.staleness is None else v.staleness.copy())
+            for v in ref
+        ]
+        a = self._mk()
+        for _ in range(7):
+            a.step()
+        blob = pickle.dumps(a.state_dict())
+        b = self._mk()
+        b.restore(pickle.loads(blob))
+        tail = [
+            (v.features.copy(), None if v.probs is None else v.probs.copy(),
+             None if v.staleness is None else v.staleness.copy())
+            for v in b
+        ]
+        assert len(tail) == len(ref_views) - 7
+        for x, y in zip(ref_views[7:], tail):
+            np.testing.assert_array_equal(x[0], y[0])
+            np.testing.assert_array_equal(x[1], y[1])
+            np.testing.assert_array_equal(x[2], y[2])
+        assert_results_identical(ref.result(), b.result())
+        pa, pb = ref.processor, b.processor
+        np.testing.assert_array_equal(pa.table.features, pb.table.features)
+        np.testing.assert_array_equal(
+            pa.table.predictions, pb.table.predictions
+        )
+        np.testing.assert_array_equal(pa.state.staleness, pb.state.staleness)
+
+    def test_window_wrap_archives_restore(self):
+        # long enough that the ring wraps and evictions archive
+        from repro.core.pipeline import FleetFeatureProcessor
+
+        def mk():
+            prov = SimulatedProvider(default_fleet(4, seed=1), seed=1)
+            proc = FleetFeatureProcessor(
+                prov.pool_ids, window_minutes=15.0, archive_evicted=True
+            )
+            return CampaignPipelineStream(
+                prov, processor=proc, duration=4 * 3600.0, engine="fleet"
+            )
+
+        a = mk()
+        for _ in range(30):
+            a.step()
+        assert a.processor.table.archived_cycles > 0
+        blob = pickle.dumps(a.state_dict())
+        b = mk()
+        b.restore(pickle.loads(blob))
+        while a.step() is not None:
+            pass
+        while b.step() is not None:
+            pass
+        np.testing.assert_array_equal(a.result().s, b.result().s)
+        ta, tb = a.processor.table, b.processor.table
+        assert ta.archived_cycles == tb.archived_cycles
+        assert len(ta._archive_blocks) == len(tb._archive_blocks)
+        for x, y in zip(ta._archive_blocks, tb._archive_blocks):
+            np.testing.assert_array_equal(x, y)
+
+
+class TestSnapshotHygiene:
+    def test_state_dict_is_a_deep_snapshot(self):
+        # mutating the live stream after state_dict() must not leak into
+        # the snapshot
+        a = mk_stream("fleet", chaos=True)
+        for _ in range(5):
+            a.step()
+        sd = a.state_dict()
+        blob = pickle.dumps(sd)
+        for _ in range(5):
+            a.step()
+        assert pickle.dumps(a.state_dict()) != blob  # stream moved on
+        b = mk_stream("fleet", chaos=True)
+        b.restore(pickle.loads(blob))
+        c = mk_stream("fleet", chaos=True)
+        c.restore(sd)
+        while b.step() is not None:
+            pass
+        while c.step() is not None:
+            pass
+        assert_results_identical(b.result(), c.result())
+
+    def test_scalar_slow_terminator_snapshot_unsupported(self):
+        # the scalar engine's slow-terminator path holds live request
+        # objects — snapshotting mid-flight is explicitly refused rather
+        # than silently wrong
+        s = mk_stream("scalar", chaos=False, terminator_delay=30.0)
+        for _ in range(3):
+            s.step()
+        with pytest.raises(NotImplementedError):
+            s.state_dict()

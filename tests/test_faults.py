@@ -1,0 +1,381 @@
+"""Chaos substrate: fault injection, retry/backoff control plane, and
+graceful degradation — cross-engine bit-identity and unit properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BILLED_FAULT_CODES,
+    OUTCOME_BLACKOUT,
+    OUTCOME_DEFERRED,
+    OUTCOME_NAMES,
+    OUTCOME_OK,
+    OUTCOME_RATE_LIMITED,
+    OUTCOME_THROTTLED,
+    OUTCOME_TIMEOUT,
+    BlackoutWindows,
+    FaultPlan,
+    RetryController,
+    RetryPolicy,
+    SimulatedProvider,
+    ThrottleBursts,
+    backoff_delays,
+    base_backoff,
+    cost_report,
+    default_fleet,
+    describe_codes,
+    run_campaign,
+)
+from repro.core.features import init_fleet_state, update_batch
+from repro.core.retry import BREAKER_CLOSED, BREAKER_HALF_OPEN, BREAKER_OPEN
+from repro.serve import FleetAdmissionController
+
+
+def fresh(n_pools=6, seed=3, **kw):
+    return SimulatedProvider(default_fleet(n_pools, seed=seed), seed=seed, **kw)
+
+
+CHAOS_PLAN = FaultPlan(
+    seed=11,
+    throttle=ThrottleBursts(p=0.5, epoch=900.0, mean_duration=400.0),
+    blackout=BlackoutWindows(p=0.3, epoch=1800.0, mean_duration=600.0),
+    request_error_p=0.05,
+    timeout_p=0.1,
+)
+
+
+def assert_chaos_identical(ca, cb):
+    np.testing.assert_array_equal(ca.s, cb.s)
+    np.testing.assert_array_equal(ca.running, cb.running)
+    np.testing.assert_array_equal(ca.codes, cb.codes)
+    np.testing.assert_array_equal(ca.errors, cb.errors)
+    np.testing.assert_array_equal(ca.valid, cb.valid)
+    assert ca.interruptions == cb.interruptions
+    assert ca.api_calls == cb.api_calls
+    assert ca.fault_api_calls == cb.fault_api_calls
+    assert ca.probe_compute_cost == cb.probe_compute_cost
+    assert ca.node_pool_cost == cb.node_pool_cost
+
+
+class TestEngineParityUnderFaults:
+    """Acceptance (a): scalar ≡ fleet ≡ sharded, atol=0, under any
+    FaultPlan — including ledgers, cost, and API-call accounting."""
+
+    @pytest.fixture(scope="class")
+    def trio(self):
+        kw = dict(
+            duration=2 * 3600.0,
+            fault_plan=CHAOS_PLAN,
+            retry_policy=RetryPolicy(seed=5),
+        )
+        return {
+            eng: run_campaign(fresh(), engine=eng, **kw)
+            for eng in ("fleet", "scalar", "sharded")
+        }
+
+    def test_all_engines_identical(self, trio):
+        assert_chaos_identical(trio["fleet"], trio["scalar"])
+        assert_chaos_identical(trio["fleet"], trio["sharded"])
+
+    def test_faults_actually_fired(self, trio):
+        hist = describe_codes(trio["fleet"].codes)
+        # the comparison must have teeth: every injected class shows up
+        for name in ("throttled", "timeout", "blackout", "deferred"):
+            assert hist.get(name, 0) > 0, hist
+        assert trio["fleet"].fault_api_calls > 0
+        assert trio["fleet"].errors.sum() > 0
+
+    def test_fault_seed_changes_faults_only_determinism(self):
+        kw = dict(duration=3600.0, fault_plan=CHAOS_PLAN)
+        a = run_campaign(fresh(), engine="fleet", **kw)
+        b = run_campaign(fresh(), engine="fleet", **kw)
+        assert_chaos_identical(a, b)  # same plan → fully reproducible
+
+    def test_billing_split(self, trio):
+        res = trio["fleet"]
+        # billed fault calls are a subset of total api_calls, and each
+        # billed fault cycle bills exactly n requests
+        assert 0 < res.fault_api_calls < res.api_calls
+        billed = np.isin(res.codes, np.array(BILLED_FAULT_CODES, np.uint8))
+        assert res.fault_api_calls == billed.sum() * res.n
+        # deferred and rate-limited cycles charge nothing
+        free = np.isin(
+            res.codes, np.array([OUTCOME_DEFERRED, OUTCOME_RATE_LIMITED], np.uint8)
+        )
+        ok = res.codes == OUTCOME_OK
+        assert res.api_calls == (ok.sum() + billed.sum()) * res.n
+        assert free.sum() > 0
+
+    def test_faulted_cycles_count_zero(self, trio):
+        res = trio["fleet"]
+        assert (res.s[res.codes != OUTCOME_OK] == 0).all()
+        np.testing.assert_array_equal(res.valid, res.codes == OUTCOME_OK)
+
+    def test_cost_report_breaks_out_fault_spend(self, trio):
+        rep = cost_report(trio["fleet"])
+        assert rep.fault_api_calls == trio["fleet"].fault_api_calls
+        clean = run_campaign(fresh(), engine="fleet", duration=3600.0)
+        assert cost_report(clean).fault_api_calls == 0
+
+
+class TestFaultsOffUnchanged:
+    """plan=None / policy=None is the exact historical campaign."""
+
+    def test_no_plan_no_codes(self):
+        res = run_campaign(fresh(), engine="fleet", duration=3600.0)
+        assert res.codes is None and res.errors is None and res.valid is None
+        assert res.fault_api_calls == 0
+
+    def test_trivial_plan_matches_no_plan(self):
+        # a plan with all rates zero draws nothing and changes nothing
+        base = run_campaign(fresh(), engine="fleet", duration=3600.0)
+        noop = run_campaign(
+            fresh(), engine="fleet", duration=3600.0, fault_plan=FaultPlan(seed=9)
+        )
+        np.testing.assert_array_equal(base.s, noop.s)
+        np.testing.assert_array_equal(base.running, noop.running)
+        assert base.api_calls == noop.api_calls
+        assert noop.fault_api_calls == 0
+        assert (noop.codes == OUTCOME_OK).all()
+
+
+class TestOutcomeLedger:
+    """Satellite (b): fault outcomes are first-class in the DataLake."""
+
+    def test_scalar_lake_outcome_counts_match_codes(self):
+        prov = fresh()
+        from repro.core.collector import CampaignStream
+
+        stream = CampaignStream(
+            prov, duration=3600.0, engine="scalar", fault_plan=CHAOS_PLAN
+        )
+        while stream.step() is not None:
+            pass
+        res = stream.result()
+        lake = stream._collector.lake
+        counts = lake.outcome_counts(stream.pool_ids)
+        assert counts.shape == (len(stream.pool_ids), len(OUTCOME_NAMES))
+        # every billed-fault pool-cycle wrote n rows with its fault code
+        for code in (OUTCOME_THROTTLED, OUTCOME_TIMEOUT, OUTCOME_BLACKOUT):
+            per_pool = (res.codes == code).sum(axis=1) * res.n
+            np.testing.assert_array_equal(counts[:, code], per_pool)
+        # deferred / rate-limited cycles record nothing
+        assert counts[:, OUTCOME_DEFERRED].sum() == 0
+        assert counts[:, OUTCOME_RATE_LIMITED].sum() == 0
+
+    def test_lake_outcome_counts_survive_block_flush(self, monkeypatch):
+        import repro.core.collector as collector_mod
+
+        monkeypatch.setattr(collector_mod, "_LAKE_BLOCK", 4)
+        for retain in (True, False):
+            lake = collector_mod.DataLake(retain_records=retain)
+            for i in range(13):
+                lake.add(
+                    float(i), "poolA", i % 2 == 0, i,
+                    OUTCOME_TIMEOUT if i % 3 == 0 else None,
+                )
+            counts = lake.outcome_counts(["poolA"])
+            assert counts[0, OUTCOME_TIMEOUT] == 5
+            assert counts.sum() == 13
+
+
+class TestBackoffProperties:
+    """Satellite (c): property tests for the retry control plane."""
+
+    @settings(max_examples=50)
+    @given(
+        base=st.integers(min_value=1, max_value=8),
+        cap=st.integers(min_value=8, max_value=64),
+    )
+    def test_backoff_monotone_and_capped(self, base, cap):
+        pol = RetryPolicy(base_delay_cycles=base, max_delay_cycles=cap)
+        streaks = np.arange(1, 80)
+        d = base_backoff(pol, streaks)
+        assert (np.diff(d) >= 0).all()          # monotone in streak
+        assert (d <= cap).all() and d[-1] == cap  # capped, cap reached
+        assert d[0] == base
+        # no int64 overflow at absurd streaks
+        assert base_backoff(pol, np.array([10_000]))[0] == cap
+
+    @settings(max_examples=30)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31),
+        cycle=st.integers(min_value=0, max_value=10_000),
+        streak=st.integers(min_value=1, max_value=40),
+        jitter=st.floats(min_value=0.0, max_value=1.0),
+    )
+    def test_jitter_deterministic_and_bounded(self, seed, cycle, streak, jitter):
+        pol = RetryPolicy(seed=seed, jitter=jitter)
+        pools = np.arange(5)
+        streaks = np.full(5, streak)
+        a = backoff_delays(pol, streaks, pools, cycle)
+        b = backoff_delays(pol, streaks, pools, cycle)
+        np.testing.assert_array_equal(a, b)  # pure in (seed, pool, cycle)
+        base = base_backoff(pol, streaks)
+        assert (a >= base).all()
+        # extra = floor(u * (jitter*base + 1)) with u < 1, so strictly
+        # below jitter*base + 1 above the un-jittered delay
+        assert (a < base + jitter * base + 1).all()
+
+    def test_breaker_state_machine(self):
+        pol = RetryPolicy(
+            base_delay_cycles=1, max_delay_cycles=1, jitter=0.0,
+            breaker_threshold=3, breaker_cooldown_cycles=4,
+        )
+        ctrl = RetryController(1, pol)
+        fault = np.array([OUTCOME_THROTTLED], np.uint8)
+        ok = np.array([OUTCOME_OK], np.uint8)
+        on = np.array([True])
+        cycle = 0
+        # threshold-1 faults keep the breaker closed
+        for _ in range(pol.breaker_threshold - 1):
+            assert ctrl.attempt_mask(cycle)[0]
+            ctrl.observe(cycle, on, fault)
+            assert ctrl.breaker[0] == BREAKER_CLOSED
+            cycle = int(ctrl.retry_at[0])
+        # the threshold-th trips it open
+        assert ctrl.attempt_mask(cycle)[0]
+        ctrl.observe(cycle, on, fault)
+        assert ctrl.breaker[0] == BREAKER_OPEN
+        # open: no attempts until cooldown elapses, then half-open probe
+        for c in range(cycle + 1, cycle + pol.breaker_cooldown_cycles):
+            assert not ctrl.attempt_mask(c)[0]
+        probe_cycle = cycle + pol.breaker_cooldown_cycles
+        assert ctrl.attempt_mask(probe_cycle)[0]
+        assert ctrl.breaker[0] == BREAKER_HALF_OPEN
+        # half-open + fault → straight back to open
+        ctrl.observe(probe_cycle, on, fault)
+        assert ctrl.breaker[0] == BREAKER_OPEN
+        # next probe succeeds → closed, streak cleared
+        probe2 = probe_cycle + pol.breaker_cooldown_cycles
+        assert ctrl.attempt_mask(probe2)[0]
+        ctrl.observe(probe2, on, ok)
+        assert ctrl.breaker[0] == BREAKER_CLOSED
+        assert ctrl.fail_streak[0] == 0
+        assert ctrl.attempt_mask(probe2 + 1)[0]
+
+    def test_capacity_rejection_is_not_a_control_plane_fault(self):
+        ctrl = RetryController(1, RetryPolicy(breaker_threshold=1))
+        for cycle in range(5):
+            ctrl.observe(cycle, np.array([True]), np.array([OUTCOME_OK], np.uint8))
+        assert ctrl.breaker[0] == BREAKER_CLOSED
+
+    def test_token_bucket_pre_gates_in_pool_order(self):
+        rc = np.zeros(6, np.int64)
+        ctrl = RetryController(6, RetryPolicy(), region_code=rc, n_requests=10)
+        mask = ctrl.attempt_mask(0, region_budget=np.array([35]))
+        # 35 // 10 = 3 attempts fit; first three eligible pools win
+        np.testing.assert_array_equal(mask, [True, True, True, False, False, False])
+
+
+class TestRateLimitSemantics:
+    """Satellite (a): scalar strict/lenient rate-limit reconciliation."""
+
+    def _tight(self, seed=7):
+        # all pools in ONE region + a budget of 2 pools' worth of requests
+        # per minute: every cycle starves 4 of the 6 pools
+        import dataclasses
+
+        pools = [
+            dataclasses.replace(p, region="us-east-1")
+            for p in default_fleet(6, seed=seed)
+        ]
+        return SimulatedProvider(
+            pools, seed=seed, requests_per_minute_per_region=25
+        )
+
+    def test_starvation_parity_scalar_vs_fleet(self):
+        ca = run_campaign(self._tight(), engine="fleet", duration=3600.0,
+                          fault_plan=FaultPlan(seed=1))
+        cb = run_campaign(self._tight(), engine="scalar", duration=3600.0,
+                          fault_plan=FaultPlan(seed=1))
+        assert_chaos_identical(ca, cb)
+        # starvation really happened: some cycles were rate-limited
+        assert (ca.codes == OUTCOME_RATE_LIMITED).sum() > 0
+
+    def test_strict_flag_same_observables(self):
+        from repro.core.collector import SnSCollector
+
+        outs = []
+        for strict in (False, True):
+            prov = self._tight()
+            coll = SnSCollector(
+                prov, prov.pool_ids, n_requests=10, strict_rate_limit=strict
+            )
+            s = [list(map(int, coll.run_cycle(c))) for c in range(8)]
+            outs.append((s, prov.api_calls, len(coll.lake)))
+        assert outs[0] == outs[1]
+
+
+class TestGracefulDegradation:
+    """Tentpole part 4: masked observations + staleness + conservative
+    admission."""
+
+    def test_update_batch_all_valid_is_historical_path(self):
+        rng = np.random.default_rng(0)
+        n, cycles, pools = 10, 40, 5
+        s = rng.integers(0, n + 1, size=(pools, cycles))
+        a = init_fleet_state(pools, n, 30.0, 3.0)
+        b = init_fleet_state(pools, n, 30.0, 3.0)
+        for t in range(cycles):
+            a, fa = update_batch(a, s[:, t])
+            b, fb = update_batch(b, s[:, t], np.ones(pools, bool))
+            np.testing.assert_array_equal(fa, fb)  # bit-identical
+        np.testing.assert_array_equal(a.p_t, b.p_t)
+        np.testing.assert_array_equal(a.cut, b.cut)
+
+    def test_update_batch_invalid_cycles_carry_forward(self):
+        # invalid cycles ingest nothing: P and CUT untouched, feature
+        # row carried forward verbatim (time still marches — UR treats
+        # the masked span as adding no unfulfillment)
+        rng = np.random.default_rng(1)
+        n, cycles = 10, 30
+        s = rng.integers(0, n, size=(1, cycles))  # never full → CUT grows
+        valid = rng.random(cycles) > 0.4
+        valid[0] = True
+        state = init_fleet_state(1, n, 30.0, 3.0)
+        prev_feats = None
+        for t in range(cycles):
+            p_before, cut_before = int(state.p_t[0]), float(state.cut[0])
+            state, feats = update_batch(state, s[:, t], np.array([valid[t]]))
+            if valid[t]:
+                assert int(state.p_t[0]) == p_before + n - int(s[0, t])
+            else:
+                assert int(state.p_t[0]) == p_before
+                assert float(state.cut[0]) == cut_before
+                np.testing.assert_array_equal(feats, prev_feats)
+            prev_feats = feats
+        assert not valid.all() and valid.sum() > 2  # the test had teeth
+
+    def test_staleness_counts_consecutive_invalid(self):
+        state = init_fleet_state(2, 10, 30.0, 3.0)
+        v = np.array([True, False])
+        for t in range(3):
+            state, _ = update_batch(state, np.array([5, 0]), v)
+        np.testing.assert_array_equal(state.staleness, [0, 3])
+        state, _ = update_batch(state, np.array([5, 5]), np.array([True, True]))
+        np.testing.assert_array_equal(state.staleness, [0, 0])
+
+    def test_admission_controller_blocks_stale_pools(self):
+        ctrl = FleetAdmissionController(3, threshold=0.9)
+        probs = np.array([0.99, 0.99, 0.99])  # all healthy by score
+        admit = ctrl.on_cycle(
+            0, probs, staleness=np.array([0, 1, 5]), max_staleness=1
+        )
+        np.testing.assert_array_equal(admit, [True, True, False])
+        # staleness gating must not start defer windows
+        admit = ctrl.on_cycle(1, probs, staleness=np.zeros(3, int))
+        assert admit.all()
+
+    def test_pipeline_stream_surfaces_staleness(self):
+        from repro.core.pipeline import CampaignPipelineStream
+
+        stream = CampaignPipelineStream(
+            fresh(), duration=3600.0, engine="fleet", fault_plan=CHAOS_PLAN
+        )
+        views = list(stream)
+        assert any(v.staleness is not None and v.staleness.max() > 0 for v in views)
+        clean = CampaignPipelineStream(fresh(), duration=1800.0, engine="fleet")
+        assert all(v.staleness is None for v in clean)
