@@ -7,7 +7,8 @@
 #   make docs     : docs checks only (examples compile, README snippets
 #                   import, markdown links resolve, example smoke runs)
 #   make bench    : full throughput benchmarks (assert >= 50x / >= 20x /
-#                   sharded best-size >= 1x fleet / >= 3x / serve >= 20x)
+#                   sharded best-size >= 1x fleet / >= 3x / serve >= 20x /
+#                   goodput scan >= 20x python loop)
 #   make bench-multidev : campaign + replay full benches with the
 #                   1/2/4-virtual-device scaling curves recorded in the
 #                   BENCH_*.json entries (spawns XLA virtual-device
@@ -23,6 +24,7 @@ verify: test
 	python benchmarks/campaign_throughput.py --smoke
 	python benchmarks/replay_throughput.py --smoke
 	python benchmarks/serve_throughput.py --smoke
+	python benchmarks/goodput_throughput.py --smoke
 	python benchmarks/chaos_smoke.py --smoke
 
 test:
@@ -36,6 +38,7 @@ bench:
 	python benchmarks/campaign_throughput.py
 	python benchmarks/replay_throughput.py
 	python benchmarks/serve_throughput.py
+	python benchmarks/goodput_throughput.py
 
 bench-multidev:
 	python benchmarks/campaign_throughput.py --multidev

@@ -21,6 +21,7 @@ from . import (
     fig7_window,
     fig8_horizon,
     fig9_simulation,
+    goodput_throughput,
     pipeline_throughput,
     replay_throughput,
     roofline_report,
@@ -60,6 +61,10 @@ BENCHES = [
     ("serve_throughput", serve_throughput.run,
      lambda r: (f"fleet/scalar={r['speedup']}x "
                 f"parity={r['parity_identical']}")),
+    ("goodput_throughput", goodput_throughput.run,
+     lambda r: (f"scan/loop={r['speedup_vs_python_loop']}x "
+                f"parity={r['parity_atol0']} "
+                f"hazard_goodput={r['frontier']['sns_hazard']['goodput']}")),
 ]
 
 

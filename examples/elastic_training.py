@@ -1,41 +1,49 @@
-"""End-to-end driver: train an LM on preemptible capacity with SnS guidance.
+"""End-to-end elastic training on spot capacity, driven by live SnS hazards.
 
 The complete loop the paper's signals enable, run for real (small model,
-CPU-sized, a few hundred steps by default):
+CPU-sized by default):
 
-* a simulated spot fleet hosts the training pod; the pool's availability
-  trace drives preemptions;
-* SnS probes the pool every cycle; the hazard-adaptive policy
-  (Young–Daly with predictor-estimated hazard) decides when to checkpoint;
-* on preemption, training restarts from the latest checkpoint (the
-  elastic manager re-meshes; on a 1-device host this is a same-mesh
-  restore) and lost steps are accounted;
-* the same trace replayed with a sparse fixed-interval baseline shows the
-  SnS advantage (the paper's Fig. 9 logic, applied to training).
+* a **sharded campaign stream** (``CampaignStream(engine="sharded")``
+  under a :class:`~repro.core.pipeline.CampaignPipelineStream`) probes the
+  spot fleet cycle by cycle; the first ``--pods`` pools host the training
+  pods (paper's binary formulation: a pod is up iff all N instances run);
+* a :class:`~repro.fleet.GoodputStream` turns each cycle's batched
+  predictions into **online checkpoint / panic decisions** for an SnS
+  hazard policy and a fixed-interval baseline, simultaneously accounting
+  the whole goodput frontier;
+* the hazard policy's decisions drive REAL training: an
+  :class:`~repro.fleet.ElasticMeshManager` re-meshes on every membership
+  change (checkpoint → rebuild mesh through the ``repro.launch.mesh``
+  compat helpers → re-shard → re-jit), preemptions roll the job back to
+  the last completed checkpoint, and recovered pods scale the data plane
+  back up;
+* at the end the frontier shows the SnS advantage over the fixed baseline
+  on the very trace the job just lived through (the paper's Fig. 9 logic,
+  applied to training).
 
-Run:  PYTHONPATH=src python examples/elastic_training.py [--steps 300] [--d-model 256]
-(--d-model 768 --layers 12 approximates a 100M-class model if you have
-the minutes to spare.)
+Run:  PYTHONPATH=src python examples/elastic_training.py
+      [--hours 12] [--steps 200] [--d-model 128]
 """
 
 import argparse
 import os
 import shutil
 import tempfile
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (
-    SimulatedProvider,
-    build_dataset,
-    default_fleet,
-    fit_predictor,
-    run_campaign,
+from repro.core import SimulatedProvider, default_fleet
+from repro.core.pipeline import CampaignPipelineStream
+from repro.fleet import (
+    ElasticMeshManager,
+    FixedInterval,
+    GoodputStream,
+    SnSHazard,
+    reshard,
 )
-from repro.fleet import FixedInterval, SnSHazard, traces_from_campaign
+from repro.launch.mesh import data_axes_of, use_mesh
 from repro.models import api
 from repro.train import (
     OptConfig,
@@ -47,143 +55,198 @@ from repro.train import (
     synthetic_batch,
 )
 
+HAZARD = 1  # row index of the SnS policy in the goodput stream
 
-def train_through_trace(cfg, trace, policy, predictor, *, steps_budget,
-                        step_fn, params0, opt0, ckpt_dir, batch_fn,
-                        sim_step_time=20.0, sim_ckpt_cost=40.0,
-                        start_cycle=0):
-    """Drive REAL training steps through a pod availability trace.
 
-    Simulation clock: each completed step advances `sim_step_time` seconds
-    of trace time; checkpoints cost `sim_ckpt_cost` trace-seconds."""
-    params, opt_state = params0, opt0
-    shutil.rmtree(ckpt_dir, ignore_errors=True)
+def heuristic_predictor(feats: np.ndarray) -> np.ndarray:
+    """Batched UR → survival heuristic (no fitted model needed): pools
+    showing unavailable probe responses are about to lose capacity."""
+    return 1.0 - np.clip((feats[:, 1] - 0.05) * 3.0, 0.0, 1.0)
 
-    done = lost = ckpts = since_ckpt = 0
-    cycle = start_cycle
-    t_last_ckpt = now = cycle * trace.dt
-    cyc_len = trace.dt
-    losses = []
-    while done < steps_budget and cycle < len(trace.available):
-        if not trace.available[cycle]:
-            # preemption: roll back to the last checkpoint
-            if since_ckpt:
-                lost += since_ckpt
-                if latest_step(ckpt_dir) is not None:
-                    params, opt_state, _ = load_checkpoint(
-                        ckpt_dir, params, opt_state
-                    )
-                else:
-                    params, opt_state = params0, opt0
-                done -= since_ckpt
-                since_ckpt = 0
-            cycle += 1
-            now = cycle * cyc_len
-            continue
 
-        p_survive = predictor(trace.features[cycle]) if predictor else None
-        budget = cyc_len
-        while budget >= sim_step_time and done < steps_budget:
-            if policy.should_checkpoint(now + (cyc_len - budget), t_last_ckpt,
-                                        p_survive) and since_ckpt:
-                save_checkpoint(ckpt_dir, done, params, opt_state)
-                ckpts += 1
-                since_ckpt = 0
-                t_last_ckpt = now + (cyc_len - budget)
-                budget -= sim_ckpt_cost
-                continue
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch_fn(done)
+class ElasticTrainer:
+    """The data plane: real train steps on whatever mesh the fleet allows.
+
+    Checkpoint → rebuild → restore on every membership change; rollback to
+    the last *completed* checkpoint when a mesh-backing pod is preempted.
+    """
+
+    def __init__(self, cfg, opt_cfg, mgr, *, batch, seq, ckpt_dir):
+        self.cfg, self.opt_cfg, self.mgr = cfg, opt_cfg, mgr
+        self.batch, self.seq, self.ckpt_dir = batch, seq, ckpt_dir
+        self.params = api.init_params(cfg, seed=0)
+        self.opt_state = init_opt_state(self.params)
+        self.mesh = None
+        self.step_fn = None
+        self.members = None        # up-set the current mesh was built from
+        self.backing = set()       # pods actually hosting devices
+        self.done = 0              # global step (the data-determinism index)
+        self.saved = 0             # step of the last completed checkpoint
+        self.lost = 0
+        self.ckpts = 0
+        self.remeshes = 0
+        self.losses = []
+
+    def _specs(self, tree):
+        from jax.sharding import PartitionSpec as P
+
+        return jax.tree.map(lambda _: P(), tree)
+
+    def _rebuild(self, up):
+        """checkpoint-consistent re-mesh: build through the compat helpers
+        (never raw ``jax.set_mesh``), re-shard state, re-jit the step."""
+        plan = self.mgr.feasible_plan(up)
+        if plan is None:
+            self.mesh = self.step_fn = None
+            self.backing = set()
+            return
+        self.mesh = plan.build()
+        cap = max(1, len(jax.devices()) // (self.mgr.data * self.mgr.model))
+        self.backing = set(up[:cap])
+        self.params = reshard(self.params, self.mesh, self._specs(self.params))
+        self.opt_state = reshard(
+            self.opt_state, self.mesh, self._specs(self.opt_state)
+        )
+        self.step_fn = jax.jit(
+            make_train_step(self.cfg, self.opt_cfg, mesh=self.mesh,
+                            data_axes=data_axes_of(self.mesh))
+        )
+        self.remeshes += 1
+
+    def _rollback(self):
+        if self.done == self.saved:
+            return
+        self.lost += self.done - self.saved
+        if latest_step(self.ckpt_dir) is not None:
+            self.params, self.opt_state, self.done = load_checkpoint(
+                self.ckpt_dir, self.params, self.opt_state
             )
-            losses.append(float(metrics["loss"]))
-            done += 1
-            since_ckpt += 1
-            budget -= sim_step_time
-        cycle += 1
-        now = cycle * cyc_len
-    return {
-        "steps_done": done, "steps_lost": lost, "checkpoints": ckpts,
-        "final_loss": losses[-1] if losses else float("nan"),
-        "loss_start": losses[0] if losses else float("nan"),
-    }
+        else:
+            self.params = api.init_params(self.cfg, seed=0)
+            self.opt_state = init_opt_state(self.params)
+            self.done = 0
+
+    def checkpoint(self):
+        save_checkpoint(self.ckpt_dir, self.done, self.params, self.opt_state)
+        self.saved = self.done
+        self.ckpts += 1
+
+    def on_cycle(self, view, *, steps: int, budget: int) -> int:
+        """React to one goodput-stream cycle; returns steps trained."""
+        up = [int(i) for i in np.flatnonzero(view.up)]
+        if self.members != set(up):
+            if self.backing - set(up):
+                self._rollback()          # a mesh-backing pod was preempted
+            elif self.mesh is not None and self.done > self.saved:
+                self.checkpoint()         # graceful re-mesh: save first
+            self._rebuild(up)
+            self.members = set(up)
+        if self.mesh is None:
+            return 0                      # job paused: no pod can host it
+
+        # the hazard policy's online decision, fleet-wide: checkpoint when
+        # any surviving pod's row started a write this cycle
+        if view.write_started[HAZARD][view.up].any() and self.done > self.saved:
+            self.checkpoint()
+
+        k = min(steps, max(0, budget - self.done))
+        scale = self.mgr.global_batch_scale(up)
+        bsz = max(1, int(round(self.batch * scale)))
+        with use_mesh(self.mesh):
+            for _ in range(k):
+                batch = synthetic_batch(self.cfg, bsz, self.seq, seed=self.done)
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
+                self.losses.append(float(metrics["loss"]))
+                self.done += 1
+        return k
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--pools", type=int, default=12)
+    ap.add_argument("--pods", type=int, default=4)
+    ap.add_argument("--hours", type=float, default=12.0)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps-per-cycle", type=int, default=2)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
-    args = ap.parse_args()
+    ap.add_argument("--engine", choices=["fleet", "scalar", "sharded"],
+                    default="sharded")
+    args = ap.parse_args(argv)
 
-    # -- SnS control plane: campaign + predictor --------------------------
-    fleet = default_fleet(12, seed=3)
+    # -- control plane: sharded campaign stream + live hazard decisions ---
+    fleet = default_fleet(args.pools, seed=3)
     provider = SimulatedProvider(fleet, seed=4)
-    campaign = run_campaign(provider, duration=24 * 3600.0)
-    ds = build_dataset(campaign, window_minutes=240, horizon_minutes=15,
-                       split="pool", seed=0)
-    predictor_model = fit_predictor("xgb", ds)
-    std = ds.standardizer
+    stream = CampaignPipelineStream(
+        provider, predict_fn=heuristic_predictor, window_minutes=240,
+        duration=args.hours * 3600.0, engine=args.engine,
+    )
+    policies = [
+        FixedInterval(1800.0),
+        SnSHazard(ckpt_cost=30.0, horizon=900.0, panic_threshold=0.4),
+    ]
+    gs = GoodputStream(stream, policies, n_pods=args.pods,
+                       names=["fixed_30min", "sns_hazard"])
 
-    def p_survive(features):
-        x = std(features[None, :]) if std else features[None, :]
-        return float(predictor_model.predict_proba(x)[0])
-
-    traces = traces_from_campaign(campaign, window_minutes=240)
-    # train on the bumpiest pod, starting shortly before its first outage
-    trace = min(traces, key=lambda t: t.available.mean())
-    down = np.flatnonzero(~trace.available.astype(bool))
-    start_cycle = int(max(0, (down[0] if down.size else 0) - 15))
-    print(f"pod pool {trace.pool_id}: availability "
-          f"{trace.available.mean():.1%} over 24h "
-          f"(starting at cycle {start_cycle})")
-
-    # -- data plane: a real LM + production train step --------------------
+    # -- data plane: a real LM, elastically re-meshed ----------------------
     cfg = get_config("gemma3-1b").scaled_down(
         d_model=args.d_model, n_layers=args.layers,
         d_ff=args.d_model * 4, vocab_size=2048,
         head_dim=max(16, args.d_model // 8),
     )
-    n_params = cfg.param_count()
-    print(f"model: {n_params/1e6:.1f}M params "
-          f"({cfg.n_layers}L d={cfg.d_model})")
-    params0 = api.init_params(cfg, seed=0)
-    opt0 = init_opt_state(params0)
-    step_fn = jax.jit(make_train_step(cfg, OptConfig(lr=3e-4, warmup_steps=20,
-                                                     total_steps=args.steps)))
-
-    def batch_fn(step):  # deterministic per-step data (elastic-safe)
-        return synthetic_batch(cfg, args.batch, args.seq, seed=step)
-
+    print(f"model: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model}); "
+          f"fleet: {args.pools} pools / {args.pods} pods "
+          f"[engine={args.engine}]")
+    mgr = ElasticMeshManager(n_pods=args.pods, data_per_pod=1,
+                             model_parallel=1)
     ckpt_root = tempfile.mkdtemp(prefix="elastic_")
-    results = {}
-    for name, policy, pred in [
-        ("fixed_30min", FixedInterval(1800.0), None),
-        ("sns_hazard", SnSHazard(ckpt_cost=20.0, horizon=900.0,
-                                 panic_threshold=0.4), p_survive),
-    ]:
-        t0 = time.time()
-        r = train_through_trace(
-            cfg, trace, policy, pred,
-            steps_budget=args.steps, step_fn=step_fn,
-            params0=params0, opt0=opt0,
-            ckpt_dir=os.path.join(ckpt_root, name), batch_fn=batch_fn,
-            start_cycle=start_cycle,
-        )
-        r["wall_s"] = round(time.time() - t0, 1)
-        results[name] = r
-        print(f"{name:12s}: {r['steps_done']} steps done, "
-              f"{r['steps_lost']} lost, {r['checkpoints']} ckpts, "
-              f"loss {r['loss_start']:.3f} -> {r['final_loss']:.3f} "
-              f"[{r['wall_s']}s]")
+    trainer = ElasticTrainer(
+        cfg, OptConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps),
+        mgr, batch=args.batch, seq=args.seq,
+        ckpt_dir=os.path.join(ckpt_root, "job"),
+    )
 
-    f, s = results["fixed_30min"], results["sns_hazard"]
-    if f["steps_lost"] > 0:
-        print(f"\nSnS-guided checkpointing cut lost steps by "
-              f"{1 - s['steps_lost']/max(1, f['steps_lost']):.0%} "
+    paused = trained_cycles = 0
+    for view in gs:
+        k = trainer.on_cycle(view, steps=args.steps_per_cycle,
+                             budget=args.steps)
+        trained_cycles += 1 if k else 0
+        paused += 1 if trainer.mesh is None else 0
+        # keep draining the stream after the step budget: the frontier
+        # accounting runs over the full campaign either way
+
+    frontier = gs.frontier()
+    print(f"job: {trainer.done} steps done, {trainer.lost} lost, "
+          f"{trainer.ckpts} checkpoints, {trainer.remeshes} re-meshes, "
+          f"{paused} paused cycles"
+          + (f", loss {trainer.losses[0]:.3f} -> {trainer.losses[-1]:.3f}"
+             if trainer.losses else ""))
+    for name, r in frontier.items():
+        print(f"  {name:12s}: goodput {r.goodput:.4f}  "
+              f"lost_work {r.lost_work_s:.0f}s  ckpt_overhead "
+              f"{r.ckpt_overhead_s:.0f}s  ({r.checkpoints} ckpts)")
+    f, s = frontier["fixed_30min"], frontier["sns_hazard"]
+    if f.steps_lost > 0:
+        print(f"SnS-guided checkpointing cut lost steps by "
+              f"{1 - s.steps_lost/max(1, f.steps_lost):.0%} "
               f"vs the fixed-interval baseline")
     shutil.rmtree(ckpt_root, ignore_errors=True)
+    return {
+        "frontier": frontier,
+        "goodput": gs,
+        "steps_done": trainer.done,
+        "steps_lost": trainer.lost,
+        "checkpoints": trainer.ckpts,
+        "remeshes": trainer.remeshes,
+        "paused_cycles": paused,
+        "trained_cycles": trained_cycles,
+        "losses": trainer.losses,
+    }
 
 
 if __name__ == "__main__":

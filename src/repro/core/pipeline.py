@@ -494,9 +494,12 @@ class CampaignPipelineStream:
     This is the serving glue point: feed ``view.probs`` to
     :class:`repro.serve.FleetAdmissionController` /
     :func:`repro.serve.plan_migration_batch` for per-cycle admission and
-    migration decisions, and ``view`` to
+    migration decisions, ``view`` to
     :class:`repro.core.dataset.DatasetStreamer` to grow training data
-    live.  Features, predictions and the final :meth:`result` are
+    live, or wrap the whole stream in
+    :class:`repro.fleet.runner.GoodputStream` to turn the per-cycle
+    probabilities into live checkpoint/panic decisions for elastic
+    training.  Features, predictions and the final :meth:`result` are
     bit-identical to the batch driver (:func:`run_campaign_pipeline`), by
     construction: the batch driver just drains this stream.
     """
@@ -537,6 +540,10 @@ class CampaignPipelineStream:
     @property
     def n_cycles(self) -> int:
         return self.campaign.n_cycles
+
+    @property
+    def pools(self) -> int:
+        return len(self.processor.pool_ids)
 
     @property
     def done(self) -> bool:

@@ -1,11 +1,19 @@
-from .ckpt_policy import FixedInterval, SnSHazard, YoungDaly
+from .ckpt_policy import FixedInterval, PolicyTable, SnSHazard, YoungDaly, hazard_tau
 from .elastic import ElasticMeshManager, MeshPlan, reshard
 from .events import PodEvent, PodTrace, traces_from_campaign
-from .runner import ReplayResult, run_replay
+from .runner import (
+    GoodputCycleView,
+    GoodputStream,
+    ReplayResult,
+    run_goodput_frontier,
+    run_replay,
+    run_replay_batch,
+)
 
 __all__ = [
-    "FixedInterval", "SnSHazard", "YoungDaly",
+    "FixedInterval", "SnSHazard", "YoungDaly", "PolicyTable", "hazard_tau",
     "ElasticMeshManager", "MeshPlan", "reshard",
     "PodEvent", "PodTrace", "traces_from_campaign",
-    "ReplayResult", "run_replay",
+    "ReplayResult", "run_replay", "run_replay_batch", "run_goodput_frontier",
+    "GoodputCycleView", "GoodputStream",
 ]

@@ -12,21 +12,59 @@ The paper stops at "prediction enables proactive checkpoint triggering"
   instantaneous hazard ``λ = -ln(p_survive) / h`` and the interval adapts
   as ``τ(t) = sqrt(2·δ/λ)``, clamped to [δ, τ_max].  Additionally, a
   forecast above ``panic_threshold`` triggers an immediate checkpoint
-  (the Predict-AR analogue for training).
+  (the Predict-AR analogue for training) — but under *sustained* panic
+  re-writes are floored at ``2δ`` so the checkpoint overhead itself
+  cannot destroy goodput.
 
-All policies answer one question: "given the last checkpoint at time
-``t_ckpt`` and the current SnS features, should we checkpoint now?"
+Every policy reduces to one per-cycle number: the interval ``τ`` that the
+replay contract compares against ``now - t_last_ckpt`` (see
+``repro.fleet.runner``).  The scalar ``should_checkpoint`` methods and the
+stacked :class:`PolicyTable` rows both evaluate τ through the *same*
+vectorised ufunc formulas (:func:`hazard_tau`), which is what lets the
+fleet engines stay bit-identical (atol=0) to the per-pod scalar replay.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["FixedInterval", "YoungDaly", "SnSHazard"]
+__all__ = [
+    "FixedInterval",
+    "YoungDaly",
+    "SnSHazard",
+    "PolicyTable",
+    "hazard_tau",
+]
+
+
+def _base_tau(p, ckpt_cost, horizon, tau_max, floor_hazard):
+    """The adaptive Young–Daly interval (no panic override), vectorised.
+
+    ``τ(p) = sqrt(2δ / λ)`` with ``λ = max(-ln(clip(p)) / h, floor)``,
+    clamped to ``[δ, τ_max]``.  Pure elementwise float64 ufuncs — the one
+    formula shared by ``SnSHazard.interval`` and the stacked table rows.
+    """
+    p_c = np.clip(np.asarray(p, dtype=np.float64), 1e-6, 1.0 - 1e-9)
+    lam = np.maximum(-np.log(p_c) / horizon, floor_hazard)
+    return np.clip(np.sqrt(2.0 * ckpt_cost / lam), ckpt_cost, tau_max)
+
+
+def hazard_tau(p, *, ckpt_cost, horizon, tau_max, panic_threshold, floor_hazard):
+    """Per-cycle SnSHazard interval including the panic override.
+
+    A forecast ``1 - p >= panic_threshold`` collapses the interval to the
+    ``2δ`` re-write floor ("checkpoint now, but never faster than 2δ");
+    otherwise the adaptive Young–Daly interval applies.  All arguments
+    broadcast elementwise, so the same call serves a scalar policy
+    decision and a full ``(rows, cycles)`` table evaluation.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    tau = _base_tau(p, ckpt_cost, horizon, tau_max, floor_hazard)
+    return np.where(1.0 - p >= panic_threshold, 2.0 * ckpt_cost, tau)
 
 
 @dataclasses.dataclass
@@ -61,17 +99,140 @@ class SnSHazard:
     floor_hazard: float = 1e-6
 
     def interval(self, p_survive: float) -> float:
-        p_survive = min(max(p_survive, 1e-6), 1.0 - 1e-9)
-        lam = max(-math.log(p_survive) / self.horizon, self.floor_hazard)
-        tau = math.sqrt(2.0 * self.ckpt_cost / lam)
-        return float(np.clip(tau, self.ckpt_cost, self.tau_max))
+        """The adaptive interval before the panic override."""
+        return float(
+            _base_tau(
+                p_survive, self.ckpt_cost, self.horizon, self.tau_max,
+                self.floor_hazard,
+            )
+        )
+
+    def tau(self, p_survive) -> np.ndarray:
+        """Per-cycle interval(s) including the panic 2δ floor (vectorised)."""
+        return hazard_tau(
+            p_survive,
+            ckpt_cost=self.ckpt_cost,
+            horizon=self.horizon,
+            tau_max=self.tau_max,
+            panic_threshold=self.panic_threshold,
+            floor_hazard=self.floor_hazard,
+        )
 
     def should_checkpoint(self, now, t_last_ckpt, p_survive=None) -> bool:
         p = 1.0 if p_survive is None else float(p_survive)
-        since = now - t_last_ckpt
-        if 1.0 - p >= self.panic_threshold:
-            # imminent-interrupt forecast: checkpoint NOW — but under
-            # *sustained* panic don't re-write faster than 2δ, or the
-            # checkpoint overhead itself destroys goodput
-            return since >= 2.0 * self.ckpt_cost
-        return since >= self.interval(p)
+        return now - t_last_ckpt >= float(self.tau(p))
+
+
+@dataclasses.dataclass
+class PolicyTable:
+    """Struct-of-arrays policy rows for the fleet replay engines.
+
+    One row per replay trace; fixed-interval rows (FixedInterval /
+    YoungDaly) carry a constant τ, hazard rows (SnSHazard) re-derive τ
+    every cycle from the predictor's survival probability through
+    :func:`hazard_tau` — ufunc-for-ufunc the same formula the scalar
+    policy objects evaluate, so table-driven engines and per-pod scalar
+    replays agree bit-identically.
+    """
+
+    is_hazard: np.ndarray        # (R,) bool
+    interval: np.ndarray         # (R,) f64 — τ for fixed rows (unused on hazard)
+    ckpt_cost: np.ndarray        # (R,) f64 — δ for hazard rows
+    horizon: np.ndarray          # (R,) f64
+    tau_max: np.ndarray          # (R,) f64
+    panic_threshold: np.ndarray  # (R,) f64
+    floor_hazard: np.ndarray     # (R,) f64
+    names: List[str]
+
+    def __len__(self) -> int:
+        return self.is_hazard.shape[0]
+
+    @classmethod
+    def from_policies(
+        cls,
+        policies: Sequence,
+        *,
+        repeat: int = 1,
+        names: Optional[Sequence[str]] = None,
+    ) -> "PolicyTable":
+        """Stack policy objects into rows; ``repeat`` replicates each
+        policy over that many consecutive rows (the per-pod block of a
+        pods × policies cross product)."""
+        is_hz, interval, delta, horizon = [], [], [], []
+        tau_max, panic, floor = [], [], []
+        row_names = []
+        for i, pol in enumerate(policies):
+            name = names[i] if names is not None else type(pol).__name__
+            if isinstance(pol, SnSHazard):
+                is_hz.append(True)
+                interval.append(0.0)
+                delta.append(pol.ckpt_cost)
+                horizon.append(pol.horizon)
+                tau_max.append(pol.tau_max)
+                panic.append(pol.panic_threshold)
+                floor.append(pol.floor_hazard)
+            elif isinstance(pol, (FixedInterval, YoungDaly)):
+                is_hz.append(False)
+                iv = pol.interval  # YoungDaly derives sqrt(2·δ·MTBF)
+                interval.append(float(iv))
+                delta.append(1.0)       # inert hazard params for fixed rows
+                horizon.append(1.0)
+                tau_max.append(1.0)
+                panic.append(2.0)       # 1 - p can never reach 2
+                floor.append(1.0)
+            else:
+                raise TypeError(f"unsupported policy type {type(pol).__name__}")
+            row_names.append(name)
+        rep = int(repeat)
+        return cls(
+            is_hazard=np.repeat(np.asarray(is_hz, dtype=bool), rep),
+            interval=np.repeat(np.asarray(interval, dtype=np.float64), rep),
+            ckpt_cost=np.repeat(np.asarray(delta, dtype=np.float64), rep),
+            horizon=np.repeat(np.asarray(horizon, dtype=np.float64), rep),
+            tau_max=np.repeat(np.asarray(tau_max, dtype=np.float64), rep),
+            panic_threshold=np.repeat(np.asarray(panic, dtype=np.float64), rep),
+            floor_hazard=np.repeat(np.asarray(floor, dtype=np.float64), rep),
+            names=[n for n in row_names for _ in range(rep)],
+        )
+
+    def _cols(self, ndim: int):
+        """Params reshaped to broadcast against a (R, ...) probability array."""
+        shape = (-1,) + (1,) * (ndim - 1)
+        return (
+            self.is_hazard.reshape(shape),
+            self.interval.reshape(shape),
+            self.ckpt_cost.reshape(shape),
+            self.horizon.reshape(shape),
+            self.tau_max.reshape(shape),
+            self.panic_threshold.reshape(shape),
+            self.floor_hazard.reshape(shape),
+        )
+
+    def tau(
+        self, p: Optional[np.ndarray] = None, cycles: Optional[int] = None
+    ) -> np.ndarray:
+        """Per-row, per-cycle checkpoint intervals.
+
+        ``p`` is ``(R,)`` or ``(R, T)`` survival probabilities (``None``
+        means no predictor — hazard rows fall back to ``p = 1``; pass
+        ``cycles`` to shape the fallback ``(R, cycles)``).  Returns τ of
+        the same shape, float64.
+        """
+        if p is None:
+            shape = (len(self),) if cycles is None else (len(self), cycles)
+            p = np.ones(shape)
+        p = np.asarray(p, dtype=np.float64)
+        is_hz, interval, delta, horizon, tau_max, panic, floor = self._cols(p.ndim)
+        hz = hazard_tau(
+            p, ckpt_cost=delta, horizon=horizon, tau_max=tau_max,
+            panic_threshold=panic, floor_hazard=floor,
+        )
+        return np.where(is_hz, hz, interval * np.ones_like(p))
+
+    def panic(self, p: Optional[np.ndarray] = None) -> np.ndarray:
+        """Which rows are in the imminent-interrupt (panic) regime."""
+        if p is None:
+            return np.zeros(len(self), dtype=bool)
+        p = np.asarray(p, dtype=np.float64)
+        is_hz, _, _, _, _, panic, _ = self._cols(p.ndim)
+        return is_hz & (1.0 - p >= panic)

@@ -32,7 +32,21 @@ class MeshPlan:
     axes: Tuple[str, ...]
 
     def build(self, devices: Optional[np.ndarray] = None) -> Mesh:
-        devices = devices if devices is not None else np.array(jax.devices())
+        """Materialise the mesh through the JAX version-compat helpers
+        (``repro.launch.mesh.make_explicit_mesh``) — never the raw
+        newer-JAX-only mesh APIs.  Passing an explicit ``devices`` subset
+        keeps the legacy ``Mesh``-constructor path (compatible
+        everywhere)."""
+        if devices is None:
+            from repro.launch.mesh import make_explicit_mesh
+
+            n = int(np.prod(self.shape))
+            if len(jax.devices()) < n:
+                raise ValueError(
+                    f"need {n} devices, have {len(jax.devices())}"
+                )
+            return make_explicit_mesh(self.shape, self.axes)
+        devices = np.asarray(devices)
         n = int(np.prod(self.shape))
         if devices.size < n:
             raise ValueError(f"need {n} devices, have {devices.size}")
@@ -74,6 +88,25 @@ class ElasticMeshManager:
         """Elastic batch policy: keep per-pod batch fixed, so global batch
         scales with surviving pods (loss scaling handled by the trainer)."""
         return max(len(up_pods), 0) / self.n_pods
+
+    def feasible_plan(
+        self, up_pods: List[int], n_devices: Optional[int] = None
+    ) -> Optional[MeshPlan]:
+        """:meth:`plan_for` clamped to what the visible device count can
+        actually build.
+
+        Each pod consumes ``data_per_pod × model_parallel`` devices; with
+        fewer devices than surviving pods (a CPU dev box standing in for
+        the fleet), the mesh covers the first ``cap`` pods and the rest
+        contribute only through :meth:`global_batch_scale`.  ``None``
+        still means the job pauses (below ``min_pods`` or no device can
+        host even one pod)."""
+        if n_devices is None:
+            n_devices = len(jax.devices())
+        cap = n_devices // (self.data * self.model)
+        if cap < 1:
+            return None
+        return self.plan_for(up_pods[: min(len(up_pods), cap)])
 
 
 def reshard(tree, mesh: Mesh, specs) -> object:

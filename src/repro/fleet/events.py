@@ -56,14 +56,21 @@ def traces_from_campaign(
     n_pods: Optional[int] = None,
     window_minutes: float = 480.0,
 ) -> List[PodTrace]:
-    """Map the first `n_pods` pools of a campaign onto pods."""
-    avail = binary_availability(result.running, result.n)
-    feats = compute_features(
-        result.s, result.n, window_minutes, result.interval / 60.0
-    )
+    """Map the first `n_pods` pools of a campaign onto pods.
+
+    Pools are sliced to ``n_pods`` *before* featurization — per-pool
+    features are row-independent (Algorithm 1 runs per pool), so
+    featurizing only the kept rows is identical to featurizing the whole
+    campaign and slicing after, at a fraction of the work.
+    """
     n_pods = n_pods if n_pods is not None else len(result.pool_ids)
+    n_pods = min(n_pods, len(result.pool_ids))
+    avail = binary_availability(result.running[:n_pods], result.n)
+    feats = compute_features(
+        result.s[:n_pods], result.n, window_minutes, result.interval / 60.0
+    )
     out = []
-    for pod in range(min(n_pods, len(result.pool_ids))):
+    for pod in range(n_pods):
         out.append(
             PodTrace(
                 pod_id=pod,

@@ -1,35 +1,96 @@
-"""Preemption-aware training runner + lost-work accounting.
+"""Preemption replay + goodput accounting — closed-form, fleet-vectorised.
 
-Replays a pod availability trace against a (real or simulated) training
-job and accounts lost computation under a checkpoint policy — the
-training-side analogue of the paper's §VI-E query simulation:
+Replays pod availability traces against a (simulated) training job and
+accounts lost computation under a checkpoint policy — the training-side
+analogue of the paper's §VI-E query simulation, scaled the same way:
 
 * between checkpoints, completed steps are *at risk*: a preemption rolls
-  the job back to the last checkpoint (work since then is lost);
-* each checkpoint costs ``ckpt_cost`` seconds of training time;
-* after a preemption the job waits for the pool to recover, restores, and
-  continues (restore cost accounted);
-* the **SnSHazard** policy additionally consumes the per-cycle SnS
-  features through a trained predictor to adapt cadence / force panic
-  checkpoints.
+  the job back to the last **completed** checkpoint (work since then is
+  lost — a write still in flight protects nothing);
+* each checkpoint costs ``ckpt_cost`` seconds of training time; a write
+  clipped by the cycle budget **carries across cycles** (the
+  ``write_rem`` register) exactly like restores do — it only counts, and
+  only protects steps, once the last byte lands;
+* after a preemption the job waits for the pool to recover, restores
+  (``restore_cost`` seconds, resumable across cycles), and continues;
+* the **SnSHazard** policy consumes per-cycle survival probabilities from
+  the SnS predictor to adapt cadence / force panic checkpoints.
 
-``run_replay`` is pure accounting (fast, used by benchmarks and tests);
-``train_with_preemptions`` drives an actual JAX training loop through the
-same logic (used by examples/elastic_training.py).
+The replay contract (per-cycle closed form)
+-------------------------------------------
+
+Every engine advances one *closed-form state transition per collection
+cycle* — there is no data-dependent inner ``while`` (house style of
+``core.simulate`` / ``kernels.replay_scan``).  Per trace row the carried
+state is ``(steps_done, steps_since_ckpt, steps_lost, ckpts, overhead,
+unavailable, t_last_ckpt, restore_rem, write_rem)``; with ``now = c·dt``
+the cycle-``c`` transition is:
+
+* **down cycle** — steps since the last completed checkpoint are lost, an
+  in-flight write is aborted (overhead already paid stays paid),
+  ``restore_rem`` re-arms to ``restore_cost``, ``unavailable += dt``.
+* **up cycle** — budget ``b = dt``:
+
+  - *drain restore*: ``b`` pays down ``restore_rem`` first;
+  - *drain write*: then any carried checkpoint write; if it completes,
+    ``ckpts += 1``, ``t_last_ckpt`` = the completion instant, and the
+    steps it covers become safe (``steps_since_ckpt = 0``);
+  - *policy consult* (**once per cycle**, at ``t_c = now + (dt − b)``,
+    only with ``b > 0``): the policy reduces to a per-cycle interval
+    ``τ`` (see :class:`~repro.fleet.ckpt_policy.PolicyTable`); if
+    ``t_c − t_last_ckpt ≥ τ`` a write starts when there are unprotected
+    steps (paying ``min(b, ckpt_cost)`` now and carrying the rest), and
+    otherwise merely refreshes ``t_last_ckpt = t_c`` (nothing new to
+    save — no redundant write, no cost);
+  - *training*: the leftover budget runs ``k = floor(b / step_time)``
+    whole steps; fractional-step budget is discarded (a step either
+    completes within the cycle or is never started).
+
+Predictions enter as per-cycle *arrays* (one batched model call for the
+whole fleet — the pipeline's batched-predictor contract), and every
+policy decision reduces to comparing ``t_c − t_last_ckpt`` against a
+per-(row, cycle) ``τ`` matrix evaluated by the same ufunc formulas in
+every engine.  That pins all float arithmetic, which is what makes the
+three implementations **bit-identical (atol=0)** row by row:
+
+* :func:`run_replay` — the scalar reference: one pod, one policy object,
+  a plain Python cycle loop (readable; the semantic spec).
+* :func:`run_replay_batch` — the batched engines over a stacked
+  ``(pods × policies × seeds)`` row axis: ``engine="numpy"`` is the
+  vectorised per-cycle loop (the parity oracle), ``engine="scan"`` the
+  ``lax.scan`` closed form (float64 under a scoped ``enable_x64``; the
+  fast CPU path), ``engine="auto"`` picks scan for non-degenerate
+  shapes.
+
+:func:`run_goodput_frontier` crosses pods × policies in one
+:func:`run_replay_batch` call (the goodput-frontier experiment), and
+:class:`GoodputStream` is the *online* form: it consumes live
+``StreamCycleView.probs`` from a :class:`~repro.core.pipeline.
+CampaignPipelineStream` cycle by cycle — streamed ≡ batch bit-identical,
+resumable via the ``state_dict()`` / ``restore()`` protocol.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
+import math
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .ckpt_policy import FixedInterval, SnSHazard
+from .ckpt_policy import PolicyTable
 from .events import PodTrace
 
-__all__ = ["ReplayResult", "run_replay"]
+__all__ = [
+    "ReplayResult",
+    "run_replay",
+    "run_replay_batch",
+    "run_goodput_frontier",
+    "GoodputCycleView",
+    "GoodputStream",
+]
+
+ENGINES = ("auto", "numpy", "scan")
 
 
 @dataclasses.dataclass
@@ -44,9 +105,7 @@ class ReplayResult:
 
     @property
     def goodput(self) -> float:
-        total = (
-            self.steps_completed + self.steps_lost
-        )
+        total = self.steps_completed + self.steps_lost
         return self.steps_completed / total if total else 0.0
 
 
@@ -58,69 +117,577 @@ def run_replay(
     ckpt_cost: float = 30.0,           # seconds per checkpoint write
     restore_cost: float = 60.0,        # seconds to restore after preemption
     predictor: Optional[Callable[[np.ndarray], float]] = None,
+    p_survive: Optional[np.ndarray] = None,
     policy_name: str = "",
 ) -> ReplayResult:
     """Replay one pod's availability trace under a checkpoint policy.
 
-    `predictor(features) -> P(pool survives the horizon)` feeds SnSHazard.
+    The scalar contract reference (see the module docstring).  The
+    predictor feeds SnSHazard either as a per-cycle callable
+    ``predictor(features[c]) -> P(pool survives the horizon)`` or as a
+    precomputed ``p_survive`` array (the batched-predictor form).
     """
     avail = trace.available.astype(bool)
-    dt = trace.dt
+    dt = float(trace.dt)
     t_cycles = len(avail)
 
-    steps_done = 0
-    steps_since_ckpt = 0
-    steps_lost = 0
+    done = 0            # completed training steps
+    since = 0           # steps since the last *completed* checkpoint
+    lost = 0
     ckpts = 0
-    ckpt_overhead = 0.0
+    overhead = 0.0
     unavailable = 0.0
-    t_last_ckpt = 0.0
-    restoring = 0.0
+    t_last = 0.0
+    restore_rem = 0.0
+    write_rem = 0.0     # carried partial checkpoint write
 
     for c in range(t_cycles):
         now = c * dt
         if not avail[c]:
-            # preemption: everything since the last checkpoint is lost
-            if steps_since_ckpt:
-                steps_lost += steps_since_ckpt
-                steps_since_ckpt = 0
+            # preemption: everything since the last completed checkpoint
+            # is lost; an in-flight write is aborted (its cost stays paid)
+            lost += since
+            since = 0
             unavailable += dt
-            restoring = restore_cost
+            restore_rem = restore_cost
+            write_rem = 0.0
             continue
 
-        p_survive = None
+        p = None
         if predictor is not None:
-            p_survive = float(predictor(trace.features[c]))
+            p = float(predictor(trace.features[c]))
+        elif p_survive is not None:
+            p = float(p_survive[c])
 
         budget = dt
-        if restoring > 0.0:
-            used = min(budget, restoring)
-            restoring -= used
-            budget -= used
-
-        while budget >= step_time:
-            if policy.should_checkpoint(now + (dt - budget), t_last_ckpt, p_survive):
-                if steps_since_ckpt == 0 and ckpts:
-                    # nothing new to save; skip redundant write
-                    t_last_ckpt = now + (dt - budget)
+        # -- drain restore, then the carried checkpoint write -------------
+        used = min(budget, restore_rem)
+        restore_rem -= used
+        budget -= used
+        if write_rem > 0.0:
+            w = min(budget, write_rem)
+            write_rem -= w
+            budget -= w
+            overhead += w
+            if write_rem <= 0.0:       # the write completes this cycle
+                ckpts += 1
+                t_last = now + (dt - budget)
+                since = 0
+        # -- policy consult: once per cycle, at t_c -----------------------
+        if budget > 0.0:
+            t_c = now + (dt - budget)
+            if policy.should_checkpoint(t_c, t_last, p):
+                if since > 0:
+                    w2 = min(budget, ckpt_cost)
+                    budget -= w2
+                    overhead += w2
+                    if w2 >= ckpt_cost:   # wrote whole ckpt within the cycle
+                        ckpts += 1
+                        t_last = now + (dt - budget)
+                        since = 0
+                    else:                 # clipped: carry the partial write
+                        write_rem = ckpt_cost - w2
                 else:
-                    cost = min(ckpt_cost, budget)
-                    budget -= cost
-                    ckpt_overhead += cost
-                    ckpts += 1
-                    t_last_ckpt = now + (dt - budget)
-                    steps_since_ckpt = 0
-                    continue
-            budget -= step_time
-            steps_done += 1
-            steps_since_ckpt += 1
+                    t_last = t_c          # nothing new to save; no write
+        # -- training steps fill the remainder ----------------------------
+        k = int(math.floor(budget / step_time))
+        done += k
+        since += k
 
     return ReplayResult(
         policy=policy_name or type(policy).__name__,
-        steps_completed=steps_done,
-        steps_lost=steps_lost,
+        steps_completed=done,
+        steps_lost=lost,
         checkpoints=ckpts,
-        ckpt_overhead_s=ckpt_overhead,
-        lost_work_s=steps_lost * step_time,
+        ckpt_overhead_s=overhead,
+        lost_work_s=lost * step_time,
         unavailable_s=unavailable,
     )
+
+
+# --------------------------------------------------------------------------
+# Batched engines
+# --------------------------------------------------------------------------
+
+
+def _init_state(rows: int) -> Dict[str, np.ndarray]:
+    """The stacked per-row replay state (see the contract docstring)."""
+    return {
+        "done": np.zeros(rows, dtype=np.int64),
+        "since": np.zeros(rows, dtype=np.int64),
+        "lost": np.zeros(rows, dtype=np.int64),
+        "ckpts": np.zeros(rows, dtype=np.int64),
+        "overhead": np.zeros(rows, dtype=np.float64),
+        "unavailable": np.zeros(rows, dtype=np.float64),
+        "t_last": np.zeros(rows, dtype=np.float64),
+        "restore_rem": np.zeros(rows, dtype=np.float64),
+        "write_rem": np.zeros(rows, dtype=np.float64),
+    }
+
+
+def _cycle_update(
+    st: Dict[str, np.ndarray],
+    up: np.ndarray,          # (R,) bool
+    tau_c: np.ndarray,       # (R,) f64 — this cycle's policy intervals
+    now: float,
+    *,
+    dt: float,
+    step_time: float,
+    ckpt_cost: float,
+    restore_cost: float,
+):
+    """One closed-form transition over the stacked state (in place).
+
+    The vectorised mirror of the scalar cycle body in :func:`run_replay`
+    — op for op, so rows are bit-identical to per-pod scalar replays.
+    Returns ``(write_started, ckpt_completed, steps)`` per row for online
+    consumers (:class:`GoodputStream`).
+    """
+    down = ~up
+    st["lost"] += np.where(down, st["since"], 0)
+    st["since"] = np.where(down, 0, st["since"])
+    st["unavailable"] += np.where(down, dt, 0.0)
+    st["restore_rem"] = np.where(down, restore_cost, st["restore_rem"])
+    st["write_rem"] = np.where(down, 0.0, st["write_rem"])
+
+    budget = np.where(up, dt, 0.0)
+    # -- drain restore, then the carried checkpoint write -----------------
+    used = np.minimum(budget, st["restore_rem"])
+    st["restore_rem"] = st["restore_rem"] - used
+    budget = budget - used
+    was_writing = st["write_rem"] > 0.0
+    w = np.minimum(budget, st["write_rem"])
+    st["write_rem"] = st["write_rem"] - w
+    budget = budget - w
+    st["overhead"] = st["overhead"] + w
+    done_write = was_writing & (st["write_rem"] <= 0.0)
+    st["ckpts"] += done_write.astype(np.int64)
+    st["t_last"] = np.where(done_write, now + (dt - budget), st["t_last"])
+    st["since"] = np.where(done_write, 0, st["since"])
+    # -- policy consult: once per cycle, at t_c ---------------------------
+    t_c = now + (dt - budget)
+    can = up & (budget > 0.0)
+    decide = can & (t_c - st["t_last"] >= tau_c)
+    start = decide & (st["since"] > 0)
+    st["t_last"] = np.where(decide & (st["since"] == 0), t_c, st["t_last"])
+    w2 = np.where(start, np.minimum(budget, ckpt_cost), 0.0)
+    budget = budget - w2
+    st["overhead"] = st["overhead"] + w2
+    full = start & (w2 >= ckpt_cost)
+    st["write_rem"] = np.where(start & ~full, ckpt_cost - w2, st["write_rem"])
+    st["ckpts"] += full.astype(np.int64)
+    st["t_last"] = np.where(full, now + (dt - budget), st["t_last"])
+    st["since"] = np.where(full, 0, st["since"])
+    # -- training steps fill the remainder --------------------------------
+    steps = np.floor(budget / step_time).astype(np.int64)
+    st["done"] += steps
+    st["since"] += steps
+    return start, done_write | full, steps
+
+
+def _metrics_from_state(st: Dict[str, np.ndarray], step_time: float) -> Dict[str, np.ndarray]:
+    total = st["done"] + st["lost"]
+    return {
+        "steps_completed": st["done"].copy(),
+        "steps_lost": st["lost"].copy(),
+        "checkpoints": st["ckpts"].copy(),
+        "ckpt_overhead_s": st["overhead"].copy(),
+        "lost_work_s": st["lost"] * step_time,
+        "unavailable_s": st["unavailable"].copy(),
+        "goodput": np.where(total > 0, st["done"] / np.maximum(total, 1), 0.0),
+    }
+
+
+def _run_replay_batch_numpy(avail, tau, *, dt, step_time, ckpt_cost, restore_cost):
+    """The vectorised per-cycle numpy loop — the batch parity oracle."""
+    R, T = avail.shape
+    st = _init_state(R)
+    for c in range(T):
+        _cycle_update(
+            st, avail[:, c], tau[:, c], c * dt,
+            dt=dt, step_time=step_time, ckpt_cost=ckpt_cost,
+            restore_cost=restore_cost,
+        )
+    return _metrics_from_state(st, step_time)
+
+
+_SCAN_CACHE: dict = {}
+
+
+def _scan_fn():
+    """The jitted ``lax.scan`` engine (built once; shapes are traced)."""
+    fn = _SCAN_CACHE.get("fn")
+    if fn is not None:
+        return fn
+    import jax
+    import jax.numpy as jnp
+
+    def engine(avail_t, tau_t, now_t, dt, step_time, ckpt_cost, restore_cost):
+        R = avail_t.shape[1]
+        f = tau_t.dtype
+        i64 = jnp.int64
+        zf = jnp.zeros(R, f)
+        zi = jnp.zeros(R, i64)
+
+        def cycle(carry, xs):
+            (done, since, lost, ckpts, overhead, unavailable,
+             t_last, restore_rem, write_rem) = carry
+            up, tau_c, now = xs
+            down = ~up
+            lost = lost + jnp.where(down, since, 0)
+            since = jnp.where(down, 0, since)
+            unavailable = unavailable + jnp.where(down, dt, 0.0)
+            restore_rem = jnp.where(down, restore_cost, restore_rem)
+            write_rem = jnp.where(down, 0.0, write_rem)
+
+            budget = jnp.where(up, dt, 0.0)
+            used = jnp.minimum(budget, restore_rem)
+            restore_rem = restore_rem - used
+            budget = budget - used
+            was_writing = write_rem > 0.0
+            w = jnp.minimum(budget, write_rem)
+            write_rem = write_rem - w
+            budget = budget - w
+            overhead = overhead + w
+            done_write = was_writing & (write_rem <= 0.0)
+            ckpts = ckpts + done_write.astype(i64)
+            t_last = jnp.where(done_write, now + (dt - budget), t_last)
+            since = jnp.where(done_write, 0, since)
+
+            t_c = now + (dt - budget)
+            can = up & (budget > 0.0)
+            decide = can & (t_c - t_last >= tau_c)
+            start = decide & (since > 0)
+            t_last = jnp.where(decide & (since == 0), t_c, t_last)
+            w2 = jnp.where(start, jnp.minimum(budget, ckpt_cost), 0.0)
+            budget = budget - w2
+            overhead = overhead + w2
+            full = start & (w2 >= ckpt_cost)
+            write_rem = jnp.where(start & ~full, ckpt_cost - w2, write_rem)
+            ckpts = ckpts + full.astype(i64)
+            t_last = jnp.where(full, now + (dt - budget), t_last)
+            since = jnp.where(full, 0, since)
+
+            steps = jnp.floor(budget / step_time).astype(i64)
+            done = done + steps
+            since = since + steps
+            return (done, since, lost, ckpts, overhead, unavailable,
+                    t_last, restore_rem, write_rem), None
+
+        init = (zi, zi, zi, zi, zf, zf, zf, zf, zf)
+        final, _ = jax.lax.scan(cycle, init, (avail_t, tau_t, now_t))
+        return final
+
+    fn = jax.jit(engine)
+    _SCAN_CACHE["fn"] = fn
+    return fn
+
+
+def _run_replay_batch_scan(avail, tau, *, dt, step_time, ckpt_cost, restore_cost):
+    """The ``lax.scan`` engine — float64 under a scoped ``enable_x64``."""
+    from jax.experimental import enable_x64
+
+    T = avail.shape[1]
+    now_t = np.arange(T, dtype=np.float64) * dt
+    with enable_x64():
+        final = _scan_fn()(
+            np.ascontiguousarray(avail.T),
+            np.ascontiguousarray(tau.T),
+            now_t,
+            np.float64(dt), np.float64(step_time),
+            np.float64(ckpt_cost), np.float64(restore_cost),
+        )
+        (done, since, lost, ckpts, overhead, unavailable, *_rest) = [
+            np.asarray(x) for x in final
+        ]
+    st = {
+        "done": done, "since": since, "lost": lost, "ckpts": ckpts,
+        "overhead": overhead, "unavailable": unavailable,
+    }
+    return _metrics_from_state(st, step_time)
+
+
+def _policy_table(policies, rows: int, names=None) -> PolicyTable:
+    """Normalise the ``policies`` argument of :func:`run_replay_batch`."""
+    if isinstance(policies, PolicyTable):
+        if len(policies) not in (rows, 1):
+            raise ValueError(
+                f"policy table has {len(policies)} rows, traces have {rows}"
+            )
+        return policies
+    if not isinstance(policies, (list, tuple)):
+        policies = [policies] * rows
+        names = [names] * rows if isinstance(names, str) else names
+    if len(policies) != rows:
+        raise ValueError(f"{len(policies)} policies for {rows} trace rows")
+    return PolicyTable.from_policies(policies, names=names)
+
+
+def run_replay_batch(
+    avail: np.ndarray,
+    policies,
+    *,
+    p_survive: Optional[np.ndarray] = None,
+    dt: float = 180.0,
+    step_time: float = 2.0,
+    ckpt_cost: float = 30.0,
+    restore_cost: float = 60.0,
+    engine: str = "auto",
+    names=None,
+) -> Dict[str, np.ndarray]:
+    """Replay a stack of traces, one checkpoint policy per row.
+
+    Args:
+      avail: (R, T) — or (T,), broadcast — binary availability per row;
+        the row axis is any flattening of pods × policies × seeds.
+      policies: a :class:`~repro.fleet.ckpt_policy.PolicyTable` with R
+        rows, a sequence of R policy objects, or a single policy
+        broadcast to every row.
+      p_survive: (R, T) or (T,) per-cycle survival probabilities from the
+        SnS predictor (the batched-predictor contract); hazard rows fall
+        back to ``p = 1`` when omitted.
+      engine: ``"numpy"`` (vectorised per-cycle loop, the parity oracle)
+        | ``"scan"`` (the jitted ``lax.scan`` closed form, float64 under
+        a scoped ``enable_x64`` — the fast CPU path) | ``"auto"``
+        (scan, except degenerate empty shapes).  All engines are
+        **bit-identical (atol=0)** to per-row scalar :func:`run_replay`.
+
+    Returns stacked metrics ``{"steps_completed", "steps_lost",
+    "checkpoints", "ckpt_overhead_s", "lost_work_s", "unavailable_s",
+    "goodput"}``, each of shape (R,).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (want one of {ENGINES})")
+    avail = np.atleast_2d(np.asarray(avail)).astype(bool)
+    R, T = avail.shape
+    table = _policy_table(policies, R, names)
+    if p_survive is not None:
+        p_survive = np.broadcast_to(
+            np.atleast_2d(np.asarray(p_survive, dtype=np.float64)), (R, T)
+        )
+    # τ is engine-independent input data: one vectorised evaluation feeds
+    # numpy and scan identically (the scalar spec recomputes the same
+    # ufuncs per cycle through the policy objects)
+    tau = np.broadcast_to(table.tau(p_survive, cycles=T), (R, T))
+    if engine == "auto":
+        engine = "numpy" if (R == 0 or T == 0) else "scan"
+    run = _run_replay_batch_numpy if engine == "numpy" else _run_replay_batch_scan
+    return run(
+        avail, tau, dt=dt, step_time=step_time, ckpt_cost=ckpt_cost,
+        restore_cost=restore_cost,
+    )
+
+
+def run_goodput_frontier(
+    avail: np.ndarray,
+    policies: Sequence,
+    *,
+    p_survive: Optional[np.ndarray] = None,
+    names: Optional[Sequence[str]] = None,
+    dt: float = 180.0,
+    step_time: float = 2.0,
+    ckpt_cost: float = 30.0,
+    restore_cost: float = 60.0,
+    engine: str = "auto",
+) -> Dict[str, ReplayResult]:
+    """The goodput-frontier experiment: pods × policies in one batch.
+
+    Tiles the ``(pods, T)`` traces over the policy axis (policy-major row
+    blocks), runs one :func:`run_replay_batch`, and returns per-policy
+    fleet aggregates ``{policy name: ReplayResult summed over pods}``.
+    Stack traces from several campaign seeds along the pod axis to add
+    the seeds dimension.
+    """
+    avail = np.atleast_2d(np.asarray(avail)).astype(bool)
+    pods, T = avail.shape
+    n_pol = len(policies)
+    table = PolicyTable.from_policies(policies, repeat=pods, names=names)
+    big_avail = np.tile(avail, (n_pol, 1))
+    big_p = None if p_survive is None else np.tile(
+        np.broadcast_to(np.atleast_2d(p_survive), (pods, T)), (n_pol, 1)
+    )
+    batch = run_replay_batch(
+        big_avail, table, p_survive=big_p, dt=dt, step_time=step_time,
+        ckpt_cost=ckpt_cost, restore_cost=restore_cost, engine=engine,
+    )
+    out: Dict[str, ReplayResult] = {}
+    for i, pol in enumerate(policies):
+        name = names[i] if names is not None else type(pol).__name__
+        rows = slice(i * pods, (i + 1) * pods)
+        done = int(batch["steps_completed"][rows].sum())
+        lost = int(batch["steps_lost"][rows].sum())
+        out[name] = ReplayResult(
+            policy=name,
+            steps_completed=done,
+            steps_lost=lost,
+            checkpoints=int(batch["checkpoints"][rows].sum()),
+            ckpt_overhead_s=float(batch["ckpt_overhead_s"][rows].sum()),
+            lost_work_s=float(batch["lost_work_s"][rows].sum()),
+            unavailable_s=float(batch["unavailable_s"][rows].sum()),
+        )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Live-hazard streaming (online form)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GoodputCycleView:
+    """One cycle of online checkpoint decisions for the pod fleet.
+
+    Arrays are ``(policies, pods)`` except the per-pod ``up`` /
+    ``p_survive``.  ``write_started`` marks rows whose policy began a
+    checkpoint write this cycle (the actionable signal — trigger the real
+    write now); ``panic`` marks hazard rows in the imminent-interrupt
+    regime; ``ckpt_completed`` marks writes whose last byte landed this
+    cycle (including carried partial writes).
+    """
+
+    cycle: int
+    time: float
+    up: np.ndarray                    # (pods,) bool — pod availability
+    p_survive: Optional[np.ndarray]   # (pods,) f64 or None (no prediction yet)
+    write_started: np.ndarray         # (policies, pods) bool
+    ckpt_completed: np.ndarray        # (policies, pods) bool
+    panic: np.ndarray                 # (policies, pods) bool
+    steps: np.ndarray                 # (policies, pods) int64 — steps this cycle
+
+
+class GoodputStream:
+    """Online goodput engine: live SnS hazards → checkpoint decisions.
+
+    Wraps a :class:`~repro.core.pipeline.CampaignPipelineStream` and
+    advances the replay contract one cycle per :meth:`step`: the cycle's
+    ``StreamCycleView.probs`` column (one batched predictor call for the
+    whole fleet) becomes the hazard input of every policy row, and the
+    same closed-form transition as :func:`run_replay_batch` updates the
+    stacked ``(policies × pods)`` state — so draining the stream is
+    **bit-identical (atol=0)** to the offline batch replay of the
+    finished campaign's traces under the same per-cycle probabilities.
+
+    Pod availability is the paper's binary formulation (``running == N``)
+    read live off the campaign stream; cycles whose predictions are not
+    yet available (sequence predictors warming up, or no predictor)
+    replay under ``p = 1`` for hazard rows.
+
+    Resumable: :meth:`state_dict` / :meth:`restore` snapshot the stacked
+    replay state *and* the wrapped pipeline stream (the PR-8 protocol) —
+    kill at cycle k, restore onto a fresh stream, drain, and the result
+    is bit-identical to the uninterrupted run.
+    """
+
+    def __init__(
+        self,
+        stream,
+        policies: Sequence,
+        *,
+        n_pods: Optional[int] = None,
+        names: Optional[Sequence[str]] = None,
+        step_time: float = 2.0,
+        ckpt_cost: float = 30.0,
+        restore_cost: float = 60.0,
+    ):
+        self.stream = stream
+        pools = len(stream.processor.pool_ids)
+        self.n_pods = min(n_pods, pools) if n_pods is not None else pools
+        self.n_policies = len(policies)
+        self.policy_names = list(
+            names if names is not None else (type(p).__name__ for p in policies)
+        )
+        self.table = PolicyTable.from_policies(
+            policies, repeat=self.n_pods, names=names
+        )
+        self.dt = float(stream.campaign.interval)
+        self._n = int(stream.campaign.n)
+        self.step_time = float(step_time)
+        self.ckpt_cost = float(ckpt_cost)
+        self.restore_cost = float(restore_cost)
+        self._st = _init_state(self.n_pods * self.n_policies)
+        self.cycles_run = 0
+
+    @property
+    def done(self) -> bool:
+        return self.stream.done
+
+    def step(self) -> Optional[GoodputCycleView]:
+        """Advance one cycle (measure → featurize → predict → decide);
+        ``None`` once the campaign is over."""
+        view = self.stream.step()
+        if view is None:
+            return None
+        up = np.asarray(view.running_t[: self.n_pods] >= self._n)
+        p_col = None
+        if view.probs is not None:
+            p_col = np.asarray(view.probs[: self.n_pods], dtype=np.float64)
+        p_rows = None if p_col is None else np.tile(p_col, self.n_policies)
+        tau_c = self.table.tau(p_rows)
+        shape = (self.n_policies, self.n_pods)
+        started, completed, steps = _cycle_update(
+            self._st,
+            np.tile(up, self.n_policies),
+            tau_c,
+            view.cycle * self.dt,
+            dt=self.dt,
+            step_time=self.step_time,
+            ckpt_cost=self.ckpt_cost,
+            restore_cost=self.restore_cost,
+        )
+        self.cycles_run += 1
+        return GoodputCycleView(
+            cycle=view.cycle,
+            time=view.time,
+            up=up,
+            p_survive=p_col,
+            write_started=started.reshape(shape),
+            ckpt_completed=completed.reshape(shape),
+            panic=self.table.panic(p_rows).reshape(shape),
+            steps=steps.reshape(shape),
+        )
+
+    def __iter__(self):
+        while True:
+            view = self.step()
+            if view is None:
+                return
+            yield view
+
+    def result(self) -> Dict[str, np.ndarray]:
+        """Stacked replay metrics so far — the :func:`run_replay_batch`
+        dict over the ``(policies × pods)`` row axis (policy-major)."""
+        return _metrics_from_state(self._st, self.step_time)
+
+    def frontier(self) -> Dict[str, ReplayResult]:
+        """Per-policy fleet aggregates (cf. :func:`run_goodput_frontier`)."""
+        batch = self.result()
+        out: Dict[str, ReplayResult] = {}
+        for i, name in enumerate(self.policy_names):
+            rows = slice(i * self.n_pods, (i + 1) * self.n_pods)
+            out[name] = ReplayResult(
+                policy=name,
+                steps_completed=int(batch["steps_completed"][rows].sum()),
+                steps_lost=int(batch["steps_lost"][rows].sum()),
+                checkpoints=int(batch["checkpoints"][rows].sum()),
+                ckpt_overhead_s=float(batch["ckpt_overhead_s"][rows].sum()),
+                lost_work_s=float(batch["lost_work_s"][rows].sum()),
+                unavailable_s=float(batch["unavailable_s"][rows].sum()),
+            )
+        return out
+
+    def state_dict(self) -> dict:
+        """Crash-consistent snapshot: the stacked replay state plus the
+        wrapped pipeline stream's own ``state_dict()``."""
+        return {
+            "cycles_run": self.cycles_run,
+            "replay": {k: v.copy() for k, v in self._st.items()},
+            "stream": self.stream.state_dict(),
+        }
+
+    def restore(self, sd: dict) -> None:
+        """Inverse of :meth:`state_dict` onto an identically-configured
+        goodput stream (same policies / pods / costs / stream config)."""
+        self.cycles_run = int(sd["cycles_run"])
+        for k in self._st:
+            self._st[k] = np.asarray(sd["replay"][k]).copy()
+        self.stream.restore(sd["stream"])

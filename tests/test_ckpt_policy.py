@@ -1,0 +1,135 @@
+"""Checkpoint-policy properties: Young–Daly optimality, hazard clamps, panic.
+
+Property tests (hypothesis) for the closed-form interval math in
+``repro.fleet.ckpt_policy`` plus one end-to-end statistical check: under
+exponential failures, the Young–Daly interval maximises useful work among
+scanned fixed intervals when replayed through the goodput engine.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fleet import (
+    FixedInterval,
+    PolicyTable,
+    SnSHazard,
+    YoungDaly,
+    hazard_tau,
+    run_replay_batch,
+)
+
+
+class TestYoungDaly:
+    @settings(max_examples=40, deadline=None)
+    @given(delta=st.floats(1.0, 600.0), mtbf=st.floats(60.0, 1e6))
+    def test_interval_closed_form(self, delta, mtbf):
+        pol = YoungDaly(ckpt_cost=delta, mtbf=mtbf)
+        assert math.isclose(pol.interval, math.sqrt(2.0 * delta * mtbf),
+                            rel_tol=1e-12)
+
+    def test_interval_optimal_under_exponential_failures(self):
+        """τ* = sqrt(2δ·MTBF) beats 4× shorter and 4× longer fixed
+        intervals on useful work (completed − rolled-back steps) when
+        replayed against memoryless preemptions."""
+        delta, mtbf, dt = 30.0, 3600.0, 60.0
+        tau_star = YoungDaly(ckpt_cost=delta, mtbf=mtbf).interval
+        rng = np.random.default_rng(0)
+        rows, T = 64, 2000
+        avail = ~(rng.random((rows, T)) < dt / mtbf)  # geometric ≈ exponential
+
+        def useful(mult):
+            got = run_replay_batch(
+                avail, FixedInterval(tau_star * mult), dt=dt, step_time=1.0,
+                ckpt_cost=delta, restore_cost=0.0, engine="scan")
+            return int(got["steps_completed"].sum() - got["steps_lost"].sum())
+
+        too_eager, opt, too_lazy = useful(0.25), useful(1.0), useful(4.0)
+        assert opt > too_eager, (opt, too_eager)
+        assert opt > too_lazy, (opt, too_lazy)
+
+
+class TestSnSHazard:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        p=st.floats(0.0, 1.0),
+        delta=st.floats(5.0, 300.0),
+        horizon=st.floats(60.0, 3600.0),
+    )
+    def test_interval_clamped(self, p, delta, horizon):
+        pol = SnSHazard(ckpt_cost=delta, horizon=horizon, tau_max=3600.0)
+        iv = pol.interval(p)
+        assert delta <= iv <= pol.tau_max
+
+    @settings(max_examples=40, deadline=None)
+    @given(p=st.floats(0.0, 1.0), delta=st.floats(5.0, 300.0))
+    def test_panic_floors_at_two_delta(self, p, delta):
+        """Sustained panic must re-write no faster than every 2δ — the
+        override collapses τ to exactly 2δ, never below."""
+        pol = SnSHazard(ckpt_cost=delta, horizon=900.0, panic_threshold=0.4)
+        tau = float(pol.tau(p))
+        if 1.0 - p >= pol.panic_threshold:
+            assert tau == 2.0 * delta
+        else:
+            assert tau >= delta
+
+    def test_interval_monotone_in_risk(self):
+        pol = SnSHazard(ckpt_cost=30.0, horizon=900.0, panic_threshold=1.1)
+        ps = np.linspace(0.05, 0.999, 50)
+        taus = [pol.interval(p) for p in ps]
+        assert all(a <= b + 1e-12 for a, b in zip(taus, taus[1:]))
+
+    def test_should_checkpoint_defaults_to_p_one(self):
+        pol = SnSHazard(ckpt_cost=30.0, horizon=900.0, tau_max=1200.0)
+        # p=1 → hazard floors at floor_hazard → τ clamps to tau_max
+        assert not pol.should_checkpoint(1199.0, 0.0, None)
+        assert pol.should_checkpoint(1200.0, 0.0, None)
+
+
+class TestPolicyTable:
+    def test_tau_matches_scalar_policies(self):
+        policies = [
+            FixedInterval(600.0),
+            YoungDaly(ckpt_cost=25.0, mtbf=3000.0),
+            SnSHazard(ckpt_cost=30.0, horizon=900.0, panic_threshold=0.4),
+        ]
+        table = PolicyTable.from_policies(policies)
+        rng = np.random.default_rng(1)
+        p = rng.random((3, 16))
+        tau = table.tau(p)
+        np.testing.assert_array_equal(tau[0], 600.0)
+        np.testing.assert_array_equal(tau[1], policies[1].interval)
+        np.testing.assert_array_equal(tau[2], policies[2].tau(p[2]))
+
+    def test_repeat_blocks_are_policy_major(self):
+        table = PolicyTable.from_policies(
+            [FixedInterval(100.0), FixedInterval(200.0)], repeat=3)
+        np.testing.assert_array_equal(
+            table.interval, [100.0] * 3 + [200.0] * 3)
+        assert table.names == ["FixedInterval"] * 6
+
+    def test_fixed_rows_never_panic(self):
+        table = PolicyTable.from_policies(
+            [FixedInterval(600.0), SnSHazard(30.0, 900.0, panic_threshold=0.4)])
+        panic = table.panic(np.array([0.0, 0.0]))  # certain interrupt
+        assert not panic[0] and panic[1]
+        assert not table.panic(None).any()
+
+    def test_unsupported_policy_rejected(self):
+        with pytest.raises(TypeError, match="unsupported policy"):
+            PolicyTable.from_policies([object()])
+
+    @settings(max_examples=25, deadline=None)
+    @given(p=st.floats(0.0, 1.0))
+    def test_hazard_tau_ufunc_matches_policy(self, p):
+        """The shared ufunc and the scalar policy agree bit-for-bit —
+        the foundation of cross-engine τ identity."""
+        pol = SnSHazard(ckpt_cost=40.0, horizon=600.0, tau_max=2000.0,
+                        panic_threshold=0.3)
+        via_ufunc = hazard_tau(
+            p, ckpt_cost=40.0, horizon=600.0, tau_max=2000.0,
+            panic_threshold=0.3, floor_hazard=pol.floor_hazard)
+        assert float(via_ufunc) == float(pol.tau(p))

@@ -55,3 +55,27 @@ def test_serve_spot_smoke(engine, capsys):
     assert x.shape == (6, n_cycles - 5, 3) and y.shape == (6, n_cycles - 5)
     out = capsys.readouterr().out
     assert "served" in out and "streamed dataset" in out
+
+
+def test_elastic_training_smoke(capsys):
+    """The elastic-training loop end to end at tiny shapes: real train
+    steps on a re-meshed data plane, checkpoint decisions from the live
+    goodput stream, frontier accounting over the whole campaign."""
+    mod = load_example("elastic_training")
+    out_dict = mod.main([
+        "--pools", "6", "--pods", "4", "--hours", "2", "--steps", "8",
+        "--d-model", "32", "--layers", "1", "--batch", "2", "--seq", "16",
+        "--engine", "sharded",
+    ])
+    assert out_dict["steps_done"] <= 8
+    assert out_dict["remeshes"] >= 1           # the loop really re-meshed
+    assert len(out_dict["losses"]) == out_dict["steps_done"] + out_dict["steps_lost"]
+    frontier = out_dict["frontier"]
+    assert set(frontier) == {"fixed_30min", "sns_hazard"}
+    # frontier accounting ran over the full 2h campaign (40 cycles)
+    gs = out_dict["goodput"]
+    assert gs.cycles_run == 40 and gs.done
+    for r in frontier.values():
+        assert 0.0 <= r.goodput <= 1.0
+    out = capsys.readouterr().out
+    assert "re-meshes" in out and "sns_hazard" in out

@@ -1,0 +1,291 @@
+"""Goodput engine: replay contract parity, carried writes, live streaming.
+
+The load-bearing guarantee under test is the house bit-identity invariant:
+the scalar reference :func:`repro.fleet.run_replay`, the vectorised numpy
+engine, and the ``lax.scan`` engine of :func:`repro.fleet.run_replay_batch`
+must agree **exactly** (atol=0) row for row across pods × policies × seeds
+— and the online :class:`repro.fleet.GoodputStream` must reproduce the
+offline batch replay of the same campaign bit for bit.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SimulatedProvider, default_fleet
+from repro.core.features import compute_features
+from repro.core.pipeline import CampaignPipelineStream
+from repro.fleet import (
+    FixedInterval,
+    GoodputStream,
+    PodTrace,
+    PolicyTable,
+    SnSHazard,
+    YoungDaly,
+    run_goodput_frontier,
+    run_replay,
+    run_replay_batch,
+)
+
+DT = 180.0
+
+
+def _trace(avail, dt=DT):
+    avail = np.asarray(avail)
+    T = len(avail)
+    return PodTrace(
+        pod_id=0,
+        pool_id="pool-0",
+        times=np.arange(T, dtype=np.float64) * dt,
+        available=avail.astype(np.int8),
+        features=np.zeros((T, 3)),
+        dt=dt,
+    )
+
+
+def _policies():
+    return [
+        FixedInterval(600.0),
+        YoungDaly(ckpt_cost=25.0, mtbf=3000.0),
+        SnSHazard(ckpt_cost=200.0, horizon=900.0, panic_threshold=0.4),
+        SnSHazard(ckpt_cost=25.0, horizon=900.0),
+    ]
+
+
+def _rand_fleet(seed, pods=6, cycles=80):
+    rng = np.random.default_rng(seed)
+    avail = rng.random((pods, cycles)) > 0.18
+    p = rng.random((pods, cycles))
+    return avail, p
+
+
+def _scalar_reference(avail, p, policies, **kw):
+    """Per-row scalar replays stacked policy-major, like the batch engines."""
+    out = {}
+    rows = []
+    for pol in policies:
+        for r in range(avail.shape[0]):
+            rows.append(
+                run_replay(_trace(avail[r], dt=kw["dt"]), policy=pol,
+                           step_time=kw["step_time"], ckpt_cost=kw["ckpt_cost"],
+                           restore_cost=kw["restore_cost"],
+                           p_survive=None if p is None else p[r])
+            )
+    out["steps_completed"] = np.array([r.steps_completed for r in rows])
+    out["steps_lost"] = np.array([r.steps_lost for r in rows])
+    out["checkpoints"] = np.array([r.checkpoints for r in rows])
+    out["ckpt_overhead_s"] = np.array([r.ckpt_overhead_s for r in rows])
+    out["unavailable_s"] = np.array([r.unavailable_s for r in rows])
+    return out
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("ckpt_cost", [30.0, 200.0])  # 200 > dt exercises carry
+    def test_three_engines_bit_identical(self, ckpt_cost):
+        avail, p = _rand_fleet(seed=7)
+        policies = _policies()
+        kw = dict(dt=DT, step_time=2.0, ckpt_cost=ckpt_cost, restore_cost=60.0)
+        ref = _scalar_reference(avail, p, policies, **kw)
+        table = PolicyTable.from_policies(policies, repeat=avail.shape[0])
+        big_avail = np.tile(avail, (len(policies), 1))
+        big_p = np.tile(p, (len(policies), 1))
+        for engine in ("numpy", "scan"):
+            got = run_replay_batch(big_avail, table, p_survive=big_p,
+                                   engine=engine, **kw)
+            for key, want in ref.items():
+                np.testing.assert_array_equal(got[key], want, err_msg=f"{engine}:{key}")
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        dt=st.sampled_from([60.0, 180.0, 300.0]),
+        step_time=st.sampled_from([1.0, 2.0, 7.0]),
+        ckpt_cost=st.sampled_from([10.0, 30.0, 250.0]),
+    )
+    def test_parity_property(self, seed, dt, step_time, ckpt_cost):
+        avail, p = _rand_fleet(seed, pods=3, cycles=40)
+        pol = SnSHazard(ckpt_cost=ckpt_cost, horizon=900.0, panic_threshold=0.35)
+        kw = dict(dt=dt, step_time=step_time, ckpt_cost=ckpt_cost, restore_cost=45.0)
+        ref = _scalar_reference(avail, p, [pol], **kw)
+        for engine in ("numpy", "scan"):
+            got = run_replay_batch(avail, pol, p_survive=p, engine=engine, **kw)
+            for key, want in ref.items():
+                np.testing.assert_array_equal(got[key], want, err_msg=f"{engine}:{key}")
+
+    def test_no_predictor_matches_p_one(self):
+        avail, _ = _rand_fleet(seed=3, pods=4)
+        pol = SnSHazard(ckpt_cost=30.0, horizon=900.0)
+        a = run_replay_batch(avail, pol, engine="numpy")
+        b = run_replay_batch(avail, pol, p_survive=np.ones_like(avail, dtype=float),
+                             engine="numpy")
+        for key in a:
+            np.testing.assert_array_equal(a[key], b[key])
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            run_replay_batch(np.ones((1, 4), bool), FixedInterval(600.0),
+                             engine="pallas")
+
+    def test_policy_row_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="rows"):
+            run_replay_batch(np.ones((3, 4), bool),
+                             PolicyTable.from_policies([FixedInterval(600.0)],
+                                                       repeat=2))
+
+
+class TestCarriedWrites:
+    """Satellite regression: ckpt_cost > dt must carry across cycles."""
+
+    def test_hand_computed_carry(self):
+        # dt=100, δ=150 (> dt), step_time=10, always up, FixedInterval(50):
+        # c0: no ckpt due (t_c=0) → 10 steps.
+        # c1: write starts, pays 100 of 150, carries write_rem=50 → 0 steps.
+        # c2: carry drains (50s) → ckpt #1 completes at t=250, 5 steps.
+        # c3: next write starts, carries again → 0 steps.
+        res = run_replay(_trace([1, 1, 1, 1], dt=100.0),
+                         policy=FixedInterval(50.0),
+                         step_time=10.0, ckpt_cost=150.0, restore_cost=0.0)
+        assert res.steps_completed == 15
+        assert res.checkpoints == 1
+        assert res.ckpt_overhead_s == 250.0
+        assert res.steps_lost == 0
+
+    def test_aborted_write_protects_nothing(self):
+        # The write straddling c1/c2 is killed by the c2 preemption: the
+        # 100 s already paid stays paid, the ckpt never lands, and every
+        # step since t=0 is lost.
+        res = run_replay(_trace([1, 1, 0, 1], dt=100.0),
+                         policy=FixedInterval(50.0),
+                         step_time=10.0, ckpt_cost=150.0, restore_cost=0.0)
+        assert res.checkpoints == 0
+        assert res.steps_lost == 10
+        assert res.ckpt_overhead_s >= 100.0
+
+    def test_completed_write_protects_steps(self):
+        # Same trace, cheap checkpoint: the c1 write completes in-cycle,
+        # so only the steps after it are exposed to the c2 preemption.
+        res = run_replay(_trace([1, 1, 0, 1], dt=100.0),
+                         policy=FixedInterval(50.0),
+                         step_time=10.0, ckpt_cost=20.0, restore_cost=0.0)
+        assert res.checkpoints >= 1
+        assert res.steps_lost < 10
+
+
+class TestInvariants:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_goodput_bounded_and_time_conserved(self, seed):
+        avail, p = _rand_fleet(seed, pods=5, cycles=60)
+        got = run_replay_batch(avail, _policies()[0], p_survive=p, engine="numpy")
+        assert np.all(got["goodput"] >= 0.0) and np.all(got["goodput"] <= 1.0)
+        # Up-time budget: training + ckpt overhead can never exceed the
+        # available seconds; total wall time is conserved per row.
+        T = avail.shape[1]
+        up_s = T * DT - got["unavailable_s"]
+        spent = got["steps_completed"] * 2.0 + got["ckpt_overhead_s"]
+        assert np.all(spent <= up_s + 1e-9)
+        np.testing.assert_allclose(got["unavailable_s"],
+                                   (~avail).sum(axis=1) * DT)
+
+    def test_never_available_trace(self):
+        avail = np.zeros((2, 50), dtype=bool)
+        got = run_replay_batch(
+            avail, [FixedInterval(600.0), SnSHazard(30.0, 900.0)], engine="numpy")
+        assert np.all(got["checkpoints"] == 0)
+        assert np.all(got["steps_completed"] == 0)
+        assert np.all(got["goodput"] == 0.0)
+        np.testing.assert_array_equal(got["unavailable_s"], 50 * DT)
+
+    def test_always_available_loses_nothing(self):
+        avail = np.ones((1, 50), dtype=bool)
+        got = run_replay_batch(avail, FixedInterval(600.0), engine="scan")
+        assert got["steps_lost"][0] == 0
+        assert got["goodput"][0] == 1.0
+
+    def test_frontier_aggregates_match_batch(self):
+        avail, p = _rand_fleet(seed=11, pods=4, cycles=60)
+        pols = _policies()
+        names = ["fixed", "yd", "hazard-big", "hazard"]
+        front = run_goodput_frontier(avail, pols, p_survive=p, names=names,
+                                     engine="numpy")
+        assert set(front) == set(names)
+        batch = run_replay_batch(
+            np.tile(avail, (len(pols), 1)),
+            PolicyTable.from_policies(pols, repeat=4, names=names),
+            p_survive=np.tile(p, (len(pols), 1)), engine="numpy")
+        for i, n in enumerate(names):
+            rows = slice(i * 4, (i + 1) * 4)
+            assert front[n].steps_completed == int(batch["steps_completed"][rows].sum())
+            assert front[n].checkpoints == int(batch["checkpoints"][rows].sum())
+
+
+def _make_stream(pools=8, duration=6 * 3600.0):
+    fleet = default_fleet(pools, seed=1)
+    provider = SimulatedProvider(fleet, seed=2)
+
+    def predict(feats):  # heuristic: high UR → likely interrupt
+        return 1.0 - np.clip((feats[:, 1] - 0.05) * 3.0, 0.0, 1.0)
+
+    return CampaignPipelineStream(provider, predict_fn=predict,
+                                  window_minutes=120, duration=duration)
+
+
+class TestGoodputStream:
+    N_PODS = 5
+
+    def test_streamed_equals_batch(self):
+        policies = [FixedInterval(1800.0),
+                    SnSHazard(ckpt_cost=30.0, horizon=900.0, panic_threshold=0.35)]
+        gs = GoodputStream(_make_stream(), policies, n_pods=self.N_PODS)
+        n_views = sum(1 for _ in gs)
+        streamed = gs.result()
+
+        # Offline: drain the finished campaign, recompute the exact same
+        # per-cycle probabilities, and batch-replay.
+        result = gs.stream.result()
+        feats = compute_features(result.s, result.n, 120, result.interval / 60.0)
+        p = np.stack(
+            [1.0 - np.clip((feats[:, c, 1] - 0.05) * 3.0, 0.0, 1.0)
+             for c in range(result.s.shape[1])], axis=1)
+        avail = (result.running >= result.n)[: self.N_PODS]
+        batch = run_replay_batch(
+            np.tile(avail, (len(policies), 1)),
+            PolicyTable.from_policies(policies, repeat=self.N_PODS),
+            p_survive=np.tile(p[: self.N_PODS], (len(policies), 1)),
+            dt=result.interval, engine="numpy")
+        assert n_views == avail.shape[1]
+        for key in batch:
+            np.testing.assert_array_equal(streamed[key], batch[key], err_msg=key)
+
+    def test_cycle_view_shapes(self):
+        policies = [FixedInterval(600.0), SnSHazard(30.0, 900.0)]
+        gs = GoodputStream(_make_stream(duration=3600.0), policies,
+                           n_pods=self.N_PODS)
+        view = gs.step()
+        assert view.up.shape == (self.N_PODS,)
+        for arr in (view.write_started, view.ckpt_completed, view.panic, view.steps):
+            assert arr.shape == (len(policies), self.N_PODS)
+        # Fixed rows never panic regardless of forecasts.
+        assert not view.panic[0].any()
+
+    def test_kill_and_restore_bit_identical(self):
+        policies = [FixedInterval(900.0), SnSHazard(30.0, 900.0)]
+        g1 = GoodputStream(_make_stream(), policies, n_pods=self.N_PODS)
+        for _ in range(40):
+            g1.step()
+        snap = g1.state_dict()
+
+        g2 = GoodputStream(_make_stream(), policies, n_pods=self.N_PODS)
+        g2.restore(snap)
+        assert g2.cycles_run == 40
+        for _ in iter(g1.step, None):
+            pass
+        for _ in iter(g2.step, None):
+            pass
+        r1, r2 = g1.result(), g2.result()
+        for key in r1:
+            np.testing.assert_array_equal(r1[key], r2[key], err_msg=key)
+        f1, f2 = g1.frontier(), g2.frontier()
+        assert {n: r.steps_completed for n, r in f1.items()} == \
+               {n: r.steps_completed for n, r in f2.items()}
