@@ -4,6 +4,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the headline
 number(s) each benchmark reproduces) followed by a JSON dump per table.
+
+Benches that append to a ``BENCH_*.json`` trajectory log also get a
+regression guard: every ``*_per_sec`` rate in the fresh record is
+compared against the last committed record, and drops beyond
+``DROP_TOLERANCE`` print a ``WARNING`` line (non-fatal — CI containers
+are noisy, but silent perf regressions should at least surface in the
+logs).
 """
 
 from __future__ import annotations
@@ -12,6 +19,7 @@ import argparse
 import json
 import sys
 import time
+from pathlib import Path
 
 from . import (
     campaign_throughput,
@@ -67,6 +75,59 @@ BENCHES = [
                 f"hazard_goodput={r['frontier']['sns_hazard']['goodput']}")),
 ]
 
+#: benches with an append-only trajectory log in the repo root
+BENCH_LOGS = {
+    "campaign_throughput": "BENCH_campaign.json",
+    "replay_throughput": "BENCH_replay.json",
+    "serve_throughput": "BENCH_serve.json",
+    "goodput_throughput": "BENCH_goodput.json",
+}
+DROP_TOLERANCE = 0.30   # fractional rate drop vs last committed record
+
+
+def _last_record(path):
+    """Last JSON-lines record of a trajectory log, or None."""
+    try:
+        lines = [l for l in Path(path).read_text().splitlines() if l.strip()]
+        return json.loads(lines[-1]) if lines else None
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _rate_leaves(rec, prefix=()):
+    """Flatten every ``*_per_sec`` table in a record to {path: rate}."""
+    out = {}
+    if not isinstance(rec, dict):
+        return out
+    for k, v in rec.items():
+        key = str(k)
+        if isinstance(v, dict) and key.endswith("_per_sec"):
+            for m, x in v.items():
+                if isinstance(x, (int, float)):
+                    out[prefix + (key, str(m))] = float(x)
+        elif isinstance(v, dict):
+            out.update(_rate_leaves(v, prefix + (key,)))
+    return out
+
+
+def check_trajectory(name, fresh, baseline):
+    """Non-fatal guard: rate drops > DROP_TOLERANCE vs the last committed
+    record come back as WARNING lines (new legs / removed legs are not
+    compared — only rates present in both records)."""
+    warns = []
+    if baseline is None or fresh.get("smoke"):
+        return warns
+    base = _rate_leaves(baseline)
+    now = _rate_leaves(fresh)
+    for key, b in sorted(base.items()):
+        n = now.get(key)
+        if n is not None and b > 0 and n < (1.0 - DROP_TOLERANCE) * b:
+            warns.append(
+                f"WARNING: {name} {'.'.join(key)} dropped "
+                f"{b:.1f} -> {n:.1f} ({n / b:.0%} of last committed record)"
+            )
+    return warns
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -83,12 +144,17 @@ def main() -> None:
         kwargs = {}
         if args.quick and name == "fig8_horizon":
             kwargs = {"seq_models": (), "horizons": (3, 60)}
+        # snapshot the trajectory baseline before the bench appends to it
+        baseline = (_last_record(BENCH_LOGS[name])
+                    if name in BENCH_LOGS else None)
         t0 = time.perf_counter()
         try:
             r = fn(**kwargs)
             us = (time.perf_counter() - t0) * 1e6
             results[name] = r
             print(f"{name},{us:.0f},{derive(r)}", flush=True)
+            for warn in check_trajectory(name, r, baseline):
+                print(warn, flush=True)
         except Exception as e:  # keep the sweep alive; report at the end
             us = (time.perf_counter() - t0) * 1e6
             results[name] = {"error": str(e)}

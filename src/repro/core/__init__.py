@@ -80,6 +80,7 @@ from .simulate import (
     SimResult,
     replay,
     replay_batch,
+    replay_sweep,
     run_fleet_strategies,
     run_strategies,
 )
@@ -111,7 +112,7 @@ __all__ = [
     "ProbeCostMeter", "RateLimitError",
     "SimulatedProvider", "default_fleet",
     "ShardedProvider", "run_sharded_campaign",
-    "SimResult", "replay", "replay_batch", "run_strategies",
+    "SimResult", "replay", "replay_batch", "replay_sweep", "run_strategies",
     "run_fleet_strategies",
     "tpcds_profile",
 ]

@@ -80,6 +80,7 @@ __all__ = [
     "SimResult",
     "replay",
     "replay_batch",
+    "replay_sweep",
     "run_strategies",
     "run_fleet_strategies",
 ]
@@ -89,6 +90,7 @@ PredictorFn = Callable[[int], int]
 
 STRATEGIES = ("always_run", "sjf", "predict_ar")
 ENGINES = ("auto", "numpy", "scan", "kernel")
+PRECISIONS = ("f64", "f32")
 
 #: completion slack shared by every backend (a query whose remaining work
 #: is within EPS of the budget counts as finished this cycle)
@@ -287,23 +289,33 @@ def _replay_batch_numpy(
     One closed-form transition per cycle over stacked row state; the
     prefix count of phase B is a plain comparison count against the
     ``cum`` rows.  Bit-identical to :func:`replay` row by row.
+
+    Dtype-generic: the dtype of ``cum`` drives every float op through
+    typed constants (so the f32 tier has a numpy oracle executing the
+    same IEEE ops as the f32 scan/kernel paths).  float64 inputs keep
+    the historical bit-exact behaviour.
     """
     B, T = avail.shape
     Q = dur.shape[1]
     use_pred = pred_zero is not None
     rows = np.arange(B)
+    fd = cum.dtype
+    ft = fd.type
+    dtc = ft(dt)
+    eps = ft(EPS)
+    zero = ft(0.0)
 
     head = np.zeros(B, dtype=np.int64)
-    front = np.zeros(B)
+    front = np.zeros(B, dtype=fd)
     has_front = np.zeros(B, dtype=bool)
     running = np.zeros(B, dtype=bool)
-    remaining = np.zeros(B)
-    progress = np.zeros(B)
+    remaining = np.zeros(B, dtype=fd)
+    progress = np.zeros(B, dtype=fd)
     defer = np.full(B, -1, dtype=np.int64)
-    lost = np.zeros(B)
-    idle = np.zeros(B)
+    lost = np.zeros(B, dtype=fd)
+    idle = np.zeros(B, dtype=fd)
     completed = np.zeros(B, dtype=np.int64)
-    makespan = np.full(B, T * dt, dtype=np.float64)
+    makespan = np.full(B, T, dtype=fd) * dtc
 
     for c in range(T):
         up = avail[:, c]
@@ -321,20 +333,21 @@ def _replay_batch_numpy(
         else:
             deferred = np.zeros(B, dtype=bool)
 
-        b = np.where(up, dt, 0.0)
+        b = np.where(up, dtc, zero)
+        mk_edge = ft(c + 1) * dtc
         # -- phase A ------------------------------------------------------
         a_run = up & running
         a_frt = up & ~running & has_front & ~deferred
         has_a = a_run | a_frt
         if has_a.any():
             x = np.where(a_run, remaining, front)
-            step = np.where(has_a, np.minimum(b, x), 0.0)
+            step = np.where(has_a, np.minimum(b, x), zero)
             xr = x - step
             progress = np.where(a_run, progress + step,
                                 np.where(a_frt, step, progress))
             b = b - step
             has_front = has_front & ~a_frt
-            fin = has_a & (xr <= EPS)
+            fin = has_a & (xr <= eps)
             completed[fin] += 1
             running = has_a & ~fin
             remaining = np.where(has_a & ~fin, xr, remaining)
@@ -342,26 +355,26 @@ def _replay_batch_numpy(
             mk_a = fin & (head >= Q) & ~has_front
             if mk_a.any():
                 makespan[mk_a] = np.minimum(
-                    makespan[mk_a], (c + 1) * dt - b[mk_a]
+                    makespan[mk_a], mk_edge - b[mk_a]
                 )
         # -- phase B ------------------------------------------------------
-        qb = up & ~running & ~deferred & (head < Q) & (b > EPS)
+        qb = up & ~running & ~deferred & (head < Q) & (b > eps)
         if qb.any():
             r = rows[qb]
             base = cum[r, head[qb]]
-            target = base + (b[qb] + EPS)
+            target = base + (b[qb] + eps)
             k = (cum[r] <= target[:, None]).sum(axis=1) - head[qb] - 1
             used = cum[r, head[qb] + k] - base
-            b2 = np.maximum(b[qb] - used, 0.0)
+            b2 = np.maximum(b[qb] - used, zero)
             completed[qb] += k
             h2 = head[qb] + k
             mk_b = (k > 0) & (h2 >= Q)
             if mk_b.any():
                 mrows = r[mk_b]
                 makespan[mrows] = np.minimum(
-                    makespan[mrows], (c + 1) * dt - b2[mk_b]
+                    makespan[mrows], mk_edge - b2[mk_b]
                 )
-            part = (h2 < Q) & (b2 > EPS)
+            part = (h2 < Q) & (b2 > eps)
             if part.any():
                 prow = r[part]
                 hp = h2[part]
@@ -370,9 +383,9 @@ def _replay_batch_numpy(
                 running[prow] = True
                 h2 = h2 + part
             head[qb] = h2
-            b[qb] = np.where(part, 0.0, b2)
+            b[qb] = np.where(part, zero, b2)
         # -- phase C ------------------------------------------------------
-        sit = ~running & (b > EPS)
+        sit = ~running & (b > eps)
         idle[sit] += b[sit]
 
     return {
@@ -384,6 +397,20 @@ def _replay_batch_numpy(
     }
 
 
+def _cast_precision(cum: np.ndarray, precision: str) -> np.ndarray:
+    """Select the precision tier: the dtype of ``cum`` drives every
+    engine.  Prefix sums always accumulate in float64 first (shared
+    verbatim by every backend), then round once to f32 for the fast tier
+    — on 1/32-second-quantised workloads with bounded totals that cast
+    is exact, which is what makes the f32 tier reproduce the f64 oracle
+    bit for bit there (see ``kernels.replay_scan.ops``)."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r} (want one of {PRECISIONS})"
+        )
+    return cum.astype(np.float32) if precision == "f32" else cum
+
+
 def replay_batch(
     avail: np.ndarray,
     durations: np.ndarray,
@@ -393,6 +420,7 @@ def replay_batch(
     predictions: Optional[np.ndarray] = None,
     horizon_cycles: int = 1,
     engine: str = "auto",
+    precision: str = "f64",
     shards=None,
 ) -> Dict[str, np.ndarray]:
     """Replay a stack of traces with one strategy (thin dispatcher).
@@ -421,6 +449,12 @@ def replay_batch(
         * ``"auto"`` (default) — Pallas on TPU for float32 inputs, scan
           everywhere else (float64 contracts stay on the bit-identical
           scan even on TPU).
+      precision: ``"f64"`` (default — the atol=0 house contract) or
+        ``"f32"`` (the bandwidth-lean fast tier: every engine executes
+        the same op sequence in float32; on 1/32-second-quantised
+        workloads with bounded totals the f32 results — integer
+        decisions *and* float metrics — reproduce the f64 oracle bit
+        for bit).
       shards: trace-axis mesh size for the scan backend — ``None`` /
         ``"auto"`` shards across all visible devices (single device:
         plain unsharded scan), an int pins the mesh size.  Ignored by
@@ -435,6 +469,7 @@ def replay_batch(
     avail, dur, cum, pred_zero = _prepare_batch(
         avail, durations, strategy, predictions
     )
+    cum = _cast_precision(cum, precision)
     if engine == "numpy" or dur.shape[1] == 0 or avail.shape[1] == 0:
         # degenerate shapes stay on the oracle path (nothing to scan over)
         return _replay_batch_numpy(
@@ -448,6 +483,64 @@ def replay_batch(
         dt=dt, horizon_cycles=horizon_cycles, backend=backend,
         shards=shards,
     )
+
+
+def replay_sweep(
+    avail: np.ndarray,
+    durations: np.ndarray,
+    *,
+    strategies: Sequence[str] = STRATEGIES,
+    dt: float = 180.0,
+    predictions: Optional[np.ndarray] = None,
+    horizon_cycles: int = 1,
+    engine: str = "auto",
+    precision: str = "f64",
+    shards=None,
+) -> Dict[str, Dict[str, np.ndarray]]:
+    """Replay a stack of traces through *all* strategies in one pass.
+
+    The fused form of S :func:`replay_batch` calls: on the scan and
+    kernel engines the carried state gains a strategies plane, so each
+    availability column streams from memory once and feeds every
+    strategy's transition — the bandwidth-lean path that
+    :func:`run_strategies` / :func:`run_fleet_strategies` (fig9) ride.
+    Fused results are **bit-identical (atol=0)** to the per-strategy
+    calls (the fused body executes the same elementwise ops in the same
+    order); the numpy oracle simply loops strategies.
+
+    Same arguments as :func:`replay_batch` plus ``strategies`` (the
+    planes to sweep, default all three).  Returns ``{strategy: metric
+    dict}`` with the :func:`replay_batch` metrics per strategy.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (want one of {ENGINES})")
+    strategies = list(strategies)
+    prepped = [
+        _prepare_batch(avail, durations, s, predictions) for s in strategies
+    ]
+    avail_b = prepped[0][0]
+    pred_zero = next((p[3] for p in prepped if p[3] is not None), None)
+    cums = _cast_precision(
+        np.stack([p[2] for p in prepped]), precision
+    )
+    degenerate = cums.shape[2] == 1 or avail_b.shape[1] == 0
+    if engine == "numpy" or degenerate:
+        return {
+            s: _replay_batch_numpy(
+                avail_b, prepped[i][1], cums[i], prepped[i][3],
+                dt=dt, horizon_cycles=horizon_cycles,
+            )
+            for i, s in enumerate(strategies)
+        }
+    from repro.kernels.replay_scan.ops import replay_sweep_op
+
+    backend = {"auto": "auto", "scan": "jnp", "kernel": "pallas"}[engine]
+    use_pred = tuple(s == "predict_ar" for s in strategies)
+    results = replay_sweep_op(
+        avail_b, cums, pred_zero, use_pred,
+        dt=dt, horizon_cycles=horizon_cycles, backend=backend, shards=shards,
+    )
+    return dict(zip(strategies, results))
 
 
 def _pool_mean_results(
@@ -483,11 +576,13 @@ def run_strategies(
     n_permutations: int = 5,
     seed: int = 0,
     engine: str = "auto",
+    precision: str = "f64",
 ) -> List[SimResult]:
     """Average each strategy over query-order permutations (§VI-E).
 
-    All permutations of one strategy replay as a single
-    :func:`replay_batch` call instead of a Python loop of scalar replays.
+    All permutations × strategies replay as a single fused
+    :func:`replay_sweep` call instead of a Python loop of scalar
+    replays — each trace column is read once for all strategies.
     """
     rng = np.random.default_rng(seed)
     avail = np.asarray(avail)
@@ -497,19 +592,20 @@ def run_strategies(
     if pred is not None:
         strategies.append("predict_ar")
     perms = np.stack([rng.permutation(durations) for _ in range(n_permutations)])
-    out = []
-    for s in strategies:
-        batch = replay_batch(
-            np.broadcast_to(avail, (n_permutations, avail.shape[-1])),
-            perms,
-            strategy=s,
-            dt=dt,
-            predictions=pred,
-            horizon_cycles=horizon_cycles,
-            engine=engine,
-        )
-        out.append(_pool_mean_results(s, batch, 1, n_permutations)[0])
-    return out
+    sweep = replay_sweep(
+        np.broadcast_to(avail, (n_permutations, avail.shape[-1])),
+        perms,
+        strategies=strategies,
+        dt=dt,
+        predictions=pred,
+        horizon_cycles=horizon_cycles,
+        engine=engine,
+        precision=precision,
+    )
+    return [
+        _pool_mean_results(s, sweep[s], 1, n_permutations)[0]
+        for s in strategies
+    ]
 
 
 def run_fleet_strategies(
@@ -522,9 +618,10 @@ def run_fleet_strategies(
     n_permutations: int = 5,
     seeds: Optional[Sequence[int]] = None,
     engine: str = "auto",
+    precision: str = "f64",
 ) -> Dict[str, List[SimResult]]:
     """The §VI-E experiment in one shot: every (pool × permutation ×
-    strategy) trace replays inside three :func:`replay_batch` calls.
+    strategy) trace replays inside ONE fused :func:`replay_sweep` call.
 
     Args:
       avail: (pools, T) per-pool availability traces.
@@ -533,8 +630,9 @@ def run_fleet_strategies(
         enables the ``predict_ar`` strategy.
       seeds: per-pool permutation seeds (defaults to the pool index, the
         historical per-pool convention).
-      engine: replay engine, forwarded to :func:`replay_batch` (the
-        default routes through the scan path).
+      engine: replay engine, forwarded to :func:`replay_sweep` (the
+        default routes through the fused scan path).
+      precision: ``"f64"`` (atol=0 contract) or ``"f32"`` (fast tier).
 
     Returns ``{strategy: [per-pool permutation-averaged SimResult]}``.
     """
@@ -556,16 +654,17 @@ def run_fleet_strategies(
     if predictions is not None:
         big_pred = np.repeat(np.asarray(predictions), n_permutations, axis=0)
         strategies.append("predict_ar")
-    out: Dict[str, List[SimResult]] = {}
-    for s in strategies:
-        batch = replay_batch(
-            big_avail,
-            perms,
-            strategy=s,
-            dt=dt,
-            predictions=big_pred,
-            horizon_cycles=horizon_cycles,
-            engine=engine,
-        )
-        out[s] = _pool_mean_results(s, batch, pools, n_permutations)
-    return out
+    sweep = replay_sweep(
+        big_avail,
+        perms,
+        strategies=strategies,
+        dt=dt,
+        predictions=big_pred,
+        horizon_cycles=horizon_cycles,
+        engine=engine,
+        precision=precision,
+    )
+    return {
+        s: _pool_mean_results(s, sweep[s], pools, n_permutations)
+        for s in strategies
+    }

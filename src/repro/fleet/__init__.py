@@ -1,4 +1,11 @@
-from .ckpt_policy import FixedInterval, PolicyTable, SnSHazard, YoungDaly, hazard_tau
+from .ckpt_policy import (
+    FixedInterval,
+    PolicyTable,
+    SnSHazard,
+    YoungDaly,
+    hazard_tau,
+    neg_log_survival,
+)
 from .elastic import ElasticMeshManager, MeshPlan, reshard
 from .events import PodEvent, PodTrace, traces_from_campaign
 from .runner import (
@@ -8,12 +15,15 @@ from .runner import (
     run_goodput_frontier,
     run_replay,
     run_replay_batch,
+    run_replay_fleet,
 )
 
 __all__ = [
     "FixedInterval", "SnSHazard", "YoungDaly", "PolicyTable", "hazard_tau",
+    "neg_log_survival",
     "ElasticMeshManager", "MeshPlan", "reshard",
     "PodEvent", "PodTrace", "traces_from_campaign",
-    "ReplayResult", "run_replay", "run_replay_batch", "run_goodput_frontier",
+    "ReplayResult", "run_replay", "run_replay_batch", "run_replay_fleet",
+    "run_goodput_frontier",
     "GoodputCycleView", "GoodputStream",
 ]

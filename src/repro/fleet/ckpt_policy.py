@@ -38,7 +38,21 @@ __all__ = [
     "SnSHazard",
     "PolicyTable",
     "hazard_tau",
+    "neg_log_survival",
 ]
+
+
+def neg_log_survival(p):
+    """``-ln(clip(p, 1e-6, 1-1e-9))`` — the transcendental half of the
+    hazard formula, evaluated on the host.
+
+    The fused kernel engine (``kernels.goodput_scan``) consumes this as
+    input data and re-derives τ in-graph from traced parameters only —
+    host log here, IEEE division/sqrt/clip there — which keeps its τ
+    bit-identical to the :func:`hazard_tau` ufunc chain.
+    """
+    p_c = np.clip(np.asarray(p, dtype=np.float64), 1e-6, 1.0 - 1e-9)
+    return -np.log(p_c)
 
 
 def _base_tau(p, ckpt_cost, horizon, tau_max, floor_hazard):
@@ -48,8 +62,7 @@ def _base_tau(p, ckpt_cost, horizon, tau_max, floor_hazard):
     clamped to ``[δ, τ_max]``.  Pure elementwise float64 ufuncs — the one
     formula shared by ``SnSHazard.interval`` and the stacked table rows.
     """
-    p_c = np.clip(np.asarray(p, dtype=np.float64), 1e-6, 1.0 - 1e-9)
-    lam = np.maximum(-np.log(p_c) / horizon, floor_hazard)
+    lam = np.maximum(neg_log_survival(p) / horizon, floor_hazard)
     return np.clip(np.sqrt(2.0 * ckpt_cost / lam), ckpt_cost, tau_max)
 
 
@@ -228,6 +241,20 @@ class PolicyTable:
             panic_threshold=panic, floor_hazard=floor,
         )
         return np.where(is_hz, hz, interval * np.ones_like(p))
+
+    def engine_planes(self) -> dict:
+        """The per-row τ parameter columns the fused kernel engine
+        consumes (``kernels.goodput_scan``); the panic threshold is not
+        among them — panic is a host predicate packed into the flag bits
+        (see :meth:`panic`)."""
+        return {
+            "is_hazard": self.is_hazard.copy(),
+            "interval": self.interval.copy(),
+            "ckpt_cost": self.ckpt_cost.copy(),
+            "horizon": self.horizon.copy(),
+            "tau_max": self.tau_max.copy(),
+            "floor_hazard": self.floor_hazard.copy(),
+        }
 
     def panic(self, p: Optional[np.ndarray] = None) -> np.ndarray:
         """Which rows are in the imminent-interrupt (panic) regime."""

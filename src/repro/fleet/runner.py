@@ -59,11 +59,17 @@ three implementations **bit-identical (atol=0)** row by row:
   ``(pods × policies × seeds)`` row axis: ``engine="numpy"`` is the
   vectorised per-cycle loop (the parity oracle), ``engine="scan"`` the
   ``lax.scan`` closed form (float64 under a scoped ``enable_x64``; the
-  fast CPU path), ``engine="auto"`` picks scan for non-degenerate
-  shapes.
+  fast CPU path), ``engine="kernel"`` the fused
+  :mod:`repro.kernels.goodput_scan` engine (τ re-derived in-graph from
+  host-packed flags + negative log survival — no host ``(R, T)`` τ
+  matrix; Pallas on TPU, fused scan elsewhere; opt-in ``precision="f32"``
+  fast tier), ``engine="auto"`` picks scan for non-degenerate shapes.
 
-:func:`run_goodput_frontier` crosses pods × policies in one
-:func:`run_replay_batch` call (the goodput-frontier experiment), and
+:func:`run_replay_fleet` crosses pods × policies *fused*: on the kernel
+engine each pod's availability/hazard column is read once and replayed
+through every policy plane in one pass (policy-major ``(S·P,)`` rows).
+:func:`run_goodput_frontier` aggregates it per policy (the
+goodput-frontier experiment), and
 :class:`GoodputStream` is the *online* form: it consumes live
 ``StreamCycleView.probs`` from a :class:`~repro.core.pipeline.
 CampaignPipelineStream` cycle by cycle — streamed ≡ batch bit-identical,
@@ -78,19 +84,24 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .ckpt_policy import PolicyTable
+from .ckpt_policy import PolicyTable, neg_log_survival
 from .events import PodTrace
 
 __all__ = [
     "ReplayResult",
     "run_replay",
     "run_replay_batch",
+    "run_replay_fleet",
     "run_goodput_frontier",
     "GoodputCycleView",
     "GoodputStream",
 ]
 
-ENGINES = ("auto", "numpy", "scan")
+ENGINES = ("auto", "numpy", "scan", "kernel")
+
+#: numeric tiers of the kernel engine: "f64" is the atol=0 house contract,
+#: "f32" the bandwidth-lean fast tier (kernel engine only)
+PRECISIONS = ("f64", "f32")
 
 
 @dataclasses.dataclass
@@ -407,6 +418,43 @@ def _run_replay_batch_scan(avail, tau, *, dt, step_time, ckpt_cost, restore_cost
     return _metrics_from_state(st, step_time)
 
 
+def _finish_kernel_metrics(res: Dict[str, np.ndarray], step_time: float):
+    """Derive the host-side metrics over the kernel engine's counters —
+    the same f64 ufuncs as :func:`_metrics_from_state`."""
+    total = res["steps_completed"] + res["steps_lost"]
+    res["lost_work_s"] = res["steps_lost"] * step_time
+    res["goodput"] = np.where(
+        total > 0, res["steps_completed"] / np.maximum(total, 1), 0.0
+    )
+    return res
+
+
+def _run_replay_batch_kernel(
+    avail, table: PolicyTable, p_survive,
+    *, dt, step_time, ckpt_cost, restore_cost, precision, backend,
+):
+    """The fused kernel engine over per-row policies (``S == 1`` plane of
+    the policy-fused sweep, one pod row per table row)."""
+    from ..kernels.goodput_scan import goodput_sweep_op
+
+    R, T = avail.shape
+    p = np.ones((R, T)) if p_survive is None else p_survive
+    nlp = neg_log_survival(p)                       # (R, T) f64, host log
+    panic = table.panic(p)                          # host predicate
+    flags = avail.astype(np.int32) | (panic.astype(np.int32) << 1)
+    planes = {
+        k: np.broadcast_to(np.asarray(v), (R,))[None, :]
+        for k, v in table.engine_planes().items()
+    }
+    if precision == "f32":
+        nlp = nlp.astype(np.float32)
+    res = goodput_sweep_op(
+        flags, nlp, planes, dt=dt, step_time=step_time,
+        ckpt_cost=ckpt_cost, restore_cost=restore_cost, backend=backend,
+    )
+    return _finish_kernel_metrics({k: v[0] for k, v in res.items()}, step_time)
+
+
 def _policy_table(policies, rows: int, names=None) -> PolicyTable:
     """Normalise the ``policies`` argument of :func:`run_replay_batch`."""
     if isinstance(policies, PolicyTable):
@@ -433,6 +481,8 @@ def run_replay_batch(
     ckpt_cost: float = 30.0,
     restore_cost: float = 60.0,
     engine: str = "auto",
+    precision: str = "f64",
+    backend: str = "auto",
     names=None,
 ) -> Dict[str, np.ndarray]:
     """Replay a stack of traces, one checkpoint policy per row.
@@ -448,9 +498,17 @@ def run_replay_batch(
         back to ``p = 1`` when omitted.
       engine: ``"numpy"`` (vectorised per-cycle loop, the parity oracle)
         | ``"scan"`` (the jitted ``lax.scan`` closed form, float64 under
-        a scoped ``enable_x64`` — the fast CPU path) | ``"auto"``
-        (scan, except degenerate empty shapes).  All engines are
-        **bit-identical (atol=0)** to per-row scalar :func:`run_replay`.
+        a scoped ``enable_x64`` — the fast CPU path) | ``"kernel"`` (the
+        fused :mod:`repro.kernels.goodput_scan` engine: τ re-derived
+        in-graph from host-packed flags + negative log survival, no host
+        ``(R, T)`` τ matrix) | ``"auto"`` (scan, except degenerate empty
+        shapes).  All engines at f64 are **bit-identical (atol=0)** to
+        per-row scalar :func:`run_replay`.
+      precision: ``"f64"`` (house contract) or ``"f32"`` — the
+        bandwidth-lean fast tier, kernel engine only.
+      backend: kernel-engine backend override (``"auto"`` | ``"jnp"`` |
+        ``"pallas"``); ``"auto"`` is Pallas on TPU (f32), fused scan
+        elsewhere.
 
     Returns stacked metrics ``{"steps_completed", "steps_lost",
     "checkpoints", "ckpt_overhead_s", "lost_work_s", "unavailable_s",
@@ -458,12 +516,24 @@ def run_replay_batch(
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r} (want one of {ENGINES})")
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r} (want one of {PRECISIONS})"
+        )
+    if precision != "f64" and engine != "kernel":
+        raise ValueError("precision='f32' is the kernel-engine fast tier")
     avail = np.atleast_2d(np.asarray(avail)).astype(bool)
     R, T = avail.shape
     table = _policy_table(policies, R, names)
     if p_survive is not None:
         p_survive = np.broadcast_to(
             np.atleast_2d(np.asarray(p_survive, dtype=np.float64)), (R, T)
+        )
+    if engine == "kernel":
+        return _run_replay_batch_kernel(
+            avail, table, p_survive, dt=dt, step_time=step_time,
+            ckpt_cost=ckpt_cost, restore_cost=restore_cost,
+            precision=precision, backend=backend,
         )
     # τ is engine-independent input data: one vectorised evaluation feeds
     # numpy and scan identically (the scalar spec recomputes the same
@@ -478,6 +548,82 @@ def run_replay_batch(
     )
 
 
+def run_replay_fleet(
+    avail: np.ndarray,
+    policies: Sequence,
+    *,
+    p_survive: Optional[np.ndarray] = None,
+    names: Optional[Sequence[str]] = None,
+    dt: float = 180.0,
+    step_time: float = 2.0,
+    ckpt_cost: float = 30.0,
+    restore_cost: float = 60.0,
+    engine: str = "auto",
+    precision: str = "f64",
+    backend: str = "auto",
+) -> Dict[str, np.ndarray]:
+    """Cross ``(pods, T)`` traces with S policies — policy-major
+    ``(S·pods,)`` :func:`run_replay_batch` metrics.
+
+    On ``engine="kernel"`` the cross product is **fused**: each pod's
+    availability / hazard column is loaded once and replayed through all
+    S policy planes in one :mod:`repro.kernels.goodput_scan` pass (panic
+    bits for every plane packed into one int32 flag matrix — at most 30
+    policies).  Other engines tile the traces over the policy axis and
+    delegate (bit-identical by construction).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (want one of {ENGINES})")
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r} (want one of {PRECISIONS})"
+        )
+    avail = np.atleast_2d(np.asarray(avail)).astype(bool)
+    pods, T = avail.shape
+    n_pol = len(policies)
+    if p_survive is not None:
+        p_survive = np.broadcast_to(
+            np.atleast_2d(np.asarray(p_survive, dtype=np.float64)), (pods, T)
+        )
+    if engine != "kernel":
+        table = PolicyTable.from_policies(policies, repeat=pods, names=names)
+        big_avail = np.tile(avail, (n_pol, 1))
+        big_p = None if p_survive is None else np.tile(p_survive, (n_pol, 1))
+        return run_replay_batch(
+            big_avail, table, p_survive=big_p, dt=dt, step_time=step_time,
+            ckpt_cost=ckpt_cost, restore_cost=restore_cost, engine=engine,
+            precision=precision,
+        )
+    if n_pol > 30:
+        raise ValueError(
+            f"{n_pol} policy planes exceed the 30 panic flag bits"
+        )
+    from ..kernels.goodput_scan import goodput_sweep_op
+
+    table = PolicyTable.from_policies(policies, names=names)   # S rows
+    p = np.ones((pods, T)) if p_survive is None else p_survive
+    nlp = neg_log_survival(p)                       # (pods, T) f64, host log
+    # per-plane panic bits: the same host predicate as PolicyTable.panic
+    flags = avail.astype(np.int32)
+    for s in range(n_pol):
+        if table.is_hazard[s]:
+            pan = (1.0 - p) >= table.panic_threshold[s]
+            flags = flags | (pan.astype(np.int32) << (s + 1))
+    planes = {
+        k: np.broadcast_to(np.asarray(v)[:, None], (n_pol, pods))
+        for k, v in table.engine_planes().items()
+    }
+    if precision == "f32":
+        nlp = nlp.astype(np.float32)
+    res = goodput_sweep_op(
+        flags, nlp, planes, dt=dt, step_time=step_time,
+        ckpt_cost=ckpt_cost, restore_cost=restore_cost, backend=backend,
+    )
+    return _finish_kernel_metrics(
+        {k: v.reshape(n_pol * pods) for k, v in res.items()}, step_time
+    )
+
+
 def run_goodput_frontier(
     avail: np.ndarray,
     policies: Sequence,
@@ -489,26 +635,23 @@ def run_goodput_frontier(
     ckpt_cost: float = 30.0,
     restore_cost: float = 60.0,
     engine: str = "auto",
+    precision: str = "f64",
+    backend: str = "auto",
 ) -> Dict[str, ReplayResult]:
     """The goodput-frontier experiment: pods × policies in one batch.
 
-    Tiles the ``(pods, T)`` traces over the policy axis (policy-major row
-    blocks), runs one :func:`run_replay_batch`, and returns per-policy
-    fleet aggregates ``{policy name: ReplayResult summed over pods}``.
-    Stack traces from several campaign seeds along the pod axis to add
-    the seeds dimension.
+    Crosses the ``(pods, T)`` traces with the policy list through
+    :func:`run_replay_fleet` (fused on ``engine="kernel"``, policy-tiled
+    otherwise) and returns per-policy fleet aggregates ``{policy name:
+    ReplayResult summed over pods}``.  Stack traces from several campaign
+    seeds along the pod axis to add the seeds dimension.
     """
     avail = np.atleast_2d(np.asarray(avail)).astype(bool)
     pods, T = avail.shape
-    n_pol = len(policies)
-    table = PolicyTable.from_policies(policies, repeat=pods, names=names)
-    big_avail = np.tile(avail, (n_pol, 1))
-    big_p = None if p_survive is None else np.tile(
-        np.broadcast_to(np.atleast_2d(p_survive), (pods, T)), (n_pol, 1)
-    )
-    batch = run_replay_batch(
-        big_avail, table, p_survive=big_p, dt=dt, step_time=step_time,
-        ckpt_cost=ckpt_cost, restore_cost=restore_cost, engine=engine,
+    batch = run_replay_fleet(
+        avail, policies, p_survive=p_survive, names=names, dt=dt,
+        step_time=step_time, ckpt_cost=ckpt_cost, restore_cost=restore_cost,
+        engine=engine, precision=precision, backend=backend,
     )
     out: Dict[str, ReplayResult] = {}
     for i, pol in enumerate(policies):

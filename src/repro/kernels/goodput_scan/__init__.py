@@ -1,0 +1,11 @@
+"""Fused goodput replay in scan form (see ``fleet.runner``).
+
+* ``ref``    — the ``lax.scan`` closed-form reference with the policies
+  axis fused into the carried state (fast CPU path);
+* ``kernel`` — the chunked Pallas kernel (carry in VMEM scratch);
+* ``ops``    — backend dispatch, padding, metric assembly.
+"""
+
+from .ops import goodput_sweep_op
+
+__all__ = ["goodput_sweep_op"]

@@ -1,0 +1,238 @@
+"""Chunked Pallas kernel for the fused goodput replay.
+
+Tiles the (pods × cycles) grid as ``(block_p × chunk)`` blocks with the
+chunk axis innermost / sequential; the carried ``(S, block_p)`` replay
+state — step counters, checkpoint bookkeeping, and the resumable
+restore / write registers — lives in VMEM scratch across chunk steps
+(the ``replay_scan`` pattern).  The strategies axis of ``replay_scan``
+becomes the *policies* axis here: each pod's packed flag / hazard column
+is loaded from HBM once per chunk and replayed through every policy
+plane.
+
+Per cycle the kernel applies the same closed-form transition as
+``ref.goodput_sweep_ref`` op for op — τ re-derived in-kernel from the
+resident parameter planes and the cycle's negative-log-survival column,
+with every divisor / clip bound a traced operand (see the ``ref`` module
+docstring for why that pins bit-identity) — so outputs are bit-identical
+in the shared dtype.  On CPU the kernel runs in interpret mode
+(parity/testing); float64 state requires x64, so real-TPU use means
+float32 inputs.
+
+grid = (P / block_p, T / chunk)   [chunk axis innermost / sequential]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# scratch column layout
+_G_OVERHEAD, _G_UNAVAIL, _G_TLAST, _G_RESTORE, _G_WRITE = range(5)
+_G_DONE, _G_SINCE, _G_LOST, _G_CKPTS = range(4)
+
+# fparams plane layout (matches ops._FPARAM_ORDER)
+_P_INTERVAL, _P_DELTA, _P_HORIZON, _P_TAUMAX, _P_FLOOR = range(5)
+
+
+def _goodput_kernel(
+    flags_ref, nlp_ref, ishz_ref, fparams_ref, scal_ref,
+    done_ref, lost_ref, ck_ref, oh_ref, un_ref,
+    fstate, istate,
+    *,
+    chunk: int,
+    t_real: int,
+):
+    ic = pl.program_id(1)
+    f = nlp_ref.dtype
+    i32 = jnp.int32
+    s_pl, bp = ishz_ref.shape
+    zero = jnp.zeros((), f)
+    two = jnp.asarray(2.0, f)
+
+    # the four cost scalars ride in as a (1, 4) tile: load the tile, then
+    # index the *value* (traced operands -> exact IEEE division in-kernel)
+    sv = scal_ref[...]
+    dt, step_time = sv[0, 0], sv[0, 1]
+    ckpt_cost, restore_cost = sv[0, 2], sv[0, 3]
+
+    @pl.when(ic == 0)
+    def _init():
+        fstate[...] = jnp.zeros_like(fstate)
+        istate[...] = jnp.zeros_like(istate)
+
+    flags = flags_ref[...]            # (bp, chunk) int32 — packed avail/panic
+    nlp = nlp_ref[...]                # (bp, chunk) f
+    is_hz = ishz_ref[...] > 0         # (s_pl, bp)
+    fp = fparams_ref[...]             # (s_pl, bp, 5)
+    interval = fp[..., _P_INTERVAL]
+    delta = fp[..., _P_DELTA]
+    horizon = fp[..., _P_HORIZON]
+    tau_max = fp[..., _P_TAUMAX]
+    floor = fp[..., _P_FLOOR]
+    col_iota = jax.lax.broadcasted_iota(i32, (bp, chunk), 1)
+    s_iota = jax.lax.broadcasted_iota(i32, (s_pl, bp), 0)
+
+    def cycle(j, st):
+        (done, since, lost, ckpts, overhead, unavailable,
+         t_last, restore_rem, write_rem) = st
+        g = ic * chunk + j
+        # padded cycles beyond t_real are inert: neither up nor down
+        valid = g < t_real
+        fc = jnp.sum(jnp.where(col_iota == j, flags, 0), axis=1)   # (bp,)
+        nc = jnp.sum(jnp.where(col_iota == j, nlp, zero), axis=1)  # (bp,)
+        up_raw = (fc & 1) > 0
+        up = jnp.broadcast_to(up_raw[None, :], (s_pl, bp)) & valid
+        down = jnp.broadcast_to(~up_raw[None, :], (s_pl, bp)) & valid
+        panic = ((fc[None, :] >> (s_iota + 1)) & 1) > 0
+        now = g.astype(f) * dt
+
+        lam = jnp.maximum(nc[None, :] / horizon, floor)
+        hz = jnp.clip(jnp.sqrt((two * delta) / lam), delta, tau_max)
+        tau_c = jnp.where(is_hz, jnp.where(panic, two * delta, hz), interval)
+
+        lost = lost + jnp.where(down, since, 0)
+        since = jnp.where(down, 0, since)
+        unavailable = unavailable + jnp.where(down, dt, zero)
+        restore_rem = jnp.where(down, restore_cost, restore_rem)
+        write_rem = jnp.where(down, zero, write_rem)
+
+        budget = jnp.where(up, dt, zero)
+        used = jnp.minimum(budget, restore_rem)
+        restore_rem = restore_rem - used
+        budget = budget - used
+        was_writing = write_rem > zero
+        w = jnp.minimum(budget, write_rem)
+        write_rem = write_rem - w
+        budget = budget - w
+        overhead = overhead + w
+        done_write = was_writing & (write_rem <= zero)
+        ckpts = ckpts + done_write.astype(i32)
+        t_last = jnp.where(done_write, now + (dt - budget), t_last)
+        since = jnp.where(done_write, 0, since)
+
+        t_c = now + (dt - budget)
+        can = up & (budget > zero)
+        decide = can & (t_c - t_last >= tau_c)
+        start = decide & (since > 0)
+        t_last = jnp.where(decide & (since == 0), t_c, t_last)
+        w2 = jnp.where(start, jnp.minimum(budget, ckpt_cost), zero)
+        budget = budget - w2
+        overhead = overhead + w2
+        full = start & (w2 >= ckpt_cost)
+        write_rem = jnp.where(start & ~full, ckpt_cost - w2, write_rem)
+        ckpts = ckpts + full.astype(i32)
+        t_last = jnp.where(full, now + (dt - budget), t_last)
+        since = jnp.where(full, 0, since)
+
+        steps = jnp.floor(budget / step_time).astype(i32)
+        done = done + steps
+        since = since + steps
+        return (done, since, lost, ckpts, overhead, unavailable,
+                t_last, restore_rem, write_rem)
+
+    st = (
+        istate[:, :, _G_DONE],
+        istate[:, :, _G_SINCE],
+        istate[:, :, _G_LOST],
+        istate[:, :, _G_CKPTS],
+        fstate[:, :, _G_OVERHEAD],
+        fstate[:, :, _G_UNAVAIL],
+        fstate[:, :, _G_TLAST],
+        fstate[:, :, _G_RESTORE],
+        fstate[:, :, _G_WRITE],
+    )
+    st = jax.lax.fori_loop(0, chunk, cycle, st)
+    (done, since, lost, ckpts, overhead, unavailable,
+     t_last, restore_rem, write_rem) = st
+
+    istate[:, :, _G_DONE] = done
+    istate[:, :, _G_SINCE] = since
+    istate[:, :, _G_LOST] = lost
+    istate[:, :, _G_CKPTS] = ckpts
+    fstate[:, :, _G_OVERHEAD] = overhead
+    fstate[:, :, _G_UNAVAIL] = unavailable
+    fstate[:, :, _G_TLAST] = t_last
+    fstate[:, :, _G_RESTORE] = restore_rem
+    fstate[:, :, _G_WRITE] = write_rem
+
+    # same out block every chunk step: the final write is the result
+    done_ref[...] = done[..., None]
+    lost_ref[...] = lost[..., None]
+    ck_ref[...] = ckpts[..., None]
+    oh_ref[...] = overhead[..., None]
+    un_ref[...] = unavailable[..., None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_real", "block_p", "chunk", "interpret"),
+)
+def goodput_sweep_kernel(
+    flags: jnp.ndarray,       # (P, Tpad) int32 packed flags (0 beyond t_real)
+    nlp: jnp.ndarray,         # (P, Tpad) f negative log survival
+    is_hz: jnp.ndarray,       # (S, P) int32
+    fparams: jnp.ndarray,     # (S, P, 5) f — interval/δ/horizon/τ_max/floor
+    scalars: jnp.ndarray,     # (1, 4) f — dt/step_time/ckpt_cost/restore_cost
+    *,
+    t_real: int,
+    block_p: int = 8,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Policy-fused chunked goodput replay; bit-identical to
+    ``goodput_sweep_ref``.
+
+    Requires ``P % block_p == 0`` and ``Tpad % chunk == 0`` — use ``ops``
+    for the padded general-shape wrapper.
+    """
+    S, P = is_hz.shape
+    t_pad = flags.shape[1]
+    block_p = min(block_p, P)
+    chunk = min(chunk, t_pad)
+    if P % block_p or t_pad % chunk:
+        # a bare assert would vanish under -O and leave grid-uncovered
+        # output rows silently uninitialized
+        raise ValueError(
+            f"P={P} / T={t_pad} not divisible by block_p={block_p} / "
+            f"chunk={chunk}; use ops.goodput_sweep_op for padding"
+        )
+    grid = (P // block_p, t_pad // chunk)
+    f = nlp.dtype
+
+    kernel = functools.partial(_goodput_kernel, chunk=chunk, t_real=t_real)
+    out_shapes = [
+        jax.ShapeDtypeStruct((S, P, 1), jnp.int32),  # steps done
+        jax.ShapeDtypeStruct((S, P, 1), jnp.int32),  # steps lost
+        jax.ShapeDtypeStruct((S, P, 1), jnp.int32),  # checkpoints
+        jax.ShapeDtypeStruct((S, P, 1), f),          # overhead
+        jax.ShapeDtypeStruct((S, P, 1), f),          # unavailable
+    ]
+    done, lost, ck, oh, un = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, chunk), lambda i, ic: (i, ic)),
+            pl.BlockSpec((block_p, chunk), lambda i, ic: (i, ic)),
+            pl.BlockSpec((S, block_p), lambda i, ic: (0, i)),
+            pl.BlockSpec((S, block_p, 5), lambda i, ic: (0, i, 0)),
+            pl.BlockSpec((1, 4), lambda i, ic: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((S, block_p, 1), lambda i, ic: (0, i, 0))] * 5,
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((S, block_p, 5), f),
+            pltpu.VMEM((S, block_p, 4), jnp.int32),
+        ],
+        interpret=interpret,
+    )(flags, nlp, is_hz, fparams, scalars)
+    return {
+        "steps_completed": done[..., 0],
+        "steps_lost": lost[..., 0],
+        "checkpoints": ck[..., 0],
+        "ckpt_overhead_s": oh[..., 0],
+        "unavailable_s": un[..., 0],
+    }

@@ -1,0 +1,138 @@
+"""Public entry point for the fused goodput replay.
+
+``goodput_sweep_op`` takes the normalised fused inputs prepared by
+``repro.fleet.runner`` — the host-packed availability/panic flag matrix,
+the host-precomputed negative log survival, and the per-policy τ
+parameter planes — and replays every pod trace through **all S policy
+planes in one pass** on the selected backend.  Host prep stays in the
+fleet layer (this package imports neither ``PolicyTable`` nor the policy
+objects), so ``kernels`` never depends on ``fleet``.
+
+Backends:
+
+* ``"jnp"``    — the ``lax.scan`` reference (the fast CPU path).
+* ``"pallas"`` — the chunked policy-fused Pallas kernel (interpret mode
+  off-TPU).  Handles ragged shapes by padding cycles (``flags = 0``
+  beyond the real trace, masked inert inside the kernel) and pod rows
+  (flags-0 rows never train; sliced off).
+* ``"auto"``   — Pallas on TPU (float32 only — Mosaic has no float64),
+  scan elsewhere.
+
+Precision tiers: the dtype of ``nlp`` selects the tier.  float64 runs
+under a scoped ``enable_x64`` (the atol=0 house contract); float32 runs
+the same op sequence in f32 end to end — the bandwidth-lean fast tier.
+Counters are int32 in-engine in **both** tiers (identical graphs), cast
+to int64 on output; float metrics are returned as float64 (an exact
+widening), so the metric dict has one schema per tier.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict
+
+import numpy as np
+
+__all__ = ["goodput_sweep_op"]
+
+#: fparams plane order shared with ``kernel.py``
+_FPARAM_ORDER = ("interval", "ckpt_cost", "horizon", "tau_max", "floor_hazard")
+
+
+def _x64_if(dtype):
+    if np.dtype(dtype) == np.float64:
+        from jax.experimental import enable_x64
+
+        return enable_x64()
+    return contextlib.nullcontext()
+
+
+def goodput_sweep_op(
+    flags: np.ndarray,   # (P, T) int — bit0 avail, bit(1+s) panic for plane s
+    nlp: np.ndarray,     # (P, T) float — host -log(clip(p_survive))
+    planes: Dict[str, np.ndarray],  # (S, P): is_hazard + _FPARAM_ORDER
+    *,
+    dt: float,
+    step_time: float,
+    ckpt_cost: float,
+    restore_cost: float,
+    backend: str = "auto",
+    block_p: int = 8,
+    chunk: int = 128,
+) -> Dict[str, np.ndarray]:
+    """Fused sweep; returns ``(S, P)`` metric planes (int64 counters,
+    float64 seconds — goodput/lost-work derivation stays in the fleet
+    layer)."""
+    import jax
+
+    fdt = np.dtype(nlp.dtype)
+    if fdt not in (np.dtype(np.float32), np.dtype(np.float64)):
+        raise ValueError(f"nlp must be float32/float64, got {fdt}")
+    if backend == "auto":
+        # Mosaic has no float64: f64 contracts stay on the bit-identical
+        # scan even on TPU (pass f32 inputs — or request backend="pallas"
+        # explicitly — for the native kernel path)
+        on_tpu = jax.default_backend() == "tpu"
+        backend = "pallas" if on_tpu and fdt != np.float64 else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    P, T = np.asarray(flags).shape
+    S = planes["is_hazard"].shape[0]
+    ft = fdt.type
+    flags = np.ascontiguousarray(np.asarray(flags, dtype=np.int32))
+    nlp = np.ascontiguousarray(np.asarray(nlp, dtype=fdt))
+    fparams = np.stack(
+        [np.asarray(planes[k], dtype=fdt) for k in _FPARAM_ORDER], axis=-1
+    )                                               # (S, P, 5)
+    is_hz = np.asarray(planes["is_hazard"], dtype=bool)
+    scal = (ft(dt), ft(step_time), ft(ckpt_cost), ft(restore_cost))
+
+    import jax.numpy as jnp
+
+    if backend == "jnp":
+        from .ref import goodput_sweep_ref
+
+        with _x64_if(fdt):
+            res = goodput_sweep_ref(
+                jnp.asarray(flags.T), jnp.asarray(nlp.T),
+                jnp.asarray(np.arange(T, dtype=np.int32)),
+                jnp.asarray(is_hz),
+                jnp.asarray(fparams[..., 0]), jnp.asarray(fparams[..., 1]),
+                jnp.asarray(fparams[..., 2]), jnp.asarray(fparams[..., 3]),
+                jnp.asarray(fparams[..., 4]),
+                *scal,
+            )
+            res = {k: np.asarray(v) for k, v in res.items()}
+    else:
+        from .kernel import goodput_sweep_kernel
+
+        block_p = min(block_p, max(P, 1))
+        chunk = min(chunk, max(T, 1))
+        pad_p = (-P) % block_p
+        pad_t = (-T) % chunk
+        fl = np.zeros((P + pad_p, T + pad_t), dtype=np.int32)
+        fl[:P, :T] = flags
+        nl = np.zeros_like(fl, dtype=fdt)
+        nl[:P, :T] = nlp
+        hz = np.zeros((S, P + pad_p), dtype=np.int32)
+        hz[:, :P] = is_hz
+        fp = np.ones((S, P + pad_p, 5), dtype=fdt)   # inert params, no /0
+        fp[:, :P] = fparams
+        with _x64_if(fdt):
+            res = goodput_sweep_kernel(
+                jnp.asarray(fl), jnp.asarray(nl), jnp.asarray(hz),
+                jnp.asarray(fp),
+                jnp.asarray(np.array([scal], dtype=fdt)),
+                t_real=T, block_p=block_p, chunk=chunk,
+                interpret=jax.default_backend() != "tpu",
+            )
+            res = {k: np.asarray(v)[:, :P] for k, v in res.items()}
+
+    return {
+        "steps_completed": res["steps_completed"].astype(np.int64),
+        "steps_lost": res["steps_lost"].astype(np.int64),
+        "checkpoints": res["checkpoints"].astype(np.int64),
+        "ckpt_overhead_s": res["ckpt_overhead_s"].astype(np.float64),
+        "unavailable_s": res["unavailable_s"].astype(np.float64),
+    }

@@ -1,0 +1,128 @@
+"""``lax.scan`` reference for the fused goodput replay.
+
+One scan over cycles carries the whole ``(S, P)`` replay state — ``S``
+checkpoint-policy planes sharing each pod's availability / hazard column,
+so every trace cycle is read once and replayed through all policies (the
+bandwidth-lean form of the policy-tiled batch).
+
+The per-cycle transition is the closed form of
+``repro.fleet.runner._cycle_update`` op for op, with one difference in
+*where* the policy interval τ comes from: the batch engines consume a
+host-precomputed ``(R, T)`` τ matrix, while this engine re-derives τ
+in-graph from the host-precomputed negative log survival ``nlp`` and the
+traced per-policy parameter planes:
+
+``lam = max(nlp / horizon, floor);  hz = clip(sqrt((2·δ)/lam), δ, τ_max);
+τ = where(is_hz, where(panic, 2·δ, hz), interval)``
+
+Every divisor / clip bound is a **traced** operand — XLA must then emit
+exact IEEE division instead of strength-reducing a constant divisor into
+a multiply-by-reciprocal — so the in-graph τ is bit-identical to the host
+``PolicyTable.tau`` ufunc chain, which is what keeps this engine atol=0
+against the scalar / numpy / scan trio.  Panic is a *host* predicate
+(packed into the flag bits, one bit per policy plane) so no ``1 − p``
+arithmetic happens in-graph.
+
+Counters (steps done / since / lost, checkpoints) are int32 in-graph
+(cast to int64 on output): ``T · dt / step_time`` must stay below 2³¹.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["goodput_sweep_ref"]
+
+
+@jax.jit
+def goodput_sweep_ref(
+    flags_t,        # (T, P) int32 — bit0 avail, bit(1+s) panic for plane s
+    nlp_t,          # (T, P) f — host -log(clip(p_survive))
+    cyc_t,          # (T,) int32 — cycle indices
+    is_hz,          # (S, P) bool
+    interval,       # (S, P) f — τ for fixed rows
+    delta,          # (S, P) f — δ for hazard rows
+    horizon,        # (S, P) f
+    tau_max,        # (S, P) f
+    floor,          # (S, P) f
+    dt,             # () f — all four scalars traced (exact IEEE division)
+    step_time,      # () f
+    ckpt_cost,      # () f
+    restore_cost,   # () f
+):
+    """Fused goodput replay; returns final ``(S, P)`` metric planes."""
+    f = nlp_t.dtype
+    i32 = jnp.int32
+    S, P = is_hz.shape
+    zero = jnp.zeros((), f)
+    two = jnp.asarray(2.0, f)
+    zf = jnp.zeros((S, P), f)
+    zi = jnp.zeros((S, P), i32)
+    s_iota = jax.lax.broadcasted_iota(i32, (S, P), 0)
+
+    def cycle(carry, xs):
+        (done, since, lost, ckpts, overhead, unavailable,
+         t_last, restore_rem, write_rem) = carry
+        flags_c, nlp_c, c = xs
+        now = c.astype(f) * dt
+        up = jnp.broadcast_to(((flags_c & 1) > 0)[None, :], (S, P))
+        panic = ((flags_c[None, :] >> (s_iota + 1)) & 1) > 0
+
+        # -- policy interval, re-derived in-graph (see module docstring) --
+        lam = jnp.maximum(nlp_c[None, :] / horizon, floor)
+        hz = jnp.clip(jnp.sqrt((two * delta) / lam), delta, tau_max)
+        tau_c = jnp.where(is_hz, jnp.where(panic, two * delta, hz), interval)
+
+        down = ~up
+        lost = lost + jnp.where(down, since, 0)
+        since = jnp.where(down, 0, since)
+        unavailable = unavailable + jnp.where(down, dt, zero)
+        restore_rem = jnp.where(down, restore_cost, restore_rem)
+        write_rem = jnp.where(down, zero, write_rem)
+
+        budget = jnp.where(up, dt, zero)
+        # -- drain restore, then the carried checkpoint write --------------
+        used = jnp.minimum(budget, restore_rem)
+        restore_rem = restore_rem - used
+        budget = budget - used
+        was_writing = write_rem > zero
+        w = jnp.minimum(budget, write_rem)
+        write_rem = write_rem - w
+        budget = budget - w
+        overhead = overhead + w
+        done_write = was_writing & (write_rem <= zero)
+        ckpts = ckpts + done_write.astype(i32)
+        t_last = jnp.where(done_write, now + (dt - budget), t_last)
+        since = jnp.where(done_write, 0, since)
+        # -- policy consult: once per cycle, at t_c ------------------------
+        t_c = now + (dt - budget)
+        can = up & (budget > zero)
+        decide = can & (t_c - t_last >= tau_c)
+        start = decide & (since > 0)
+        t_last = jnp.where(decide & (since == 0), t_c, t_last)
+        w2 = jnp.where(start, jnp.minimum(budget, ckpt_cost), zero)
+        budget = budget - w2
+        overhead = overhead + w2
+        full = start & (w2 >= ckpt_cost)
+        write_rem = jnp.where(start & ~full, ckpt_cost - w2, write_rem)
+        ckpts = ckpts + full.astype(i32)
+        t_last = jnp.where(full, now + (dt - budget), t_last)
+        since = jnp.where(full, 0, since)
+        # -- training steps fill the remainder -----------------------------
+        steps = jnp.floor(budget / step_time).astype(i32)
+        done = done + steps
+        since = since + steps
+        return (done, since, lost, ckpts, overhead, unavailable,
+                t_last, restore_rem, write_rem), None
+
+    init = (zi, zi, zi, zi, zf, zf, zf, zf, zf)
+    final, _ = jax.lax.scan(cycle, init, (flags_t, nlp_t, cyc_t))
+    (done, _since, lost, ckpts, overhead, unavailable, *_rest) = final
+    return {
+        "steps_completed": done,
+        "steps_lost": lost,
+        "checkpoints": ckpts,
+        "ckpt_overhead_s": overhead,
+        "unavailable_s": unavailable,
+    }

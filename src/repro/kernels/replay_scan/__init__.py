@@ -5,6 +5,6 @@
 * ``ops``    — backend dispatch, ragged-shape padding, row sharding.
 """
 
-from .ops import replay_scan_op
+from .ops import replay_scan_op, replay_sweep_op
 
-__all__ = ["replay_scan_op"]
+__all__ = ["replay_scan_op", "replay_sweep_op"]

@@ -8,14 +8,21 @@ accumulators — lives in VMEM scratch, exactly the
 ``sns_features_stream`` pattern.  Per cycle the kernel applies the same
 closed-form transition as the ``lax.scan`` reference; phase B's prefix
 count and the ``cum`` lookups are evaluated as one-hot / masked
-reductions over the resident ``(block_b, Q+1)`` prefix-sum tile (gather-
-free, Mosaic-friendly).
+reductions over the resident prefix-sum tile (gather-free,
+Mosaic-friendly).
 
-The arithmetic matches ``ref.replay_scan_ref`` op for op, so outputs are
-bit-identical in the shared dtype.  On CPU the kernel runs in interpret
-mode (parity/testing); float64 state requires x64, so real-TPU use means
-float32 inputs (then kernel ≡ ref still holds at f32, while the f64
-scalar oracle is the CPU story).
+The kernel is **fused over the strategies axis**: state and the
+prefix-sum tile carry a leading ``S`` plane (``(S, block_b, Q+1)`` in
+VMEM), so each ``(block_b, chunk)`` availability tile is loaded from HBM
+once and replayed through every strategy — the bandwidth-lean form of
+the S-pass dispatch.  ``replay_scan_kernel`` is the single-strategy
+(``S == 1``) wrapper.
+
+The arithmetic matches ``ref.replay_sweep_ref`` op for op, so outputs
+are bit-identical in the shared dtype.  On CPU the kernel runs in
+interpret mode (parity/testing); float64 state requires x64, so real-TPU
+use means float32 inputs (then kernel ≡ ref still holds at f32, while
+the f64 scalar oracle is the CPU story).
 
 grid = (B / block_b, T / chunk)   [chunk axis innermost / sequential]
 """
@@ -36,14 +43,14 @@ _F_FRONT, _F_REMAINING, _F_PROGRESS, _F_LOST, _F_IDLE, _F_MAKESPAN = range(6)
 _I_HEAD, _I_DEFER, _I_COMPLETED, _I_RUNNING, _I_HASFRONT = range(5)
 
 
-def _replay_kernel(
+def _sweep_kernel(
     avail_ref, predz_ref, cum_ref,
     lost_ref, idle_ref, comp_ref, mk_ref,
     fstate, istate,
     *,
     dt: float,
     horizon: int,
-    use_pred: bool,
+    use_pred: tuple,
     chunk: int,
     t_real: int,
     q: int,
@@ -51,23 +58,30 @@ def _replay_kernel(
     ic = pl.program_id(1)
     f = cum_ref.dtype
     i32 = jnp.int32
-    bp = cum_ref.shape[0]
+    s_pl, bp = cum_ref.shape[0], cum_ref.shape[1]
     zero = jnp.zeros((), f)
     eps = jnp.asarray(EPS, f)
     dtc = jnp.asarray(dt, f)
+    any_pred = any(use_pred)
+    # static (S, 1) mask: which strategy planes run the deferral machinery.
+    # Pallas kernels may not capture constant arrays, so the mask is
+    # rebuilt in-kernel from a bit-packed static int via iota.
+    pred_bits = sum(1 << s for s, u in enumerate(use_pred) if u)
+    s_iota = jax.lax.broadcasted_iota(i32, (s_pl, 1), 0)
+    pm = ((pred_bits >> s_iota) & 1) > 0
 
     @pl.when(ic == 0)
     def _init():
         fstate[...] = jnp.zeros_like(fstate)
         init_i = jnp.zeros_like(istate)
-        fstate[:, _F_MAKESPAN] = jnp.full((bp,), t_real, f) * dtc
-        istate[...] = init_i.at[:, _I_DEFER].set(-1)
+        fstate[:, :, _F_MAKESPAN] = jnp.full((s_pl, bp), t_real, f) * dtc
+        istate[...] = init_i.at[:, :, _I_DEFER].set(-1)
 
-    avail = avail_ref[...]            # (bp, chunk) int32
+    avail = avail_ref[...]            # (bp, chunk) int32 — shared by planes
     predz = predz_ref[...]            # (bp, chunk) int32
-    cum = cum_ref[...]                # (bp, q + 1) f
+    cum = cum_ref[...]                # (s_pl, bp, q + 1) f
     col_iota = jax.lax.broadcasted_iota(i32, (bp, chunk), 1)
-    q_iota = jax.lax.broadcasted_iota(i32, (bp, q + 1), 1)
+    q_iota = jax.lax.broadcasted_iota(i32, (s_pl, bp, q + 1), 2)
 
     def cycle(j, st):
         (head, front, has_front, running, remaining, progress, defer,
@@ -86,13 +100,13 @@ def _replay_kernel(
         running = running & up
         progress = jnp.where(drop, zero, progress)
 
-        if use_pred:
+        if any_pred:
             pz = (jnp.sum(jnp.where(col_iota == j, predz, 0), axis=1) > 0)
-            trig = up & (c > defer) & pz
+            trig = up & (c > defer) & pz & pm
             defer = jnp.where(trig, c + horizon, defer)
             deferred = up & (c <= defer)
         else:
-            deferred = jnp.zeros_like(up)
+            deferred = jnp.zeros_like(running)
 
         b = jnp.where(up, dtc, zero)
         mk_edge = (c + 1).astype(f) * dtc
@@ -118,16 +132,16 @@ def _replay_kernel(
 
         # -- phase B: prefix count over the resident cum tile --------------
         qb = up & ~running & ~deferred & (head < q) & (b > eps)
-        base = jnp.sum(jnp.where(q_iota == head[:, None], cum, zero), axis=1)
+        base = jnp.sum(jnp.where(q_iota == head[..., None], cum, zero), axis=2)
         target = base + (b + eps)
         k = jnp.sum(
-            (cum <= target[:, None]) & (q_iota > head[:, None]), axis=1
+            (cum <= target[..., None]) & (q_iota > head[..., None]), axis=2
         ).astype(i32)
         k = jnp.where(qb, k, 0)
         h2 = head + k
-        cum_k = jnp.sum(jnp.where(q_iota == h2[:, None], cum, zero), axis=1)
+        cum_k = jnp.sum(jnp.where(q_iota == h2[..., None], cum, zero), axis=2)
         cum_k1 = jnp.sum(
-            jnp.where(q_iota == (h2 + 1)[:, None], cum, zero), axis=1
+            jnp.where(q_iota == (h2 + 1)[..., None], cum, zero), axis=2
         )
         used = cum_k - base
         b2 = jnp.maximum(b - used, zero)
@@ -150,39 +164,39 @@ def _replay_kernel(
                 lost, idle, completed, makespan)
 
     st = (
-        istate[:, _I_HEAD],
-        fstate[:, _F_FRONT],
-        istate[:, _I_HASFRONT] > 0,
-        istate[:, _I_RUNNING] > 0,
-        fstate[:, _F_REMAINING],
-        fstate[:, _F_PROGRESS],
-        istate[:, _I_DEFER],
-        fstate[:, _F_LOST],
-        fstate[:, _F_IDLE],
-        istate[:, _I_COMPLETED],
-        fstate[:, _F_MAKESPAN],
+        istate[:, :, _I_HEAD],
+        fstate[:, :, _F_FRONT],
+        istate[:, :, _I_HASFRONT] > 0,
+        istate[:, :, _I_RUNNING] > 0,
+        fstate[:, :, _F_REMAINING],
+        fstate[:, :, _F_PROGRESS],
+        istate[:, :, _I_DEFER],
+        fstate[:, :, _F_LOST],
+        fstate[:, :, _F_IDLE],
+        istate[:, :, _I_COMPLETED],
+        fstate[:, :, _F_MAKESPAN],
     )
     st = jax.lax.fori_loop(0, chunk, cycle, st)
     (head, front, has_front, running, remaining, progress, defer,
      lost, idle, completed, makespan) = st
 
-    istate[:, _I_HEAD] = head
-    fstate[:, _F_FRONT] = front
-    istate[:, _I_HASFRONT] = has_front.astype(i32)
-    istate[:, _I_RUNNING] = running.astype(i32)
-    fstate[:, _F_REMAINING] = remaining
-    fstate[:, _F_PROGRESS] = progress
-    istate[:, _I_DEFER] = defer
-    fstate[:, _F_LOST] = lost
-    fstate[:, _F_IDLE] = idle
-    istate[:, _I_COMPLETED] = completed
-    fstate[:, _F_MAKESPAN] = makespan
+    istate[:, :, _I_HEAD] = head
+    fstate[:, :, _F_FRONT] = front
+    istate[:, :, _I_HASFRONT] = has_front.astype(i32)
+    istate[:, :, _I_RUNNING] = running.astype(i32)
+    fstate[:, :, _F_REMAINING] = remaining
+    fstate[:, :, _F_PROGRESS] = progress
+    istate[:, :, _I_DEFER] = defer
+    fstate[:, :, _F_LOST] = lost
+    fstate[:, :, _F_IDLE] = idle
+    istate[:, :, _I_COMPLETED] = completed
+    fstate[:, :, _F_MAKESPAN] = makespan
 
     # same out block every chunk step: the final write is the result
-    lost_ref[...] = lost[:, None]
-    idle_ref[...] = idle[:, None]
-    comp_ref[...] = completed[:, None]
-    mk_ref[...] = makespan[:, None]
+    lost_ref[...] = lost[..., None]
+    idle_ref[...] = idle[..., None]
+    comp_ref[...] = completed[..., None]
+    mk_ref[...] = makespan[..., None]
 
 
 @functools.partial(
@@ -192,26 +206,29 @@ def _replay_kernel(
         "interpret",
     ),
 )
-def replay_scan_kernel(
+def replay_sweep_kernel(
     avail: jnp.ndarray,       # (B, Tpad) int32 availability (0 beyond t_real)
     predz: jnp.ndarray,       # (B, Tpad) int32 "predicted unavailable"
-    cum: jnp.ndarray,         # (B, Q+1) f prefix sums of durations
+    cum: jnp.ndarray,         # (S, B, Q+1) f prefix sums per strategy plane
     *,
     dt: float,
     horizon_cycles: int,
     t_real: int,
-    use_pred: bool = False,
+    use_pred: tuple = (False,),
     block_b: int = 8,
     chunk: int = 128,
     interpret: bool = False,
 ):
-    """Chunked lock-step replay; bit-identical to ``replay_scan_ref``.
+    """Strategy-fused chunked replay; bit-identical to ``replay_sweep_ref``.
 
     Requires ``B % block_b == 0`` and ``Tpad % chunk == 0`` — use
-    ``ops.replay_scan_op`` for the padded general-shape wrapper.
+    ``ops`` for the padded general-shape wrappers.
     """
-    B, t_pad = avail.shape
-    q = cum.shape[1] - 1
+    S, B = cum.shape[0], cum.shape[1]
+    t_pad = avail.shape[1]
+    q = cum.shape[2] - 1
+    if len(use_pred) != S:
+        raise ValueError(f"use_pred has {len(use_pred)} flags for {S} planes")
     block_b = min(block_b, B)
     chunk = min(chunk, t_pad)
     if B % block_b or t_pad % chunk:
@@ -225,15 +242,15 @@ def replay_scan_kernel(
     f = cum.dtype
 
     kernel = functools.partial(
-        _replay_kernel,
-        dt=dt, horizon=horizon_cycles, use_pred=use_pred,
+        _sweep_kernel,
+        dt=dt, horizon=horizon_cycles, use_pred=tuple(use_pred),
         chunk=chunk, t_real=t_real, q=q,
     )
     out_shapes = [
-        jax.ShapeDtypeStruct((B, 1), f),          # lost
-        jax.ShapeDtypeStruct((B, 1), f),          # idle
-        jax.ShapeDtypeStruct((B, 1), jnp.int32),  # completed
-        jax.ShapeDtypeStruct((B, 1), f),          # makespan
+        jax.ShapeDtypeStruct((S, B, 1), f),          # lost
+        jax.ShapeDtypeStruct((S, B, 1), f),          # idle
+        jax.ShapeDtypeStruct((S, B, 1), jnp.int32),  # completed
+        jax.ShapeDtypeStruct((S, B, 1), f),          # makespan
     ]
     lost, idle, comp, mk = pl.pallas_call(
         kernel,
@@ -241,19 +258,42 @@ def replay_scan_kernel(
         in_specs=[
             pl.BlockSpec((block_b, chunk), lambda i, ic: (i, ic)),
             pl.BlockSpec((block_b, chunk), lambda i, ic: (i, ic)),
-            pl.BlockSpec((block_b, q + 1), lambda i, ic: (i, 0)),
+            pl.BlockSpec((S, block_b, q + 1), lambda i, ic: (0, i, 0)),
         ],
-        out_specs=[pl.BlockSpec((block_b, 1), lambda i, ic: (i, 0))] * 4,
+        out_specs=[pl.BlockSpec((S, block_b, 1), lambda i, ic: (0, i, 0))] * 4,
         out_shape=out_shapes,
         scratch_shapes=[
-            pltpu.VMEM((block_b, 6), f),
-            pltpu.VMEM((block_b, 5), jnp.int32),
+            pltpu.VMEM((S, block_b, 6), f),
+            pltpu.VMEM((S, block_b, 5), jnp.int32),
         ],
         interpret=interpret,
     )(avail, predz, cum)
     return {
-        "lost_seconds": lost[:, 0],
-        "idle_seconds": idle[:, 0],
-        "completed": comp[:, 0],
-        "makespan_seconds": mk[:, 0],
+        "lost_seconds": lost[..., 0],
+        "idle_seconds": idle[..., 0],
+        "completed": comp[..., 0],
+        "makespan_seconds": mk[..., 0],
     }
+
+
+def replay_scan_kernel(
+    avail: jnp.ndarray,       # (B, Tpad) int32 availability (0 beyond t_real)
+    predz: jnp.ndarray,       # (B, Tpad) int32 "predicted unavailable"
+    cum: jnp.ndarray,         # (B, Q+1) f prefix sums of durations
+    *,
+    dt: float,
+    horizon_cycles: int,
+    t_real: int,
+    use_pred: bool = False,
+    block_b: int = 8,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Single-strategy kernel: the ``S == 1`` plane of the fused sweep."""
+    res = replay_sweep_kernel(
+        avail, predz, cum[None],
+        dt=dt, horizon_cycles=horizon_cycles, t_real=t_real,
+        use_pred=(bool(use_pred),), block_b=block_b, chunk=chunk,
+        interpret=interpret,
+    )
+    return {k: v[0] for k, v in res.items()}

@@ -1,9 +1,15 @@
-"""Public entry point for the scan-form lock-step replay.
+"""Public entry points for the scan-form lock-step replay.
 
-``replay_scan_op`` takes the normalised batch inputs prepared by
-``repro.core.simulate.replay_batch`` (broadcast availability, launch-order
-durations, their prefix sums, and the "predicted unavailable" mask) and
-runs the closed-form replay on the selected backend:
+``replay_sweep_op`` is the fused multi-strategy form: it takes the
+normalised batch inputs prepared by ``repro.core.simulate`` — shared
+broadcast availability, the per-strategy stacked prefix sums ``cums``
+``(S, B, Q+1)``, and the "predicted unavailable" mask — and replays every
+trace row through **all S strategies in one pass** on the selected
+backend (each availability column is loaded once and broadcast through
+the ``(S, B)`` state planes).  ``replay_scan_op`` is the single-strategy
+wrapper (``S == 1``) used by ``replay_batch``.
+
+Backends:
 
 * ``"jnp"``    — the ``lax.scan`` reference (the fast CPU path).  Rows
   are embarrassingly parallel, so with more than one visible device the
@@ -12,25 +18,33 @@ runs the closed-form replay on the selected backend:
   cross-device collectives, bit-identical to the unsharded scan by
   construction (rows are padded up to a shard multiple with inert
   all-unavailable rows and sliced off).
-* ``"pallas"`` — the chunked Pallas kernel (interpret mode off-TPU).
-  Handles ragged shapes by padding cycles (``avail = 0`` beyond the real
-  trace, masked inert inside the kernel) and rows (sliced off).
+* ``"pallas"`` — the chunked strategy-fused Pallas kernel (interpret
+  mode off-TPU).  Handles ragged shapes by padding cycles (``avail = 0``
+  beyond the real trace, masked inert inside the kernel) and rows
+  (sliced off).
 * ``"auto"``   — Pallas on TPU, scan elsewhere.
 
-float64 inputs run under a scoped ``enable_x64`` context, so importing
-this module never flips global JAX precision.
+Precision tiers: the dtype of ``cum`` / ``cums`` selects the tier.
+float64 inputs run under a scoped ``enable_x64`` context (so importing
+this module never flips global JAX precision) — the atol=0 house
+contract.  float32 inputs run the same op sequence in f32 end to end —
+the bandwidth-lean fast tier (``precision="f32"`` upstream); on
+1/32-second-quantised workloads with bounded magnitudes every f32
+quantity is exactly representable, so even the f32 tier reproduces the
+f64 oracle bit for bit (asserted in ``benchmarks/replay_throughput`` and
+``tests/test_replay_scan``).
 """
 
 from __future__ import annotations
 
 import contextlib
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["replay_scan_op"]
+__all__ = ["replay_scan_op", "replay_sweep_op"]
 
-#: jitted shard_map scans, keyed on (shards, use_pred, window, unroll) —
+#: jitted shard_map sweeps, keyed on (shards, use_pred, window, unroll) —
 #: shapes and the queue length are traced, so one entry serves every
 #: workload on the same mesh
 _MESH_CACHE = {}
@@ -44,9 +58,9 @@ def _x64_if(dtype):
     return contextlib.nullcontext()
 
 
-def _mesh_scan(n_shards: int, use_pred: bool, window: int, unroll: int):
-    """The trace-sharded scan: ``jit(shard_map(replay_scan_ref))`` over a
-    1-D ``("traces",)`` mesh, built once per (shards, static-config)."""
+def _mesh_sweep(n_shards: int, use_pred: tuple, window: int, unroll: int):
+    """The trace-sharded sweep: ``jit(shard_map(replay_sweep_ref))`` over
+    a 1-D ``("traces",)`` mesh, built once per (shards, static-config)."""
     key = (n_shards, use_pred, window, unroll)
     fn = _MESH_CACHE.get(key)
     if fn is None:
@@ -55,23 +69,23 @@ def _mesh_scan(n_shards: int, use_pred: bool, window: int, unroll: int):
 
         from ...launch.mesh import make_trace_mesh
         from ...models.common import shard_map
-        from .ref import replay_scan_ref
+        from .ref import replay_sweep_ref
 
         mesh = make_trace_mesh(n_shards)
 
-        def run(avail_t, predz_t, cum_pad, dt, horizon_cycles, q):
-            return replay_scan_ref(
-                avail_t, predz_t, cum_pad, dt, horizon_cycles,
+        def run(avail_t, predz_t, cums_pad, dt, horizon_cycles, q):
+            return replay_sweep_ref(
+                avail_t, predz_t, cums_pad, dt, horizon_cycles,
                 q=q, use_pred=use_pred, window=window, unroll=unroll,
             )
 
-        traces = PS("traces")
+        traces = PS(None, "traces")
         fn = jax.jit(
             shard_map(
                 run,
                 mesh=mesh,
                 in_specs=(
-                    PS(None, "traces"), PS(None, "traces"), traces,
+                    traces, traces, PS(None, "traces", None),
                     PS(), PS(), PS(),
                 ),
                 out_specs=traces,
@@ -81,22 +95,22 @@ def _mesh_scan(n_shards: int, use_pred: bool, window: int, unroll: int):
     return fn
 
 
-def replay_scan_op(
-    avail: np.ndarray,            # (B, T) bool
-    dur: np.ndarray,              # (B, Q) float, launch order
-    cum: np.ndarray,              # (B, Q+1) float prefix sums of dur
+def replay_sweep_op(
+    avail: np.ndarray,            # (B, T) bool — shared by every strategy
+    cums: np.ndarray,             # (S, B, Q+1) float prefix sums per strategy
     pred_zero: Optional[np.ndarray],  # (B, T) bool or None
+    use_pred,                     # (S,) per-strategy Predict-AR flags
     *,
     dt: float,
     horizon_cycles: int,
     backend: str = "auto",
     block_b: int = 8,
     chunk: int = 128,
-    window: int = 16,
+    window: int = 8,
     unroll: int = 1,
     shards=None,
-) -> Dict[str, np.ndarray]:
-    """Scan-form replay; returns the ``replay_batch`` metric dict.
+) -> List[Dict[str, np.ndarray]]:
+    """Fused sweep; returns one ``replay_batch`` metric dict per strategy.
 
     ``shards`` controls the trace-axis mesh on the scan backend:
     ``None`` / ``"auto"`` shards across all visible devices (single
@@ -110,28 +124,33 @@ def replay_scan_op(
         # the bit-identical scan even on TPU (pass f32 inputs — or request
         # backend="pallas" explicitly — for the native kernel path)
         on_tpu = jax.default_backend() == "tpu"
-        f64 = np.dtype(cum.dtype) == np.float64
+        f64 = np.dtype(cums.dtype) == np.float64
         backend = "pallas" if on_tpu and not f64 else "jnp"
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
 
     avail = np.asarray(avail, dtype=bool)
     B, T = avail.shape
-    Q = cum.shape[1] - 1
-    use_pred = pred_zero is not None
+    S, Q = cums.shape[0], cums.shape[2] - 1
+    use_pred = tuple(bool(u) for u in use_pred)
+    if len(use_pred) != S:
+        raise ValueError(f"{len(use_pred)} use_pred flags for {S} planes")
+    any_pred = pred_zero is not None and any(use_pred)
     predz = (
         np.asarray(pred_zero, dtype=bool)
-        if use_pred
+        if any_pred
         else np.zeros((B, T), dtype=bool)
     )
+    if any(use_pred) and pred_zero is None:
+        raise ValueError("use_pred flags set but pred_zero is None")
 
     if backend == "jnp":
         import jax.numpy as jnp
 
-        from .ref import replay_scan_ref
+        from .ref import replay_sweep_ref
 
-        pad = np.full((B, window + 1), np.inf, dtype=cum.dtype)
-        cum_pad = np.concatenate([cum, pad], axis=1)
+        pad = np.full((S, B, window + 1), np.inf, dtype=cums.dtype)
+        cums_pad = np.concatenate([cums, pad], axis=2)
         n_dev = len(jax.devices())
         if shards in (None, "auto"):
             n_shards = min(n_dev, B) if n_dev > 1 else 1
@@ -145,11 +164,11 @@ def replay_scan_op(
                     "device(s) — the trace mesh is one shard per device"
                 )
             n_shards = min(n_shards, B)
-        with _x64_if(cum.dtype):
+        with _x64_if(cums.dtype):
             if n_shards == 1:
-                res = replay_scan_ref(
+                res = replay_sweep_ref(
                     jnp.asarray(avail.T), jnp.asarray(predz.T),
-                    jnp.asarray(cum_pad), dt, horizon_cycles,
+                    jnp.asarray(cums_pad), dt, horizon_cycles,
                     q=Q, use_pred=use_pred, window=window, unroll=unroll,
                 )
                 res = {k: np.asarray(v) for k, v in res.items()}
@@ -165,21 +184,21 @@ def replay_scan_op(
                     predz = np.concatenate(
                         [predz, np.zeros((pad_b, T), dtype=bool)]
                     )
-                    cum_pad = np.concatenate(
-                        [cum_pad,
-                         np.full((pad_b, cum_pad.shape[1]), np.inf,
-                                 dtype=cum_pad.dtype)]
+                    cums_pad = np.concatenate(
+                        [cums_pad,
+                         np.full((S, pad_b, cums_pad.shape[2]), np.inf,
+                                 dtype=cums_pad.dtype)], axis=1
                     )
-                fn = _mesh_scan(n_shards, use_pred, window, unroll)
+                fn = _mesh_sweep(n_shards, use_pred, window, unroll)
                 res = fn(
                     jnp.asarray(avail.T), jnp.asarray(predz.T),
-                    jnp.asarray(cum_pad), dt, horizon_cycles, Q,
+                    jnp.asarray(cums_pad), dt, horizon_cycles, Q,
                 )
-                res = {k: np.asarray(v)[:B] for k, v in res.items()}
+                res = {k: np.asarray(v)[:, :B] for k, v in res.items()}
     else:
         import jax.numpy as jnp
 
-        from .kernel import replay_scan_kernel
+        from .kernel import replay_sweep_kernel
 
         block_b = min(block_b, B)
         chunk = min(chunk, T)
@@ -189,10 +208,10 @@ def replay_scan_op(
         av[:B, :T] = avail
         pz = np.zeros_like(av)
         pz[:B, :T] = predz
-        cm = np.zeros((B + pad_b, Q + 1), dtype=cum.dtype)
-        cm[:B] = cum
-        with _x64_if(cum.dtype):
-            res = replay_scan_kernel(
+        cm = np.zeros((S, B + pad_b, Q + 1), dtype=cums.dtype)
+        cm[:, :B] = cums
+        with _x64_if(cums.dtype):
+            res = replay_sweep_kernel(
                 jnp.asarray(av),
                 jnp.asarray(pz),
                 jnp.asarray(cm),
@@ -204,12 +223,42 @@ def replay_scan_op(
                 chunk=chunk,
                 interpret=jax.default_backend() != "tpu",
             )
-            res = {k: np.asarray(v)[:B] for k, v in res.items()}
+            res = {k: np.asarray(v)[:, :B] for k, v in res.items()}
 
-    return {
-        "lost_seconds": res["lost_seconds"],
-        "idle_seconds": res["idle_seconds"],
-        "completed": res["completed"].astype(np.int64),
-        "total_queries": np.full(B, Q, dtype=np.int64),
-        "makespan_seconds": res["makespan_seconds"],
-    }
+    return [
+        {
+            "lost_seconds": res["lost_seconds"][s],
+            "idle_seconds": res["idle_seconds"][s],
+            "completed": res["completed"][s].astype(np.int64),
+            "total_queries": np.full(B, Q, dtype=np.int64),
+            "makespan_seconds": res["makespan_seconds"][s],
+        }
+        for s in range(S)
+    ]
+
+
+def replay_scan_op(
+    avail: np.ndarray,            # (B, T) bool
+    dur: np.ndarray,              # (B, Q) float, launch order
+    cum: np.ndarray,              # (B, Q+1) float prefix sums of dur
+    pred_zero: Optional[np.ndarray],  # (B, T) bool or None
+    *,
+    dt: float,
+    horizon_cycles: int,
+    backend: str = "auto",
+    block_b: int = 8,
+    chunk: int = 128,
+    window: int = 8,
+    unroll: int = 1,
+    shards=None,
+) -> Dict[str, np.ndarray]:
+    """Single-strategy replay (the ``S == 1`` plane of the fused sweep);
+    returns the ``replay_batch`` metric dict."""
+    use_pred = pred_zero is not None
+    (res,) = replay_sweep_op(
+        avail, np.asarray(cum)[None], pred_zero, (use_pred,),
+        dt=dt, horizon_cycles=horizon_cycles, backend=backend,
+        block_b=block_b, chunk=chunk, window=window, unroll=unroll,
+        shards=shards,
+    )
+    return res

@@ -11,16 +11,39 @@ The count is evaluated over a ``window``-wide slice of ``cum`` starting
 at the queue head (one contiguous ``dynamic_slice`` per row — the cheap
 gather shape on CPU); a vectorised overflow loop extends the window for
 the rare burst cycles that complete more than ``window`` queries at once
-(e.g. the first cycles of an ``sjf`` queue).  ``cum`` arrives padded with
+(e.g. the first cycles of an ``sjf`` queue).  The window width is a pure
+tuning knob — any ``window >= 1`` yields identical counts because the
+overflow loop re-slices until the budget is resolved — and the per-cycle
+window compare/sum is the widest op in the body, so smaller is faster
+until overflow iterations dominate (``window=8`` measures ~1.2× over the
+old 16 on the TPC-DS bench, whose worst single-cycle burst is 5).  ``cum`` arrives padded with
 ``+inf`` tail entries (see ``ops``) so window slices never clamp and
 beyond-queue entries can never pass the ``<= target`` test.
 
+Fusion over the strategies axis
+-------------------------------
+
+:func:`replay_sweep_ref` is the primary form: the carried state is
+``(S, B)`` — one strategy plane per trace row — and each cycle's
+availability column is loaded **once** and broadcast through every
+strategy's transition, instead of re-streaming the whole trace per
+strategy.  ``use_pred`` is a static tuple of per-strategy flags (the
+Predict-AR deferral machinery only runs when any strategy wants it);
+per-strategy queues (``sjf`` sorts, permutations) enter as the stacked
+``(S, B, Q + window + 2)`` prefix-sum planes.  Because the fused body
+executes exactly the same elementwise ops in the same order as the
+single-strategy scan, the fused results are bit-identical (atol=0) to S
+independent per-strategy scans — asserted in ``tests/test_replay_scan``.
+:func:`replay_scan_ref` is the single-strategy wrapper (``S == 1``).
+
 Every floating-point op matches the numpy oracle
 (``core.simulate._replay_batch_numpy``) in kind and order, so results are
-bit-identical row by row in the shared dtype.  This function is also the
+bit-identical row by row in the shared dtype — float64 under a scoped
+``enable_x64`` (the atol=0 house contract) or float32 end to end (the
+bandwidth-lean fast tier; see ``ops``).  This function is also the
 production CPU path: XLA compiles the scan body into a handful of fused
-passes over the (B,) state, which is what clears the 10× bar over the
-per-cycle numpy loop (``benchmarks/replay_throughput.py``).
+passes over the (S, B) state, which is what clears the throughput bar
+over the per-cycle numpy loop (``benchmarks/replay_throughput.py``).
 """
 
 from __future__ import annotations
@@ -36,35 +59,43 @@ from repro.core.simulate import EPS
 @functools.partial(
     jax.jit, static_argnames=("use_pred", "window", "unroll")
 )
-def replay_scan_ref(
+def replay_sweep_ref(
     avail_t: jnp.ndarray,     # (T, B) bool — time-major availability
     predz_t: jnp.ndarray,     # (T, B) bool — "predictor says unavailable"
-    cum_pad: jnp.ndarray,     # (B, Q + window + 2) f — prefix sums, +inf tail
+    cum_pad: jnp.ndarray,     # (S, B, Q + window + 2) f — prefix sums, +inf tail
     dt,
     horizon_cycles,
     *,
     q: int = None,            # true queue length (cum_pad is padded)
-    use_pred: bool = False,
-    window: int = 16,
+    use_pred: tuple = (False,),   # (S,) static per-strategy Predict-AR flags
+    window: int = 8,
     unroll: int = 1,
 ):
     T, B = avail_t.shape
+    S = cum_pad.shape[0]
     W = window
-    Q = cum_pad.shape[1] - W - 2 if q is None else q
+    Q = cum_pad.shape[-1] - W - 2 if q is None else q
     f = cum_pad.dtype
     i32 = jnp.int32
     dtc = jnp.asarray(dt, f)
     horizon = jnp.asarray(horizon_cycles, i32)
     zero = jnp.zeros((), f)
     eps = jnp.asarray(EPS, f)
+    any_pred = any(use_pred)
+    # static (S, 1) mask: which strategy planes run the deferral machinery
+    pm = jnp.asarray(use_pred, dtype=bool)[:, None]
 
-    slice_w = jax.vmap(lambda row, s: jax.lax.dynamic_slice(row, (s,), (W + 2,)))
-    slice_2 = jax.vmap(lambda row, s: jax.lax.dynamic_slice(row, (s,), (2,)))
+    slice_w = jax.vmap(jax.vmap(
+        lambda row, s: jax.lax.dynamic_slice(row, (s,), (W + 2,))
+    ))
+    slice_2 = jax.vmap(jax.vmap(
+        lambda row, s: jax.lax.dynamic_slice(row, (s,), (2,))
+    ))
 
     def cycle(carry, xs):
         (head, front, has_front, running, remaining, progress, defer,
          lost, idle, completed, makespan) = carry
-        up, pz, c = xs
+        up, pz, c = xs               # up/pz: (B,) — shared by every strategy
 
         # -- down cycle: running query loses progress, re-queued at front --
         drop = (~up) & running
@@ -74,12 +105,13 @@ def replay_scan_ref(
         running = running & up
         progress = jnp.where(drop, zero, progress)
 
-        if use_pred:
-            trig = up & (c > defer) & pz
+        if any_pred:
+            trig = up & (c > defer) & pz & pm
             defer = jnp.where(trig, c + horizon, defer)
+            # non-pred planes keep defer == -1, so c <= defer stays False
             deferred = up & (c <= defer)
         else:
-            deferred = jnp.zeros_like(up)
+            deferred = jnp.zeros_like(running)
 
         b = jnp.where(up, dtc, zero)
         mk_edge = (c + 1).astype(f) * dtc
@@ -105,10 +137,10 @@ def replay_scan_ref(
 
         # -- phase B: prefix count over the queue window -------------------
         qb = up & ~running & ~deferred & (head < Q) & (b > eps)
-        win = slice_w(cum_pad, head)                   # win[:, j] = cum[head+j]
-        base = win[:, 0]
+        win = slice_w(cum_pad, head)           # win[s, :, j] = cum[s, :, head+j]
+        base = win[:, :, 0]
         target = base + (b + eps)
-        k = (win[:, 1 : W + 1] <= target[:, None]).sum(axis=1).astype(i32)
+        k = (win[:, :, 1 : W + 1] <= target[:, :, None]).sum(axis=2).astype(i32)
         more = qb & (k == W)
 
         def ovf_cond(st):
@@ -117,22 +149,24 @@ def replay_scan_ref(
         def ovf_body(st):
             k, more = st
             win2 = slice_w(cum_pad, head + k)
-            k2 = (win2[:, 1 : W + 1] <= target[:, None]).sum(axis=1).astype(i32)
+            k2 = (win2[:, :, 1 : W + 1] <= target[:, :, None]).sum(
+                axis=2
+            ).astype(i32)
             k = k + jnp.where(more, k2, 0)
             more = more & (k2 == W)
             return (k, more)
 
         k, _ = jax.lax.while_loop(ovf_cond, ovf_body, (k, more))
         k = jnp.where(qb, k, 0)
-        pair = slice_2(cum_pad, head + k)     # [cum[head+k], cum[head+k+1]]
-        used = pair[:, 0] - base
+        pair = slice_2(cum_pad, head + k)  # [cum[head+k], cum[head+k+1]]
+        used = pair[:, :, 0] - base
         b2 = jnp.maximum(b - used, zero)
         completed = completed + jnp.where(qb, k, 0)
         h2 = head + k
         mk_b = qb & (k > 0) & (h2 >= Q)
         makespan = jnp.where(mk_b, jnp.minimum(makespan, mk_edge - b2), makespan)
         part = qb & (h2 < Q) & (b2 > eps)
-        d = pair[:, 1] - pair[:, 0]
+        d = pair[:, :, 1] - pair[:, :, 0]
         remaining = jnp.where(part, d - b2, remaining)
         progress = jnp.where(part, b2, progress)
         running = running | part
@@ -147,17 +181,17 @@ def replay_scan_ref(
                 lost, idle, completed, makespan), None
 
     carry = (
-        jnp.zeros(B, i32),              # head
-        jnp.zeros(B, f),                # front
-        jnp.zeros(B, bool),             # has_front
-        jnp.zeros(B, bool),             # running
-        jnp.zeros(B, f),                # remaining
-        jnp.zeros(B, f),                # progress
-        jnp.full(B, -1, i32),           # defer
-        jnp.zeros(B, f),                # lost
-        jnp.zeros(B, f),                # idle
-        jnp.zeros(B, i32),              # completed
-        jnp.full(B, T, f) * dtc,        # makespan = T * dt
+        jnp.zeros((S, B), i32),             # head
+        jnp.zeros((S, B), f),               # front
+        jnp.zeros((S, B), bool),            # has_front
+        jnp.zeros((S, B), bool),            # running
+        jnp.zeros((S, B), f),               # remaining
+        jnp.zeros((S, B), f),               # progress
+        jnp.full((S, B), -1, i32),          # defer
+        jnp.zeros((S, B), f),               # lost
+        jnp.zeros((S, B), f),               # idle
+        jnp.zeros((S, B), i32),             # completed
+        jnp.full((S, B), T, f) * dtc,       # makespan = T * dt
     )
     xs = (avail_t, predz_t, jnp.arange(T, dtype=i32))
     carry, _ = jax.lax.scan(cycle, carry, xs, unroll=unroll)
@@ -167,3 +201,23 @@ def replay_scan_ref(
         "completed": carry[9],
         "makespan_seconds": carry[10],
     }
+
+
+def replay_scan_ref(
+    avail_t: jnp.ndarray,     # (T, B) bool — time-major availability
+    predz_t: jnp.ndarray,     # (T, B) bool — "predictor says unavailable"
+    cum_pad: jnp.ndarray,     # (B, Q + window + 2) f — prefix sums, +inf tail
+    dt,
+    horizon_cycles,
+    *,
+    q: int = None,            # true queue length (cum_pad is padded)
+    use_pred: bool = False,
+    window: int = 8,
+    unroll: int = 1,
+):
+    """Single-strategy scan: the ``S == 1`` plane of the fused sweep."""
+    res = replay_sweep_ref(
+        avail_t, predz_t, cum_pad[None], dt, horizon_cycles,
+        q=q, use_pred=(bool(use_pred),), window=window, unroll=unroll,
+    )
+    return {k: v[0] for k, v in res.items()}

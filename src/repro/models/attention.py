@@ -18,10 +18,10 @@ Three execution paths, one parameter layout:
   makes 32k/500k decode fit: an unsharded 32k cache would need 34–51
   GB/device on the MoE/VLM archs.
 
-The Pallas flash-attention kernel (``repro.kernels.flash_attention``) is a
-drop-in replacement for the inner chunk computation on real TPUs; the XLA
-path here is used for CPU tests and the dry-run (Pallas kernels cannot
-lower to the CPU backend outside interpret mode).
+The chunked inner computation is the natural target for a Pallas flash
+kernel on real TPUs; this repo keeps the XLA path only (used for CPU
+tests and the dry-run), since the model zoo is a workload generator here,
+not a compute hot-spot of the paper.
 """
 
 from __future__ import annotations

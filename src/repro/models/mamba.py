@@ -5,9 +5,10 @@ into chunks; within a chunk the linear recurrence ``h_t = a_t·h_{t-1} +
 b_t`` runs as a `lax.associative_scan`, and a `lax.scan` threads the state
 across chunks.  This bounds the materialised ``(B, chunk, d_inner, state)``
 discretisation tensors — the full-sequence version would need ~17
-GB/device at the falcon-mamba train_4k shape.  On TPU the Pallas
-``selective_scan`` kernel replaces the chunk body, keeping state in VMEM
-(see ``repro.kernels.selective_scan``); the XLA path remains the oracle.
+GB/device at the falcon-mamba train_4k shape.  The chunk body is the
+natural target for a Pallas selective-scan kernel on real TPUs; this repo
+keeps the XLA chunked scan as the only (oracle) path, since the model zoo
+is a workload generator here, not a compute hot-spot of the paper.
 
 Decode is the O(1) recurrence: one state update per token, with a rolling
 convolution buffer — no KV cache, which is why the SSM/hybrid archs are the

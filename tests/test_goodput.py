@@ -2,10 +2,12 @@
 
 The load-bearing guarantee under test is the house bit-identity invariant:
 the scalar reference :func:`repro.fleet.run_replay`, the vectorised numpy
-engine, and the ``lax.scan`` engine of :func:`repro.fleet.run_replay_batch`
-must agree **exactly** (atol=0) row for row across pods × policies × seeds
-— and the online :class:`repro.fleet.GoodputStream` must reproduce the
-offline batch replay of the same campaign bit for bit.
+engine, the ``lax.scan`` engine, and the fused policy-planes kernel engine
+of :func:`repro.fleet.run_replay_batch` must agree **exactly** (atol=0)
+row for row across pods × policies × seeds — and the online
+:class:`repro.fleet.GoodputStream` must reproduce the offline batch replay
+of the same campaign bit for bit.  The kernel engine's float32 fast tier
+must reproduce every integer decision of the f64 oracle.
 """
 
 import numpy as np
@@ -26,6 +28,7 @@ from repro.fleet import (
     run_goodput_frontier,
     run_replay,
     run_replay_batch,
+    run_replay_fleet,
 )
 
 DT = 180.0
@@ -82,7 +85,7 @@ def _scalar_reference(avail, p, policies, **kw):
 
 class TestEngineParity:
     @pytest.mark.parametrize("ckpt_cost", [30.0, 200.0])  # 200 > dt exercises carry
-    def test_three_engines_bit_identical(self, ckpt_cost):
+    def test_four_engines_bit_identical(self, ckpt_cost):
         avail, p = _rand_fleet(seed=7)
         policies = _policies()
         kw = dict(dt=DT, step_time=2.0, ckpt_cost=ckpt_cost, restore_cost=60.0)
@@ -90,7 +93,7 @@ class TestEngineParity:
         table = PolicyTable.from_policies(policies, repeat=avail.shape[0])
         big_avail = np.tile(avail, (len(policies), 1))
         big_p = np.tile(p, (len(policies), 1))
-        for engine in ("numpy", "scan"):
+        for engine in ("numpy", "scan", "kernel"):
             got = run_replay_batch(big_avail, table, p_survive=big_p,
                                    engine=engine, **kw)
             for key, want in ref.items():
@@ -108,7 +111,7 @@ class TestEngineParity:
         pol = SnSHazard(ckpt_cost=ckpt_cost, horizon=900.0, panic_threshold=0.35)
         kw = dict(dt=dt, step_time=step_time, ckpt_cost=ckpt_cost, restore_cost=45.0)
         ref = _scalar_reference(avail, p, [pol], **kw)
-        for engine in ("numpy", "scan"):
+        for engine in ("numpy", "scan", "kernel"):
             got = run_replay_batch(avail, pol, p_survive=p, engine=engine, **kw)
             for key, want in ref.items():
                 np.testing.assert_array_equal(got[key], want, err_msg=f"{engine}:{key}")
@@ -122,16 +125,81 @@ class TestEngineParity:
         for key in a:
             np.testing.assert_array_equal(a[key], b[key])
 
+    def test_fleet_fused_planes_match_tiled_batch(self):
+        """run_replay_fleet's kernel path shares each pod's hazard row
+        across all policy planes; its policy-major rows must equal the
+        numpy batch over explicitly tiled rows, atol=0."""
+        avail, p = _rand_fleet(seed=19, pods=5, cycles=70)
+        policies = _policies()
+        kw = dict(dt=DT, step_time=2.0, ckpt_cost=30.0, restore_cost=60.0)
+        want = run_replay_batch(
+            np.tile(avail, (len(policies), 1)),
+            PolicyTable.from_policies(policies, repeat=avail.shape[0]),
+            p_survive=np.tile(p, (len(policies), 1)), engine="numpy", **kw)
+        got = run_replay_fleet(avail, policies, p_survive=p,
+                               engine="kernel", **kw)
+        for key in want:
+            np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+
     def test_unknown_engine_rejected(self):
         with pytest.raises(ValueError, match="unknown engine"):
             run_replay_batch(np.ones((1, 4), bool), FixedInterval(600.0),
                              engine="pallas")
+
+    def test_f32_rejected_outside_kernel_engine(self):
+        with pytest.raises(ValueError, match="precision"):
+            run_replay_batch(np.ones((1, 4), bool), FixedInterval(600.0),
+                             engine="numpy", precision="f32")
 
     def test_policy_row_mismatch_rejected(self):
         with pytest.raises(ValueError, match="rows"):
             run_replay_batch(np.ones((3, 4), bool),
                              PolicyTable.from_policies([FixedInterval(600.0)],
                                                        repeat=2))
+
+
+class TestF32FastTier:
+    """The kernel engine's float32 tier vs the f64 oracle.
+
+    Every timed quantity in these workloads is a dyadic rational (dt,
+    step_time, δ, restore cost), so clocks and budgets are exact in both
+    tiers; τ itself is transcendental but the compared time gaps sit
+    ≫ 1 f32 ulp away from it, so every integer decision — and here every
+    float metric — must come out identical."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        step_time=st.sampled_from([1.0, 2.0, 7.0]),
+        ckpt_cost=st.sampled_from([10.0, 30.0, 250.0]),  # 250 > dt: carry
+    )
+    def test_property_decisions_identical(self, seed, step_time, ckpt_cost):
+        avail, p = _rand_fleet(seed, pods=4, cycles=50)
+        policies = _policies()
+        table = PolicyTable.from_policies(policies, repeat=avail.shape[0])
+        big_avail = np.tile(avail, (len(policies), 1))
+        big_p = np.tile(p, (len(policies), 1))
+        kw = dict(dt=DT, step_time=step_time, ckpt_cost=ckpt_cost,
+                  restore_cost=45.0, engine="kernel")
+        f64 = run_replay_batch(big_avail, table, p_survive=big_p, **kw)
+        f32 = run_replay_batch(big_avail, table, p_survive=big_p,
+                               precision="f32", **kw)
+        for key in ("steps_completed", "steps_lost", "checkpoints"):
+            np.testing.assert_array_equal(f64[key], f32[key], err_msg=key)
+        for key in ("ckpt_overhead_s", "unavailable_s", "lost_work_s",
+                    "goodput"):
+            np.testing.assert_array_equal(f64[key], f32[key], err_msg=key)
+
+    def test_fleet_f32_decisions_identical(self):
+        avail, p = _rand_fleet(seed=23, pods=6, cycles=90)
+        policies = _policies()
+        kw = dict(dt=DT, step_time=2.0, ckpt_cost=30.0, restore_cost=60.0,
+                  engine="kernel")
+        f64 = run_replay_fleet(avail, policies, p_survive=p, **kw)
+        f32 = run_replay_fleet(avail, policies, p_survive=p,
+                               precision="f32", **kw)
+        for key in ("steps_completed", "steps_lost", "checkpoints"):
+            np.testing.assert_array_equal(f64[key], f32[key], err_msg=key)
 
 
 class TestCarriedWrites:
@@ -249,14 +317,16 @@ class TestGoodputStream:
             [1.0 - np.clip((feats[:, c, 1] - 0.05) * 3.0, 0.0, 1.0)
              for c in range(result.s.shape[1])], axis=1)
         avail = (result.running >= result.n)[: self.N_PODS]
-        batch = run_replay_batch(
-            np.tile(avail, (len(policies), 1)),
-            PolicyTable.from_policies(policies, repeat=self.N_PODS),
-            p_survive=np.tile(p[: self.N_PODS], (len(policies), 1)),
-            dt=result.interval, engine="numpy")
+        big_avail = np.tile(avail, (len(policies), 1))
+        table = PolicyTable.from_policies(policies, repeat=self.N_PODS)
+        big_p = np.tile(p[: self.N_PODS], (len(policies), 1))
         assert n_views == avail.shape[1]
-        for key in batch:
-            np.testing.assert_array_equal(streamed[key], batch[key], err_msg=key)
+        for engine in ("numpy", "kernel"):
+            batch = run_replay_batch(big_avail, table, p_survive=big_p,
+                                     dt=result.interval, engine=engine)
+            for key in batch:
+                np.testing.assert_array_equal(streamed[key], batch[key],
+                                              err_msg=f"{engine}:{key}")
 
     def test_cycle_view_shapes(self):
         policies = [FixedInterval(600.0), SnSHazard(30.0, 900.0)]

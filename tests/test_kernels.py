@@ -8,125 +8,11 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.features import compute_features
-from repro.kernels.flash_attention.kernel import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.selective_scan.kernel import selective_scan
-from repro.kernels.selective_scan.ref import selective_scan_ref
 from repro.kernels.sns_features.kernel import sns_features, sns_features_stream
 from repro.kernels.sns_features.ops import sns_features_stream_op
 from repro.kernels.sns_features.ref import sns_features_ref, sns_features_stream_ref
 
 RNG = np.random.default_rng(0)
-
-
-class TestFlashAttention:
-    @pytest.mark.parametrize(
-        "b,h,kv,s,hd",
-        [
-            (2, 4, 4, 128, 64),    # MHA
-            (1, 8, 2, 256, 64),    # GQA 4:1
-            (2, 4, 1, 128, 128),   # MQA
-        ],
-    )
-    def test_causal_shapes(self, b, h, kv, s, hd):
-        q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        k = jnp.asarray(RNG.normal(size=(b, kv, s, hd)), jnp.float32)
-        v = jnp.asarray(RNG.normal(size=(b, kv, s, hd)), jnp.float32)
-        out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
-        ref = attention_ref(q, k, v)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
-
-    @pytest.mark.parametrize("window", [32, 64, 2**30])
-    def test_sliding_window(self, window):
-        b, h, s, hd = 1, 2, 256, 64
-        q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        k = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        v = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        out = flash_attention(
-            q, k, v, window=window, block_q=64, block_k=64, interpret=True
-        )
-        ref = attention_ref(q, k, v, window=window)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
-
-    def test_bidirectional(self):
-        b, h, s, hd = 2, 2, 128, 64
-        q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        k = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        v = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
-                              interpret=True)
-        ref = attention_ref(q, k, v, causal=False)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
-
-    def test_bf16_inputs(self):
-        b, h, s, hd = 1, 2, 128, 64
-        q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.bfloat16)
-        k = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.bfloat16)
-        v = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.bfloat16)
-        out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
-        ref = attention_ref(q, k, v)
-        assert out.dtype == jnp.bfloat16
-        np.testing.assert_allclose(
-            np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2
-        )
-
-    def test_block_shape_independence(self):
-        """Result must not depend on the chosen tiling."""
-        b, h, s, hd = 1, 2, 256, 64
-        q = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        k = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        v = jnp.asarray(RNG.normal(size=(b, h, s, hd)), jnp.float32)
-        o1 = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
-        o2 = flash_attention(q, k, v, block_q=128, block_k=32, interpret=True)
-        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
-
-
-class TestSelectiveScan:
-    @pytest.mark.parametrize(
-        "b,s,d,n,chunk",
-        [(2, 64, 128, 16, 16), (1, 128, 256, 8, 64), (2, 32, 64, 16, 32)],
-    )
-    def test_matches_sequential_ref(self, b, s, d, n, chunk):
-        x = jnp.asarray(RNG.normal(size=(b, s, d)), jnp.float32)
-        dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, s, d)), jnp.float32)
-        a = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(d, n)), jnp.float32)
-        bb = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
-        c = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
-        h0 = jnp.zeros((b, d, n), jnp.float32)
-        y, h = selective_scan(x, dt, a, bb, c, h0, block_d=64, chunk=chunk,
-                              interpret=True)
-        y_ref, h_ref = selective_scan_ref(x, dt, a, bb, c, h0)
-        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
-        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-4)
-
-    def test_nonzero_initial_state(self):
-        b, s, d, n = 1, 32, 64, 16
-        x = jnp.asarray(RNG.normal(size=(b, s, d)), jnp.float32)
-        dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, s, d)), jnp.float32)
-        a = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(d, n)), jnp.float32)
-        bb = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
-        c = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
-        h0 = jnp.asarray(RNG.normal(size=(b, d, n)), jnp.float32)
-        y, h = selective_scan(x, dt, a, bb, c, h0, block_d=32, chunk=16,
-                              interpret=True)
-        y_ref, h_ref = selective_scan_ref(x, dt, a, bb, c, h0)
-        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
-        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-4)
-
-    def test_chunking_is_invisible(self):
-        b, s, d, n = 1, 64, 64, 8
-        args = (
-            jnp.asarray(RNG.normal(size=(b, s, d)), jnp.float32),
-            jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, s, d)), jnp.float32),
-            -jnp.asarray(RNG.uniform(0.5, 2.0, size=(d, n)), jnp.float32),
-            jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32),
-            jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32),
-            jnp.zeros((b, d, n), jnp.float32),
-        )
-        y1, h1 = selective_scan(*args, block_d=64, chunk=8, interpret=True)
-        y2, h2 = selective_scan(*args, block_d=32, chunk=64, interpret=True)
-        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
-        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
 
 
 class TestSnSFeatures:

@@ -133,6 +133,82 @@ class TestEngineParity:
             _assert_batches_equal(oracle, scan, f"burst {strategy}")
 
 
+class TestFusedSweep:
+    """The strategies-fused sweep vs S independent per-strategy runs, and
+    the f32 fast tier vs the f64 oracle."""
+
+    def _dyadic_workload(self, shape, seed, *, lo=0.5, hi=700.0):
+        """Durations quantised to 1/32 s: every replay quantity is then
+        exactly representable in float32 (sums × 32 stay ≪ 2^24), so the
+        f32 tier must reproduce the f64 oracle bit for bit."""
+        avail, dur, pred = _workload(shape, seed, lo=lo, hi=hi)
+        return avail, np.round(dur * 32.0) / 32.0, pred
+
+    @pytest.mark.parametrize("engine", ["scan", "kernel"])
+    def test_fused_equals_per_strategy_all_engines(self, engine):
+        from repro.core import replay_sweep
+
+        avail, dur, pred = _workload((5, 60, 9), seed=2)
+        fused = replay_sweep(avail, dur, strategies=STRATEGIES,
+                             predictions=pred, horizon_cycles=2,
+                             engine=engine)
+        for s in STRATEGIES:
+            for per_engine in ("numpy", "scan"):
+                per = replay_batch(avail, dur, strategy=s, predictions=pred,
+                                   horizon_cycles=2, engine=per_engine)
+                _assert_batches_equal(fused[s], per,
+                                      f"fused[{engine}] vs {per_engine} {s}")
+
+    @given(shape=st.sampled_from(SHAPES), seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_property_f32_identical_on_dyadic(self, shape, seed):
+        from repro.core import replay_sweep
+
+        avail, dur, pred = self._dyadic_workload(shape, seed)
+        kw = dict(strategies=STRATEGIES, predictions=pred, horizon_cycles=2,
+                  engine="scan")
+        f64 = replay_sweep(avail, dur, precision="f64", **kw)
+        f32 = replay_sweep(avail, dur, precision="f32", **kw)
+        for s in STRATEGIES:
+            # integer decisions identical always; floats identical too on
+            # the dyadic workload (nothing rounds in either tier)
+            _assert_batches_equal(f64[s], f32[s], f"f32 tier {s}")
+
+    def test_f32_identical_through_burst_overflow(self):
+        """Sub-cycle sjf bursts overflow the prefix-count window in both
+        tiers; the overflow loop must preserve the f32 identity."""
+        from repro.core import replay_sweep
+
+        avail, dur, pred = self._dyadic_workload((4, 40, 48), seed=11,
+                                                 lo=0.5, hi=30.0)
+        kw = dict(strategies=STRATEGIES, predictions=pred, horizon_cycles=1,
+                  engine="scan")
+        f64 = replay_sweep(avail, dur, precision="f64", **kw)
+        f32 = replay_sweep(avail, dur, precision="f32", **kw)
+        for s in STRATEGIES:
+            _assert_batches_equal(f64[s], f32[s], f"burst f32 {s}")
+
+    def test_f32_identical_on_ragged_kernel_padding(self):
+        """f32 through the Pallas kernel path with real row/cycle padding
+        (B % block_b != 0, T % chunk != 0)."""
+        from repro.core import replay_sweep
+
+        avail, dur, pred = self._dyadic_workload((11, 150, 7), seed=3)
+        kw = dict(strategies=STRATEGIES, predictions=pred, horizon_cycles=2,
+                  engine="kernel")
+        f64 = replay_sweep(avail, dur, precision="f64", **kw)
+        f32 = replay_sweep(avail, dur, precision="f32", **kw)
+        for s in STRATEGIES:
+            _assert_batches_equal(f64[s], f32[s], f"ragged kernel f32 {s}")
+
+    def test_f32_rejected_outside_supported_engines(self):
+        from repro.core import replay_sweep
+
+        with pytest.raises(ValueError, match="precision"):
+            replay_sweep(np.ones((2, 4), dtype=int), np.full((2, 3), 90.0),
+                         strategies=("always_run",), precision="f16")
+
+
 class TestContractEdges:
     def test_mid_cycle_makespan(self):
         # 2 queries totalling 250 s finish mid-way through cycle 1
